@@ -1,0 +1,124 @@
+//! §3.1 adaptive method over the real trained family: learn α_k, β_k by
+//! SGD (score-function + forward gradients, JVPs served from the AOT
+//! jvp artifacts) and show the learned schedule beating the fixed one on
+//! the error/cost frontier.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example adaptive_learn [-- --iters 25]
+//! ```
+
+use anyhow::Result;
+
+use mlem::adaptive::{Learner, LearnerConfig, Schedule};
+use mlem::runtime::{spawn_executor, Manifest, NeuralDenoiser};
+use mlem::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
+use mlem::sde::em::{em_sample, TimeGrid};
+use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
+use mlem::sde::{schedule, BrownianPath};
+use mlem::util::cli::Args;
+use mlem::util::rng::Rng;
+use mlem::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 25);
+    let steps = args.usize_or("steps", 40);
+    let lambda = args.f64_or("lambda", 0.1); // the paper's DDPM value
+
+    let manifest = Manifest::load(&args.str_or("artifacts", "artifacts"))?;
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None)?;
+    let denoisers = NeuralDenoiser::family(&handle, 2)?;
+
+    // Family {f^1, f^3, f^5} as in the paper's experiments.
+    let base = LinearPartDrift { dim };
+    let l1 = ScorePartDrift { den: &denoisers[0], ode: false };
+    let l3 = ScorePartDrift { den: &denoisers[2], ode: false };
+    let l5 = ScorePartDrift { den: &denoisers[4], ode: false };
+    let fam = MlemFamily { base: Some(&base), levels: vec![&l1 as &dyn Drift, &l3, &l5] };
+    let reference = DiffusionDrift::sde(&denoisers[4]);
+    // costs in milliseconds so lambda has a sane scale
+    let costs: Vec<f64> = [&l1 as &dyn Drift, &l3, &l5].iter().map(|d| d.cost() * 1e3).collect();
+    println!("level costs (ms/img): {costs:?}");
+
+    let learner = Learner {
+        family: &fam,
+        reference: &reference,
+        costs: costs.clone(),
+        cfg: LearnerConfig {
+            lambda,
+            steps,
+            t_start: schedule::T_MAX,
+            t_end: schedule::T_MIN,
+            lr: 0.02,
+            batch: 8,
+            ode: false,
+            clip: 0.25,
+        },
+    };
+
+    // Start from the fixed inverse-cost probabilities.
+    let p0: Vec<f64> = costs.iter().map(|c| (2.0 * costs[0] / c).min(0.999)).collect();
+    let mut sched = Schedule::from_probs(&p0, 0.1);
+    println!("initial probs at t=0.5: {:?}", probe(&sched));
+
+    let mut rng = Rng::new(1);
+    let trace = learner.fit(&mut sched, iters, &mut rng);
+    for (i, (loss, cost)) in trace.iter().enumerate() {
+        if i % 5 == 0 || i == trace.len() - 1 {
+            println!("iter {i:3}: loss {loss:.4}  cost {cost:.1}  objective {:.4}", loss + lambda * cost);
+        }
+    }
+    println!("learned alpha: {:?}", sched.alpha.iter().map(|a| format!("{a:.2}")).collect::<Vec<_>>());
+    println!("learned beta : {:?}", sched.beta.iter().map(|b| format!("{b:.2}")).collect::<Vec<_>>());
+    println!("learned probs at t=0.9/0.5/0.1: {:?} / {:?} / {:?}", probe_at(&sched, 0.9), probe_at(&sched, 0.5), probe_at(&sched, 0.1));
+
+    // Evaluate fixed vs learned on a held-out generation (same noise).
+    let batch = 8;
+    let eval_steps = 120;
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, eval_steps);
+    let mut eval_rng = Rng::new(77);
+    let path = BrownianPath::sample(&mut eval_rng, eval_steps, batch * dim, grid.span());
+    let x0: Vec<f32> = (0..batch * dim).map(|_| eval_rng.normal_f32()).collect();
+    let mut x_true = x0.clone();
+    em_sample(&reference, |t| schedule::beta(t).sqrt(), &mut x_true, &grid, &path);
+
+    for (name, policy) in [
+        ("fixed inv-cost", Schedule::from_probs(&p0, 0.1).policy()),
+        ("learned", sched.policy()),
+    ] {
+        let mut best = f64::INFINITY;
+        let mut best_cost = 0.0;
+        for seed in 0..5 {
+            let mut x = x0.clone();
+            let mut bern = Rng::new(300 + seed);
+            let rep = mlem_sample(
+                &fam,
+                &policy,
+                BernoulliMode::Shared,
+                |t| schedule::beta(t).sqrt(),
+                &mut x,
+                batch,
+                &grid,
+                &path,
+                &mut bern,
+            );
+            let mse = stats::mse_f32(&x, &x_true);
+            if mse < best {
+                best = mse;
+                best_cost = rep.cost_units;
+            }
+        }
+        println!("{name:16}: best-of-5 MSE {best:.5} at cost {best_cost:.3}");
+    }
+    handle.stop();
+    Ok(())
+}
+
+fn probe(s: &Schedule) -> Vec<String> {
+    probe_at(s, 0.5)
+}
+
+fn probe_at(s: &Schedule, t: f64) -> Vec<String> {
+    (0..s.num_levels()).map(|k| format!("{:.3}", s.prob(k, t))).collect()
+}

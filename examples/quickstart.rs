@@ -1,0 +1,85 @@
+//! Quickstart: load the AOT artifacts, generate a few images with ML-EM,
+//! compare against plain EM on cost, and dump a PGM strip.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::Scheduler;
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, Manifest};
+
+fn main() -> Result<()> {
+    let cfg = ServeConfig { cost_reps: 3, ..Default::default() };
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    println!(
+        "loaded manifest: {} levels, {}x{} images, buckets {:?}",
+        manifest.num_levels(),
+        manifest.img,
+        manifest.img,
+        manifest.batch_buckets
+    );
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    let scheduler = Scheduler::new(handle.clone(), cfg, metrics)?;
+    println!("measured per-image costs (s): {:?}", scheduler.costs);
+
+    // ML-EM generation: mostly f^1 evals, occasional f^3/f^5 corrections.
+    let mut req = GenRequest {
+        n: 8,
+        sampler: SamplerKind::Mlem,
+        steps: 200,
+        seed: 7,
+        levels: vec![1, 3, 5],
+        delta: 0.0,
+        return_images: true,
+    };
+    let mlem_resp = scheduler.generate(&req)?;
+    println!(
+        "ML-EM: {} images, {:.0} ms, nfe per level {:?}",
+        req.n, mlem_resp.stats.wall_ms, mlem_resp.stats.nfe
+    );
+
+    // Baseline: plain EM with the largest network every step.
+    req.sampler = SamplerKind::Em;
+    let em_resp = scheduler.generate(&req)?;
+    println!(
+        "EM(f^5): {} images, {:.0} ms, nfe per level {:?}",
+        req.n, em_resp.stats.wall_ms, em_resp.stats.nfe
+    );
+    println!(
+        "speedup at equal steps: {:.2}x wallclock, {:.2}x cost units",
+        em_resp.stats.wall_ms / mlem_resp.stats.wall_ms,
+        em_resp.stats.cost_units / mlem_resp.stats.cost_units
+    );
+
+    // Dump the ML-EM images for eyeballing.
+    let imgs = mlem_resp.images.unwrap();
+    let img = scheduler.handle().manifest().img;
+    write_pgm("quickstart_mlem.pgm", &imgs, img, 8)?;
+    println!("wrote quickstart_mlem.pgm ({}x{} strip)", img * 8, img);
+
+    handle.stop();
+    Ok(())
+}
+
+fn write_pgm(path: &str, imgs: &[f32], img: usize, n: usize) -> Result<()> {
+    let w = img * n;
+    let mut data = Vec::with_capacity(w * img);
+    for row in 0..img {
+        for i in 0..n {
+            for col in 0..img {
+                let v = imgs[i * img * img + row * img + col];
+                data.push((((v + 1.0) / 2.0).clamp(0.0, 1.0) * 255.0) as u8);
+            }
+        }
+    }
+    let mut out = format!("P5\n{w} {img}\n255\n").into_bytes();
+    out.extend_from_slice(&data);
+    std::fs::write(path, out)?;
+    Ok(())
+}

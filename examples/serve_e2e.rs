@@ -1,0 +1,127 @@
+//! End-to-end serving driver (the DESIGN.md validation run).
+//!
+//! Starts the full coordinator on an ephemeral TCP port, loads the real
+//! trained model family through PJRT, then drives it with concurrent
+//! client load: a mix of ML-EM and EM generation requests across several
+//! connections.  Reports throughput and latency percentiles plus the
+//! server's own metrics snapshot.  Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e [-- --requests 40]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use mlem::config::ServeConfig;
+use mlem::coordinator::{Scheduler, Server};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::util::cli::Args;
+use mlem::util::json::Json;
+use mlem::util::stats;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 40);
+    let n_clients = args.usize_or("clients", 4);
+    let steps = args.usize_or("steps", 100);
+    let images_per_req = args.usize_or("n", 4);
+
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 16,
+        max_wait_ms: 5,
+        cost_reps: 3,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics.clone())?;
+    println!("per-level costs (s/img): {:?}", scheduler.costs);
+
+    let server = std::sync::Arc::new(Server::new(cfg, scheduler));
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread =
+        std::thread::spawn(move || srv.run(move |a| addr_tx.send(a).unwrap()).unwrap());
+    let addr = addr_rx.recv()?;
+    println!("server up on {addr}; driving {n_requests} requests from {n_clients} clients\n");
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let per_client = n_requests / n_clients;
+        joins.push(std::thread::spawn(move || -> Vec<(f64, f64, f64)> {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut out = Vec::new();
+            for i in 0..per_client {
+                // alternate ML-EM and EM so both paths carry load
+                let sampler = if i % 4 == 3 { "em" } else { "mlem" };
+                let req = format!(
+                    r#"{{"cmd":"generate","n":{images_per_req},"sampler":"{sampler}","steps":{steps},"seed":{}}}"#,
+                    c * 1000 + i
+                );
+                let t = Instant::now();
+                writeln!(writer, "{req}").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let wall = t.elapsed().as_secs_f64() * 1e3;
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+                let q = j.get_path(&["stats", "queue_ms"]).unwrap().as_f64().unwrap();
+                let b = j.get_path(&["stats", "batch_size"]).unwrap().as_f64().unwrap();
+                out.push((wall, q, b));
+            }
+            out
+        }));
+    }
+    let mut lat = Vec::new();
+    let mut queue = Vec::new();
+    let mut batch = Vec::new();
+    for j in joins {
+        for (w, q, b) in j.join().unwrap() {
+            lat.push(w);
+            queue.push(q);
+            batch.push(b);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_images = (lat.len() * images_per_req) as f64;
+
+    println!("== serve_e2e results ==");
+    println!("requests completed   : {}", lat.len());
+    println!("wallclock            : {wall:.2} s");
+    println!("throughput           : {:.1} images/s ({:.1} req/s)", total_images / wall, lat.len() as f64 / wall);
+    println!(
+        "request latency (ms) : p50 {:.0}  p95 {:.0}  max {:.0}",
+        stats::percentile(&lat, 50.0),
+        stats::percentile(&lat, 95.0),
+        stats::percentile(&lat, 100.0)
+    );
+    println!(
+        "queue wait (ms)      : p50 {:.1}  p95 {:.1}",
+        stats::percentile(&queue, 50.0),
+        stats::percentile(&queue, 95.0)
+    );
+    println!("mean batch size      : {:.2} images", stats::mean(&batch));
+    println!("\nserver metrics: {}", metrics.snapshot());
+
+    // clean shutdown through the protocol
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writeln!(writer, r#"{{"cmd":"shutdown"}}"#)?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    server_thread.join().unwrap();
+    handle.stop();
+    Ok(())
+}

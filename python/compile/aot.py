@@ -1,0 +1,206 @@
+"""AOT export: lower the trained model family to HLO text artifacts.
+
+This is the single hand-off point between the Python build path and the
+Rust request path.  For every family member f^k we export
+
+  * ``eps_f{k}_b{B}.hlo.txt``      — eps_hat(x[B,8,8,1], t[B]) for each
+                                     batch bucket B (the Rust batcher pads
+                                     to the nearest bucket);
+  * ``eps_jvp_f{k}_b{B}.hlo.txt``  — (eps, d eps . v) JVP wrt x, used by
+                                     the adaptive learner's forward grads;
+  * ``eps_f{k}_b{B}_pallas.hlo.txt`` (one level) — parity artifact lowered
+                                     through the L1 Pallas kernels;
+  * ``combine_b{B}.hlo.txt`` (+ ``_pallas``) — the fused ML-EM update;
+  * ``manifest.json``              — shapes, buckets, per-level costs and
+                                     held-out losses, schedule constants;
+  * ``holdout.bin``                — raw f32 holdout images for Rust-side
+                                     denoising-error measurement (Fig 2).
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Weights are baked into the HLO as constants, so the Rust binary is fully
+self-contained once ``artifacts/`` exists.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, schedule, train
+from .kernels import mlem_combine as pallas_combine
+from .kernels import ref
+
+BATCH_BUCKETS = [1, 8, 32]
+JVP_BUCKETS = [1, 8]
+PARITY_LEVEL = 3  #: level exported in both jnp and pallas flavours
+PARITY_BATCH = 8
+COMBINE_BATCH = 32
+COMBINE_LEVELS = 3  #: K in the exported fused-combine artifact
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big weight
+    # constants as '{...}', which xla_extension 0.5.1's text parser
+    # silently materialises as ZEROS (see DESIGN.md §AOT-gotchas).
+    return comp.as_hlo_text(True)
+
+
+def _export(fn, args, path: str) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _x_spec(b: int):
+    return jax.ShapeDtypeStruct((b, model.IMG, model.IMG, model.CHANNELS), jnp.float32)
+
+
+def _t_spec(b: int):
+    return jax.ShapeDtypeStruct((b,), jnp.float32)
+
+
+def export_all(out_dir: str, ckpt_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+
+    # ----- train (or reuse) the family ------------------------------------
+    summary_path = os.path.join(ckpt_dir, "train_summary.json")
+    if not os.path.exists(summary_path):
+        print("checkpoints missing -> training the family", flush=True)
+        train.train_family(ckpt_dir)
+    with open(summary_path) as f:
+        infos = json.load(f)
+
+    levels = []
+    for info in infos:
+        k = info["level"]
+        with open(os.path.join(ckpt_dir, f"params_f{k}.pkl"), "rb") as f:
+            params = pickle.load(f)
+
+        entry = {
+            "level": k,
+            "config": info["config"],
+            "params": info["params"],
+            "flops_per_image": info["flops_per_image"],
+            "holdout_loss": info["holdout_loss"],
+            "eps": {},
+            "eps_jvp": {},
+        }
+        f_eps = model.eps_fn(params)
+        f_jvp = model.eps_jvp_fn(params)
+        for b in BATCH_BUCKETS:
+            name = f"eps_f{k}_b{b}.hlo.txt"
+            t0 = time.time()
+            _export(lambda x, t: (f_eps(x, t),), (_x_spec(b), _t_spec(b)),
+                    os.path.join(out_dir, name))
+            entry["eps"][str(b)] = name
+            print(f"  exported {name} ({time.time()-t0:.1f}s)", flush=True)
+        for b in JVP_BUCKETS:
+            name = f"eps_jvp_f{k}_b{b}.hlo.txt"
+            _export(lambda x, t, v: f_jvp(x, t, v),
+                    (_x_spec(b), _t_spec(b), _x_spec(b)),
+                    os.path.join(out_dir, name))
+            entry["eps_jvp"][str(b)] = name
+            print(f"  exported {name}", flush=True)
+        if k == PARITY_LEVEL:
+            f_pal = model.eps_fn(params, backend="pallas")
+            name = f"eps_f{k}_b{PARITY_BATCH}_pallas.hlo.txt"
+            _export(lambda x, t: (f_pal(x, t),),
+                    (_x_spec(PARITY_BATCH), _t_spec(PARITY_BATCH)),
+                    os.path.join(out_dir, name))
+            entry["eps_pallas"] = {str(PARITY_BATCH): name}
+            print(f"  exported {name} (pallas parity)", flush=True)
+        levels.append(entry)
+
+    # ----- fused combine kernels ------------------------------------------
+    dim = model.IMG * model.IMG * model.CHANNELS
+    y_s = jax.ShapeDtypeStruct((COMBINE_BATCH, dim), jnp.float32)
+    d_s = jax.ShapeDtypeStruct((COMBINE_LEVELS, COMBINE_BATCH, dim), jnp.float32)
+    c_s = jax.ShapeDtypeStruct((COMBINE_LEVELS,), jnp.float32)
+    s_s = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    def combine_ref(y, d, c, z, eta, sig):
+        return (ref.mlem_combine(y, d, c, z, eta[0], sig[0]),)
+
+    def combine_pal(y, d, c, z, eta, sig):
+        return (pallas_combine.mlem_combine(y, d, c, z, eta[0], sig[0]),)
+
+    _export(combine_ref, (y_s, d_s, c_s, y_s, s_s, s_s),
+            os.path.join(out_dir, f"combine_b{COMBINE_BATCH}.hlo.txt"))
+    _export(combine_pal, (y_s, d_s, c_s, y_s, s_s, s_s),
+            os.path.join(out_dir, f"combine_b{COMBINE_BATCH}_pallas.hlo.txt"))
+    print("  exported combine kernels", flush=True)
+
+    # ----- holdout images for Rust-side error measurement ------------------
+    holdout = datasets.shapes_corpus(train.CORPUS_SEED + 1, 64)
+    holdout.astype("<f4").tofile(os.path.join(out_dir, "holdout.bin"))
+
+    # ----- cross-language golden outputs ------------------------------------
+    # A fixed (x, t) probe per level; the Rust integration tests assert the
+    # PJRT-loaded HLO reproduces these jax outputs bit-for-bit (up to f32
+    # accumulation order).
+    golden = {"t": 0.5, "x": None, "eps": {}}
+    gx = np.linspace(-1.0, 1.0, dim, dtype=np.float32).reshape(
+        1, model.IMG, model.IMG, model.CHANNELS
+    )
+    golden["x"] = [float(v) for v in gx.reshape(-1)]
+    for info in infos:
+        k = info["level"]
+        with open(os.path.join(ckpt_dir, f"params_f{k}.pkl"), "rb") as f:
+            params = pickle.load(f)
+        out = model.unet_apply(params, jnp.asarray(gx), jnp.full((1,), 0.5))
+        golden["eps"][str(k)] = [float(v) for v in np.asarray(out).reshape(-1)]
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    manifest = {
+        "img": model.IMG,
+        "channels": model.CHANNELS,
+        "dim": dim,
+        "batch_buckets": BATCH_BUCKETS,
+        "jvp_buckets": JVP_BUCKETS,
+        "temb_dim": model.TEMB_DIM,
+        "schedule": {"type": "cosine", "s": schedule.COSINE_S,
+                     "t_max": schedule.T_MAX},
+        "combine": {
+            "batch": COMBINE_BATCH,
+            "levels": COMBINE_LEVELS,
+            "ref": f"combine_b{COMBINE_BATCH}.hlo.txt",
+            "pallas": f"combine_b{COMBINE_BATCH}_pallas.hlo.txt",
+        },
+        "holdout": {"file": "holdout.bin", "count": 64},
+        "levels": levels,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(levels)} levels -> {out_dir}", flush=True)
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--ckpt", default=None, help="checkpoint directory")
+    args = p.parse_args()
+    ckpt = args.ckpt or os.path.join(args.out, "checkpoints")
+    export_all(args.out, ckpt)
+
+
+if __name__ == "__main__":
+    main()

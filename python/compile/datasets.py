@@ -1,0 +1,106 @@
+"""Synthetic training corpora.
+
+CelebA-64 substitution (see DESIGN.md §2): the ML-EM method only needs a
+family of score approximators over *some* image distribution.  We use a
+procedurally generated 8x8 grayscale "shapes" corpus (random axis-aligned
+rectangles, filled discs and linear gradients, composited with soft edges)
+which is rich enough that tiny UNets of increasing size approximate its
+score with measurably decreasing error — reproducing the scaling-law
+structure (Fig 2) the method relies on.
+
+A Gaussian-mixture sampler is also provided; its exact time-t score has a
+closed form, which the Rust analytic substrate (``rust/src/gmm``) mirrors —
+the two implementations are cross-checked in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 8  #: image side
+DIM = IMG * IMG  #: flattened dimensionality
+
+
+def shapes_batch(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Generate ``n`` synthetic 8x8 grayscale images in [-1, 1].
+
+    Each image composites 1-3 primitives (rectangle / disc / gradient) on a
+    random background level, then normalises to [-1, 1].  Returns an array
+    of shape ``(n, IMG, IMG, 1)`` float32.
+    """
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    out = np.empty((n, IMG, IMG, 1), np.float32)
+    for i in range(n):
+        img = np.full((IMG, IMG), rng.uniform(0.0, 0.35), np.float32)
+        for _ in range(rng.integers(1, 4)):
+            kind = rng.integers(0, 3)
+            level = rng.uniform(0.45, 1.0)
+            if kind == 0:  # rectangle
+                x0, y0 = rng.integers(0, IMG - 2, size=2)
+                w, h = rng.integers(2, IMG - 1, size=2)
+                img[y0 : min(y0 + h, IMG), x0 : min(x0 + w, IMG)] = level
+            elif kind == 1:  # soft disc
+                cx, cy = rng.uniform(1, IMG - 1, size=2)
+                r = rng.uniform(1.2, 3.2)
+                d2 = (xx - cx) ** 2 + (yy - cy) ** 2
+                mask = np.clip(1.5 * (1.0 - np.sqrt(d2) / r), 0.0, 1.0)
+                img = img * (1 - mask) + level * mask
+            else:  # linear gradient
+                theta = rng.uniform(0, 2 * np.pi)
+                g = (np.cos(theta) * xx + np.sin(theta) * yy) / IMG
+                g = (g - g.min()) / (g.max() - g.min() + 1e-9)
+                img = 0.5 * img + 0.5 * (0.2 + 0.8 * level * g)
+        out[i, :, :, 0] = np.clip(img, 0.0, 1.0) * 2.0 - 1.0
+    return out
+
+
+def shapes_corpus(seed: int, n: int) -> np.ndarray:
+    """Deterministic corpus of ``n`` shapes images for a given ``seed``."""
+    return shapes_batch(np.random.default_rng(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian mixture (analytic-score substrate; mirrored in rust/src/gmm).
+
+
+def gmm_params(seed: int, k: int, dim: int, spread: float = 2.0, sigma: float = 0.3):
+    """Deterministic GMM: ``k`` isotropic components in ``dim`` dims.
+
+    Returns ``(means [k, dim], weights [k], sigma)``.  The same constants
+    are regenerated in Rust (same xoshiro-free construction: means are a
+    fixed function of the seed via numpy's PCG — so we *export* them in the
+    manifest instead of regenerating, see aot.py).
+    """
+    rng = np.random.default_rng(seed)
+    means = rng.normal(0.0, spread, size=(k, dim)).astype(np.float32)
+    w = rng.uniform(0.5, 1.5, size=k).astype(np.float32)
+    w /= w.sum()
+    return means, w, np.float32(sigma)
+
+
+def gmm_sample(rng: np.random.Generator, means, weights, sigma, n: int) -> np.ndarray:
+    """Draw ``n`` samples from the mixture."""
+    comp = rng.choice(len(weights), size=n, p=weights)
+    eps = rng.normal(size=(n, means.shape[1])).astype(np.float32)
+    return means[comp] + sigma * eps
+
+
+def gmm_score_t(x, t, means, weights, sigma):
+    """Exact score of the time-t diffused mixture, ``x: (n, dim)``.
+
+    Diffusing a GMM keeps it a GMM: component i becomes
+    ``N(sqrt(ab) mu_i, (ab sigma^2 + 1 - ab) I)``.
+    Returns ``grad_x log rho_t(x)`` with the same shape as x.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from . import schedule
+
+    ab = schedule.alpha_bar(t)
+    m = jnp.sqrt(ab) * jnp.asarray(means)  # (k, dim)
+    var = ab * sigma**2 + (1.0 - ab)
+    diff = x[:, None, :] - m[None, :, :]  # (n, k, dim)
+    logw = jnp.log(jnp.asarray(weights))[None, :] - 0.5 * jnp.sum(diff**2, -1) / var
+    post = jax.nn.softmax(logw, axis=1)  # (n, k) responsibilities
+    return jnp.einsum("nk,nkd->nd", post, -diff) / var

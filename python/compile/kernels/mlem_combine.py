@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused Multilevel Euler-Maruyama state update.
+
+    y' = y + eta * sum_k coeffs[k] * deltas[k] + sqrt(eta) * sigma * z
+
+One fused pass instead of K+2 separate axpy sweeps over the batch state —
+on TPU this is a pure VPU/memory-bound kernel, so fusing the K level
+differences, the Brownian increment and the state add into a single
+HBM->VMEM->HBM round trip is the whole optimisation (the unfused form
+reads/writes the (B, D) state K+2 times).
+
+Blocked over the batch axis; each grid step keeps one (B_blk, D) state
+tile plus its (K, B_blk, D) delta stack in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(y_ref, d_ref, c_ref, z_ref, e_ref, s_ref, o_ref):
+    """One (B_blk, D) tile: weighted level-sum + noise, single pass."""
+    y = y_ref[...]
+    deltas = d_ref[...]  # (K, B_blk, D)
+    coeffs = c_ref[...]  # (K,)
+    drift = jnp.tensordot(coeffs, deltas, axes=1)  # (B_blk, D)
+    eta = e_ref[0]
+    sigma = s_ref[0]
+    o_ref[...] = y + eta * drift + jnp.sqrt(eta) * sigma * z_ref[...]
+
+
+def mlem_combine(y, deltas, coeffs, z, eta, sigma, block_b: int = 8):
+    """Pallas-backed fused update; same contract as ``ref.mlem_combine``.
+
+    Args:
+      y:      ``(B, D)`` state.
+      deltas: ``(K, B, D)`` per-level drift differences.
+      coeffs: ``(K,)`` realised ``B_k/p_k`` weights.
+      z:      ``(B, D)`` standard normal noise.
+      eta:    scalar step size (runtime input).
+      sigma:  scalar diffusion coefficient (runtime input).
+      block_b: batch tile size (must divide B; falls back to one tile).
+    """
+    bsz, dim = y.shape
+    k = deltas.shape[0]
+    if bsz % block_b != 0:
+        block_b = bsz  # degenerate single tile for odd batch sizes
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1)
+    sig_arr = jnp.asarray(sigma, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(bsz // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, dim), lambda i: (i, 0)),
+            pl.BlockSpec((k, block_b, dim), lambda i: (0, i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((block_b, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), y.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(y, deltas, coeffs, z, eta_arr, sig_arr)

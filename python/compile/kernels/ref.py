@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness ground truth*: every Pallas kernel in this
+directory is asserted ``allclose`` against the matching function here, both
+in pytest (hypothesis sweeps over shapes) and — via the dual-flavour AOT
+artifacts — in Rust integration tests.
+
+They are also the implementations used in the serving-default artifacts:
+interpret-mode Pallas lowers to correct but slow HLO on CPU, so the fast
+path exports these ops and the Pallas flavour is kept for parity /
+TPU-compile targets (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def depthwise3x3(x, dw):
+    """Depthwise 3x3 cross-correlation, SAME zero padding.
+
+    Lowered as 9 shifted multiply-accumulates rather than
+    ``lax.conv_general_dilated(feature_group_count=C)``: grouped
+    convolutions parsed from HLO *text* silently mis-execute on the
+    serving side's xla_extension 0.5.1 (constant garbage output — see
+    DESIGN.md §AOT-gotchas), while pad/slice/mul/add round-trip exactly.
+    This is also bit-identical to what the Pallas kernel computes.
+    Semantics verified against ``lax.conv_general_dilated`` in
+    ``python/tests/test_kernels.py::test_depthwise_matches_lax_grouped_conv``.
+    """
+    h, w = x.shape[1], x.shape[2]
+    pad = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + pad[:, di : di + h, dj : dj + w, :] * dw[di, dj]
+    return acc
+
+
+def sepconv(x, dw, pw, b):
+    """Factored convolution from the paper's UNet: depthwise 3x3 then
+    pointwise 1x1, plus bias, fused with SiLU.
+
+    Args:
+      x:  activations ``(B, H, W, C_in)``.
+      dw: depthwise filter ``(3, 3, C_in)``.
+      pw: pointwise mixing matrix ``(C_in, C_out)``.
+      b:  bias ``(C_out,)``.
+
+    Returns ``silu(pointwise(depthwise(x)) + b)`` with shape
+    ``(B, H, W, C_out)``; SAME padding on the depthwise stage.
+    """
+    y = depthwise3x3(x, dw)
+    z = jnp.einsum("bhwc,cd->bhwd", y, pw) + b
+    return jax.nn.silu(z)
+
+
+def mlem_combine(y, deltas, coeffs, z, eta, sigma):
+    """Fused Multilevel Euler-Maruyama state update.
+
+        y' = y + eta * sum_k coeffs[k] * deltas[k] + sqrt(eta) * sigma * z
+
+    Args:
+      y:      state ``(B, D)``.
+      deltas: per-level drift differences ``(K, B, D)`` — entry k holds
+              ``f^k(y) - f^{k-1}(y)``.
+      coeffs: ``(K,)`` — realised ``B_k / p_k`` weights (0 where the
+              Bernoulli for level k came up 0).
+      z:      standard normal noise ``(B, D)``.
+      eta:    scalar step size.
+      sigma:  scalar diffusion coefficient at this step.
+    """
+    drift = jnp.einsum("k,kbd->bd", coeffs, deltas)
+    return y + eta * drift + jnp.sqrt(eta) * sigma * z

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused factored convolution (depthwise 3x3 -> pointwise
+1x1 -> bias -> SiLU), the compute hot-spot of the paper's UNet family.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper ran on
+CUDA GPUs; the TPU mapping is
+
+  * one grid step per batch element holds an (H, W, C_in) activation block
+    resident in VMEM (<= 2 MiB at our largest (8, 8, 64) f32 block — far
+    under the ~16 MiB VMEM budget, leaving room for double-buffering the
+    HBM->VMEM pipeline that ``BlockSpec`` expresses);
+  * the depthwise 3x3 is 9 unrolled shifted multiply-accumulates on the
+    VPU (vector unit) — it is memory-bound, so it rides along for free
+    behind the matmul;
+  * the pointwise 1x1 is reshaped to an ``(H*W, C_in) @ (C_in, C_out)``
+    matmul targeting the MXU systolic array — this is where ~90%+ of the
+    FLOPs live (see bench_runtime / EXPERIMENTS.md §Perf);
+  * bias + SiLU fuse into the matmul epilogue.
+
+CPU PJRT cannot execute Mosaic custom-calls, so ``interpret=True`` is
+mandatory here; correctness is asserted against ``ref.sepconv`` and the
+fast serving artifacts are lowered from the ref ops (same math).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift2d(x, di: int, dj: int):
+    """Zero-padded spatial shift of an (H, W, C) block.
+
+    ``_shift2d(x, di, dj)[i, j] == x[i + di, j + dj]`` (zero outside).
+    """
+    h, w, _ = x.shape
+    pad = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    return pad[1 + di : 1 + di + h, 1 + dj : 1 + dj + w, :]
+
+
+def _sepconv_kernel(x_ref, dw_ref, pw_ref, b_ref, o_ref):
+    """Kernel body for one batch element's (H, W, C_in) block."""
+    x = x_ref[0]  # (H, W, C_in) in VMEM
+    h, w, cin = x.shape
+    # Depthwise 3x3 (cross-correlation, SAME): 9 unrolled VPU taps.
+    acc = jnp.zeros_like(x)
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + _shift2d(x, di - 1, dj - 1) * dw_ref[di, dj]
+    # Pointwise 1x1 as an MXU matmul, bias + SiLU fused as epilogue.
+    y = acc.reshape(h * w, cin) @ pw_ref[...]
+    z = y + b_ref[...]
+    o = jax.nn.silu(z)
+    o_ref[0] = o.reshape(h, w, o.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sepconv(x, dw, pw, b):
+    """Pallas-backed factored convolution; same contract as ``ref.sepconv``.
+
+    Args:
+      x:  ``(B, H, W, C_in)`` activations.
+      dw: ``(3, 3, C_in)`` depthwise filter.
+      pw: ``(C_in, C_out)`` pointwise mixing matrix.
+      b:  ``(C_out,)`` bias.
+    """
+    bsz, h, w, _ = x.shape
+    cout = pw.shape[1]
+    return pl.pallas_call(
+        _sepconv_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, x.shape[-1]), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(dw.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(pw.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, w, cout), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, dw, pw, b)

@@ -1,0 +1,215 @@
+"""L2: the paper's UNet score-model family and drift functions.
+
+Architecture follows the paper's recipe (§4), scaled to the 8x8 substitute
+corpus (DESIGN.md §2):
+
+  * at each UNet level the spatial dimension halves and the channel count
+    doubles, starting from a per-model "base dimension";
+  * filters are factored: per-channel (depthwise) 3x3 convolution followed
+    by a 1x1 cross-channel convolution — the ``sepconv`` L1 kernel;
+  * ``l1`` residual blocks at the bottom of the UNet, ``l2`` residual
+    blocks at the shallower scale, in both the down and up paths;
+  * the five models have increasing base dims / depths, giving a family
+    ``f^1..f^5`` of score approximators with decreasing error and
+    increasing compute — the raw material of ML-EM.
+
+The network predicts the noise ``eps_hat(x, t)``; the score is recovered
+as ``-eps_hat / sigma(t)`` and drifts are assembled on the Rust side from
+the schedule identities in ``schedule.py``.
+
+Every op has two backends: ``'jnp'`` (the ``ref`` oracle ops; fast HLO,
+serving default) and ``'pallas'`` (the L1 kernels, interpret-lowered;
+parity artifacts + real-TPU compile target).  Both lower into the same
+AOT pipeline in ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedule
+from .kernels import mlem_combine as pallas_combine  # noqa: F401 (re-export)
+from .kernels import ref
+from .kernels import sepconv as pallas_sepconv
+
+IMG = 8  #: image side of the substitute corpus
+CHANNELS = 1
+
+#: The five-model family (paper: base dims 8,16,32,64 / L1 5,10,20,40 /
+#: L2 2,3,5,7 on CelebA-64; here the same shape scaled to the 8x8 corpus).
+LEVEL_CONFIGS: List[Dict[str, int]] = [
+    {"base": 4, "l1": 1, "l2": 1},   # f^1
+    {"base": 6, "l1": 2, "l2": 1},   # f^2
+    {"base": 8, "l1": 3, "l2": 2},   # f^3
+    {"base": 12, "l1": 4, "l2": 2},  # f^4
+    {"base": 16, "l1": 6, "l2": 3},  # f^5
+]
+
+TEMB_DIM = 16  #: sinusoidal time-embedding width
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+
+def _init_sepconv(key, cin: int, cout: int) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "dw": jax.random.normal(k1, (3, 3, cin)) * (1.0 / 3.0),
+        "pw": jax.random.normal(k2, (cin, cout)) * (1.0 / math.sqrt(cin)),
+        "b": jnp.zeros((cout,)),
+    }
+
+
+def _init_block(key, c: int) -> Dict[str, Any]:
+    """Residual block: sepconv -> +temb -> sepconv, with skip."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": _init_sepconv(k1, c, c),
+        "conv2": _init_sepconv(k2, c, c),
+        "temb": jax.random.normal(k3, (TEMB_DIM, c)) * (1.0 / math.sqrt(TEMB_DIM)),
+    }
+
+
+def init_unet(key, cfg: Dict[str, int]) -> Dict[str, Any]:
+    """Initialise one family member's parameters as a pytree."""
+    base, l1, l2 = cfg["base"], cfg["l1"], cfg["l2"]
+    keys = iter(jax.random.split(key, 8 + 2 * l2 + l1 + 2))
+    params: Dict[str, Any] = {
+        "stem": jax.random.normal(next(keys), (CHANNELS, base)) * 0.5,
+        "stem_b": jnp.zeros((base,)),
+        "down_blocks": [_init_block(next(keys), base) for _ in range(l2)],
+        "down_proj": _init_sepconv(next(keys), base, 2 * base),
+        "mid_blocks": [_init_block(next(keys), 2 * base) for _ in range(l1)],
+        "up_proj": _init_sepconv(next(keys), 2 * base, base),
+        "skip_mix": jax.random.normal(next(keys), (2 * base, base))
+        * (1.0 / math.sqrt(2 * base)),
+        "skip_b": jnp.zeros((base,)),
+        "up_blocks": [_init_block(next(keys), base) for _ in range(l2)],
+        "head": jax.random.normal(next(keys), (base, CHANNELS)) * 0.01,
+        "head_b": jnp.zeros((CHANNELS,)),
+    }
+    return params
+
+
+def param_count(params) -> int:
+    """Total parameter count of a pytree."""
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def flop_estimate(cfg: Dict[str, int], batch: int = 1) -> int:
+    """Rough forward-pass FLOPs (pointwise matmuls dominate; per image)."""
+    b, l1, l2 = cfg["base"], cfg["l1"], cfg["l2"]
+    hw_full, hw_half = IMG * IMG, (IMG // 2) * (IMG // 2)
+    f = 0
+    f += 2 * hw_full * CHANNELS * b  # stem
+    f += l2 * 2 * (2 * hw_full * b * b + 9 * hw_full * b)  # down blocks
+    f += 2 * hw_half * b * 2 * b  # down proj
+    f += l1 * 2 * (2 * hw_half * 2 * b * 2 * b + 9 * hw_half * 2 * b)  # mid
+    f += 2 * hw_full * 2 * b * b  # up proj
+    f += 2 * hw_full * 2 * b * b  # skip mix
+    f += l2 * 2 * (2 * hw_full * b * b + 9 * hw_full * b)  # up blocks
+    f += 2 * hw_full * b * CHANNELS  # head
+    return batch * f
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+
+def t_embed(t):
+    """Sinusoidal embedding of t in [0, 1]; t shape (B,) -> (B, TEMB_DIM)."""
+    half = TEMB_DIM // 2
+    freqs = jnp.exp(jnp.arange(half) * (math.log(200.0) / (half - 1)))
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _sepconv(p, x, backend: str):
+    if backend == "pallas":
+        return pallas_sepconv.sepconv(x, p["dw"], p["pw"], p["b"])
+    return ref.sepconv(x, p["dw"], p["pw"], p["b"])
+
+
+def _block(p, x, temb, backend: str):
+    """Residual block with additive time conditioning."""
+    h = _sepconv(p["conv1"], x, backend)
+    h = h + (temb @ p["temb"])[:, None, None, :]
+    h = _sepconv(p["conv2"], h, backend)
+    return x + h
+
+
+def _downsample(x):
+    """2x2 average pool."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def _upsample(x):
+    """Nearest-neighbour 2x."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def unet_apply(params, x, t, backend: str = "jnp"):
+    """Predict the noise ``eps_hat``.
+
+    Args:
+      params: pytree from :func:`init_unet`.
+      x: noisy images ``(B, IMG, IMG, CHANNELS)``.
+      t: diffusion times ``(B,)`` in [0, 1].
+      backend: ``'jnp'`` or ``'pallas'``.
+    """
+    temb = t_embed(t)
+    h = x @ params["stem"] + params["stem_b"]  # (B, 8, 8, base)
+    for bp in params["down_blocks"]:
+        h = _block(bp, h, temb, backend)
+    skip = h
+    h = _downsample(h)
+    h = _sepconv(params["down_proj"], h, backend)  # (B, 4, 4, 2b)
+    for bp in params["mid_blocks"]:
+        h = _block(bp, h, temb, backend)
+    h = _sepconv(params["up_proj"], _upsample(h), backend)  # (B, 8, 8, b)
+    h = jnp.concatenate([h, skip], axis=-1) @ params["skip_mix"] + params["skip_b"]
+    for bp in params["up_blocks"]:
+        h = _block(bp, h, temb, backend)
+    return h @ params["head"] + params["head_b"]
+
+
+def eps_fn(params, backend: str = "jnp"):
+    """Close over trained params: ``(x, t) -> eps_hat`` for AOT lowering."""
+
+    def f(x, t):
+        return unet_apply(params, x, t, backend)
+
+    return f
+
+
+def eps_jvp_fn(params, backend: str = "jnp"):
+    """``(x, t, v) -> (eps_hat, d eps_hat . v)``: JVP w.r.t. x.
+
+    Needed by the adaptive learner's forward-gradient pass (§3.1): the
+    tangent of the trajectory is pushed through each drift evaluation.
+    """
+
+    def f(x, t, v):
+        return jax.jvp(lambda xx: unet_apply(params, xx, t, backend), (x,), (v,))
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+
+def denoise_loss(params, x0, key, backend: str = "jnp"):
+    """Standard DDPM noise-prediction loss with cosine schedule."""
+    b = x0.shape[0]
+    k1, k2 = jax.random.split(key)
+    t = jax.random.uniform(k1, (b,), minval=0.002, maxval=schedule.T_MAX)
+    eps = jax.random.normal(k2, x0.shape)
+    ab = schedule.alpha_bar(t)[:, None, None, None]
+    xt = jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * eps
+    pred = unet_apply(params, xt, t, backend)
+    return jnp.mean((pred - eps) ** 2)

@@ -1,0 +1,58 @@
+"""Continuous-time cosine noise schedule (Nichol & Dhariwal, 2021).
+
+The paper's experiments use the standard DDPM procedure with a cosine
+schedule.  We parametrise everything by a continuous time ``t in [0, 1]``
+(t=0 clean data, t=1 pure noise) so the Rust sampler can discretise with an
+arbitrary number of steps and the network family is conditioned on the same
+scalar time across all discretisations.
+
+Identities used throughout the stack (and asserted in tests on both sides):
+
+    alpha_bar(t) = cos^2( (t + s) / (1 + s) * pi/2 ) / cos^2( s/(1+s) * pi/2 )
+    sigma(t)     = sqrt(1 - alpha_bar(t))
+    x_t          = sqrt(alpha_bar(t)) x_0 + sigma(t) eps
+    score(x, t)  = -eps_hat(x, t) / sigma(t)
+    beta(t)      = -d/dt log alpha_bar(t)        (instantaneous rate)
+
+The backward VP-SDE and probability-flow ODE in this parametrisation:
+
+    SDE:  -dx = beta(t) [ x/2 + score ] dt + sqrt(beta(t)) dW
+    ODE:  -dx/dt = beta(t) [ x/2 + score/2 ]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Small offset preventing beta(t) from vanishing at t=0 (standard value).
+COSINE_S = 0.008
+
+#: Clip t away from 1 where alpha_bar -> 0 and the score blows up.
+T_MAX = 0.9946
+
+
+def alpha_bar(t):
+    """Cumulative signal level ``alpha_bar(t)``, normalised so alpha_bar(0)=1."""
+    s = COSINE_S
+    num = jnp.cos((t + s) / (1.0 + s) * jnp.pi / 2.0) ** 2
+    den = jnp.cos(s / (1.0 + s) * jnp.pi / 2.0) ** 2
+    return num / den
+
+
+def sigma(t):
+    """Noise level ``sqrt(1 - alpha_bar(t))``."""
+    return jnp.sqrt(jnp.maximum(1.0 - alpha_bar(t), 1e-12))
+
+
+def beta(t):
+    """Instantaneous noise rate ``-d/dt log alpha_bar(t)`` (closed form)."""
+    s = COSINE_S
+    u = (t + s) / (1.0 + s) * jnp.pi / 2.0
+    # d/dt log cos^2(u) = -2 tan(u) * du/dt
+    return 2.0 * jnp.tan(u) * (jnp.pi / 2.0) / (1.0 + s)
+
+
+def diffuse(x0, t, eps):
+    """Forward-diffuse clean data ``x0`` to time ``t`` with noise ``eps``."""
+    ab = alpha_bar(t)
+    return jnp.sqrt(ab) * x0 + jnp.sqrt(jnp.maximum(1.0 - ab, 1e-12)) * eps

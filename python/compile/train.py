@@ -1,0 +1,131 @@
+"""Build-time training of the score-model family f^1..f^5.
+
+Each family member is trained separately on the shapes corpus with the
+standard denoising loss and (hand-rolled, no optax offline) Adam — exactly
+the paper's protocol, scaled to the substitute corpus.  Larger members get
+more steps, mirroring practice; held-out denoising losses are recorded so
+the manifest carries the measured error ladder (used by Fig 2 / gamma
+estimation on the Rust side).
+
+Run via ``python -m compile.train`` (done for you by ``make artifacts``,
+through aot.py).  Training is deterministic given the seeds.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import pickle
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model, schedule
+
+CORPUS_SEED = 1234
+CORPUS_N = 4096
+HOLDOUT_N = 512
+BATCH = 64
+#: training steps per level (larger models train longer, as in practice)
+STEPS = [600, 700, 800, 1000, 1400]
+LR = 2e-3
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=LR, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def eval_denoise_loss(params, x0, seed: int = 7, reps: int = 4) -> float:
+    """Held-out denoising loss, averaged over a few noise draws."""
+    key = jax.random.PRNGKey(seed)
+    losses = []
+    for i in range(reps):
+        key, sub = jax.random.split(key)
+        losses.append(float(model.denoise_loss(params, x0, sub)))
+    return float(np.mean(losses))
+
+
+def train_level(level: int, corpus: np.ndarray, holdout: np.ndarray,
+                verbose: bool = True) -> Tuple[Any, Dict[str, Any]]:
+    """Train family member ``level`` (1-based). Returns (params, info)."""
+    cfg = model.LEVEL_CONFIGS[level - 1]
+    key = jax.random.PRNGKey(100 + level)
+    params = model.init_unet(key, cfg)
+
+    @jax.jit
+    def step(params, opt, key, batch):
+        loss, grads = jax.value_and_grad(model.denoise_loss)(params, batch, key)
+        params, opt = adam_update(params, grads, opt)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(500 + level)
+    n_steps = STEPS[level - 1]
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(n_steps):
+        idx = rng.integers(0, len(corpus), BATCH)
+        key, sub = jax.random.split(key)
+        params, opt, loss = step(params, opt, sub, jnp.asarray(corpus[idx]))
+        if verbose and (i % 200 == 0 or i == n_steps - 1):
+            print(f"  f^{level} step {i:4d} loss {float(loss):.4f}", flush=True)
+    train_time = time.time() - t0
+    holdout_loss = eval_denoise_loss(params, jnp.asarray(holdout))
+    info = {
+        "level": level,
+        "config": cfg,
+        "params": model.param_count(params),
+        "flops_per_image": model.flop_estimate(cfg),
+        "steps": n_steps,
+        "final_train_loss": float(loss),
+        "holdout_loss": holdout_loss,
+        "train_seconds": train_time,
+    }
+    if verbose:
+        print(f"  f^{level}: {info['params']} params, holdout {holdout_loss:.4f}, "
+              f"{train_time:.1f}s", flush=True)
+    return params, info
+
+
+def train_family(out_dir: str, levels: int = 5) -> List[Dict[str, Any]]:
+    """Train all family members, pickling params + writing a summary."""
+    os.makedirs(out_dir, exist_ok=True)
+    corpus = datasets.shapes_corpus(CORPUS_SEED, CORPUS_N)
+    holdout = datasets.shapes_corpus(CORPUS_SEED + 1, HOLDOUT_N)
+    infos = []
+    for level in range(1, levels + 1):
+        print(f"training f^{level} ...", flush=True)
+        params, info = train_level(level, corpus, holdout)
+        with open(os.path.join(out_dir, f"params_f{level}.pkl"), "wb") as f:
+            pickle.dump(jax.device_get(params), f)
+        infos.append(info)
+    with open(os.path.join(out_dir, "train_summary.json"), "w") as f:
+        json.dump(infos, f, indent=2)
+    return infos
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/checkpoints"
+    train_family(out)

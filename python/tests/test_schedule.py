@@ -1,0 +1,49 @@
+"""Schedule identities (mirrored by rust/src/sde/schedule.rs tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import schedule
+
+
+def test_alpha_bar_boundaries():
+    assert float(schedule.alpha_bar(0.0)) == pytest.approx(1.0, abs=1e-6)
+    assert float(schedule.alpha_bar(schedule.T_MAX)) < 0.01
+
+
+def test_alpha_bar_monotone():
+    ts = jnp.linspace(0.0, schedule.T_MAX, 101)
+    ab = np.asarray(schedule.alpha_bar(ts))
+    assert np.all(np.diff(ab) < 0)
+
+
+def test_beta_is_neg_dlog_alpha_bar():
+    for t in [0.05, 0.3, 0.6, 0.9]:
+        g = jax.grad(lambda tt: jnp.log(schedule.alpha_bar(tt)))(t)
+        assert float(schedule.beta(t)) == pytest.approx(-float(g), rel=1e-4)
+
+
+def test_sigma_complements_alpha_bar():
+    for t in [0.1, 0.5, 0.9]:
+        s = float(schedule.sigma(t))
+        ab = float(schedule.alpha_bar(t))
+        assert s * s + ab == pytest.approx(1.0, abs=1e-6)
+
+
+def test_diffuse_matches_closed_form():
+    x0 = jnp.ones((2, 3))
+    eps = jnp.full((2, 3), 0.5)
+    t = 0.4
+    out = schedule.diffuse(x0, t, eps)
+    expect = np.sqrt(float(schedule.alpha_bar(t))) + float(schedule.sigma(t)) * 0.5
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+def test_constants_match_rust_side():
+    # These constants are compiled into the Rust binary; a drift here
+    # would silently poison every artifact (the manifest check would
+    # catch it at load time — this test catches it earlier).
+    assert schedule.COSINE_S == 0.008
+    assert schedule.T_MAX == 0.9946

@@ -1,0 +1,92 @@
+//! Appendix A: DDPM and DDIM practical updates are Euler–Maruyama /
+//! Euler discretisations up to subdominant terms — per-step deviation
+//! O(η²) (fitted slope ≈ 2 in log–log), whole-trajectory deviation O(η)
+//! (slope ≈ 1).  Measured on the analytic GMM denoiser.
+//!
+//! `cargo bench --bench bench_appendix_a`
+
+use mlem::gmm::{Gmm, GmmDenoiser};
+use mlem::sde::ddpm::{ancestral_sample, AncestralConfig};
+use mlem::sde::drift::DiffusionDrift;
+use mlem::sde::em::{em_sample, TimeGrid};
+use mlem::sde::{schedule, BrownianPath};
+use mlem::util::bench::Table;
+use mlem::util::rng::Rng;
+use mlem::util::stats;
+
+const DIM: usize = 4;
+
+fn main() {
+    let gmm = Gmm::random(9, 3, DIM, 1.2, 0.5);
+
+    for ddim in [false, true] {
+        let label = if ddim { "DDIM vs Euler (ODE)" } else { "DDPM vs EM (SDE)" };
+        let den = GmmDenoiser { gmm: &gmm, cost: 1.0 };
+        let drift = DiffusionDrift { den: GmmDenoiser { gmm: &gmm, cost: 1.0 }, ode: ddim };
+        let g = move |t: f64| if ddim { 0.0 } else { schedule::beta(t).sqrt() };
+
+        // --- single-step deviation vs eta --------------------------------
+        let mut etas = Vec::new();
+        let mut devs = Vec::new();
+        for &n in &[25usize, 50, 100, 200, 400] {
+            let grid = TimeGrid::new(0.7, 0.1, n);
+            let sub = TimeGrid::new(grid.t(0), grid.t(1), 1);
+            let mut rng = Rng::new(31);
+            let mut total = 0.0;
+            let reps = 16;
+            for _ in 0..reps {
+                let path = BrownianPath::sample(&mut rng, 1, DIM, sub.span());
+                let x0: Vec<f32> = (0..DIM).map(|_| rng.normal_f32()).collect();
+                let mut xa = x0.clone();
+                ancestral_sample(&den, AncestralConfig { ddim, clip_x0: false }, &mut xa, &sub, &path);
+                let mut xe = x0.clone();
+                em_sample(&drift, g, &mut xe, &sub, &path);
+                total += stats::dist2_f32(&xa, &xe).sqrt();
+            }
+            etas.push(sub.eta());
+            devs.push(total / reps as f64);
+        }
+        let step_fit = stats::loglog_fit(&etas, &devs);
+
+        // --- whole-trajectory deviation vs eta ----------------------------
+        let mut tr_etas = Vec::new();
+        let mut tr_devs = Vec::new();
+        for &n in &[50usize, 100, 200, 400] {
+            let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, n);
+            let mut rng = Rng::new(77);
+            let mut total = 0.0;
+            let reps = 8;
+            for _ in 0..reps {
+                let path = BrownianPath::sample(&mut rng, n, DIM, grid.span());
+                let x0: Vec<f32> = (0..DIM).map(|_| rng.normal_f32()).collect();
+                let mut xa = x0.clone();
+                ancestral_sample(&den, AncestralConfig { ddim, clip_x0: false }, &mut xa, &grid, &path);
+                let mut xe = x0.clone();
+                em_sample(&drift, g, &mut xe, &grid, &path);
+                total += stats::dist2_f32(&xa, &xe).sqrt() / (DIM as f64).sqrt();
+            }
+            tr_etas.push(grid.eta());
+            tr_devs.push(total / reps as f64);
+        }
+        let traj_fit = stats::loglog_fit(&tr_etas, &tr_devs);
+
+        let mut t = Table::new(
+            &format!("appendixA {}", if ddim { "ddim" } else { "ddpm" }),
+            &["eta", "per-step dev", "eta (traj)", "trajectory dev"],
+        );
+        for i in 0..etas.len() {
+            t.row(&[
+                format!("{:.5}", etas[i]),
+                format!("{:.3e}", devs[i]),
+                tr_etas.get(i).map_or("".into(), |e| format!("{e:.5}")),
+                tr_devs.get(i).map_or("".into(), |d| format!("{d:.3e}")),
+            ]);
+        }
+        t.emit();
+        println!(
+            "{label}: per-step dev ~ eta^{:.2} (expect ~1.5 SDE via the noise coupling, ~2 ODE; r²={:.3}); \
+             trajectory dev ~ eta^{:.2} (expect ~1, r²={:.3})\n",
+            step_fit.slope, step_fit.r2, traj_fit.slope, traj_fit.r2
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! Paper Figure 1 (bottom): the same comparison on the probability-flow
+//! ODE (DDIM mode).  `cargo bench --bench bench_figure1_ddim`.
+fn main() -> anyhow::Result<()> {
+    mlem::benchkit::run_figure1(true)
+}

@@ -1,0 +1,6 @@
+//! Paper Figure 1 (top): MSE vs generation time for EM (5 levels × step
+//! counts) against ML-EM {f^1,f^3,f^5} with fixed / theory / learned
+//! probabilities — DDPM (SDE) mode.  `cargo bench --bench bench_figure1_ddpm`.
+fn main() -> anyhow::Result<()> {
+    mlem::benchkit::run_figure1(false)
+}

@@ -1,0 +1,135 @@
+//! L3 hot-path microbenches: PJRT execute latency per level/bucket, the
+//! executor-channel overhead, the fused combine kernel (native vs HLO
+//! ref vs HLO pallas), and the batcher's queue operations.  These are
+//! the numbers the §Perf pass optimises against.
+//!
+//! `cargo bench --bench bench_runtime`
+
+use std::time::{Duration, Instant};
+
+use mlem::benchkit::artifacts_dir;
+use mlem::coordinator::batcher::Batcher;
+use mlem::coordinator::protocol::GenRequest;
+use mlem::config::SamplerKind;
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::util::bench::{bench, fmt_ns, Table};
+use mlem::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = artifacts_dir() else {
+        println!("skipping: run `make artifacts` first");
+        return Ok(());
+    };
+    let manifest = Manifest::load(&dir)?;
+    let dim = manifest.dim;
+    let buckets = manifest.batch_buckets.clone();
+    let n_levels = manifest.levels.len();
+    let (handle, _join) = spawn_executor(manifest, None)?;
+    for &b in &buckets {
+        handle.warmup(b)?;
+    }
+
+    // --- eps execute latency per (level, bucket) -------------------------
+    let mut t = Table::new("eps latency", &["level", "bucket", "ms/call", "µs/image"]);
+    let mut rng = Rng::new(1);
+    for level in 1..=n_levels {
+        for &b in &buckets {
+            let x = rng.normal_vec_f32(b * dim);
+            let r = bench(
+                &format!("eps f{level} b{b}"),
+                3,
+                Duration::from_millis(300),
+                || {
+                    handle.eps(level, &x, 0.5).unwrap();
+                },
+            );
+            t.row(&[
+                format!("f^{level}"),
+                format!("{b}"),
+                format!("{:.3}", r.mean_ns / 1e6),
+                format!("{:.1}", r.mean_ns / 1e3 / b as f64),
+            ]);
+        }
+    }
+    t.emit();
+
+    // --- executor channel + copy overhead ---------------------------------
+    // smallest possible work: f^1 at bucket 1; compare against the
+    // measured pure-execute time reported by exec_stats deltas.
+    let x1 = rng.normal_vec_f32(dim);
+    handle.eps(1, &x1, 0.5)?;
+    let (c0, n0) = handle.exec_stats()?;
+    let reps = 200;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        handle.eps(1, &x1, 0.5)?;
+    }
+    let total = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let (c1, n1) = handle.exec_stats()?;
+    let inside = (n1 - n0) as f64 / (c1 - c0) as f64;
+    println!(
+        "executor roundtrip f^1 b1: total {} | inside execute {} | channel+copy overhead {}\n",
+        fmt_ns(total),
+        fmt_ns(inside),
+        fmt_ns(total - inside)
+    );
+
+    // --- fused combine: native rust vs HLO(ref) vs HLO(pallas) -----------
+    let cm = handle.manifest().combine.clone();
+    let (b, k) = (cm.batch, cm.levels);
+    let y = rng.normal_vec_f32(b * dim);
+    let deltas = rng.normal_vec_f32(k * b * dim);
+    let coeffs: Vec<f32> = (0..k).map(|i| i as f32 + 0.5).collect();
+    let z = rng.normal_vec_f32(b * dim);
+    let mut t = Table::new("mlem combine step", &["impl", "µs/call"]);
+    let r = bench("combine native", 3, Duration::from_millis(200), || {
+        let mut out = y.clone();
+        for i in 0..b * dim {
+            let mut drift = 0.0f32;
+            for kk in 0..k {
+                drift += coeffs[kk] * deltas[kk * b * dim + i];
+            }
+            out[i] += 0.01 * drift + 0.1 * z[i];
+        }
+        std::hint::black_box(&out);
+    });
+    t.row(&["native rust".into(), format!("{:.1}", r.mean_ns / 1e3)]);
+    for (name, pallas) in [("HLO ref", false), ("HLO pallas(interp)", true)] {
+        handle.combine(&y, &deltas, &coeffs, &z, 0.01, 1.0, pallas)?; // warm/compile
+        let r = bench(name, 2, Duration::from_millis(200), || {
+            handle.combine(&y, &deltas, &coeffs, &z, 0.01, 1.0, pallas).unwrap();
+        });
+        t.row(&[name.into(), format!("{:.1}", r.mean_ns / 1e3)]);
+    }
+    t.emit();
+    println!(
+        "Reading: the combine step is memory-bound; the native in-loop version avoids\n\
+         the PJRT call overhead entirely, which is why the sampler uses it (interpret-\n\
+         mode pallas HLO is a correctness/TPU-compile artifact, not a CPU perf path).\n"
+    );
+
+    // --- batcher ops ------------------------------------------------------
+    let req = GenRequest {
+        n: 2,
+        sampler: SamplerKind::Mlem,
+        steps: 100,
+        seed: 0,
+        levels: vec![1, 3, 5],
+        delta: 0.0,
+        return_images: false,
+    };
+    let r = bench("batcher push+pop", 10, Duration::from_millis(200), || {
+        let mut b: Batcher<u32> = Batcher::new(16, Duration::ZERO, 1024);
+        for i in 0..64 {
+            b.push(req.clone(), i).unwrap();
+        }
+        while b.pop_batch().is_some() {}
+    });
+    println!(
+        "batcher: 64 push + drain = {} ({} per request)",
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.mean_ns / 64.0)
+    );
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Serving-system headline (not a paper figure — the systems claim):
+//! coordinator throughput/latency across batch sizes and samplers, plus
+//! the ML-EM serving-cost advantage at the batcher level.
+//!
+//! `cargo bench --bench bench_serving`
+
+use mlem::benchkit::artifacts_dir;
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::Scheduler;
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::util::bench::Table;
+use mlem::util::stats;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = artifacts_dir() else {
+        println!("skipping: run `make artifacts` first");
+        return Ok(());
+    };
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        cost_reps: 5,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    let scheduler = Scheduler::new(handle.clone(), cfg, metrics)?;
+
+    let steps = 100;
+    let mut t = Table::new(
+        "serving throughput",
+        &["sampler", "batch", "images/s", "ms/request", "cost_units/img"],
+    );
+    for sampler in [SamplerKind::Mlem, SamplerKind::Em, SamplerKind::Ddpm] {
+        for &batch in &[1usize, 8, 32] {
+            let req = GenRequest {
+                n: batch,
+                sampler,
+                steps,
+                seed: 1,
+                levels: vec![1, 3, 5],
+                delta: 0.0,
+                return_images: false,
+            };
+            // warm
+            scheduler.generate(&req)?;
+            let reps = if batch == 1 { 6 } else { 3 };
+            let mut walls = Vec::new();
+            let mut cost = 0.0;
+            for r in 0..reps {
+                let mut rq = req.clone();
+                rq.seed = r as u64;
+                let t0 = Instant::now();
+                let resp = scheduler.generate(&rq)?;
+                walls.push(t0.elapsed().as_secs_f64());
+                cost = resp.stats.cost_units / batch as f64;
+            }
+            let mean = stats::mean(&walls);
+            t.row(&[
+                sampler.as_str().into(),
+                format!("{batch}"),
+                format!("{:.1}", batch as f64 / mean),
+                format!("{:.1}", mean * 1e3),
+                format!("{cost:.4}"),
+            ]);
+        }
+    }
+    t.emit();
+
+    // Batched-request mixing: many small requests fused into one run.
+    let mut t2 = Table::new("batch fusion", &["requests", "imgs each", "ms total", "imgs/s"]);
+    for &(nreq, each) in &[(1usize, 16usize), (4, 4), (16, 1)] {
+        let reqs: Vec<GenRequest> = (0..nreq)
+            .map(|i| GenRequest {
+                n: each,
+                sampler: SamplerKind::Mlem,
+                steps,
+                seed: i as u64,
+                levels: vec![1, 3, 5],
+                delta: 0.0,
+                return_images: false,
+            })
+            .collect();
+        scheduler.execute(&reqs)?; // warm
+        let t0 = Instant::now();
+        scheduler.execute(&reqs)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let imgs = (nreq * each) as f64;
+        t2.row(&[
+            format!("{nreq}"),
+            format!("{each}"),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.1}", imgs / wall),
+        ]);
+    }
+    t2.emit();
+    println!(
+        "Reading: fusing many small requests into one shared-Bernoulli batch keeps\n\
+         images/s close to the single-big-request case — the §4 batching trick."
+    );
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Theorem 1 validation on the analytic GMM substrate — the paper's
+//! central claim, tested where the paper couldn't (exact drift known):
+//!
+//! 1. **Rates**: the cost-to-reach-ε Pareto frontier scales like
+//!    `ε^{−(γ+1)}` for plain EM over the Assumption-1 family but
+//!    `ε^{−γ}`-ish for ML-EM (HTMC regime γ > 2), with the γ ≤ 2
+//!    regimes following `E_γ`.
+//! 2. **η-independence**: ML-EM's expected compute stays flat as the
+//!    step size shrinks, while EM's grows like 1/η.
+//!
+//! Costs are Assumption-1 units (`cost(f^k) = 2^{γk}`) — the substrate
+//! *constructs* the paper's assumption rather than measuring a noisy
+//! proxy.  `cargo bench --bench bench_theorem1`
+
+use mlem::gmm::{assumption1_family, Gmm, LangevinDrift};
+use mlem::levels::{theory_probs, Policy};
+use mlem::sde::drift::Drift;
+use mlem::sde::em::{em_sample, TimeGrid};
+use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
+use mlem::sde::BrownianPath;
+use mlem::util::bench::Table;
+use mlem::util::rng::Rng;
+use mlem::util::stats;
+
+const DIM: usize = 6;
+const BATCH: usize = 24;
+const SPAN: f64 = 1.5;
+const STEPS: usize = 300;
+const FINE: usize = 1200;
+const K_LEVELS: usize = 8;
+
+struct Setup {
+    x0: Vec<f32>,
+    path: BrownianPath,
+    x_ref: Vec<f32>,
+}
+
+fn setup(gmm: &Gmm, seed: u64) -> Setup {
+    let exact = LangevinDrift { gmm };
+    let mut rng = Rng::new(seed);
+    let x0: Vec<f32> = (0..BATCH * DIM).map(|_| rng.normal_f32() * 1.5).collect();
+    let path = BrownianPath::sample(&mut rng, FINE, BATCH * DIM, SPAN);
+    let grid = TimeGrid::new(SPAN, 0.0, FINE);
+    let mut x_ref = x0.clone();
+    em_sample(&exact, |_| (2.0f64).sqrt(), &mut x_ref, &grid, &path);
+    Setup { x0, path, x_ref }
+}
+
+/// Pareto frontier: keep points no other point dominates (less cost AND
+/// less error).
+fn pareto(mut pts: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    let mut best_err = f64::INFINITY;
+    for (c, e) in pts {
+        if e < best_err {
+            best_err = e;
+            out.push((c, e));
+        }
+    }
+    out
+}
+
+fn main() {
+    let gmm = Gmm::random(21, 3, DIM, 1.5, 0.5);
+    let exact = LangevinDrift { gmm: &gmm };
+    let mut summary = Table::new(
+        "theorem1 rate summary",
+        &["gamma", "EM slope (exp: gamma+1)", "ML-EM slope (exp: ~gamma)", "speedup@smallest eps"],
+    );
+
+    for &gamma in &[1.5f64, 2.0, 2.5, 4.0] {
+        let fam_drifts = assumption1_family(&exact, 1, K_LEVELS, 1.0, gamma, 33);
+        let s = setup(&gmm, 5);
+        let grid = TimeGrid::new(SPAN, 0.0, STEPS);
+
+        // EM frontier over (level, step-count): error floors at 2^-k, so
+        // reaching smaller eps forces costlier levels AND more steps.
+        let mut em_pts = Vec::new();
+        for (k, lvl) in fam_drifts.iter().enumerate() {
+            for &n in &[30usize, 75, 150, 300, 600, 1200] {
+                let g = TimeGrid::new(SPAN, 0.0, n);
+                let mut x = s.x0.clone();
+                em_sample(lvl, |_| (2.0f64).sqrt(), &mut x, &g, &s.path);
+                let err = stats::mse_f32(&x, &s.x_ref).sqrt();
+                let cost = n as f64 * BATCH as f64 * lvl.cost();
+                em_pts.push((cost, err));
+                let _ = k;
+            }
+        }
+        let em_front = pareto(em_pts);
+
+        // ML-EM frontier: Theorem 1's construction, literally — for each
+        // target ε couple ALL THREE knobs: the grid (n ∝ 1/ε, allowed at
+        // no extra cost by η-independence), the ladder depth
+        // (k_max ∝ log2(1/ε)) and the probability constant
+        // (C ∝ η·ε^{-2}·Σ 2^{(γ/2−1)k}).
+        let _ = grid;
+        let mut ml_pts = Vec::new();
+        for &(eps_t, n) in &[(0.2f64, 75usize), (0.1, 150), (0.05, 300), (0.025, 600), (0.0125, 1200)] {
+            let k_max = (((1.0 / eps_t).log2().ceil() as i64) + 1).clamp(2, K_LEVELS as i64);
+            let fam_k = MlemFamily {
+                base: None,
+                levels: fam_drifts[..k_max as usize].iter().map(|d| d as &dyn Drift).collect(),
+            };
+            let geo: f64 = (1..=k_max)
+                .map(|k| 2f64.powf((gamma / 2.0 - 1.0) * k as f64))
+                .sum();
+            let eta = SPAN / n as f64;
+            let c = 2.0 * eta * geo / (eps_t * eps_t);
+            let policy = match theory_probs(c, gamma, 1, k_max) {
+                Policy::Manual { probs } => Policy::Manual { probs },
+                _ => unreachable!(),
+            };
+            let g_n = TimeGrid::new(SPAN, 0.0, n);
+            // mean over Bernoulli trials (the theorem bounds E||.||^2)
+            let trials = 6;
+            let mut mse = 0.0;
+            let mut cost = 0.0;
+            for seed in 0..trials {
+                let mut x = s.x0.clone();
+                let mut bern = Rng::new(400 + seed);
+                let rep = mlem_sample(
+                    &fam_k,
+                    &policy,
+                    BernoulliMode::Shared,
+                    |_| (2.0f64).sqrt(),
+                    &mut x,
+                    BATCH,
+                    &g_n,
+                    &s.path,
+                    &mut bern,
+                );
+                mse += stats::mse_f32(&x, &s.x_ref) / trials as f64;
+                cost += rep.cost_units / trials as f64;
+            }
+            ml_pts.push((cost, mse.sqrt()));
+        }
+        let ml_front = pareto(ml_pts);
+
+        // slopes of log cost vs log (1/err) on the frontiers
+        let slope = |front: &[(f64, f64)]| -> f64 {
+            let xs: Vec<f64> = front.iter().map(|(_, e)| 1.0 / e).collect();
+            let ys: Vec<f64> = front.iter().map(|(c, _)| *c).collect();
+            if xs.len() < 2 {
+                return f64::NAN;
+            }
+            stats::loglog_fit(&xs, &ys).slope
+        };
+        let em_slope = slope(&em_front);
+        let ml_slope = slope(&ml_front);
+
+        // speedup at the smallest error ML-EM reached
+        let eps_target = ml_front.last().map(|(_, e)| *e).unwrap_or(f64::NAN);
+        let ml_cost = ml_front.last().map(|(c, _)| *c).unwrap_or(f64::NAN);
+        let em_cost = em_front
+            .iter()
+            .filter(|(_, e)| *e <= eps_target)
+            .map(|(c, _)| *c)
+            .fold(f64::INFINITY, f64::min);
+        let speedup = em_cost / ml_cost;
+
+        let mut t = Table::new(
+            &format!("theorem1 frontier gamma={gamma}"),
+            &["method", "cost_units", "rmse"],
+        );
+        for (c, e) in &em_front {
+            t.row(&["EM".into(), format!("{c:.0}"), format!("{e:.5}")]);
+        }
+        for (c, e) in &ml_front {
+            t.row(&["ML-EM".into(), format!("{c:.0}"), format!("{e:.5}")]);
+        }
+        t.emit();
+
+        summary.row(&[
+            format!("{gamma}"),
+            format!("{em_slope:.2}"),
+            format!("{ml_slope:.2}"),
+            if speedup.is_finite() { format!("{speedup:.1}x @ eps={eps_target:.4}") } else { "n/a".into() },
+        ]);
+    }
+    summary.emit();
+
+    // --- η-independence (γ = 2.5): compute vs step count -----------------
+    let gamma = 2.5;
+    let fam_drifts = assumption1_family(&exact, 1, K_LEVELS, 1.0, gamma, 33);
+    let fam = MlemFamily {
+        base: None,
+        levels: fam_drifts.iter().map(|d| d as &dyn Drift).collect(),
+    };
+    let mut t = Table::new(
+        "theorem1 eta-independence (gamma=2.5)",
+        &["steps", "EM(f^6) cost", "ML-EM expected cost", "ML-EM realised cost", "ML-EM rmse"],
+    );
+    let s = setup(&gmm, 6);
+    let n0 = 150.0f64;
+    for &n in &[150usize, 300, 600, 1200] {
+        // Theorem 1 picks C ∝ η, so halving the step size halves every
+        // p_k: per-level firing counts (and hence compute) stay constant
+        // as η → 0 while the error bound is maintained.
+        let c_n = 3.0 * n0 / n as f64; // unclamped at every n
+        let policy = match theory_probs(c_n, gamma, 1, K_LEVELS as i64) {
+            Policy::Manual { probs } => Policy::Manual { probs },
+            _ => unreachable!(),
+        };
+        // re-sample the path on the finer grid, keeping the same seed
+        let mut rng = Rng::new(99);
+        let path = BrownianPath::sample(&mut rng, n, BATCH * DIM, SPAN);
+        let grid = TimeGrid::new(SPAN, 0.0, n);
+        let mut x_ref = s.x0.clone();
+        em_sample(&exact, |_| (2.0f64).sqrt(), &mut x_ref, &grid, &path);
+        let mut x = s.x0.clone();
+        let mut bern = Rng::new(7);
+        let rep = mlem_sample(
+            &fam,
+            &policy,
+            BernoulliMode::Shared,
+            |_| (2.0f64).sqrt(),
+            &mut x,
+            BATCH,
+            &grid,
+            &path,
+            &mut bern,
+        );
+        let em_cost = n as f64 * BATCH as f64 * fam_drifts[5].cost();
+        t.row(&[
+            format!("{n}"),
+            format!("{em_cost:.0}"),
+            format!("{:.0}", rep.expected_cost_units),
+            format!("{:.0}", rep.cost_units),
+            format!("{:.5}", stats::mse_f32(&x, &x_ref).sqrt()),
+        ]);
+    }
+    t.emit();
+    println!(
+        "Reading: EM cost grows linearly with the step count, while ML-EM's\n\
+         expected compute stays ~flat (C ∝ η keeps per-level firing counts\n\
+         constant) at comparable error — Theorem 1's η-independence."
+    );
+}

@@ -1,0 +1,311 @@
+//! Shared plumbing for the `cargo bench` targets (each bench regenerates
+//! one paper table/figure; see DESIGN.md §4 experiment index).
+
+use anyhow::Result;
+
+use crate::runtime::{spawn_executor, ExecutorHandle, Manifest, NeuralDenoiser};
+use crate::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
+use crate::sde::em::{em_sample, TimeGrid};
+use crate::sde::mlem::{mlem_sample, BernoulliMode, LevelPolicy, MlemFamily, SampleReport};
+use crate::sde::{schedule, BrownianPath};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Artifact directory if `make artifacts` has run, else `None` (benches
+/// print a skip notice instead of failing).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+/// Loaded family + measured costs, ready for sampler benches.
+pub struct NeuralBench {
+    pub handle: ExecutorHandle,
+    pub denoisers: Vec<NeuralDenoiser>,
+    /// Measured seconds/image per level (serving bucket).
+    pub costs: Vec<f64>,
+    pub dim: usize,
+}
+
+impl NeuralBench {
+    /// Load artifacts, measure costs, pre-compile the serving buckets.
+    pub fn load() -> Result<Option<NeuralBench>> {
+        let Some(dir) = artifacts_dir() else { return Ok(None) };
+        let manifest = Manifest::load(&dir)?;
+        let dim = manifest.dim;
+        let buckets = manifest.batch_buckets.clone();
+        let (handle, _join) = spawn_executor(manifest, None)?;
+        for b in buckets {
+            handle.warmup(b)?;
+        }
+        let denoisers = NeuralDenoiser::family(&handle, 5)?;
+        let costs = denoisers.iter().map(|d| d.cost).collect();
+        Ok(Some(NeuralBench { handle, denoisers, costs, dim }))
+    }
+
+    /// Reference "true sample" (paper protocol): EM with the best level
+    /// on the finest grid, fixed noise.
+    pub fn true_sample(
+        &self,
+        x_init: &[f32],
+        path: &BrownianPath,
+        fine_steps: usize,
+        ode: bool,
+    ) -> Vec<f32> {
+        let top = self.denoisers.len() - 1;
+        let drift = DiffusionDrift { den: &self.denoisers[top], ode };
+        let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, fine_steps);
+        let mut x = x_init.to_vec();
+        em_sample(&drift, diffusion(ode), &mut x, &grid, path);
+        x
+    }
+}
+
+/// The diffusion coefficient for SDE/ODE mode.
+pub fn diffusion(ode: bool) -> impl Fn(f64) -> f64 {
+    move |t: f64| if ode { 0.0 } else { schedule::beta(t).sqrt() }
+}
+
+/// Fixed noise for a Fig-1 style comparison: initial state + fine path.
+pub fn fixed_noise(seed: u64, width: usize, fine_steps: usize) -> (Vec<f32>, BrownianPath) {
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, fine_steps);
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..width).map(|_| rng.normal_f32()).collect();
+    let path = BrownianPath::sample(&mut rng, fine_steps, width, grid.span());
+    (x, path)
+}
+
+/// One ML-EM measurement: best-of-`trials` over Bernoulli streams at
+/// fixed noise (the paper's protocol — schedules can be memoised), run
+/// against a given reference.  Returns (best mse, wallclock of best,
+/// report of best).
+#[allow(clippy::too_many_arguments)]
+pub fn best_of_mlem(
+    fam: &MlemFamily,
+    policy: &dyn LevelPolicy,
+    x_init: &[f32],
+    batch: usize,
+    grid: &TimeGrid,
+    path: &BrownianPath,
+    reference: &[f32],
+    ode: bool,
+    trials: u64,
+    seed0: u64,
+) -> (f64, f64, SampleReport) {
+    let mut best: Option<(f64, f64, SampleReport)> = None;
+    for s in 0..trials {
+        let mut x = x_init.to_vec();
+        let mut bern = Rng::new(seed0 + s);
+        let t0 = std::time::Instant::now();
+        let rep = mlem_sample(
+            fam,
+            policy,
+            BernoulliMode::Shared,
+            diffusion(ode),
+            &mut x,
+            batch,
+            grid,
+            path,
+            &mut bern,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let mse = stats::mse_f32(&x, reference);
+        if best.as_ref().map_or(true, |(m, _, _)| mse < *m) {
+            best = Some((mse, wall, rep));
+        }
+    }
+    best.unwrap()
+}
+
+/// Figure-1 core (shared by the DDPM and DDIM benches): MSE-vs-time for
+/// EM over every level × step-count against ML-EM {f^1,f^3,f^5} with
+/// fixed and learned probabilities, best-of-15 Bernoulli trials, all on
+/// the same frozen noise.  Mirrors the paper's protocol with scaled
+/// constants (batch 16, fine grid 400 vs the paper's batch 200 / 1000).
+pub fn run_figure1(ode: bool) -> Result<()> {
+    let label = if ode { "DDIM (ODE)" } else { "DDPM (SDE)" };
+    let Some(nb) = NeuralBench::load()? else {
+        println!("skipping figure-1 bench: run `make artifacts` first");
+        return Ok(());
+    };
+    let batch = 16;
+    let fine = 400;
+    let trials = 15;
+    let (x_init, path) = fixed_noise(42, batch * nb.dim, fine);
+    let x_true = nb.true_sample(&x_init, &path, fine, ode);
+    println!("== Figure 1 [{label}] == batch {batch}, true = f^5 @ {fine} steps, best-of-{trials}\n");
+
+    let mut table = crate::util::bench::Table::new(
+        &format!("figure1 {}", if ode { "ddim" } else { "ddpm" }),
+        &["method", "config", "time_s", "mse", "nfe(f1/f3/f5)"],
+    );
+
+    // --- EM baselines: every level x step counts (solid lines) ----------
+    for (i, den) in nb.denoisers.iter().enumerate() {
+        let drift = DiffusionDrift { den, ode };
+        for &steps in &[50usize, 100, 200, 400] {
+            let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
+            let mut x = x_init.clone();
+            let t0 = std::time::Instant::now();
+            em_sample(&drift, diffusion(ode), &mut x, &grid, &path);
+            let wall = t0.elapsed().as_secs_f64();
+            let mse = stats::mse_f32(&x, &x_true);
+            table.row(&[
+                format!("EM f^{}", i + 1),
+                format!("{steps} steps"),
+                format!("{wall:.3}"),
+                format!("{mse:.5}"),
+                format!("{steps}x f^{}", i + 1),
+            ]);
+        }
+    }
+
+    // --- ML-EM over {f^1, f^3, f^5} --------------------------------------
+    let idx = [0usize, 2, 4];
+    let parts = score_parts(&nb.denoisers, &idx, ode);
+    let base = LinearPartDrift { dim: nb.dim };
+    let fam = family_of(&base, &parts);
+    let costs: Vec<f64> = idx.iter().map(|&i| nb.costs[i]).collect();
+    let steps = 200;
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
+
+    // fixed probs, p_k ∝ 1/T_k (orange crosses)
+    for &scale in &[0.4, 0.7, 1.0, 1.6, 2.6] {
+        let policy = crate::levels::Policy::FixedInvCost {
+            scale: scale * costs[0],
+            costs: costs.clone(),
+        };
+        let (mse, wall, rep) =
+            best_of_mlem(&fam, &policy, &x_init, batch, &grid, &path, &x_true, ode, trials, 900);
+        table.row(&[
+            "ML-EM inv-cost".into(),
+            format!("C={scale}"),
+            format!("{wall:.3}"),
+            format!("{mse:.5}"),
+            format!("{:?}", rep.batch_evals),
+        ]);
+    }
+
+    // fixed probs, theory exponent p_k ∝ T_k^{-(1/γ+1/2)} (green crosses)
+    let gamma = 2.5;
+    for &scale in &[0.4, 0.7, 1.0, 1.6, 2.6] {
+        let norm = costs[0].powf(-(1.0 / gamma + 0.5));
+        let policy = crate::levels::Policy::FixedTheory {
+            scale: scale / norm,
+            gamma,
+            costs: costs.clone(),
+        };
+        let (mse, wall, rep) =
+            best_of_mlem(&fam, &policy, &x_init, batch, &grid, &path, &x_true, ode, trials, 1700);
+        table.row(&[
+            "ML-EM theory".into(),
+            format!("C={scale}"),
+            format!("{wall:.3}"),
+            format!("{mse:.5}"),
+            format!("{:?}", rep.batch_evals),
+        ]);
+    }
+
+    // learned coefficients (blue dots): short SGD then the Δ sweep
+    let reference = DiffusionDrift { den: &nb.denoisers[4], ode };
+    let costs_ms: Vec<f64> = costs.iter().map(|c| c * 1e3).collect();
+    let learner = crate::adaptive::Learner {
+        family: &fam,
+        reference: &reference,
+        costs: costs_ms.clone(),
+        cfg: crate::adaptive::LearnerConfig {
+            lambda: if ode { 1.0 } else { 0.1 }, // the paper's λ values
+            steps: 40,
+            t_start: schedule::T_MAX,
+            t_end: schedule::T_MIN,
+            lr: 0.02,
+            batch: 6,
+            ode,
+            clip: 0.25,
+        },
+    };
+    let p0: Vec<f64> = costs.iter().map(|c| (costs[0] / c).min(0.999)).collect();
+    let mut sched = crate::adaptive::Schedule::from_probs(&p0, 0.1);
+    let mut rng = Rng::new(3);
+    learner.fit(&mut sched, 20, &mut rng);
+    for &delta in &[-2.0, -1.0, 0.0, 1.0, 2.0] {
+        let policy = sched.policy().with_delta(delta);
+        let (mse, wall, rep) =
+            best_of_mlem(&fam, &policy, &x_init, batch, &grid, &path, &x_true, ode, trials, 2500);
+        table.row(&[
+            "ML-EM learned".into(),
+            format!("Δ={delta}"),
+            format!("{wall:.3}"),
+            format!("{mse:.5}"),
+            format!("{:?}", rep.batch_evals),
+        ]);
+    }
+    table.emit();
+
+    summarize_frontier(&table_rows_to_points(&table));
+    Ok(())
+}
+
+/// (time, mse, is_mlem) points scraped back out of the table rows.
+fn table_rows_to_points(table: &crate::util::bench::Table) -> Vec<(f64, f64, bool)> {
+    table
+        .rows()
+        .iter()
+        .map(|r| {
+            (
+                r[2].parse::<f64>().unwrap_or(f64::NAN),
+                r[3].parse::<f64>().unwrap_or(f64::NAN),
+                r[0].starts_with("ML-EM"),
+            )
+        })
+        .collect()
+}
+
+/// Print the headline comparison: at each ML-EM point, the speedup over
+/// the best EM run achieving the same (or better) MSE.
+fn summarize_frontier(points: &[(f64, f64, bool)]) {
+    let mut best_speedup: f64 = 0.0;
+    for &(t_ml, mse_ml, is_ml) in points {
+        if !is_ml {
+            continue;
+        }
+        let em_time = points
+            .iter()
+            .filter(|(_, mse, is)| !*is && *mse <= mse_ml)
+            .map(|(t, _, _)| *t)
+            .fold(f64::INFINITY, f64::min);
+        if em_time.is_finite() && t_ml > 0.0 {
+            best_speedup = best_speedup.max(em_time / t_ml);
+        }
+    }
+    if best_speedup > 0.0 {
+        println!(
+            "headline: ML-EM reaches EM-matching MSE up to {best_speedup:.2}x faster \
+             (paper reports ~4x on CelebA-64 DDPM)\n"
+        );
+    } else {
+        println!("headline: no EM run matched the ML-EM error levels in this sweep\n");
+    }
+}
+
+/// Build the {f^1, f^3, f^5}-style score-part family over level indices
+/// (0-based into `denoisers`).  Returns the parts; wire them into an
+/// `MlemFamily` with `family_of`.
+pub fn score_parts<'a>(
+    denoisers: &'a [NeuralDenoiser],
+    idx: &[usize],
+    ode: bool,
+) -> Vec<ScorePartDrift<&'a NeuralDenoiser>> {
+    idx.iter().map(|&i| ScorePartDrift { den: &denoisers[i], ode }).collect()
+}
+
+/// Assemble an `MlemFamily` with the analytic linear base part.
+pub fn family_of<'a>(
+    base: &'a LinearPartDrift,
+    parts: &'a [ScorePartDrift<&'a NeuralDenoiser>],
+) -> MlemFamily<'a> {
+    MlemFamily {
+        base: Some(base),
+        levels: parts.iter().map(|p| p as &dyn Drift).collect(),
+    }
+}

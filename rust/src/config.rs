@@ -1,0 +1,214 @@
+//! Typed configuration for the `mlem` binary and the serving coordinator.
+//!
+//! Sources, in increasing precedence: built-in defaults → JSON config
+//! file (`--config path`) → CLI flags.  Kept deliberately flat; every
+//! field is documented where a paper parameter corresponds to it.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which sampler a generation request uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Plain Euler–Maruyama with one chosen level (the baseline).
+    Em,
+    /// Multilevel Euler–Maruyama (the paper's method).
+    Mlem,
+    /// Exact ancestral DDPM update.
+    Ddpm,
+    /// Deterministic DDIM update.
+    Ddim,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<SamplerKind> {
+        match s {
+            "em" => Ok(SamplerKind::Em),
+            "mlem" => Ok(SamplerKind::Mlem),
+            "ddpm" => Ok(SamplerKind::Ddpm),
+            "ddim" => Ok(SamplerKind::Ddim),
+            _ => Err(anyhow!("unknown sampler '{s}' (em|mlem|ddpm|ddim)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SamplerKind::Em => "em",
+            SamplerKind::Mlem => "mlem",
+            SamplerKind::Ddpm => "ddpm",
+            SamplerKind::Ddim => "ddim",
+        }
+    }
+}
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifact directory (manifest + HLO files).
+    pub artifacts: String,
+    /// TCP listen address.
+    pub addr: String,
+    /// Maximum images per generation batch (paper used N=200 on GPU; we
+    /// default to the largest exported bucket).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub max_wait_ms: u64,
+    /// Bounded request-queue size (backpressure: reject beyond this).
+    pub queue_depth: usize,
+    /// Default sampler for requests that don't specify one.
+    pub default_sampler: SamplerKind,
+    /// Default number of discretisation steps.
+    pub default_steps: usize,
+    /// ML-EM level subset, 1-based (paper: {f^1, f^3, f^5}).
+    pub mlem_levels: Vec<usize>,
+    /// Fixed-probs scale constant C (`p_k = min(C/T_k, 1)` by default).
+    pub prob_scale: f64,
+    /// Repetitions for startup cost measurement (0 = use FLOP estimates).
+    pub cost_reps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts: "artifacts".to_string(),
+            addr: "127.0.0.1:7071".to_string(),
+            max_batch: 32,
+            max_wait_ms: 20,
+            queue_depth: 256,
+            default_sampler: SamplerKind::Mlem,
+            default_steps: 200,
+            mlem_levels: vec![1, 3, 5],
+            prob_scale: 1.0,
+            cost_reps: 3,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply a JSON config object (unknown keys rejected to catch typos).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let Json::Obj(fields) = j else {
+            return Err(anyhow!("config root must be an object"));
+        };
+        for (k, v) in fields {
+            match k.as_str() {
+                "artifacts" => self.artifacts = v.as_str().ok_or_else(|| anyhow!("artifacts: string"))?.into(),
+                "addr" => self.addr = v.as_str().ok_or_else(|| anyhow!("addr: string"))?.into(),
+                "max_batch" => self.max_batch = v.as_usize().ok_or_else(|| anyhow!("max_batch: int"))?,
+                "max_wait_ms" => self.max_wait_ms = v.as_f64().ok_or_else(|| anyhow!("max_wait_ms: num"))? as u64,
+                "queue_depth" => self.queue_depth = v.as_usize().ok_or_else(|| anyhow!("queue_depth: int"))?,
+                "default_sampler" => {
+                    self.default_sampler =
+                        SamplerKind::parse(v.as_str().ok_or_else(|| anyhow!("default_sampler: string"))?)?
+                }
+                "default_steps" => self.default_steps = v.as_usize().ok_or_else(|| anyhow!("default_steps: int"))?,
+                "mlem_levels" => {
+                    self.mlem_levels = v
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("mlem_levels: array"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect()
+                }
+                "prob_scale" => self.prob_scale = v.as_f64().ok_or_else(|| anyhow!("prob_scale: num"))?,
+                "cost_reps" => self.cost_reps = v.as_usize().ok_or_else(|| anyhow!("cost_reps: int"))?,
+                other => return Err(anyhow!("unknown config key '{other}'")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Build from defaults + optional `--config file` + CLI overrides.
+    pub fn from_args(args: &Args) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("reading config {path}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("parsing config {path}: {e}"))?;
+            cfg.apply_json(&j)?;
+        }
+        cfg.artifacts = args.str_or("artifacts", &cfg.artifacts);
+        cfg.addr = args.str_or("addr", &cfg.addr);
+        cfg.max_batch = args.usize_or("max-batch", cfg.max_batch);
+        cfg.max_wait_ms = args.u64_or("max-wait-ms", cfg.max_wait_ms);
+        cfg.queue_depth = args.usize_or("queue-depth", cfg.queue_depth);
+        if let Some(s) = args.get("sampler") {
+            cfg.default_sampler = SamplerKind::parse(s)?;
+        }
+        cfg.default_steps = args.usize_or("steps", cfg.default_steps);
+        cfg.mlem_levels = args.usize_list("mlem-levels", &cfg.mlem_levels);
+        cfg.prob_scale = args.f64_or("prob-scale", cfg.prob_scale);
+        cfg.cost_reps = args.usize_or("cost-reps", cfg.cost_reps);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || self.queue_depth == 0 || self.default_steps == 0 {
+            return Err(anyhow!("max_batch, queue_depth, default_steps must be positive"));
+        }
+        if self.mlem_levels.is_empty() {
+            return Err(anyhow!("mlem_levels must not be empty"));
+        }
+        let mut sorted = self.mlem_levels.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted != self.mlem_levels {
+            return Err(anyhow!("mlem_levels must be strictly increasing"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_validate() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let cfg = ServeConfig::from_args(&args(
+            "serve --max-batch 8 --sampler em --mlem-levels 1,2,3 --prob-scale 0.5",
+        ))
+        .unwrap();
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.default_sampler, SamplerKind::Em);
+        assert_eq!(cfg.mlem_levels, vec![1, 2, 3]);
+        assert!((cfg.prob_scale - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_config_applies_and_rejects_unknown() {
+        let mut cfg = ServeConfig::default();
+        let j = Json::parse(r#"{"max_batch": 16, "default_sampler": "ddim"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.default_sampler, SamplerKind::Ddim);
+        let bad = Json::parse(r#"{"max_batsch": 16}"#).unwrap();
+        assert!(cfg.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_levels_rejected() {
+        assert!(ServeConfig::from_args(&args("serve --mlem-levels 3,1")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --mlem-levels 1,1,2")).is_err());
+    }
+
+    #[test]
+    fn sampler_parse_roundtrip() {
+        for s in ["em", "mlem", "ddpm", "ddim"] {
+            assert_eq!(SamplerKind::parse(s).unwrap().as_str(), s);
+        }
+        assert!(SamplerKind::parse("nope").is_err());
+    }
+}

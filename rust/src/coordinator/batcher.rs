@@ -1,0 +1,266 @@
+//! Dynamic batcher: groups compatible generation requests so the §4
+//! Bernoulli-sharing trick amortises network evaluations across the
+//! whole batch.
+//!
+//! Compatibility = same (sampler, steps, levels, Δ): those requests can
+//! share one integration grid and one level schedule.  Requests keep
+//! FIFO order within a compatibility class; a batch is cut when it
+//! reaches `max_batch` images or the head request has waited `max_wait`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::config::SamplerKind;
+use crate::coordinator::protocol::GenRequest;
+
+/// Compatibility key of a request (requests with equal keys may share a
+/// batch).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupKey {
+    pub sampler: SamplerKind,
+    pub steps: usize,
+    pub levels: Vec<usize>,
+    /// Δ compared bit-exactly (it parametrises the schedule).
+    pub delta_bits: u64,
+}
+
+pub fn group_key(r: &GenRequest) -> GroupKey {
+    GroupKey {
+        sampler: r.sampler,
+        steps: r.steps,
+        levels: r.levels.clone(),
+        delta_bits: r.delta.to_bits(),
+    }
+}
+
+/// A queued request plus its bookkeeping; `T` is the caller's payload
+/// (the server attaches its response channel, tests attach ids).
+#[derive(Debug)]
+pub struct WorkItem<T> {
+    pub req: GenRequest,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+/// Bounded FIFO of work items with compatibility-grouped batch popping.
+pub struct Batcher<T> {
+    queue: VecDeque<WorkItem<T>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub depth: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration, depth: usize) -> Batcher<T> {
+        Batcher { queue: VecDeque::new(), max_batch, max_wait, depth }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue; `Err(item)` when the queue is full (backpressure).
+    pub fn push(&mut self, req: GenRequest, payload: T) -> Result<(), WorkItem<T>> {
+        let item = WorkItem { req, enqueued: Instant::now(), payload };
+        if self.queue.len() >= self.depth {
+            return Err(item);
+        }
+        self.queue.push_back(item);
+        Ok(())
+    }
+
+    /// Whether a batch should be cut *now*: the head has waited past
+    /// `max_wait`, or a full batch of compatible work is available.
+    pub fn ready(&self, now: Instant) -> bool {
+        let Some(head) = self.queue.front() else { return false };
+        if now.duration_since(head.enqueued) >= self.max_wait {
+            return true;
+        }
+        self.compatible_image_count() >= self.max_batch
+    }
+
+    /// Images available in the head request's compatibility class.
+    fn compatible_image_count(&self) -> usize {
+        let Some(head) = self.queue.front() else { return 0 };
+        let key = group_key(&head.req);
+        let mut total = 0;
+        for item in &self.queue {
+            if group_key(&item.req) == key {
+                total += item.req.n;
+                if total >= self.max_batch {
+                    break;
+                }
+            }
+        }
+        total
+    }
+
+    /// Pop the next batch: the head request plus queued requests with the
+    /// same key, FIFO, while the image total stays ≤ `max_batch` (a
+    /// single over-sized request still forms its own batch — the engine
+    /// chunks it over buckets).  Returns `None` on an empty queue.
+    pub fn pop_batch(&mut self) -> Option<Vec<WorkItem<T>>> {
+        let head = self.queue.pop_front()?;
+        let key = group_key(&head.req);
+        let mut total = head.req.n;
+        let mut batch = vec![head];
+        let mut i = 0;
+        while i < self.queue.len() {
+            let item = &self.queue[i];
+            if group_key(&item.req) == key && total + item.req.n <= self.max_batch {
+                total += item.req.n;
+                // remove(i) preserves relative order of the rest
+                batch.push(self.queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite as pt;
+
+    fn req(n: usize, steps: usize, sampler: SamplerKind) -> GenRequest {
+        GenRequest {
+            n,
+            sampler,
+            steps,
+            seed: 0,
+            levels: vec![1, 3, 5],
+            delta: 0.0,
+            return_images: false,
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_depth() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5), 2);
+        assert!(b.push(req(1, 10, SamplerKind::Mlem), 0).is_ok());
+        assert!(b.push(req(1, 10, SamplerKind::Mlem), 1).is_ok());
+        let rejected = b.push(req(1, 10, SamplerKind::Mlem), 2);
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().payload, 2);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn groups_only_compatible_requests() {
+        let mut b: Batcher<u32> = Batcher::new(100, Duration::ZERO, 100);
+        b.push(req(2, 10, SamplerKind::Mlem), 0).unwrap();
+        b.push(req(2, 20, SamplerKind::Mlem), 1).unwrap(); // different steps
+        b.push(req(2, 10, SamplerKind::Mlem), 2).unwrap();
+        b.push(req(2, 10, SamplerKind::Em), 3).unwrap(); // different sampler
+        let batch = b.pop_batch().unwrap();
+        let ids: Vec<u32> = batch.iter().map(|w| w.payload).collect();
+        assert_eq!(ids, vec![0, 2]);
+        // queue order of the rest preserved
+        let batch2 = b.pop_batch().unwrap();
+        assert_eq!(batch2[0].payload, 1);
+    }
+
+    #[test]
+    fn respects_max_batch_images() {
+        let mut b: Batcher<u32> = Batcher::new(5, Duration::ZERO, 100);
+        for i in 0..4 {
+            b.push(req(2, 10, SamplerKind::Mlem), i).unwrap();
+        }
+        let batch = b.pop_batch().unwrap();
+        let total: usize = batch.iter().map(|w| w.req.n).sum();
+        assert!(total <= 5);
+        assert_eq!(batch.len(), 2); // 2+2=4 fits; +2 would exceed 5
+    }
+
+    #[test]
+    fn oversized_request_forms_own_batch() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::ZERO, 100);
+        b.push(req(9, 10, SamplerKind::Mlem), 0).unwrap();
+        b.push(req(1, 10, SamplerKind::Mlem), 1).unwrap();
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].req.n, 9);
+    }
+
+    #[test]
+    fn ready_on_timeout_or_full_batch() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_millis(50), 100);
+        assert!(!b.ready(Instant::now()));
+        b.push(req(1, 10, SamplerKind::Mlem), 0).unwrap();
+        assert!(!b.ready(Instant::now())); // not full, not timed out
+        assert!(b.ready(Instant::now() + Duration::from_millis(60)));
+        b.push(req(3, 10, SamplerKind::Mlem), 1).unwrap();
+        assert!(b.ready(Instant::now())); // 4 images = full
+    }
+
+    #[test]
+    fn delta_is_part_of_the_key() {
+        let mut a = req(1, 10, SamplerKind::Mlem);
+        let mut c = req(1, 10, SamplerKind::Mlem);
+        a.delta = 0.5;
+        c.delta = -0.5;
+        assert_ne!(group_key(&a), group_key(&c));
+        c.delta = 0.5;
+        assert_eq!(group_key(&a), group_key(&c));
+    }
+
+    #[test]
+    fn no_request_is_ever_dropped_or_duplicated() {
+        pt::check("batcher_conservation", 50, |gen| {
+            let mut b: Batcher<usize> =
+                Batcher::new(gen.usize_range(1, 16), Duration::ZERO, 10_000);
+            let n_items = gen.usize_range(1, 60);
+            for i in 0..n_items {
+                let sampler = if gen.bool() { SamplerKind::Mlem } else { SamplerKind::Em };
+                let steps = [10, 20][gen.usize_range(0, 2)];
+                b.push(req(gen.usize_range(1, 6), steps, sampler), i).unwrap();
+            }
+            let mut seen = Vec::new();
+            while let Some(batch) = b.pop_batch() {
+                // all members of a batch share a key
+                let key = group_key(&batch[0].req);
+                for item in &batch {
+                    if group_key(&item.req) != key {
+                        return Err("mixed keys in one batch".into());
+                    }
+                    seen.push(item.payload);
+                }
+            }
+            let mut sorted = seen.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != n_items || seen.len() != n_items {
+                return Err(format!("conservation violated: {} unique / {} total / {} pushed", sorted.len(), seen.len(), n_items));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_within_compatibility_class() {
+        pt::check("batcher_fifo", 30, |gen| {
+            let mut b: Batcher<usize> = Batcher::new(3, Duration::ZERO, 10_000);
+            let n_items = gen.usize_range(2, 40);
+            for i in 0..n_items {
+                b.push(req(1, 10, SamplerKind::Mlem), i).unwrap();
+            }
+            let mut order = Vec::new();
+            while let Some(batch) = b.pop_batch() {
+                for item in batch {
+                    order.push(item.payload);
+                }
+            }
+            if order.windows(2).all(|w| w[0] < w[1]) {
+                Ok(())
+            } else {
+                Err(format!("order violated: {order:?}"))
+            }
+        });
+    }
+}

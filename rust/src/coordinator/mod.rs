@@ -1,0 +1,24 @@
+//! L3 serving coordinator — the system the paper's method plugs into.
+//!
+//! Shape follows the vLLM-style router: a TCP JSON-lines front end, a
+//! bounded request queue with backpressure, a **dynamic batcher** that
+//! groups compatible generation requests (so the §4 Bernoulli-sharing
+//! trick applies across the whole batch), a **scheduler** that runs the
+//! chosen sampler against the PJRT executor, and per-request RNG streams
+//! so every request's output is a pure function of its seed.
+//!
+//! | file | role |
+//! |---|---|
+//! | [`protocol`] | wire types: request/response JSON |
+//! | [`batcher`]  | queueing + compatibility grouping |
+//! | [`scheduler`] | sampler dispatch, noise assembly, best-of-R |
+//! | [`server`] | TCP front end + worker threads |
+
+pub mod batcher;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use protocol::{GenRequest, GenResponse, Request, Response};
+pub use scheduler::Scheduler;
+pub use server::Server;

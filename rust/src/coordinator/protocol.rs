@@ -1,0 +1,238 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests:
+//!
+//! ```json
+//! {"cmd":"generate","n":4,"sampler":"mlem","steps":200,"seed":7,
+//!  "levels":[1,3,5],"delta":0.0,"return_images":true}
+//! {"cmd":"metrics"}
+//! {"cmd":"ping"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Responses are single JSON objects with `"ok"` plus either payload
+//! fields or `"error"`.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::SamplerKind;
+use crate::util::json::Json;
+
+/// A generation request (after validation / defaulting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenRequest {
+    /// Number of images.
+    pub n: usize,
+    pub sampler: SamplerKind,
+    pub steps: usize,
+    /// Seed making the request's noise reproducible.
+    pub seed: u64,
+    /// 1-based level subset for ML-EM (ignored by other samplers except
+    /// the max level, which EM/DDPM/DDIM use as their network).
+    pub levels: Vec<usize>,
+    /// β-shift applied to the level policy (the paper's Δ sweep).
+    pub delta: f64,
+    /// Include raw image payloads in the response.
+    pub return_images: bool,
+}
+
+/// Parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Generate(GenRequest),
+    Metrics,
+    Ping,
+    Shutdown,
+}
+
+/// Per-request generation stats echoed to the client.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub wall_ms: f64,
+    pub queue_ms: f64,
+    pub batch_size: usize,
+    /// Image-granular network evaluations per level (index 0 = f^1).
+    pub nfe: Vec<u64>,
+    /// Realised compute in cost units.
+    pub cost_units: f64,
+}
+
+/// Generation response payload.
+#[derive(Clone, Debug, Default)]
+pub struct GenResponse {
+    /// Flattened images, `n × dim` (present iff `return_images`).
+    pub images: Option<Vec<f32>>,
+    pub dim: usize,
+    pub stats: GenStats,
+}
+
+/// Server response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Gen(GenResponse),
+    Metrics(Json),
+    Pong,
+    Error(String),
+    ShuttingDown,
+}
+
+/// Limits enforced at parse time (backpressure against abusive inputs).
+pub const MAX_N: usize = 1024;
+pub const MAX_STEPS: usize = 20_000;
+
+impl Request {
+    /// Parse and validate one JSON line.
+    pub fn parse(line: &str, defaults: &crate::config::ServeConfig) -> Result<Request> {
+        let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
+        let cmd = j.str_of("cmd").ok_or_else(|| anyhow!("missing 'cmd'"))?;
+        match cmd {
+            "ping" => Ok(Request::Ping),
+            "metrics" => Ok(Request::Metrics),
+            "shutdown" => Ok(Request::Shutdown),
+            "generate" => {
+                let n = j.usize_of("n").unwrap_or(1);
+                if n == 0 || n > MAX_N {
+                    return Err(anyhow!("n must be in 1..={MAX_N}"));
+                }
+                let steps = j.usize_of("steps").unwrap_or(defaults.default_steps);
+                if steps == 0 || steps > MAX_STEPS {
+                    return Err(anyhow!("steps must be in 1..={MAX_STEPS}"));
+                }
+                let sampler = match j.str_of("sampler") {
+                    Some(s) => SamplerKind::parse(s)?,
+                    None => defaults.default_sampler,
+                };
+                let levels = match j.get("levels").and_then(Json::as_arr) {
+                    Some(a) => {
+                        let v: Vec<usize> = a.iter().filter_map(Json::as_usize).collect();
+                        if v.is_empty() || v.windows(2).any(|w| w[0] >= w[1]) {
+                            return Err(anyhow!("levels must be strictly increasing"));
+                        }
+                        v
+                    }
+                    None => defaults.mlem_levels.clone(),
+                };
+                Ok(Request::Generate(GenRequest {
+                    n,
+                    sampler,
+                    steps,
+                    seed: j.f64_of("seed").map(|s| s as u64).unwrap_or(0),
+                    levels,
+                    delta: j.f64_of("delta").unwrap_or(0.0),
+                    return_images: j.get("return_images").and_then(Json::as_bool).unwrap_or(false),
+                }))
+            }
+            other => Err(anyhow!("unknown cmd '{other}'")),
+        }
+    }
+}
+
+impl Response {
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Pong => Json::obj().with("ok", Json::Bool(true)).with("pong", Json::Bool(true)),
+            Response::ShuttingDown => Json::obj()
+                .with("ok", Json::Bool(true))
+                .with("shutdown", Json::Bool(true)),
+            Response::Error(msg) => Json::obj()
+                .with("ok", Json::Bool(false))
+                .with("error", Json::str(msg.clone())),
+            Response::Metrics(m) => Json::obj().with("ok", Json::Bool(true)).with("metrics", m.clone()),
+            Response::Gen(g) => {
+                let stats = Json::obj()
+                    .with("wall_ms", Json::num(g.stats.wall_ms))
+                    .with("queue_ms", Json::num(g.stats.queue_ms))
+                    .with("batch_size", Json::num(g.stats.batch_size as f64))
+                    .with(
+                        "nfe",
+                        Json::Arr(g.stats.nfe.iter().map(|&n| Json::num(n as f64)).collect()),
+                    )
+                    .with("cost_units", Json::num(g.stats.cost_units));
+                let mut o = Json::obj()
+                    .with("ok", Json::Bool(true))
+                    .with("dim", Json::num(g.dim as f64))
+                    .with("stats", stats);
+                if let Some(imgs) = &g.images {
+                    o = o.with(
+                        "images",
+                        Json::Arr(imgs.iter().map(|&v| Json::num(v as f64)).collect()),
+                    );
+                }
+                o
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    fn defaults() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    #[test]
+    fn parse_generate_with_defaults() {
+        let r = Request::parse(r#"{"cmd":"generate","n":4,"seed":9}"#, &defaults()).unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.n, 4);
+        assert_eq!(g.seed, 9);
+        assert_eq!(g.steps, defaults().default_steps);
+        assert_eq!(g.sampler, defaults().default_sampler);
+        assert_eq!(g.levels, defaults().mlem_levels);
+        assert!(!g.return_images);
+    }
+
+    #[test]
+    fn parse_full_generate() {
+        let r = Request::parse(
+            r#"{"cmd":"generate","n":2,"sampler":"em","steps":50,"levels":[2,4],"delta":-1.5,"return_images":true}"#,
+            &defaults(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.sampler, crate::config::SamplerKind::Em);
+        assert_eq!(g.levels, vec![2, 4]);
+        assert!((g.delta + 1.5).abs() < 1e-12);
+        assert!(g.return_images);
+    }
+
+    #[test]
+    fn parse_control_cmds() {
+        assert_eq!(Request::parse(r#"{"cmd":"ping"}"#, &defaults()).unwrap(), Request::Ping);
+        assert_eq!(Request::parse(r#"{"cmd":"metrics"}"#, &defaults()).unwrap(), Request::Metrics);
+        assert_eq!(
+            Request::parse(r#"{"cmd":"shutdown"}"#, &defaults()).unwrap(),
+            Request::Shutdown
+        );
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let d = defaults();
+        assert!(Request::parse("not json", &d).is_err());
+        assert!(Request::parse(r#"{"n":1}"#, &d).is_err()); // no cmd
+        assert!(Request::parse(r#"{"cmd":"nope"}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","n":0}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","n":999999}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","steps":0}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","levels":[3,1]}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","sampler":"x"}"#, &d).is_err());
+    }
+
+    #[test]
+    fn response_serialization_is_valid_json() {
+        let mut g = GenResponse { dim: 64, ..Default::default() };
+        g.stats.nfe = vec![10, 0, 3];
+        g.images = Some(vec![0.5, -0.5]);
+        let line = Response::Gen(g).to_json().to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(parsed.get("images").unwrap().as_arr().unwrap().len(), 2);
+        let err = Response::Error("bad".into()).to_json().to_string();
+        assert!(err.contains("\"ok\":false"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Sampler dispatch: turns a batch of compatible generation requests
+//! into one integration run against the PJRT executor, then splits the
+//! results back out per request.
+//!
+//! Noise discipline: every request's initial state and Brownian path are
+//! a pure function of its own seed, so results are reproducible per
+//! request; the Bernoulli level draws are shared across the batch (§4)
+//! and keyed by the combined batch seed.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{SamplerKind, ServeConfig};
+use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats};
+use crate::levels::Policy;
+use crate::metrics::Metrics;
+use crate::runtime::{ExecutorHandle, NeuralDenoiser};
+use crate::sde::ddpm::{ancestral_sample, AncestralConfig};
+use crate::sde::drift::{DiffusionDrift, LinearPartDrift, ScorePartDrift};
+use crate::sde::em::{em_sample, TimeGrid};
+use crate::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
+use crate::sde::{schedule, BrownianPath};
+use crate::util::rng::Rng;
+
+/// Owns the denoiser family + measured costs; stateless per call.
+pub struct Scheduler {
+    handle: ExecutorHandle,
+    /// All levels, index = level − 1.
+    denoisers: Vec<NeuralDenoiser>,
+    /// Measured (or FLOP-estimated) per-image costs, same indexing.
+    pub costs: Vec<f64>,
+    cfg: ServeConfig,
+    metrics: Metrics,
+}
+
+impl Scheduler {
+    /// Build the scheduler; measures per-level costs when
+    /// `cfg.cost_reps > 0` (otherwise uses manifest FLOPs).
+    pub fn new(handle: ExecutorHandle, cfg: ServeConfig, metrics: Metrics) -> Result<Scheduler> {
+        let denoisers = NeuralDenoiser::family(&handle, cfg.cost_reps)?;
+        // Pre-compile every level at the serving buckets so the first
+        // request doesn't pay lazy-compilation latency.
+        for &b in &handle.manifest().batch_buckets.clone() {
+            if b <= cfg.max_batch {
+                handle.warmup(b)?;
+            }
+        }
+        let costs = denoisers.iter().map(|d| d.cost).collect();
+        Ok(Scheduler { handle, denoisers, costs, cfg, metrics })
+    }
+
+    pub fn handle(&self) -> &ExecutorHandle {
+        &self.handle
+    }
+
+    pub fn dim(&self) -> usize {
+        self.handle.manifest().dim
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.denoisers.len()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn check_levels(&self, levels: &[usize]) -> Result<()> {
+        for &l in levels {
+            if l == 0 || l > self.denoisers.len() {
+                return Err(anyhow!("level {l} out of range 1..={}", self.denoisers.len()));
+            }
+        }
+        Ok(())
+    }
+
+    /// The serving policy for a request: fixed inverse-cost probabilities
+    /// (`p_k = min(C/T_k, 1)`) over the request's level subset, shifted
+    /// by the request's Δ.
+    fn policy_for(&self, levels: &[usize], delta: f64) -> Policy {
+        let costs: Vec<f64> = levels.iter().map(|&l| self.costs[l - 1].max(1e-12)).collect();
+        // Normalise so the lowest level sits at p=1 at Δ=0.
+        let scale = self.cfg.prob_scale * costs[0];
+        Policy::FixedInvCost { scale, costs }.with_delta(delta)
+    }
+
+    /// Execute one compatible batch; returns one response per request,
+    /// in order.  All requests must share (sampler, steps, levels, Δ).
+    pub fn execute(&self, reqs: &[GenRequest]) -> Result<Vec<GenResponse>> {
+        let Some(first) = reqs.first() else { return Ok(Vec::new()) };
+        self.check_levels(&first.levels)?;
+        let t0 = Instant::now();
+        let dim = self.dim();
+        let steps = first.steps;
+        let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
+
+        // Per-request reproducible noise, concatenated into a batch path.
+        let n_total: usize = reqs.iter().map(|r| r.n).sum();
+        let mut x = Vec::with_capacity(n_total * dim);
+        let mut parts = Vec::with_capacity(reqs.len());
+        let mut batch_seed = 0xF1E1u64;
+        for r in reqs {
+            let mut rng = Rng::new(r.seed ^ 0x9E3779B97F4A7C15);
+            for _ in 0..r.n * dim {
+                x.push(rng.normal_f32());
+            }
+            parts.push(BrownianPath::sample(&mut rng, steps, r.n * dim, grid.span()));
+            batch_seed = batch_seed
+                .rotate_left(13)
+                .wrapping_add(r.seed.wrapping_mul(0xA24BAED4963EE407));
+        }
+        let path = BrownianPath::concat(&parts);
+
+        // Run the requested sampler.
+        let top = *first.levels.last().unwrap();
+        let mut nfe = vec![0u64; self.denoisers.len()];
+        let mut cost_units = 0.0f64;
+        match first.sampler {
+            SamplerKind::Mlem => {
+                let base = LinearPartDrift { dim };
+                let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = first
+                    .levels
+                    .iter()
+                    .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })
+                    .collect();
+                let fam = MlemFamily {
+                    base: Some(&base),
+                    levels: score_parts.iter().map(|s| s as &dyn crate::sde::Drift).collect(),
+                };
+                let policy = self.policy_for(&first.levels, first.delta);
+                let mut bern = Rng::new(batch_seed);
+                let report = mlem_sample(
+                    &fam,
+                    &policy,
+                    BernoulliMode::Shared,
+                    |t| schedule::beta(t).sqrt(),
+                    &mut x,
+                    n_total,
+                    &grid,
+                    &path,
+                    &mut bern,
+                );
+                for (i, &l) in first.levels.iter().enumerate() {
+                    nfe[l - 1] += report.image_evals[i];
+                }
+                cost_units = report.cost_units;
+            }
+            SamplerKind::Em => {
+                let drift = DiffusionDrift::sde(&self.denoisers[top - 1]);
+                em_sample(&drift, |t| schedule::beta(t).sqrt(), &mut x, &grid, &path);
+                nfe[top - 1] += (steps * n_total) as u64;
+                cost_units = steps as f64 * n_total as f64 * self.costs[top - 1];
+            }
+            SamplerKind::Ddpm | SamplerKind::Ddim => {
+                let cfg = AncestralConfig {
+                    ddim: first.sampler == SamplerKind::Ddim,
+                    clip_x0: true,
+                };
+                ancestral_sample(&self.denoisers[top - 1], cfg, &mut x, &grid, &path);
+                nfe[top - 1] += (steps * n_total) as u64;
+                cost_units = steps as f64 * n_total as f64 * self.costs[top - 1];
+            }
+        }
+
+        // Metrics + split results per request.
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.batches.inc();
+        self.metrics.images.add(n_total as u64);
+        for (idx, &n) in nfe.iter().enumerate() {
+            if n > 0 {
+                let flops = self.handle.manifest().levels[idx].flops_per_image;
+                self.metrics.record_nfe(idx + 1, n, flops);
+            }
+        }
+
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut off = 0usize;
+        for r in reqs {
+            let imgs = r
+                .return_images
+                .then(|| x[off * dim..(off + r.n) * dim].to_vec());
+            off += r.n;
+            out.push(GenResponse {
+                images: imgs,
+                dim,
+                stats: GenStats {
+                    wall_ms,
+                    queue_ms: 0.0, // filled by the server
+                    batch_size: n_total,
+                    nfe: nfe.clone(),
+                    cost_units,
+                },
+            });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run one request alone.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResponse> {
+        Ok(self.execute(std::slice::from_ref(req))?.remove(0))
+    }
+}

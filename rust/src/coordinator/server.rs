@@ -1,0 +1,223 @@
+//! TCP front end: newline-delimited JSON requests over plain sockets.
+//!
+//! Threads:
+//!  * acceptor — owns the listener, spawns one handler per connection;
+//!  * handlers — parse requests, enqueue work, block on the response;
+//!  * batch worker — waits on the shared [`Batcher`], cuts batches, runs
+//!    them on the [`Scheduler`] (which talks to the PJRT executor
+//!    thread), and fans responses back out.
+//!
+//! Python never appears anywhere on this path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::metrics::Metrics;
+
+type RespTx = Sender<Response>;
+
+struct Shared {
+    batcher: Mutex<Batcher<(RespTx, Instant)>>,
+    wake: Condvar,
+    stop: AtomicBool,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    cfg: ServeConfig,
+    scheduler: Arc<Scheduler>,
+    metrics: Metrics,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig, scheduler: Scheduler) -> Server {
+        let metrics = scheduler.metrics().clone();
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(
+                cfg.max_batch,
+                Duration::from_millis(cfg.max_wait_ms),
+                cfg.queue_depth,
+            )),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        Server { cfg, scheduler: Arc::new(scheduler), metrics, shared }
+    }
+
+    /// Bind, serve until a `shutdown` request arrives, then drain.
+    /// Returns the bound address via `on_ready` before blocking (used by
+    /// tests/examples to connect to an ephemeral port).
+    pub fn run(&self, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener =
+            TcpListener::bind(&self.cfg.addr).with_context(|| format!("binding {}", self.cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        on_ready(listener.local_addr()?);
+        eprintln!("[server] listening on {}", listener.local_addr()?);
+
+        // Batch worker.
+        let worker = {
+            let shared = self.shared.clone();
+            let scheduler = self.scheduler.clone();
+            let metrics = self.metrics.clone();
+            std::thread::Builder::new().name("batch-worker".into()).spawn(move || {
+                batch_worker(shared, scheduler, metrics)
+            })?
+        };
+
+        // Accept loop (non-blocking poll so we can observe `stop`).
+        let mut handlers = Vec::new();
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let shared = self.shared.clone();
+                    let scheduler = self.scheduler.clone();
+                    let metrics = self.metrics.clone();
+                    let cfg = self.cfg.clone();
+                    handlers.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, shared, scheduler, metrics, cfg) {
+                            eprintln!("[server] connection error: {e:#}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Drain: wake the worker so it exits, join everything.
+        self.shared.wake.notify_all();
+        let _ = worker.join();
+        for h in handlers {
+            let _ = h.join();
+        }
+        eprintln!("[server] stopped");
+        Ok(())
+    }
+
+    /// Ask the server to stop (same effect as a `shutdown` request).
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+    }
+}
+
+fn batch_worker(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics) {
+    loop {
+        // Wait until a batch is ready or we are stopping.
+        let batch = {
+            let mut q = shared.batcher.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) && q.is_empty() {
+                    return;
+                }
+                if q.ready(Instant::now()) || (shared.stop.load(Ordering::SeqCst) && !q.is_empty()) {
+                    break q.pop_batch();
+                }
+                // Sleep until head timeout (or a notify).
+                let (guard, _) = shared
+                    .wake
+                    .wait_timeout(q, Duration::from_millis(2))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Some(batch) = batch else { continue };
+        metrics.batches.get(); // touch (batches counted in scheduler)
+
+        let reqs: Vec<_> = batch.iter().map(|w| w.req.clone()).collect();
+        let queue_times: Vec<Duration> =
+            batch.iter().map(|w| w.enqueued.elapsed()).collect();
+        match scheduler.execute(&reqs) {
+            Ok(responses) => {
+                for ((item, mut resp), qd) in batch.into_iter().zip(responses).zip(queue_times) {
+                    resp.stats.queue_ms = qd.as_secs_f64() * 1e3;
+                    metrics.queue_latency.record(qd);
+                    metrics.completed.inc();
+                    let _ = item.payload.0.send(Response::Gen(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("generation failed: {e:#}");
+                for item in batch {
+                    metrics.rejected.inc();
+                    let _ = item.payload.0.send(Response::Error(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: Arc<Shared>,
+    scheduler: Arc<Scheduler>,
+    metrics: Metrics,
+    cfg: ServeConfig,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        metrics.requests.inc();
+        let response = match Request::parse(&line, &cfg) {
+            Err(e) => {
+                metrics.rejected.inc();
+                Response::Error(e.to_string())
+            }
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Metrics) => Response::Metrics(metrics.snapshot()),
+            Ok(Request::Shutdown) => {
+                shared.stop.store(true, Ordering::SeqCst);
+                shared.wake.notify_all();
+                let line = Response::ShuttingDown.to_json().to_string();
+                writeln!(writer, "{line}")?;
+                break;
+            }
+            Ok(Request::Generate(req)) => {
+                let (tx, rx) = channel();
+                let enqueue = {
+                    let mut q = shared.batcher.lock().unwrap();
+                    q.push(req, (tx, t0))
+                };
+                match enqueue {
+                    Err(_) => {
+                        metrics.rejected.inc();
+                        Response::Error("server overloaded (queue full)".into())
+                    }
+                    Ok(()) => {
+                        shared.wake.notify_all();
+                        match rx.recv() {
+                            Ok(r) => r,
+                            Err(_) => Response::Error("worker dropped request".into()),
+                        }
+                    }
+                }
+            }
+        };
+        if let Response::Gen(ref g) = response {
+            metrics.request_latency.record(t0.elapsed());
+            let _ = g;
+        }
+        let out = response.to_json().to_string();
+        writeln!(writer, "{out}")?;
+        let _ = scheduler.dim(); // keep scheduler alive in this scope
+    }
+    Ok(())
+}

@@ -1,0 +1,449 @@
+//! Analytic Gaussian-mixture substrate.
+//!
+//! A GMM stays a GMM under the forward diffusion, so its time-t score
+//! has a closed form — this substrate therefore provides what the paper
+//! could not have on CelebA: an *exact* drift to measure errors against,
+//! and approximator ladders with error `2^{−k}` and cost `2^{γk}` **by
+//! construction** (Assumption 1 made literal).  The Theorem-1 bench
+//! validates the `ε^{−γ}` vs `ε^{−(γ+1)}` rates on it.
+//!
+//! Mirrors `python/compile/datasets.py::gmm_*` (same formulas; each side
+//! is tested against its own finite differences).
+
+use crate::sde::drift::{Denoiser, Drift};
+use crate::sde::schedule;
+use crate::util::rng::Rng;
+
+/// Isotropic Gaussian mixture in `dim` dimensions.
+#[derive(Clone, Debug)]
+pub struct Gmm {
+    /// Component means, `k × dim`.
+    pub means: Vec<Vec<f32>>,
+    /// Mixture weights (sum to 1).
+    pub weights: Vec<f64>,
+    /// Shared component standard deviation.
+    pub sigma: f64,
+}
+
+impl Gmm {
+    /// Deterministic random mixture (seeded): `k` components with means
+    /// `N(0, spread²)` and Dirichlet-ish weights.
+    pub fn random(seed: u64, k: usize, dim: usize, spread: f64, sigma: f64) -> Gmm {
+        let mut rng = Rng::new(seed);
+        let means = (0..k)
+            .map(|_| (0..dim).map(|_| (rng.normal() * spread) as f32).collect())
+            .collect();
+        let mut weights: Vec<f64> = (0..k).map(|_| rng.uniform(0.5, 1.5)).collect();
+        let total: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= total;
+        }
+        Gmm { means, weights, sigma }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.means[0].len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.means.len()
+    }
+
+    /// Draw one sample from the mixture.
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let u = rng.next_f64();
+        let mut acc = 0.0;
+        let mut comp = self.k() - 1;
+        for (i, &w) in self.weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                comp = i;
+                break;
+            }
+        }
+        self.means[comp]
+            .iter()
+            .map(|&m| m + (rng.normal() * self.sigma) as f32)
+            .collect()
+    }
+
+    /// Draw a flattened `[n, dim]` batch.
+    pub fn sample_batch(&self, rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * self.dim());
+        for _ in 0..n {
+            out.extend(self.sample(rng));
+        }
+        out
+    }
+
+    /// Diffused component parameters at time `t` (cosine schedule):
+    /// means scale by `sqrt(ab)`, shared variance `ab·σ² + 1 − ab`.
+    fn diffused(&self, t: f64) -> (f64, f64) {
+        let ab = schedule::alpha_bar(t);
+        (ab.sqrt(), ab * self.sigma * self.sigma + (1.0 - ab))
+    }
+
+    /// Exact score `∇ log ρ_t` of the diffused mixture for a flattened
+    /// `[batch, dim]` input.
+    pub fn score_t(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        let dim = self.dim();
+        let (mscale, var) = self.diffused(t);
+        let batch = x.len() / dim;
+        let k = self.k();
+        let mut logw = vec![0.0f64; k];
+        for b in 0..batch {
+            let xb = &x[b * dim..(b + 1) * dim];
+            // responsibilities via log-sum-exp
+            let mut maxl = f64::NEG_INFINITY;
+            for (i, mu) in self.means.iter().enumerate() {
+                let mut d2 = 0.0f64;
+                for j in 0..dim {
+                    let d = xb[j] as f64 - mscale * mu[j] as f64;
+                    d2 += d * d;
+                }
+                logw[i] = self.weights[i].ln() - 0.5 * d2 / var;
+                maxl = maxl.max(logw[i]);
+            }
+            let mut z = 0.0f64;
+            for l in logw.iter_mut() {
+                *l = (*l - maxl).exp();
+                z += *l;
+            }
+            // score = sum_i resp_i * (mscale*mu_i - x) / var
+            let ob = &mut out[b * dim..(b + 1) * dim];
+            for j in 0..dim {
+                let mut s = 0.0f64;
+                for i in 0..k {
+                    s += (logw[i] / z) * (mscale * self.means[i][j] as f64 - xb[j] as f64);
+                }
+                ob[j] = (s / var) as f32;
+            }
+        }
+    }
+
+    /// Log density of the diffused mixture at a single point (tests).
+    pub fn log_density_t(&self, x: &[f32], t: f64) -> f64 {
+        let dim = self.dim();
+        let (mscale, var) = self.diffused(t);
+        let mut maxl = f64::NEG_INFINITY;
+        let mut logs = Vec::with_capacity(self.k());
+        for (i, mu) in self.means.iter().enumerate() {
+            let mut d2 = 0.0f64;
+            for j in 0..dim {
+                let d = x[j] as f64 - mscale * mu[j] as f64;
+                d2 += d * d;
+            }
+            let l = self.weights[i].ln()
+                - 0.5 * d2 / var
+                - 0.5 * dim as f64 * (2.0 * std::f64::consts::PI * var).ln();
+            maxl = maxl.max(l);
+            logs.push(l);
+        }
+        maxl + logs.iter().map(|l| (l - maxl).exp()).sum::<f64>().ln()
+    }
+}
+
+/// Exact denoiser backed by the analytic score: `eps = −sigma(t)·score`.
+pub struct GmmDenoiser<'a> {
+    pub gmm: &'a Gmm,
+    /// Reported relative cost (used when the exact model plays the role
+    /// of the "infinitely large net" in experiments).
+    pub cost: f64,
+}
+
+impl<'a> Denoiser for GmmDenoiser<'a> {
+    fn dim(&self) -> usize {
+        self.gmm.dim()
+    }
+
+    fn eps(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.gmm.score_t(x, t, out);
+        let s = -schedule::sigma(t) as f32;
+        for o in out.iter_mut() {
+            *o *= s;
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    fn name(&self) -> String {
+        "gmm-exact".to_string()
+    }
+}
+
+/// Langevin drift `f(x) = score₀(x)`: with diffusion `g = √2`, the
+/// stationary law is exactly the mixture — the generic-SDE testbed for
+/// Theorem 1 (time-independent, no diffusion-model machinery involved).
+pub struct LangevinDrift<'a> {
+    pub gmm: &'a Gmm,
+}
+
+impl<'a> Drift for LangevinDrift<'a> {
+    fn dim(&self) -> usize {
+        self.gmm.dim()
+    }
+
+    fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+        self.gmm.score_t(x, 0.0, out);
+    }
+
+    fn name(&self) -> String {
+        "gmm-langevin".to_string()
+    }
+}
+
+/// Assumption 1 made literal: wraps an exact drift with a *constructed*
+/// error of sup-norm exactly `2^{−k}` and a *declared* cost `c^γ·2^{γk}`.
+///
+/// The perturbation is a smooth bounded field
+/// `2^{−k}·cos(⟨w, x⟩ + φ)·u` with unit `u`, giving `‖f − f^k‖∞ = 2^{−k}`
+/// and a Lipschitz bump of at most `2^{−k}·‖w‖` (kept small).
+pub struct PerturbedDrift<'a> {
+    pub inner: &'a dyn Drift,
+    /// Level index `k` (error `2^{−k}`).
+    pub k: i32,
+    /// Declared compute cost per evaluation (`c^γ·2^{γk}` in benches).
+    pub cost: f64,
+    w: Vec<f32>,
+    u: Vec<f32>,
+    phase: f32,
+    amp: f32,
+}
+
+impl<'a> PerturbedDrift<'a> {
+    /// Build level `k` with a seeded perturbation direction.
+    pub fn new(inner: &'a dyn Drift, k: i32, cost: f64, seed: u64) -> PerturbedDrift<'a> {
+        let dim = inner.dim();
+        let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        // |<w, x>| Lipschitz bump ~ ||w|| * amp; keep ||w|| modest.
+        let mut w: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let nw = (w.iter().map(|&v| (v * v) as f64).sum::<f64>()).sqrt() as f32;
+        for v in &mut w {
+            *v *= 0.5 / nw.max(1e-6);
+        }
+        let mut u: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let nu = (u.iter().map(|&v| (v * v) as f64).sum::<f64>()).sqrt() as f32;
+        for v in &mut u {
+            *v /= nu.max(1e-6);
+        }
+        PerturbedDrift {
+            inner,
+            k,
+            cost,
+            w,
+            u,
+            phase: rng.next_f32() * std::f32::consts::TAU,
+            amp: 2f32.powi(-k),
+        }
+    }
+}
+
+impl<'a> Drift for PerturbedDrift<'a> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.inner.eval(x, t, out);
+        let dim = self.dim();
+        let batch = x.len() / dim;
+        for b in 0..batch {
+            let xb = &x[b * dim..(b + 1) * dim];
+            let dot: f32 = xb.iter().zip(&self.w).map(|(&a, &b)| a * b).sum();
+            let bump = self.amp * (dot + self.phase).cos();
+            let ob = &mut out[b * dim..(b + 1) * dim];
+            for j in 0..dim {
+                ob[j] += bump * self.u[j];
+            }
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    fn name(&self) -> String {
+        format!("{}~2^-{}", self.inner.name(), self.k)
+    }
+}
+
+/// Build the Assumption-1 family over `inner`: levels `k = k0..k0+n`
+/// with error `2^{−k}` and cost `(c·2^k)^γ`.
+pub fn assumption1_family<'a>(
+    inner: &'a dyn Drift,
+    k0: i32,
+    n: usize,
+    c: f64,
+    gamma: f64,
+    seed: u64,
+) -> Vec<PerturbedDrift<'a>> {
+    (0..n as i32)
+        .map(|i| {
+            let k = k0 + i;
+            let cost = (c * 2f64.powi(k)).powf(gamma);
+            PerturbedDrift::new(inner, k, cost, seed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite as pt;
+
+    fn toy() -> Gmm {
+        Gmm::random(7, 3, 4, 2.0, 0.4)
+    }
+
+    #[test]
+    fn weights_normalised() {
+        let g = toy();
+        let s: f64 = g.weights.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(g.dim(), 4);
+        assert_eq!(g.k(), 3);
+    }
+
+    #[test]
+    fn score_matches_log_density_gradient() {
+        // finite-difference check of the closed-form score, several times
+        pt::check("gmm_score_fd", 25, |gen| {
+            let g = toy();
+            let x: Vec<f32> = gen.vec_normal_f32(4, 1.5);
+            let t = gen.f64_range(0.0, 0.9);
+            let mut score = vec![0.0f32; 4];
+            g.score_t(&x, t, &mut score);
+            let h = 1e-3f32;
+            for j in 0..4 {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[j] += h;
+                xm[j] -= h;
+                let fd = (g.log_density_t(&xp, t) - g.log_density_t(&xm, t)) / (2.0 * h as f64);
+                if (score[j] as f64 - fd).abs() > 1e-3 * (1.0 + fd.abs()) {
+                    return Err(format!("score[{j}]={} vs fd={fd} at t={t}", score[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampling_matches_moments() {
+        let g = Gmm::random(3, 2, 2, 1.0, 0.3);
+        let mut rng = Rng::new(100);
+        let n = 40_000;
+        let mut mean = [0.0f64; 2];
+        for _ in 0..n {
+            let s = g.sample(&mut rng);
+            mean[0] += s[0] as f64;
+            mean[1] += s[1] as f64;
+        }
+        let expect: Vec<f64> = (0..2)
+            .map(|j| {
+                g.means
+                    .iter()
+                    .zip(&g.weights)
+                    .map(|(m, &w)| w * m[j] as f64)
+                    .sum()
+            })
+            .collect();
+        for j in 0..2 {
+            assert!(
+                (mean[j] / n as f64 - expect[j]).abs() < 0.02,
+                "mean[{j}] {} vs {}",
+                mean[j] / n as f64,
+                expect[j]
+            );
+        }
+    }
+
+    #[test]
+    fn denoiser_eps_relation() {
+        let g = toy();
+        let den = GmmDenoiser { gmm: &g, cost: 1.0 };
+        let x = vec![0.3f32, -0.7, 1.1, 0.0];
+        let t = 0.5;
+        let mut eps = vec![0.0f32; 4];
+        den.eps(&x, t, &mut eps);
+        let mut score = vec![0.0f32; 4];
+        g.score_t(&x, t, &mut score);
+        let s = schedule::sigma(t) as f32;
+        for j in 0..4 {
+            assert!((eps[j] + s * score[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn perturbed_error_is_exactly_two_to_minus_k() {
+        let g = toy();
+        let lang = LangevinDrift { gmm: &g };
+        for k in 0..5 {
+            let p = PerturbedDrift::new(&lang, k, 1.0, 42);
+            // sup over random points of |f - f^k| must be <= 2^-k and the
+            // bound should be (nearly) attained somewhere
+            let mut rng = Rng::new(200 + k as u64);
+            let mut max_err = 0.0f64;
+            let mut fa = vec![0.0f32; 4];
+            let mut fb = vec![0.0f32; 4];
+            for _ in 0..400 {
+                let x: Vec<f32> = (0..4).map(|_| rng.normal_f32() * 2.0).collect();
+                lang.eval(&x, 0.0, &mut fa);
+                p.eval(&x, 0.0, &mut fb);
+                let e = fa
+                    .iter()
+                    .zip(&fb)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                max_err = max_err.max(e);
+            }
+            let bound = 2f64.powi(-k);
+            assert!(max_err <= bound * 1.0001, "k={k}: err {max_err} > {bound}");
+            assert!(max_err >= bound * 0.5, "k={k}: err {max_err} too small vs {bound}");
+        }
+    }
+
+    #[test]
+    fn assumption1_family_costs_scale_geometrically() {
+        let g = toy();
+        let lang = LangevinDrift { gmm: &g };
+        let fam = assumption1_family(&lang, 0, 4, 1.0, 2.5, 9);
+        for i in 1..fam.len() {
+            let ratio = fam[i].cost() / fam[i - 1].cost();
+            assert!((ratio - 2f64.powf(2.5)).abs() < 1e-9, "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn langevin_em_reaches_mixture_stationary_mean() {
+        // integrate dx = score(x) dt + sqrt(2) dW long enough; empirical
+        // mean should approach the mixture mean.
+        use crate::sde::brownian::BrownianPath;
+        use crate::sde::em::{em_sample, TimeGrid};
+        let g = Gmm::random(5, 2, 2, 1.5, 0.5);
+        let lang = LangevinDrift { gmm: &g };
+        let batch = 256;
+        let mut rng = Rng::new(50);
+        let span = 6.0;
+        let grid = TimeGrid::new(span, 0.0, 600);
+        let path = BrownianPath::sample(&mut rng, 600, batch * 2, span);
+        let mut x: Vec<f32> = (0..batch * 2).map(|_| rng.normal_f32() * 2.0).collect();
+        em_sample(&lang, |_| (2.0f64).sqrt(), &mut x, &grid, &path);
+        let expect: Vec<f64> = (0..2)
+            .map(|j| {
+                g.means
+                    .iter()
+                    .zip(&g.weights)
+                    .map(|(m, &w)| w * m[j] as f64)
+                    .sum()
+            })
+            .collect();
+        for j in 0..2 {
+            let m: f64 = (0..batch).map(|b| x[b * 2 + j] as f64).sum::<f64>() / batch as f64;
+            assert!((m - expect[j]).abs() < 0.35, "dim {j}: {m} vs {}", expect[j]);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Level-probability policies and the Theorem-1 ladder calculus.
+//!
+//! A *policy* maps (level index, time) to the Bernoulli probability
+//! `p_k(t)` the ML-EM sampler uses.  The three families from the paper:
+//!
+//! * [`Policy::FixedInvCost`] — `p_k = min(C / T_k, 1)`: inversely
+//!   proportional to measured per-eval cost (β = γ in the paper's
+//!   `p_k = C·2^{−βk}` parametrisation; "simplest method").
+//! * [`Policy::FixedTheory`] — `p_k = min(C · T_k^{−(1/γ + 1/2)}, 1)`:
+//!   the Theorem-1-optimal exponent `β = 1 + γ/2` expressed through the
+//!   costs (`T_k ∝ 2^{γk}` ⇒ `2^{−(1+γ/2)k} = T_k^{−(1/γ+1/2)}`).
+//! * [`Policy::Learned`] — `p_k(t) = σ(α_k·log(t+δ) + β_k)`, the §3.1
+//!   adaptive parametrisation trained by `adaptive::Learner`.
+//!
+//! Plus [`Policy::Manual`] for tests/benches that pin exact probabilities.
+
+use crate::sde::mlem::LevelPolicy;
+
+/// Level-probability policy (see module docs).
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// `p_k = min(scale / cost_k, 1)`.
+    FixedInvCost { scale: f64, costs: Vec<f64> },
+    /// `p_k = min(scale * cost_k^{-(1/gamma + 1/2)}, 1)`.
+    FixedTheory { scale: f64, gamma: f64, costs: Vec<f64> },
+    /// `p_k(t) = sigmoid(alpha_k * ln(t + delta) + beta_k)`.
+    Learned { alpha: Vec<f64>, beta: Vec<f64>, delta: f64 },
+    /// Constant per-level probabilities.
+    Manual { probs: Vec<f64> },
+}
+
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl Policy {
+    /// Number of levels this policy covers.
+    pub fn num_levels(&self) -> usize {
+        match self {
+            Policy::FixedInvCost { costs, .. } => costs.len(),
+            Policy::FixedTheory { costs, .. } => costs.len(),
+            Policy::Learned { alpha, .. } => alpha.len(),
+            Policy::Manual { probs } => probs.len(),
+        }
+    }
+
+    /// Expected per-step cost `Σ_k p_k(t)·T_k` at time `t` given costs.
+    pub fn expected_step_cost(&self, t: f64, costs: &[f64]) -> f64 {
+        (0..self.num_levels())
+            .map(|k| self.prob(k, t) * costs[k])
+            .sum()
+    }
+
+    /// Shift all constant coefficients: the paper's `β_k ← β_k + Δ` trick
+    /// that sweeps a learned policy across the cost/error trade-off
+    /// (only meaningful for `Learned`; a multiplicative scale elsewhere).
+    pub fn with_delta(&self, delta: f64) -> Policy {
+        match self {
+            Policy::Learned { alpha, beta, delta: d } => Policy::Learned {
+                alpha: alpha.clone(),
+                beta: beta.iter().map(|b| b + delta).collect(),
+                delta: *d,
+            },
+            Policy::FixedInvCost { scale, costs } => Policy::FixedInvCost {
+                scale: scale * delta.exp(),
+                costs: costs.clone(),
+            },
+            Policy::FixedTheory { scale, gamma, costs } => Policy::FixedTheory {
+                scale: scale * delta.exp(),
+                gamma: *gamma,
+                costs: costs.clone(),
+            },
+            Policy::Manual { probs } => Policy::Manual {
+                probs: probs.iter().map(|p| (p * delta.exp()).min(1.0)).collect(),
+            },
+        }
+    }
+}
+
+impl LevelPolicy for Policy {
+    fn prob(&self, k: usize, t: f64) -> f64 {
+        match self {
+            Policy::FixedInvCost { scale, costs } => (scale / costs[k]).min(1.0),
+            Policy::FixedTheory { scale, gamma, costs } => {
+                (scale * costs[k].powf(-(1.0 / gamma + 0.5))).min(1.0)
+            }
+            Policy::Learned { alpha, beta, delta } => {
+                sigmoid(alpha[k] * (t + delta).ln() + beta[k])
+            }
+            Policy::Manual { probs } => probs[k].min(1.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Theorem-1 ladder calculus
+
+/// `E_γ(r)` from Theorem 1 — the compute envelope as a function of
+/// `r = c·e^{L(T+η)} / (L·ε)`, in its three regimes.
+pub fn e_gamma(gamma: f64, r: f64) -> f64 {
+    let half = gamma / 2.0 - 1.0; // exponent of the geometric sum base
+    if gamma < 2.0 {
+        let denom = 1.0 - 2f64.powf(half);
+        r * r / (denom * denom)
+    } else if gamma == 2.0 {
+        r * r * (3.0 + r.log2())
+    } else {
+        let denom = 2f64.powf(half) - 1.0;
+        2f64.powf(3.0 * (gamma - 2.0)) / (denom * denom) * r.powf(gamma)
+    }
+}
+
+/// Theorem 1's `k_min = −⌊log₂ c⌋`.
+pub fn theory_k_min(c: f64) -> i64 {
+    -(c.log2().floor() as i64)
+}
+
+/// Theorem 1's `k_max = −⌊log₂((2/L)·e^{L(T+η)}·ε)⌋`.
+pub fn theory_k_max(l: f64, t_total: f64, eta: f64, eps: f64) -> i64 {
+    -(((2.0 / l) * (l * (t_total + eta)).exp() * eps).log2().floor() as i64)
+}
+
+/// Theorem 1's probabilities `p_k = min(C·2^{−(1+γ/2)k}, 1)` for levels
+/// `k_min..=k_max`, returned as a `Manual` policy over the family index.
+pub fn theory_probs(c_const: f64, gamma: f64, k_min: i64, k_max: i64) -> Policy {
+    let probs = (k_min..=k_max)
+        .map(|k| (c_const * 2f64.powf(-(1.0 + gamma / 2.0) * k as f64)).min(1.0))
+        .collect();
+    Policy::Manual { probs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_cost_policy_clamps_and_orders() {
+        let p = Policy::FixedInvCost { scale: 2.0, costs: vec![1.0, 8.0, 64.0] };
+        assert_eq!(p.prob(0, 0.5), 1.0); // clamped
+        assert!((p.prob(1, 0.5) - 0.25).abs() < 1e-12);
+        assert!((p.prob(2, 0.5) - 2.0 / 64.0).abs() < 1e-12);
+        assert!(p.prob(0, 0.1) >= p.prob(1, 0.1));
+        assert!(p.prob(1, 0.1) >= p.prob(2, 0.1));
+    }
+
+    #[test]
+    fn theory_policy_exponent() {
+        // costs T_k = 2^{gamma k} => p_k proportional to 2^{-(1+gamma/2)k}
+        let gamma = 2.5;
+        let costs: Vec<f64> = (1..=3).map(|k| 2f64.powf(gamma * k as f64)).collect();
+        let p = Policy::FixedTheory { scale: 1e-2, gamma, costs };
+        let r1 = p.prob(1, 0.0) / p.prob(0, 0.0);
+        let r2 = p.prob(2, 0.0) / p.prob(1, 0.0);
+        let expect = 2f64.powf(-(1.0 + gamma / 2.0));
+        assert!((r1 - expect).abs() < 1e-9, "{r1} vs {expect}");
+        assert!((r2 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn learned_policy_is_sigmoid_of_log_time() {
+        let p = Policy::Learned { alpha: vec![2.0], beta: vec![0.5], delta: 0.1 };
+        for &t in &[0.05, 0.3, 0.9] {
+            let expect = sigmoid(2.0 * (t + 0.1f64).ln() + 0.5);
+            assert!((p.prob(0, t) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn with_delta_shifts_learned_probs_monotonically() {
+        let p = Policy::Learned { alpha: vec![0.0, 0.0], beta: vec![0.0, -1.0], delta: 0.1 };
+        let up = p.with_delta(1.0);
+        let down = p.with_delta(-1.0);
+        for k in 0..2 {
+            assert!(up.prob(k, 0.5) > p.prob(k, 0.5));
+            assert!(down.prob(k, 0.5) < p.prob(k, 0.5));
+        }
+    }
+
+    #[test]
+    fn expected_step_cost_is_linear_in_probs() {
+        let costs = vec![1.0, 10.0];
+        let p = Policy::Manual { probs: vec![1.0, 0.1] };
+        assert!((p.expected_step_cost(0.0, &costs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn e_gamma_regimes() {
+        // gamma < 2: quadratic in r
+        let a = e_gamma(1.5, 10.0);
+        let b = e_gamma(1.5, 20.0);
+        assert!((b / a - 4.0).abs() < 1e-9);
+        // gamma > 2: r^gamma scaling
+        let a = e_gamma(3.0, 10.0);
+        let b = e_gamma(3.0, 20.0);
+        assert!((b / a - 8.0).abs() < 1e-9);
+        // gamma = 2: r^2 log r
+        let a = e_gamma(2.0, 4.0);
+        assert!((a - 16.0 * (3.0 + 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_bounds() {
+        assert_eq!(theory_k_min(1.0), 0);
+        assert_eq!(theory_k_min(4.0), -2);
+        // smaller eps => larger k_max
+        let k1 = theory_k_max(1.0, 1.0, 0.01, 0.1);
+        let k2 = theory_k_max(1.0, 1.0, 0.01, 0.01);
+        assert!(k2 > k1);
+    }
+
+    #[test]
+    fn theory_probs_clamped_at_one() {
+        let p = theory_probs(1.0, 3.0, -2, 3);
+        // negative k => 2^{-(1+1.5)k} > 1 => clamped
+        assert_eq!(p.prob(0, 0.0), 1.0);
+        let n = p.num_levels();
+        assert_eq!(n, 6);
+        assert!(p.prob(n - 1, 0.0) < 1.0);
+    }
+}

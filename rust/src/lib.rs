@@ -1,0 +1,47 @@
+//! **mlem** — Multilevel Euler-Maruyama diffusion sampling and serving.
+//!
+//! Reproduction of *"Polynomial Speedup in Diffusion Models with the
+//! Multilevel Euler-Maruyama Method"* (Jacot, 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3** (this crate) — the serving coordinator: request router,
+//!   dynamic batcher with shared Bernoulli draws, ML-EM level scheduler,
+//!   adaptive schedule learner, PJRT runtime, metrics.
+//! * **L2/L1** (`python/compile`, build-time only) — the UNet score-model
+//!   family and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! Python never runs on the request path: the binary loads HLO text via
+//! the `xla` crate's PJRT CPU client and is self-contained thereafter.
+//!
+//! Module map (see `DESIGN.md` for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | dependency-free substrates: RNG, stats, JSON, duals, CLI, property tests, bench harness |
+//! | [`sde`] | drift traits, noise schedule, EM / **ML-EM** samplers, DDPM/DDIM discretisations |
+//! | [`gmm`] | analytic Gaussian-mixture substrate with constructed approximator ladders |
+//! | [`levels`] | level-probability policies and cost accounting |
+//! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
+//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts |
+//! | [`coordinator`] | serving layer: server, batcher, scheduler, state |
+
+pub mod util {
+    //! Dependency-free substrates (offline build: no serde/rand/clap/...).
+    pub mod bench;
+    pub mod cli;
+    pub mod dual;
+    pub mod json;
+    pub mod proptest_lite;
+    pub mod rng;
+    pub mod stats;
+}
+
+pub mod adaptive;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod gmm;
+pub mod levels;
+pub mod metrics;
+pub mod runtime;
+pub mod sde;

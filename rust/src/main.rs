@@ -1,0 +1,167 @@
+//! `mlem` — the leader binary.
+//!
+//! ```text
+//! mlem serve      [--artifacts DIR] [--addr HOST:PORT] [--max-batch N] ...
+//! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
+//!                 [--levels 1,3,5] [--delta D] [--out images.pgm]
+//! mlem gamma-fit  [--artifacts DIR]      # Fig-2 style γ estimate
+//! mlem costs      [--artifacts DIR]      # measured per-level eval costs
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::{Scheduler, Server};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::util::cli::Args;
+use mlem::util::stats;
+
+fn build_scheduler(cfg: &ServeConfig) -> Result<Scheduler> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    Scheduler::new(handle, cfg.clone(), metrics)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServeConfig::from_args(args)?;
+    let scheduler = build_scheduler(&cfg)?;
+    let server = Server::new(cfg, scheduler);
+    server.run(|addr| eprintln!("[mlem] ready on {addr}"))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = ServeConfig::from_args(args)?;
+    let scheduler = build_scheduler(&cfg)?;
+    let req = GenRequest {
+        n: args.usize_or("n", 4),
+        sampler: SamplerKind::parse(&args.str_or("sampler", "mlem"))?,
+        steps: args.usize_or("steps", cfg.default_steps),
+        seed: args.u64_or("seed", 0),
+        levels: args.usize_list("levels", &cfg.mlem_levels),
+        delta: args.f64_or("delta", 0.0),
+        return_images: true,
+    };
+    let resp = scheduler.generate(&req)?;
+    println!(
+        "generated {} images in {:.1} ms (nfe per level: {:?}, cost {:.3})",
+        req.n, resp.stats.wall_ms, resp.stats.nfe, resp.stats.cost_units
+    );
+    if let Some(path) = args.get("out") {
+        let imgs = resp.images.as_ref().unwrap();
+        write_pgm_strip(path, imgs, scheduler.handle().manifest().img, req.n)?;
+        println!("wrote {path}");
+    }
+    scheduler.handle().stop();
+    Ok(())
+}
+
+fn cmd_gamma_fit(args: &Args) -> Result<()> {
+    // Fig 2: per-level (eval time, denoising error − floor) log–log fit.
+    let cfg = ServeConfig::from_args(args)?;
+    let scheduler = build_scheduler(&cfg)?;
+    let handle = scheduler.handle().clone();
+    let m = handle.manifest();
+    let losses: Vec<f64> = m.levels.iter().map(|l| l.holdout_loss).collect();
+    let times = scheduler.costs.clone();
+    let floor = args.f64_or("floor", estimate_floor(&losses));
+    println!("level  params    time(s/img)   holdout   holdout-floor");
+    for (i, l) in m.levels.iter().enumerate() {
+        println!(
+            "f^{}    {:7}   {:.6}      {:.4}    {:.4}",
+            l.level,
+            l.params,
+            times[i],
+            losses[i],
+            losses[i] - floor
+        );
+    }
+    let errs: Vec<f64> = losses.iter().map(|l| (l - floor).max(1e-9).sqrt()).collect();
+    let fit = stats::loglog_fit(&times, &errs);
+    let gamma = -1.0 / fit.slope;
+    println!(
+        "\nlog-log fit: eps ~ t^{:.3} (r²={:.3})  =>  gamma ≈ {:.2}  (floor {:.3})",
+        fit.slope, fit.r2, gamma, floor
+    );
+    println!("HTMC regime (gamma > 2): {}", if gamma > 2.0 { "YES" } else { "no" });
+    handle.stop();
+    Ok(())
+}
+
+/// Pick the error floor as in the paper's Fig 2 ("chosen so the points
+/// align in log-log"): grid-search the floor maximising the fit's r².
+fn estimate_floor(losses: &[f64]) -> f64 {
+    let min = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut best = (0.0, f64::NEG_INFINITY);
+    for i in 0..50 {
+        let floor = min * (i as f64 / 50.0);
+        let errs: Vec<f64> = losses.iter().map(|l| (l - floor).max(1e-9)).collect();
+        let xs: Vec<f64> = (0..losses.len()).map(|k| 4f64.powi(k as i32)).collect();
+        let fit = stats::loglog_fit(&xs, &errs);
+        if fit.r2 > best.1 {
+            best = (floor, fit.r2);
+        }
+    }
+    best.0
+}
+
+fn cmd_costs(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::from_args(args)?;
+    cfg.cost_reps = cfg.cost_reps.max(5);
+    let scheduler = build_scheduler(&cfg)?;
+    let m = scheduler.handle().manifest();
+    println!("level  params    flops/img   measured s/img   ratio to f^1");
+    for (i, l) in m.levels.iter().enumerate() {
+        println!(
+            "f^{}    {:7}   {:9}   {:.6}        {:.2}x",
+            l.level,
+            l.params,
+            l.flops_per_image,
+            scheduler.costs[i],
+            scheduler.costs[i] / scheduler.costs[0]
+        );
+    }
+    scheduler.handle().stop();
+    Ok(())
+}
+
+/// Write `n` images side by side as a binary PGM strip (quick eyeball).
+fn write_pgm_strip(path: &str, imgs: &[f32], img: usize, n: usize) -> Result<()> {
+    let w = img * n;
+    let mut data = Vec::with_capacity(w * img);
+    for row in 0..img {
+        for i in 0..n {
+            for col in 0..img {
+                let v = imgs[i * img * img + row * img + col];
+                data.push((((v + 1.0) / 2.0).clamp(0.0, 1.0) * 255.0) as u8);
+            }
+        }
+    }
+    let mut out = format!("P5\n{w} {img}\n255\n").into_bytes();
+    out.extend_from_slice(&data);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("gamma-fit") => cmd_gamma_fit(&args),
+        Some("costs") => cmd_costs(&args),
+        other => {
+            eprintln!(
+                "mlem — Multilevel Euler-Maruyama diffusion serving\n\
+                 usage: mlem <serve|generate|gamma-fit|costs> [flags; see rust/src/main.rs]"
+            );
+            if let Some(o) = other {
+                Err(anyhow!("unknown command '{o}'"))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Serving metrics: counters, gauges, latency histograms, NFE/FLOP
+//! accounting — snapshotted as JSON by the coordinator's `/metrics`
+//! request and printed by the benches.
+//!
+//! Histograms are log-bucketed (fixed 5% resolution across ns→minutes) so
+//! recording on the request path is one atomic increment: the hot loop
+//! never allocates or locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+const HIST_BUCKETS: usize = 512;
+/// Bucket width in log space: each bucket is ~5% wider than the last,
+/// spanning 1ns .. ~66 minutes over 512 buckets.
+const HIST_GAMMA: f64 = 1.05;
+
+/// Lock-free log-bucketed histogram of nanosecond values.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(ns: u64) -> usize {
+    if ns <= 1 {
+        return 0;
+    }
+    let b = (ns as f64).ln() / HIST_GAMMA.ln();
+    (b as usize).min(HIST_BUCKETS - 1)
+}
+
+fn bucket_upper(idx: usize) -> f64 {
+    HIST_GAMMA.powi(idx as i32 + 1)
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj()
+            .with("count", Json::num(self.count() as f64))
+            .with("mean_ns", Json::num(self.mean_ns()))
+            .with("p50_ns", Json::num(self.quantile_ns(0.50)))
+            .with("p95_ns", Json::num(self.quantile_ns(0.95)))
+            .with("p99_ns", Json::num(self.quantile_ns(0.99)))
+    }
+}
+
+/// The coordinator's metric set.  Cheap to clone (Arc-shared).
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<MetricsInner>,
+}
+
+#[derive(Default)]
+pub struct MetricsInner {
+    /// Requests accepted by the router.
+    pub requests: Counter,
+    /// Requests completed successfully.
+    pub completed: Counter,
+    /// Requests rejected (parse error, overload, bad params).
+    pub rejected: Counter,
+    /// Generation batches formed by the batcher.
+    pub batches: Counter,
+    /// Images generated.
+    pub images: Counter,
+    /// Network function evaluations, per level (index 0 = f^1).
+    pub nfe_per_level: [Counter; 8],
+    /// Estimated FLOPs spent in network evaluations.
+    pub flops: Counter,
+    /// End-to-end request latency.
+    pub request_latency: Histogram,
+    /// Time spent inside PJRT execute calls.
+    pub execute_latency: Histogram,
+    /// Time requests wait in the batcher queue.
+    pub queue_latency: Histogram,
+}
+
+impl std::ops::Deref for Metrics {
+    type Target = MetricsInner;
+    fn deref(&self) -> &MetricsInner {
+        &self.inner
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_nfe(&self, level: usize, count: u64, flops_per_eval: u64) {
+        if level >= 1 && level <= self.nfe_per_level.len() {
+            self.nfe_per_level[level - 1].add(count);
+        }
+        self.flops.add(count * flops_per_eval);
+    }
+
+    /// Total network evaluations across levels.
+    pub fn total_nfe(&self) -> u64 {
+        self.nfe_per_level.iter().map(Counter::get).sum()
+    }
+
+    /// JSON snapshot served by the coordinator's `metrics` command.
+    pub fn snapshot(&self) -> Json {
+        let nfe = Json::Arr(
+            self.nfe_per_level
+                .iter()
+                .map(|c| Json::num(c.get() as f64))
+                .collect(),
+        );
+        Json::obj()
+            .with("requests", Json::num(self.requests.get() as f64))
+            .with("completed", Json::num(self.completed.get() as f64))
+            .with("rejected", Json::num(self.rejected.get() as f64))
+            .with("batches", Json::num(self.batches.get() as f64))
+            .with("images", Json::num(self.images.get() as f64))
+            .with("nfe_per_level", nfe)
+            .with("flops", Json::num(self.flops.get() as f64))
+            .with("request_latency", self.request_latency.snapshot())
+            .with("execute_latency", self.execute_latency.snapshot())
+            .with("queue_latency", self.queue_latency.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_values() {
+        let h = Histogram::default();
+        for ns in [1_000u64, 2_000, 4_000, 8_000, 1_000_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.quantile_ns(0.5);
+        // p50 should be within one bucket (~5%) of 4000
+        assert!(p50 >= 3_500.0 && p50 <= 4_600.0, "p50 {p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!(p99 >= 950_000.0, "p99 {p99}");
+        assert!((h.mean_ns() - 203_000.0).abs() < 2_000.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn nfe_accounting() {
+        let m = Metrics::new();
+        m.record_nfe(1, 10, 100);
+        m.record_nfe(3, 2, 1_000);
+        assert_eq!(m.total_nfe(), 12);
+        assert_eq!(m.flops.get(), 10 * 100 + 2 * 1_000);
+        // out-of-range level: flops still counted, nfe dropped
+        m.record_nfe(99, 1, 7);
+        assert_eq!(m.total_nfe(), 12);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let m = Metrics::new();
+        m.requests.inc();
+        m.request_latency.record_ns(5_000);
+        let s = m.snapshot().to_string();
+        let parsed = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(parsed.f64_of("requests"), Some(1.0));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.requests.inc();
+                        m.request_latency.record_ns(1234);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.requests.get(), 4000);
+        assert_eq!(m.request_latency.count(), 4000);
+    }
+}

@@ -1,0 +1,283 @@
+//! Thread-confined PJRT engine: executable cache + batch bucketing.
+//!
+//! Follows the `/opt/xla-example/load_hlo` recipe: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  All artifacts carry their weights as
+//! constants, so executables take only `(x, t)`-style runtime inputs.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Executable cache keyed by artifact file name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative time spent inside `execute` (for profiling).
+    pub exec_ns: u64,
+    /// Number of `execute` calls.
+    pub exec_calls: u64,
+}
+
+/// Build a `[batch, img, img, channels]` f32 literal from a flat slice.
+fn x_literal(x: &[f32], batch: usize, img: usize, channels: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(x).reshape(&[batch as i64, img as i64, img as i64, channels as i64])?)
+}
+
+/// Build the `(batch,)` time literal (the scalar t broadcast per sample).
+fn t_literal(t: f64, batch: usize) -> xla::Literal {
+    xla::Literal::vec1(&vec![t as f32; batch])
+}
+
+impl Engine {
+    /// Create the engine; compiles nothing yet (artifacts compile lazily
+    /// on first use and stay cached).
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, execs: BTreeMap::new(), exec_ns: 0, exec_calls: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn artifact_path(&self, file: &str) -> PathBuf {
+        self.manifest.dir.join(file)
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    fn executable(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(file) {
+            let path = self.artifact_path(file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            eprintln!("[engine] compiled {file} in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+            self.execs.insert(file.to_string(), exe);
+        }
+        Ok(self.execs.get(file).unwrap())
+    }
+
+    /// Pre-compile the eps artifacts of every level for the given bucket.
+    pub fn warmup(&mut self, bucket: usize) -> Result<()> {
+        let files: Vec<String> = self
+            .manifest
+            .levels
+            .iter()
+            .filter_map(|l| l.eps.get(&bucket).cloned())
+            .collect();
+        for f in files {
+            self.executable(&f)?;
+        }
+        Ok(())
+    }
+
+    /// Smallest bucket ≥ n, or the largest bucket if none fits.
+    fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| buckets.iter().copied().max().unwrap_or(1))
+    }
+
+    /// Run one compiled eps executable on an exact-bucket batch.
+    fn run_eps_exact(&mut self, file: &str, x: &[f32], t: f64, batch: usize) -> Result<Vec<f32>> {
+        let (img, ch) = (self.manifest.img, self.manifest.channels);
+        let xl = x_literal(x, batch, img, ch)?;
+        let tl = t_literal(t, batch);
+        let t0 = Instant::now();
+        let exe = self.executable(file)?;
+        let result = exe.execute::<xla::Literal>(&[xl, tl])?[0][0].to_literal_sync()?;
+        self.exec_ns += t0.elapsed().as_nanos() as u64;
+        self.exec_calls += 1;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Evaluate level `level`'s eps on an arbitrary-size batch, chunking
+    /// into buckets (greedy largest-first) and padding the tail chunk by
+    /// replicating its last row.
+    pub fn eps(&mut self, level: usize, x: &[f32], t: f64, pallas: bool) -> Result<Vec<f32>> {
+        let dim = self.manifest.dim;
+        let n = x.len() / dim;
+        let meta = self
+            .manifest
+            .levels
+            .iter()
+            .find(|l| l.level == level)
+            .ok_or_else(|| anyhow!("unknown level {level}"))?;
+        let table = if pallas { &meta.eps_pallas } else { &meta.eps };
+        if table.is_empty() {
+            return Err(anyhow!(
+                "no {} artifacts for level {level}",
+                if pallas { "pallas" } else { "eps" }
+            ));
+        }
+        // Hot path: resolve (bucket -> file) pairs without cloning the
+        // string table (perf pass: this clone was ~1µs/call of pure
+        // allocator traffic on the request path).
+        let table: Vec<(usize, String)> =
+            table.iter().map(|(b, f)| (*b, f.clone())).collect();
+        let buckets: Vec<usize> = table.iter().map(|(b, _)| *b).collect();
+        let file_of = |b: usize| -> &str {
+            &table.iter().find(|(bb, _)| *bb == b).unwrap().1
+        };
+        let mut out = Vec::with_capacity(x.len());
+        let mut off = 0usize;
+        while off < n {
+            let remaining = n - off;
+            let b = Self::pick_bucket(&buckets, remaining);
+            let take = remaining.min(b);
+            let chunk = &x[off * dim..(off + take) * dim];
+            let res = if take == b {
+                let f = file_of(b).to_string();
+                self.run_eps_exact(&f, chunk, t, b)?
+            } else {
+                // pad by replicating the last row
+                let mut padded = Vec::with_capacity(b * dim);
+                padded.extend_from_slice(chunk);
+                let last = &chunk[(take - 1) * dim..take * dim];
+                for _ in take..b {
+                    padded.extend_from_slice(last);
+                }
+                let f = file_of(b).to_string();
+                let mut r = self.run_eps_exact(&f, &padded, t, b)?;
+                r.truncate(take * dim);
+                r
+            };
+            out.extend_from_slice(&res[..take * dim]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    /// Evaluate level `level`'s (eps, JVP) pair on an arbitrary batch.
+    pub fn eps_jvp(
+        &mut self,
+        level: usize,
+        x: &[f32],
+        t: f64,
+        v: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dim = self.manifest.dim;
+        let (img, ch) = (self.manifest.img, self.manifest.channels);
+        let n = x.len() / dim;
+        let meta = self
+            .manifest
+            .levels
+            .iter()
+            .find(|l| l.level == level)
+            .ok_or_else(|| anyhow!("unknown level {level}"))?;
+        let table = meta.eps_jvp.clone();
+        if table.is_empty() {
+            return Err(anyhow!("no jvp artifacts for level {level}"));
+        }
+        let buckets: Vec<usize> = table.keys().copied().collect();
+        let mut out_e = Vec::with_capacity(x.len());
+        let mut out_j = Vec::with_capacity(x.len());
+        let mut off = 0usize;
+        while off < n {
+            let remaining = n - off;
+            let b = Self::pick_bucket(&buckets, remaining);
+            let take = remaining.min(b);
+            let mut xc = x[off * dim..(off + take) * dim].to_vec();
+            let mut vc = v[off * dim..(off + take) * dim].to_vec();
+            for _ in take..b {
+                let last_x = xc[(take - 1) * dim..take * dim].to_vec();
+                let last_v = vc[(take - 1) * dim..take * dim].to_vec();
+                xc.extend_from_slice(&last_x);
+                vc.extend_from_slice(&last_v);
+            }
+            let xl = x_literal(&xc, b, img, ch)?;
+            let tl = t_literal(t, b);
+            let vl = x_literal(&vc, b, img, ch)?;
+            let t0 = Instant::now();
+            let exe = self.executable(&table[&b])?;
+            let result = exe.execute::<xla::Literal>(&[xl, tl, vl])?[0][0].to_literal_sync()?;
+            self.exec_ns += t0.elapsed().as_nanos() as u64;
+            self.exec_calls += 1;
+            let (e, j) = result.to_tuple2()?;
+            let mut ev = e.to_vec::<f32>()?;
+            let mut jv = j.to_vec::<f32>()?;
+            ev.truncate(take * dim);
+            jv.truncate(take * dim);
+            out_e.extend_from_slice(&ev);
+            out_j.extend_from_slice(&jv);
+            off += take;
+        }
+        Ok((out_e, out_j))
+    }
+
+    /// Run the fused ML-EM combine artifact (`y + eta·Σ c_k Δ_k + √eta·σ·z`)
+    /// at its exported `[batch, dim]` / `[levels, batch, dim]` shape.
+    pub fn combine(
+        &mut self,
+        y: &[f32],
+        deltas: &[f32],
+        coeffs: &[f32],
+        z: &[f32],
+        eta: f64,
+        sigma: f64,
+        pallas: bool,
+    ) -> Result<Vec<f32>> {
+        let cm = self.manifest.combine.clone();
+        let (b, k, d) = (cm.batch, cm.levels, self.manifest.dim);
+        if y.len() != b * d || deltas.len() != k * b * d || coeffs.len() != k {
+            return Err(anyhow!(
+                "combine shape mismatch: y {}, deltas {}, coeffs {} (want {}, {}, {})",
+                y.len(),
+                deltas.len(),
+                coeffs.len(),
+                b * d,
+                k * b * d,
+                k
+            ));
+        }
+        let file = if pallas { cm.pallas_file } else { cm.ref_file };
+        let yl = xla::Literal::vec1(y).reshape(&[b as i64, d as i64])?;
+        let dl = xla::Literal::vec1(deltas).reshape(&[k as i64, b as i64, d as i64])?;
+        let cl = xla::Literal::vec1(coeffs);
+        let zl = xla::Literal::vec1(z).reshape(&[b as i64, d as i64])?;
+        let el = xla::Literal::vec1(&[eta as f32]);
+        let sl = xla::Literal::vec1(&[sigma as f32]);
+        let t0 = Instant::now();
+        let exe = self.executable(&file)?;
+        let result = exe.execute::<xla::Literal>(&[yl, dl, cl, zl, el, sl])?[0][0]
+            .to_literal_sync()?;
+        self.exec_ns += t0.elapsed().as_nanos() as u64;
+        self.exec_calls += 1;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Measure per-level eval cost (seconds per *image*) at the largest
+    /// bucket — the `T_k` that drives `p_k ∝ T_k^{-1}`-style policies.
+    pub fn measure_costs(&mut self, reps: usize) -> Result<Vec<f64>> {
+        let dim = self.manifest.dim;
+        let bucket = *self.manifest.batch_buckets.iter().max().unwrap_or(&1);
+        let levels: Vec<usize> = self.manifest.levels.iter().map(|l| l.level).collect();
+        let x = vec![0.1f32; bucket * dim];
+        let mut out = Vec::new();
+        for level in levels {
+            // warm once (compile + first-run effects)
+            self.eps(level, &x, 0.5, false)?;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                self.eps(level, &x, 0.5, false)?;
+            }
+            out.push(t0.elapsed().as_secs_f64() / (reps as f64 * bucket as f64));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,200 @@
+//! The executor thread: sole owner of the PJRT client, serving eval jobs
+//! over a channel.  [`ExecutorHandle`] is `Clone + Send + Sync`, so the
+//! samplers (which require `Sync` drifts) and the multi-threaded
+//! coordinator can all share one device owner.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+use crate::metrics::Metrics;
+
+type Resp<T> = Sender<Result<T>>;
+
+enum Job {
+    Eps { level: usize, x: Vec<f32>, t: f64, pallas: bool, resp: Resp<Vec<f32>> },
+    EpsJvp { level: usize, x: Vec<f32>, t: f64, v: Vec<f32>, resp: Resp<(Vec<f32>, Vec<f32>)> },
+    Combine {
+        y: Vec<f32>,
+        deltas: Vec<f32>,
+        coeffs: Vec<f32>,
+        z: Vec<f32>,
+        eta: f64,
+        sigma: f64,
+        pallas: bool,
+        resp: Resp<Vec<f32>>,
+    },
+    MeasureCosts { reps: usize, resp: Resp<Vec<f64>> },
+    Warmup { bucket: usize, resp: Resp<()> },
+    ExecStats { resp: Resp<(u64, u64)> },
+    Stop,
+}
+
+/// Cloneable, thread-safe handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Job>,
+    manifest: Manifest,
+}
+
+// Sender<Job> is Send+Sync (Job: Send); Manifest is plain data.
+// ExecutorHandle derives both automatically.
+
+/// Spawn the executor thread over `manifest`'s artifacts.  Returns the
+/// handle and the join handle (join after dropping all handles/Stop).
+pub fn spawn_executor(
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+) -> Result<(ExecutorHandle, JoinHandle<()>)> {
+    let (tx, rx) = channel::<Job>();
+    let handle_manifest = manifest.clone();
+    let join = std::thread::Builder::new()
+        .name("pjrt-executor".to_string())
+        .spawn(move || {
+            let mut engine = match Engine::new(manifest) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("[executor] failed to start engine: {e:#}");
+                    // Drain jobs with errors so callers unblock.
+                    for job in rx {
+                        match job {
+                            Job::Eps { resp, .. } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::EpsJvp { resp, .. } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::Combine { resp, .. } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::MeasureCosts { resp, .. } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::Warmup { resp, .. } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::ExecStats { resp } => {
+                                let _ = resp.send(Err(anyhow!("engine unavailable")));
+                            }
+                            Job::Stop => break,
+                        }
+                    }
+                    return;
+                }
+            };
+            for job in rx {
+                match job {
+                    Job::Eps { level, x, t, pallas, resp } => {
+                        let t0 = std::time::Instant::now();
+                        let r = engine.eps(level, &x, t, pallas);
+                        if let Some(m) = &metrics {
+                            m.execute_latency.record(t0.elapsed());
+                        }
+                        let _ = resp.send(r);
+                    }
+                    Job::EpsJvp { level, x, t, v, resp } => {
+                        let r = engine.eps_jvp(level, &x, t, &v);
+                        let _ = resp.send(r);
+                    }
+                    Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp } => {
+                        let r = engine.combine(&y, &deltas, &coeffs, &z, eta, sigma, pallas);
+                        let _ = resp.send(r);
+                    }
+                    Job::MeasureCosts { reps, resp } => {
+                        let _ = resp.send(engine.measure_costs(reps));
+                    }
+                    Job::Warmup { bucket, resp } => {
+                        let _ = resp.send(engine.warmup(bucket));
+                    }
+                    Job::ExecStats { resp } => {
+                        let _ = resp.send(Ok((engine.exec_calls, engine.exec_ns)));
+                    }
+                    Job::Stop => break,
+                }
+            }
+        })?;
+    Ok((ExecutorHandle { tx, manifest: handle_manifest }, join))
+}
+
+impl ExecutorHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call<T>(&self, job: Job, rx: std::sync::mpsc::Receiver<Result<T>>) -> Result<T> {
+        self.tx.send(job).map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped response"))?
+    }
+
+    /// Evaluate a level's eps network on a flattened `[n, dim]` batch.
+    pub fn eps(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
+        let (resp, rx) = channel();
+        self.call(Job::Eps { level, x: x.to_vec(), t, pallas: false, resp }, rx)
+    }
+
+    /// Same through the Pallas-flavour parity artifact.
+    pub fn eps_pallas(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
+        let (resp, rx) = channel();
+        self.call(Job::Eps { level, x: x.to_vec(), t, pallas: true, resp }, rx)
+    }
+
+    /// Evaluate (eps, ∂eps·v).
+    pub fn eps_jvp(&self, level: usize, x: &[f32], t: f64, v: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (resp, rx) = channel();
+        self.call(Job::EpsJvp { level, x: x.to_vec(), t, v: v.to_vec(), resp }, rx)
+    }
+
+    /// Fused ML-EM combine step (see `engine::Engine::combine`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn combine(
+        &self,
+        y: &[f32],
+        deltas: &[f32],
+        coeffs: &[f32],
+        z: &[f32],
+        eta: f64,
+        sigma: f64,
+        pallas: bool,
+    ) -> Result<Vec<f32>> {
+        let (resp, rx) = channel();
+        self.call(
+            Job::Combine {
+                y: y.to_vec(),
+                deltas: deltas.to_vec(),
+                coeffs: coeffs.to_vec(),
+                z: z.to_vec(),
+                eta,
+                sigma,
+                pallas,
+                resp,
+            },
+            rx,
+        )
+    }
+
+    /// Measure per-level cost in seconds/image (see engine).
+    pub fn measure_costs(&self, reps: usize) -> Result<Vec<f64>> {
+        let (resp, rx) = channel();
+        self.call(Job::MeasureCosts { reps, resp }, rx)
+    }
+
+    /// Pre-compile all levels at a bucket size.
+    pub fn warmup(&self, bucket: usize) -> Result<()> {
+        let (resp, rx) = channel();
+        self.call(Job::Warmup { bucket, resp }, rx)
+    }
+
+    /// (execute-call count, cumulative ns inside PJRT execute).
+    pub fn exec_stats(&self) -> Result<(u64, u64)> {
+        let (resp, rx) = channel();
+        self.call(Job::ExecStats { resp }, rx)
+    }
+
+    /// Ask the executor thread to exit.
+    pub fn stop(&self) {
+        let _ = self.tx.send(Job::Stop);
+    }
+}

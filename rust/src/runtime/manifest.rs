@@ -1,0 +1,238 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py` — the single Python→Rust hand-off).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One family member's artifact set.
+#[derive(Clone, Debug)]
+pub struct LevelMeta {
+    /// 1-based level index (f^1 .. f^5).
+    pub level: usize,
+    /// Parameter count (reporting only).
+    pub params: u64,
+    /// Estimated forward FLOPs per image.
+    pub flops_per_image: u64,
+    /// Held-out denoising loss measured at train time (Fig 2 input).
+    pub holdout_loss: f64,
+    /// `batch bucket -> eps HLO file`.
+    pub eps: BTreeMap<usize, String>,
+    /// `batch bucket -> (eps, jvp) HLO file`.
+    pub eps_jvp: BTreeMap<usize, String>,
+    /// Optional Pallas-flavour parity artifact.
+    pub eps_pallas: BTreeMap<usize, String>,
+}
+
+/// The fused ML-EM combine artifacts.
+#[derive(Clone, Debug)]
+pub struct CombineMeta {
+    pub batch: usize,
+    pub levels: usize,
+    pub ref_file: String,
+    pub pallas_file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact paths are
+    /// relative to it).
+    pub dir: PathBuf,
+    pub img: usize,
+    pub channels: usize,
+    pub dim: usize,
+    pub batch_buckets: Vec<usize>,
+    pub jvp_buckets: Vec<usize>,
+    pub schedule_s: f64,
+    pub t_max: f64,
+    pub combine: CombineMeta,
+    pub holdout_file: String,
+    pub holdout_count: usize,
+    pub levels: Vec<LevelMeta>,
+}
+
+fn bucket_map(v: Option<&Json>) -> BTreeMap<usize, String> {
+    let mut out = BTreeMap::new();
+    if let Some(Json::Obj(fields)) = v {
+        for (k, val) in fields {
+            if let (Ok(b), Some(s)) = (k.parse::<usize>(), val.as_str()) {
+                out.insert(b, s.to_string());
+            }
+        }
+    }
+    out
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let req_usize =
+            |k: &str| j.usize_of(k).ok_or_else(|| anyhow!("manifest missing '{k}'"));
+        let combine = j.get("combine").ok_or_else(|| anyhow!("manifest missing 'combine'"))?;
+        let holdout = j.get("holdout").ok_or_else(|| anyhow!("manifest missing 'holdout'"))?;
+
+        let levels = j
+            .get("levels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'levels'"))?
+            .iter()
+            .map(|l| -> Result<LevelMeta> {
+                Ok(LevelMeta {
+                    level: l.usize_of("level").ok_or_else(|| anyhow!("level missing index"))?,
+                    params: l.f64_of("params").unwrap_or(0.0) as u64,
+                    flops_per_image: l.f64_of("flops_per_image").unwrap_or(0.0) as u64,
+                    holdout_loss: l.f64_of("holdout_loss").unwrap_or(f64::NAN),
+                    eps: bucket_map(l.get("eps")),
+                    eps_jvp: bucket_map(l.get("eps_jvp")),
+                    eps_pallas: bucket_map(l.get("eps_pallas")),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if levels.is_empty() {
+            return Err(anyhow!("manifest has no levels"));
+        }
+
+        let m = Manifest {
+            dir,
+            img: req_usize("img")?,
+            channels: req_usize("channels")?,
+            dim: req_usize("dim")?,
+            batch_buckets: j
+                .get("batch_buckets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            jvp_buckets: j
+                .get("jvp_buckets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            schedule_s: j.get_path(&["schedule", "s"]).and_then(Json::as_f64).unwrap_or(0.008),
+            t_max: j.get_path(&["schedule", "t_max"]).and_then(Json::as_f64).unwrap_or(0.9946),
+            combine: CombineMeta {
+                batch: combine.usize_of("batch").unwrap_or(32),
+                levels: combine.usize_of("levels").unwrap_or(3),
+                ref_file: combine.str_of("ref").unwrap_or_default().to_string(),
+                pallas_file: combine.str_of("pallas").unwrap_or_default().to_string(),
+            },
+            holdout_file: holdout.str_of("file").unwrap_or_default().to_string(),
+            holdout_count: holdout.usize_of("count").unwrap_or(0),
+            levels,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.dim != self.img * self.img * self.channels {
+            return Err(anyhow!(
+                "dim {} != img² × channels {}",
+                self.dim,
+                self.img * self.img * self.channels
+            ));
+        }
+        for l in &self.levels {
+            for (b, f) in &l.eps {
+                let p = self.dir.join(f);
+                if !p.exists() {
+                    return Err(anyhow!("missing artifact {} (level {} bucket {b})", p.display(), l.level));
+                }
+            }
+        }
+        // schedule constants must match the compiled-in Rust schedule
+        let ds = (self.schedule_s - crate::sde::schedule::COSINE_S).abs();
+        let dt = (self.t_max - crate::sde::schedule::T_MAX).abs();
+        if ds > 1e-9 || dt > 1e-9 {
+            return Err(anyhow!(
+                "schedule mismatch between artifacts (s={}, t_max={}) and binary (s={}, t_max={}); \
+                 re-run `make artifacts`",
+                self.schedule_s,
+                self.t_max,
+                crate::sde::schedule::COSINE_S,
+                crate::sde::schedule::T_MAX
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of levels in the family.
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Load the holdout images as a flattened `[count, dim]` batch.
+    pub fn load_holdout(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.holdout_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.holdout_count * self.dim * 4 {
+            return Err(anyhow!(
+                "holdout size {} != {} images × {} dims × 4B",
+                bytes.len(),
+                self.holdout_count,
+                self.dim
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests run against the real artifacts when they exist (CI runs
+    /// `make artifacts` first); otherwise they are skipped.
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_validates_real_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).expect("manifest should load");
+        assert_eq!(m.img, 8);
+        assert_eq!(m.dim, 64);
+        assert_eq!(m.num_levels(), 5);
+        // error ladder decreases with level
+        for w in m.levels.windows(2) {
+            assert!(
+                w[1].holdout_loss < w[0].holdout_loss,
+                "holdout losses must decrease: {:?}",
+                m.levels.iter().map(|l| l.holdout_loss).collect::<Vec<_>>()
+            );
+        }
+        // costs (flops) increase with level
+        for w in m.levels.windows(2) {
+            assert!(w[1].flops_per_image > w[0].flops_per_image);
+        }
+    }
+
+    #[test]
+    fn holdout_loads_with_right_shape() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let h = m.load_holdout().unwrap();
+        assert_eq!(h.len(), m.holdout_count * m.dim);
+        // images are in [-1, 1]
+        assert!(h.iter().all(|&v| (-1.01..=1.01).contains(&v)));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

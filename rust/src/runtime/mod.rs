@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them on the request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (thread-confined), so the
+//! runtime follows the standard accelerator-serving shape: one **executor
+//! thread** owns the client and all compiled executables; everything else
+//! talks to it through a cloneable, `Sync` [`ExecutorHandle`].  This also
+//! models a real deployment, where a single process owns the device and
+//! serialises kernel launches.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`;
+//! * [`engine`] — thread-confined executable cache + batch-bucket logic;
+//! * [`executor`] — the executor thread and its handle;
+//! * [`neural`] — [`crate::sde::Denoiser`] implementations over the
+//!   handle (the f^1..f^5 family as seen by the samplers).
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod neural;
+
+pub use executor::{spawn_executor, ExecutorHandle};
+pub use manifest::Manifest;
+pub use neural::NeuralDenoiser;

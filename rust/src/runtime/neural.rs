@@ -1,0 +1,74 @@
+//! The trained UNet family as [`Denoiser`]s — the bridge between the
+//! PJRT runtime and the SDE samplers.
+
+use anyhow::Result;
+
+use super::executor::ExecutorHandle;
+use crate::sde::drift::Denoiser;
+
+/// One family member f^k served through the executor.
+pub struct NeuralDenoiser {
+    handle: ExecutorHandle,
+    /// 1-based level index.
+    pub level: usize,
+    dim: usize,
+    /// Relative cost per image eval (seconds, from `measure_costs`, or
+    /// FLOPs from the manifest — consistent units within a family).
+    pub cost: f64,
+}
+
+impl NeuralDenoiser {
+    pub fn new(handle: ExecutorHandle, level: usize, cost: f64) -> NeuralDenoiser {
+        let dim = handle.manifest().dim;
+        NeuralDenoiser { handle, level, dim, cost }
+    }
+
+    /// Build the whole family with measured costs (seconds/image).
+    ///
+    /// `cost_reps` timing repetitions; pass 0 to fall back to the
+    /// manifest's FLOP estimates (fast start, e.g. in tests).
+    pub fn family(handle: &ExecutorHandle, cost_reps: usize) -> Result<Vec<NeuralDenoiser>> {
+        let costs: Vec<f64> = if cost_reps > 0 {
+            handle.measure_costs(cost_reps)?
+        } else {
+            handle
+                .manifest()
+                .levels
+                .iter()
+                .map(|l| l.flops_per_image as f64)
+                .collect()
+        };
+        Ok(handle
+            .manifest()
+            .levels
+            .iter()
+            .zip(costs)
+            .map(|(l, c)| NeuralDenoiser::new(handle.clone(), l.level, c))
+            .collect())
+    }
+}
+
+impl Denoiser for NeuralDenoiser {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eps(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        let r = self.handle.eps(self.level, x, t).expect("executor eps failed");
+        out.copy_from_slice(&r);
+    }
+
+    fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
+        let (e, j) = self.handle.eps_jvp(self.level, x, t, v).expect("executor jvp failed");
+        out_eps.copy_from_slice(&e);
+        out_jv.copy_from_slice(&j);
+    }
+
+    fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    fn name(&self) -> String {
+        format!("f^{}", self.level)
+    }
+}

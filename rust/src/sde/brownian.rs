@@ -1,0 +1,209 @@
+//! Brownian paths with coarsening.
+//!
+//! The paper's Fig 1 protocol compares discretisations *pathwise*: every
+//! run (EM with any step count, ML-EM, the 1000-step "true" reference)
+//! must see the same initial noise and the same Brownian motion.  A
+//! [`BrownianPath`] therefore stores increments on a fine grid and sums
+//! them over windows when a coarser discretisation asks for its ΔW —
+//! exactly the refinement property `W_{t+η} − W_t = Σ fine increments`.
+
+use crate::util::rng::Rng;
+
+/// A batch of Brownian paths on a fine time grid.
+pub struct BrownianPath {
+    /// Fine increments, laid out `[step][batch * dim]`; each entry is
+    /// `N(0, dt_fine)`.
+    fine: Vec<Vec<f32>>,
+    n_fine: usize,
+    /// Total time span covered by the path.
+    pub span: f64,
+}
+
+impl BrownianPath {
+    /// Sample a fresh path: `n_fine` increments of a `batch * dim`
+    /// dimensional Brownian motion over total time `span`.
+    pub fn sample(rng: &mut Rng, n_fine: usize, width: usize, span: f64) -> BrownianPath {
+        let sd = (span / n_fine as f64).sqrt();
+        let fine = (0..n_fine)
+            .map(|_| {
+                let mut v = vec![0.0f32; width];
+                for x in &mut v {
+                    *x = (rng.normal() * sd) as f32;
+                }
+                v
+            })
+            .collect();
+        BrownianPath { fine, n_fine, span }
+    }
+
+    /// Build from explicit fine increments `[step][width]` (used by the
+    /// coordinator to concatenate per-request noise streams into one
+    /// batch path while keeping each request's noise a pure function of
+    /// its own seed).
+    pub fn from_increments(fine: Vec<Vec<f32>>, span: f64) -> BrownianPath {
+        assert!(!fine.is_empty());
+        let w = fine[0].len();
+        assert!(fine.iter().all(|v| v.len() == w), "ragged increments");
+        let n_fine = fine.len();
+        BrownianPath { fine, n_fine, span }
+    }
+
+    /// Concatenate paths over the width axis (same grid and span).
+    pub fn concat(parts: &[BrownianPath]) -> BrownianPath {
+        assert!(!parts.is_empty());
+        let n_fine = parts[0].n_fine;
+        let span = parts[0].span;
+        assert!(parts.iter().all(|p| p.n_fine == n_fine && (p.span - span).abs() < 1e-12));
+        let fine = (0..n_fine)
+            .map(|i| {
+                let mut row = Vec::new();
+                for p in parts {
+                    row.extend_from_slice(&p.fine[i]);
+                }
+                row
+            })
+            .collect();
+        BrownianPath { fine, n_fine, span }
+    }
+
+    /// Number of fine steps.
+    pub fn n_fine(&self) -> usize {
+        self.n_fine
+    }
+
+    /// Path width (`batch * dim`).
+    pub fn width(&self) -> usize {
+        self.fine.first().map_or(0, Vec::len)
+    }
+
+    /// Whether a coarse grid with `n` steps is compatible (divides fine).
+    pub fn supports(&self, n: usize) -> bool {
+        n > 0 && self.n_fine % n == 0
+    }
+
+    /// Write ΔW for coarse step `j` of an `n`-step grid into `out`.
+    ///
+    /// Requires `supports(n)`; the coarse increment is the sum of the
+    /// `n_fine / n` fine increments in the window.
+    pub fn coarse_dw(&self, j: usize, n: usize, out: &mut [f32]) {
+        assert!(self.supports(n), "coarse grid {n} does not divide fine {}", self.n_fine);
+        assert!(j < n, "step {j} out of range for {n}-step grid");
+        let w = self.n_fine / n;
+        out.fill(0.0);
+        for s in j * w..(j + 1) * w {
+            let inc = &self.fine[s];
+            for i in 0..out.len() {
+                out[i] += inc[i];
+            }
+        }
+    }
+
+    /// Endpoint displacement `W(span) − W(0)` (sum of all increments).
+    pub fn total(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.width()];
+        for inc in &self.fine {
+            for i in 0..out.len() {
+                out[i] += inc[i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refinement_consistency() {
+        // Coarse increments at n=10 must equal sums of n=100 increments.
+        let mut rng = Rng::new(3);
+        let p = BrownianPath::sample(&mut rng, 100, 4, 1.0);
+        let mut coarse = vec![0.0f32; 4];
+        let mut summed = vec![0.0f32; 4];
+        let mut fine = vec![0.0f32; 4];
+        for j in 0..10 {
+            p.coarse_dw(j, 10, &mut coarse);
+            summed.fill(0.0);
+            for jj in 10 * j..10 * (j + 1) {
+                p.coarse_dw(jj, 100, &mut fine);
+                for i in 0..4 {
+                    summed[i] += fine[i];
+                }
+            }
+            for i in 0..4 {
+                assert!((coarse[i] - summed[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn increment_variance_scales_with_dt() {
+        let mut rng = Rng::new(5);
+        let span = 2.0;
+        let p = BrownianPath::sample(&mut rng, 1000, 50, span);
+        // variance of a single coarse ΔW over n=10 grid should be span/10
+        let mut buf = vec![0.0f32; 50];
+        let mut sum2 = 0.0f64;
+        let mut count = 0usize;
+        for j in 0..10 {
+            p.coarse_dw(j, 10, &mut buf);
+            for &x in &buf {
+                sum2 += (x as f64) * (x as f64);
+                count += 1;
+            }
+        }
+        let var = sum2 / count as f64;
+        let expect = span / 10.0;
+        assert!(
+            (var - expect).abs() < 0.15 * expect,
+            "var {var} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn total_is_sum_of_any_coarse_grid() {
+        let mut rng = Rng::new(7);
+        let p = BrownianPath::sample(&mut rng, 60, 3, 0.5);
+        let total = p.total();
+        for &n in &[1usize, 2, 3, 5, 60] {
+            let mut acc = vec![0.0f32; 3];
+            let mut buf = vec![0.0f32; 3];
+            for j in 0..n {
+                p.coarse_dw(j, n, &mut buf);
+                for i in 0..3 {
+                    acc[i] += buf[i];
+                }
+            }
+            for i in 0..3 {
+                assert!((acc[i] - total[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn supports_divisors_only() {
+        let mut rng = Rng::new(1);
+        let p = BrownianPath::sample(&mut rng, 12, 1, 1.0);
+        assert!(p.supports(3));
+        assert!(p.supports(12));
+        assert!(!p.supports(5));
+        assert!(!p.supports(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn coarse_dw_panics_on_bad_grid() {
+        let mut rng = Rng::new(1);
+        let p = BrownianPath::sample(&mut rng, 12, 1, 1.0);
+        let mut buf = [0.0f32; 1];
+        p.coarse_dw(0, 7, &mut buf);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = BrownianPath::sample(&mut Rng::new(9), 20, 2, 1.0);
+        let b = BrownianPath::sample(&mut Rng::new(9), 20, 2, 1.0);
+        assert_eq!(a.total(), b.total());
+    }
+}

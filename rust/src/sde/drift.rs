@@ -1,0 +1,374 @@
+//! Drift and denoiser traits, plus the adapters that assemble diffusion
+//! drifts from noise-prediction models.
+//!
+//! Layout convention everywhere: batches are flattened row-major
+//! `[batch, dim]` f32 slices of length `batch * dim`.
+
+use super::schedule;
+
+/// A time-dependent vector field `f_t(x)` over batched states.
+pub trait Drift: Sync {
+    /// State dimensionality per batch element.
+    fn dim(&self) -> usize;
+
+    /// Evaluate `f_t` for a whole batch; `out.len() == x.len()`.
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]);
+
+    /// Jacobian-vector product: write `f_t(x)` into `out_f` and
+    /// `∂f_t/∂x · v` into `out_jv`.  Needed by the adaptive learner's
+    /// forward-gradient pass; default falls back to central differences
+    /// (2 extra evals — fine for analytic drifts, overridden by neural
+    /// drifts with exported JVP artifacts).
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        self.eval(x, t, out_f);
+        let h = 1e-3f32;
+        let mut xp = x.to_vec();
+        let mut xm = x.to_vec();
+        for i in 0..x.len() {
+            xp[i] += h * v[i];
+            xm[i] -= h * v[i];
+        }
+        let mut fp = vec![0.0f32; x.len()];
+        let mut fm = vec![0.0f32; x.len()];
+        self.eval(&xp, t, &mut fp);
+        self.eval(&xm, t, &mut fm);
+        for i in 0..x.len() {
+            out_jv[i] = (fp[i] - fm[i]) / (2.0 * h);
+        }
+    }
+
+    /// Relative compute cost of one batch-element evaluation (arbitrary
+    /// units, consistent within a family; measured seconds for neural
+    /// drifts).  Drives the scheduler's cost accounting and the
+    /// `p_k ∝ T_k^{-1}` policies.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+
+    /// Human-readable identifier for reports.
+    fn name(&self) -> String {
+        "drift".to_string()
+    }
+}
+
+/// A noise-prediction model `eps_hat(x, t)` (the UNet family, or an
+/// analytic score repackaged through `eps = −sigma(t)·score`).
+pub trait Denoiser: Sync {
+    fn dim(&self) -> usize;
+
+    /// Predict the noise for a batch.
+    fn eps(&self, x: &[f32], t: f64, out: &mut [f32]);
+
+    /// JVP of `eps` w.r.t. `x` (defaults to central differences).
+    fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
+        self.eps(x, t, out_eps);
+        let h = 1e-3f32;
+        let mut xp = x.to_vec();
+        let mut xm = x.to_vec();
+        for i in 0..x.len() {
+            xp[i] += h * v[i];
+            xm[i] -= h * v[i];
+        }
+        let mut fp = vec![0.0f32; x.len()];
+        let mut fm = vec![0.0f32; x.len()];
+        self.eps(&xp, t, &mut fp);
+        self.eps(&xm, t, &mut fm);
+        for i in 0..x.len() {
+            out_jv[i] = (fp[i] - fm[i]) / (2.0 * h);
+        }
+    }
+
+    /// Relative cost of one image evaluation.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> String {
+        "denoiser".to_string()
+    }
+}
+
+/// References forward to the underlying denoiser (lets adapters borrow
+/// family members owned elsewhere, e.g. the runtime's denoiser vector).
+impl<D: Denoiser + ?Sized> Denoiser for &D {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn eps(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        (**self).eps(x, t, out)
+    }
+    fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
+        (**self).eps_jvp(x, t, v, out_eps, out_jv)
+    }
+    fn cost(&self) -> f64 {
+        (**self).cost()
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
+/// Full diffusion drift `beta(t)·[x/2 + κ·score]` with `κ = 1` (SDE /
+/// DDPM) or `κ = 1/2` (probability-flow ODE / DDIM).
+pub struct DiffusionDrift<D> {
+    pub den: D,
+    pub ode: bool,
+}
+
+impl<D: Denoiser> DiffusionDrift<D> {
+    pub fn sde(den: D) -> Self {
+        DiffusionDrift { den, ode: false }
+    }
+
+    pub fn ode(den: D) -> Self {
+        DiffusionDrift { den, ode: true }
+    }
+}
+
+impl<D: Denoiser> Drift for DiffusionDrift<D> {
+    fn dim(&self) -> usize {
+        self.den.dim()
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.den.eps(x, t, out);
+        let b = schedule::beta(t);
+        let kappa = if self.ode { 0.5 } else { 1.0 };
+        let sc = (-b * kappa / schedule::sigma(t)) as f32; // score = -eps/sigma
+        let xc = (b / 2.0) as f32;
+        for i in 0..x.len() {
+            out[i] = xc * x[i] + sc * out[i];
+        }
+    }
+
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        self.den.eps_jvp(x, t, v, out_f, out_jv);
+        let b = schedule::beta(t);
+        let kappa = if self.ode { 0.5 } else { 1.0 };
+        let sc = (-b * kappa / schedule::sigma(t)) as f32;
+        let xc = (b / 2.0) as f32;
+        for i in 0..x.len() {
+            out_f[i] = xc * x[i] + sc * out_f[i];
+            out_jv[i] = xc * v[i] + sc * out_jv[i];
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        self.den.cost()
+    }
+
+    fn name(&self) -> String {
+        format!("{}/{}", self.den.name(), if self.ode { "ode" } else { "sde" })
+    }
+}
+
+/// The *known, cheap* part of the diffusion drift: `beta(t)·x/2`.
+///
+/// ML-EM levels only need to estimate the expensive score part, so the
+/// family is split as `drift = LinearPart + Σ_k Δ(ScorePart_k)`; the
+/// linear part is evaluated every step at negligible cost (the paper's
+/// `f^{k_min−1} = 0` convention applied to the residual).
+pub struct LinearPartDrift {
+    pub dim: usize,
+}
+
+impl Drift for LinearPartDrift {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        let xc = (schedule::beta(t) / 2.0) as f32;
+        for i in 0..x.len() {
+            out[i] = xc * x[i];
+        }
+    }
+
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        let xc = (schedule::beta(t) / 2.0) as f32;
+        for i in 0..x.len() {
+            out_f[i] = xc * x[i];
+            out_jv[i] = xc * v[i];
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> String {
+        "linear-part".to_string()
+    }
+}
+
+/// The score part of the diffusion drift: `beta(t)·κ·score(x, t)` with a
+/// given denoiser — one ML-EM *level*.
+pub struct ScorePartDrift<D> {
+    pub den: D,
+    pub ode: bool,
+}
+
+impl<D: Denoiser> Drift for ScorePartDrift<D> {
+    fn dim(&self) -> usize {
+        self.den.dim()
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.den.eps(x, t, out);
+        let kappa = if self.ode { 0.5 } else { 1.0 };
+        let sc = (-schedule::beta(t) * kappa / schedule::sigma(t)) as f32;
+        for o in out.iter_mut() {
+            *o *= sc;
+        }
+    }
+
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        self.den.eps_jvp(x, t, v, out_f, out_jv);
+        let kappa = if self.ode { 0.5 } else { 1.0 };
+        let sc = (-schedule::beta(t) * kappa / schedule::sigma(t)) as f32;
+        for i in 0..out_f.len() {
+            out_f[i] *= sc;
+            out_jv[i] *= sc;
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        self.den.cost()
+    }
+
+    fn name(&self) -> String {
+        format!("score-part/{}", self.den.name())
+    }
+}
+
+/// Sum of two drifts (used to assemble the plain-EM baseline from the
+/// same parts ML-EM uses, so both integrate the identical field).
+pub struct SumDrift<'a> {
+    pub a: &'a dyn Drift,
+    pub b: &'a dyn Drift,
+}
+
+impl<'a> Drift for SumDrift<'a> {
+    fn dim(&self) -> usize {
+        self.a.dim()
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.a.eval(x, t, out);
+        let mut tmp = vec![0.0f32; x.len()];
+        self.b.eval(x, t, &mut tmp);
+        for i in 0..out.len() {
+            out[i] += tmp[i];
+        }
+    }
+
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        self.a.jvp(x, t, v, out_f, out_jv);
+        let mut tf = vec![0.0f32; x.len()];
+        let mut tj = vec![0.0f32; x.len()];
+        self.b.jvp(x, t, v, &mut tf, &mut tj);
+        for i in 0..out_f.len() {
+            out_f[i] += tf[i];
+            out_jv[i] += tj[i];
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        self.a.cost() + self.b.cost()
+    }
+
+    fn name(&self) -> String {
+        format!("{}+{}", self.a.name(), self.b.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy denoiser: eps = c * x (linear, exact JVP known).
+    struct LinearDen {
+        c: f32,
+        dim: usize,
+    }
+
+    impl Denoiser for LinearDen {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn eps(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+            for i in 0..x.len() {
+                out[i] = self.c * x[i];
+            }
+        }
+    }
+
+    #[test]
+    fn diffusion_drift_formula() {
+        let d = DiffusionDrift::sde(LinearDen { c: 0.5, dim: 2 });
+        let x = [1.0f32, -2.0];
+        let mut out = [0.0f32; 2];
+        let t = 0.5;
+        d.eval(&x, t, &mut out);
+        let b = schedule::beta(t);
+        let expect0 = (b / 2.0) as f32 * 1.0 + (-b / schedule::sigma(t)) as f32 * 0.5;
+        assert!((out[0] - expect0).abs() < 1e-5);
+        assert!((out[1] + 2.0 * expect0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ode_uses_half_score() {
+        let sde = DiffusionDrift::sde(LinearDen { c: 1.0, dim: 1 });
+        let ode = DiffusionDrift::ode(LinearDen { c: 1.0, dim: 1 });
+        let x = [1.0f32];
+        let (mut a, mut b) = ([0.0f32; 1], [0.0f32; 1]);
+        sde.eval(&x, 0.4, &mut a);
+        ode.eval(&x, 0.4, &mut b);
+        let bb = schedule::beta(0.4);
+        let lin = (bb / 2.0) as f32;
+        // score contributions: (a - lin) should be 2x (b - lin)
+        assert!(((a[0] - lin) - 2.0 * (b[0] - lin)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn default_jvp_matches_exact_for_linear() {
+        let d = DiffusionDrift::sde(LinearDen { c: 0.7, dim: 3 });
+        let x = [0.3f32, -0.8, 1.2];
+        let v = [1.0f32, 0.5, -0.25];
+        let mut f = [0.0f32; 3];
+        let mut jv = [0.0f32; 3];
+        d.jvp(&x, 0.3, &v, &mut f, &mut jv);
+        // linear drift => jvp(v) = drift(v) evaluated as a linear map
+        let mut fv = [0.0f32; 3];
+        d.eval(&v, 0.3, &mut fv);
+        for i in 0..3 {
+            assert!((jv[i] - fv[i]).abs() < 1e-2, "{} vs {}", jv[i], fv[i]);
+        }
+    }
+
+    #[test]
+    fn linear_plus_score_equals_full_drift() {
+        let den = LinearDen { c: 0.9, dim: 4 };
+        let full = DiffusionDrift::sde(LinearDen { c: 0.9, dim: 4 });
+        let lin = LinearPartDrift { dim: 4 };
+        let score = ScorePartDrift { den, ode: false };
+        let sum = SumDrift { a: &lin, b: &score };
+        let x = [0.1f32, 2.0, -1.0, 0.5];
+        let (mut a, mut b) = ([0.0f32; 4], [0.0f32; 4]);
+        full.eval(&x, 0.6, &mut a);
+        sum.eval(&x, 0.6, &mut b);
+        for i in 0..4 {
+            assert!((a[i] - b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cost_propagates() {
+        let lin = LinearPartDrift { dim: 1 };
+        assert_eq!(lin.cost(), 0.0);
+        let s = ScorePartDrift { den: LinearDen { c: 1.0, dim: 1 }, ode: false };
+        assert_eq!(s.cost(), 1.0);
+        let sum = SumDrift { a: &lin, b: &s };
+        assert_eq!(sum.cost(), 1.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Baseline Euler–Maruyama sampler and the shared time grid.
+
+use super::brownian::BrownianPath;
+use super::drift::Drift;
+
+/// Uniform backward time grid from `t_start` down to `t_end` in `n` steps.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeGrid {
+    pub t_start: f64,
+    pub t_end: f64,
+    pub n: usize,
+}
+
+impl TimeGrid {
+    pub fn new(t_start: f64, t_end: f64, n: usize) -> TimeGrid {
+        assert!(n > 0 && t_start > t_end);
+        TimeGrid { t_start, t_end, n }
+    }
+
+    /// Step size `η`.
+    pub fn eta(&self) -> f64 {
+        (self.t_start - self.t_end) / self.n as f64
+    }
+
+    /// Time at the *beginning* of step `i` (where the drift is evaluated).
+    pub fn t(&self, i: usize) -> f64 {
+        self.t_start - i as f64 * self.eta()
+    }
+
+    /// Total integration span.
+    pub fn span(&self) -> f64 {
+        self.t_start - self.t_end
+    }
+}
+
+/// Integrate `x` (a `[batch, dim]` flattened state) with Euler–Maruyama:
+///
+/// ```text
+/// x ← x + η·f(x, t_i) + g(t_i)·ΔW_i
+/// ```
+///
+/// `g` is the diffusion coefficient (`sqrt(beta(t))` for the DDPM
+/// backward SDE, `|_| 0.0` for the probability-flow ODE).  ΔW comes from
+/// `path` so different step counts share the same noise (Fig 1 protocol).
+/// Returns the number of drift evaluations (= `grid.n`).
+pub fn em_sample(
+    drift: &dyn Drift,
+    g: impl Fn(f64) -> f64,
+    x: &mut [f32],
+    grid: &TimeGrid,
+    path: &BrownianPath,
+) -> usize {
+    assert_eq!(path.width(), x.len(), "path width must match state size");
+    assert!(path.supports(grid.n), "grid {} incompatible with path", grid.n);
+    let eta = grid.eta() as f32;
+    let mut f = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; x.len()];
+    for i in 0..grid.n {
+        let t = grid.t(i);
+        drift.eval(x, t, &mut f);
+        let gt = g(t) as f32;
+        if gt != 0.0 {
+            path.coarse_dw(i, grid.n, &mut dw);
+            for j in 0..x.len() {
+                x[j] += eta * f[j] + gt * dw[j];
+            }
+        } else {
+            for j in 0..x.len() {
+                x[j] += eta * f[j];
+            }
+        }
+    }
+    grid.n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// dx = a·x dt (deterministic exponential growth/decay).
+    struct LinearDrift {
+        a: f32,
+    }
+
+    impl Drift for LinearDrift {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+            for i in 0..x.len() {
+                out[i] = self.a * x[i];
+            }
+        }
+    }
+
+    #[test]
+    fn grid_basics() {
+        let g = TimeGrid::new(1.0, 0.0, 4);
+        assert!((g.eta() - 0.25).abs() < 1e-12);
+        assert!((g.t(0) - 1.0).abs() < 1e-12);
+        assert!((g.t(3) - 0.25).abs() < 1e-12);
+        assert!((g.span() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn euler_converges_to_exponential() {
+        // ODE dx = -x dt from x=1 over span 1: exact e^{-1}.
+        let drift = LinearDrift { a: -1.0 };
+        let mut rng = Rng::new(0);
+        let path = BrownianPath::sample(&mut rng, 1024, 1, 1.0);
+        let mut errs = Vec::new();
+        for &n in &[16usize, 64, 256] {
+            let grid = TimeGrid::new(1.0, 0.0, n);
+            let mut x = vec![1.0f32];
+            em_sample(&drift, |_| 0.0, &mut x, &grid, &path);
+            errs.push((x[0] as f64 - (-1.0f64).exp()).abs());
+        }
+        // first-order: error should shrink ~4x per 4x steps
+        assert!(errs[0] > errs[1] && errs[1] > errs[2]);
+        assert!(errs[0] / errs[2] > 8.0, "ratios {errs:?}");
+    }
+
+    #[test]
+    fn em_strong_error_halves_with_steps() {
+        // OU process dx = -x dt + dW: EM strong order 1.0 for additive
+        // noise; measure pathwise error against a very fine reference.
+        let drift = LinearDrift { a: -1.0 };
+        let mut err_by_n = Vec::new();
+        let fine_n = 2048;
+        let mut rng = Rng::new(42);
+        let reps = 24;
+        for &n in &[32usize, 128] {
+            let mut total = 0.0;
+            for _ in 0..reps {
+                let path = BrownianPath::sample(&mut rng, fine_n, 1, 1.0);
+                let grid_f = TimeGrid::new(1.0, 0.0, fine_n);
+                let mut xf = vec![0.5f32];
+                em_sample(&drift, |_| 1.0, &mut xf, &grid_f, &path);
+                let grid_c = TimeGrid::new(1.0, 0.0, n);
+                let mut xc = vec![0.5f32];
+                em_sample(&drift, |_| 1.0, &mut xc, &grid_c, &path);
+                total += (xf[0] as f64 - xc[0] as f64).abs();
+            }
+            err_by_n.push(total / reps as f64);
+        }
+        // 4x more steps should cut pathwise error by ~4 (order 1 for
+        // additive noise); accept >2.5x to be noise-tolerant.
+        assert!(
+            err_by_n[0] / err_by_n[1] > 2.5,
+            "errors {err_by_n:?}"
+        );
+    }
+
+    #[test]
+    fn ou_variance_matches_stationary_law() {
+        // dx = -x dt + sqrt(2) dW has stationary variance 1.
+        struct Ou;
+        impl Drift for Ou {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+                for i in 0..x.len() {
+                    out[i] = -x[i];
+                }
+            }
+        }
+        let mut rng = Rng::new(11);
+        let batch = 512;
+        let path = BrownianPath::sample(&mut rng, 400, batch, 8.0);
+        let grid = TimeGrid::new(8.0, 0.0, 400);
+        let mut x = vec![0.0f32; batch];
+        em_sample(&Ou, |_| (2.0f64).sqrt(), &mut x, &grid, &path);
+        let var = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / batch as f64;
+        assert!((var - 1.0).abs() < 0.2, "stationary var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn rejects_incompatible_grid() {
+        let drift = LinearDrift { a: 0.0 };
+        let mut rng = Rng::new(0);
+        let path = BrownianPath::sample(&mut rng, 10, 1, 1.0);
+        let grid = TimeGrid::new(1.0, 0.0, 3);
+        let mut x = vec![0.0f32];
+        em_sample(&drift, |_| 1.0, &mut x, &grid, &path);
+    }
+}

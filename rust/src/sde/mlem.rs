@@ -1,0 +1,508 @@
+//! The paper's contribution: the **Multilevel Euler–Maruyama** sampler.
+//!
+//! One discretisation step (paper eq. in §3):
+//!
+//! ```text
+//! y ← y + η·[ f_base(y,t) + Σ_k (B_k / p_k)·( f^k(y,t) − f^{k−1}(y,t) ) ] + g(t)·ΔW
+//! ```
+//!
+//! with `B_k ~ Bernoulli(p_k(t))` drawn independently per step (and, in
+//! [`BernoulliMode::Shared`] mode, shared across the generation batch —
+//! the paper's §4 GPU-batching trick: each level is evaluated for the
+//! whole batch or not at all).  `f^{-1} ≡ 0`, so the lowest level's delta
+//! is the level itself; `f_base` is an optional analytically-known part
+//! (the `beta(t)·x/2` term of diffusion drifts) that is evaluated every
+//! step at negligible cost.
+//!
+//! In expectation over the Bernoullis the update telescopes to plain EM
+//! with the *best* level — unbiasedness is property-tested below.
+
+use std::time::{Duration, Instant};
+
+use super::brownian::BrownianPath;
+use super::drift::Drift;
+use super::em::TimeGrid;
+use crate::util::rng::Rng;
+
+/// How Bernoulli level draws relate to the generation batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BernoulliMode {
+    /// One draw per (step, level), shared by the whole batch (§4: the
+    /// cost-saving serving mode — all-or-nothing level evaluation).
+    Shared,
+    /// Independent draws per (step, level, sample).  Required by the
+    /// adaptive learner, whose gradient estimator needs independence
+    /// (§4: "sharing Bernoullis breaks the independence").  The level is
+    /// still *executed* for the whole batch if any sample fired, but each
+    /// sample applies its own `B/p` coefficient.
+    PerSample,
+}
+
+/// Level probabilities `p_k(t)`; implemented by `levels::Policy`.
+pub trait LevelPolicy: Sync {
+    /// Probability for level index `k` (0-based within the family) at
+    /// time `t`.  Values are clamped to `[PROB_FLOOR, 1]` by the sampler.
+    fn prob(&self, k: usize, t: f64) -> f64;
+}
+
+/// Closures are policies too (handy in tests).
+impl<F: Fn(usize, f64) -> f64 + Sync> LevelPolicy for F {
+    fn prob(&self, k: usize, t: f64) -> f64 {
+        self(k, t)
+    }
+}
+
+/// Numerical floor on probabilities (caps the 1/p coefficient).
+pub const PROB_FLOOR: f64 = 1e-6;
+
+/// A multilevel drift family `f^1..f^K` plus an optional always-on base.
+pub struct MlemFamily<'a> {
+    /// Analytically known part evaluated every step (cost ~ 0); `None`
+    /// for raw SDE families like the GMM theorem-validation substrate.
+    pub base: Option<&'a dyn Drift>,
+    /// Approximators in increasing accuracy / cost order.
+    pub levels: Vec<&'a dyn Drift>,
+}
+
+/// Per-run accounting: who got evaluated and what it cost.
+#[derive(Clone, Debug)]
+pub struct SampleReport {
+    /// Batch-granular evaluations per level (one = the whole batch went
+    /// through that level once).
+    pub batch_evals: Vec<u64>,
+    /// Image-granular evaluations (batch_evals × batch size).
+    pub image_evals: Vec<u64>,
+    /// Σ evals × level cost — the realised compute in cost units.
+    pub cost_units: f64,
+    /// Expected compute `Σ_{t,k} p_k(t) × cost_k × batch` for comparison
+    /// (the paper's E C(y_T); concentration is tested against this).
+    pub expected_cost_units: f64,
+    pub steps: usize,
+    pub wall: Duration,
+}
+
+impl SampleReport {
+    fn new(k: usize) -> SampleReport {
+        SampleReport {
+            batch_evals: vec![0; k],
+            image_evals: vec![0; k],
+            cost_units: 0.0,
+            expected_cost_units: 0.0,
+            steps: 0,
+            wall: Duration::ZERO,
+        }
+    }
+
+    /// Total network evaluations at image granularity.
+    pub fn total_image_evals(&self) -> u64 {
+        self.image_evals.iter().sum()
+    }
+}
+
+/// Run the ML-EM sampler over `grid`, mutating the `[batch, dim]` state
+/// `x` in place.  `g` is the diffusion coefficient (0 for ODE mode);
+/// `bern` drives the level Bernoullis (the Brownian noise lives in
+/// `path`, so Fig 1's best-of-R trick resamples `bern` while keeping the
+/// path fixed).
+#[allow(clippy::too_many_arguments)]
+pub fn mlem_sample(
+    family: &MlemFamily,
+    policy: &dyn LevelPolicy,
+    mode: BernoulliMode,
+    g: impl Fn(f64) -> f64,
+    x: &mut [f32],
+    batch: usize,
+    grid: &TimeGrid,
+    path: &BrownianPath,
+    bern: &mut Rng,
+) -> SampleReport {
+    let start = Instant::now();
+    let nk = family.levels.len();
+    assert!(nk > 0, "family must have at least one level");
+    let dim = family.levels[0].dim();
+    assert_eq!(x.len(), batch * dim, "state size mismatch");
+    assert_eq!(path.width(), x.len(), "path width mismatch");
+    assert!(path.supports(grid.n), "grid incompatible with path");
+
+    let eta = grid.eta() as f32;
+    let mut report = SampleReport::new(nk);
+    report.steps = grid.n;
+
+    // Scratch: per-level eval cache + accumulators (allocated once).
+    let mut cache: Vec<Vec<f32>> = (0..nk).map(|_| vec![0.0f32; x.len()]).collect();
+    let mut cached = vec![false; nk];
+    let mut total = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; x.len()];
+    let mut coeff = vec![0.0f32; batch]; // per-sample B/p for one level
+    let mut fired = vec![false; nk];
+    let mut probs = vec![0.0f64; nk];
+    let mut any_fired_per_level = vec![false; nk];
+
+    for i in 0..grid.n {
+        let t = grid.t(i);
+        cached.fill(false);
+
+        // 1. Base part (always on).
+        if let Some(base) = family.base {
+            base.eval(x, t, &mut total);
+        } else {
+            total.fill(0.0);
+        }
+
+        // 2. Draw Bernoullis and decide which levels must be evaluated.
+        for k in 0..nk {
+            probs[k] = policy.prob(k, t).clamp(PROB_FLOOR, 1.0);
+            report.expected_cost_units += probs[k]
+                * (family.levels[k].cost()
+                    + if k > 0 { family.levels[k - 1].cost() } else { 0.0 })
+                * batch as f64;
+            fired[k] = false;
+            any_fired_per_level[k] = false;
+        }
+        match mode {
+            BernoulliMode::Shared => {
+                for k in 0..nk {
+                    if bern.bernoulli(probs[k]) {
+                        fired[k] = true;
+                        any_fired_per_level[k] = true;
+                    }
+                }
+            }
+            BernoulliMode::PerSample => {
+                // Drawn lazily below (needs per-sample coefficients).
+            }
+        }
+
+        // 3. Accumulate the weighted level deltas.
+        for k in 0..nk {
+            // Per-sample draws for this level.
+            let mut any = fired[k];
+            if mode == BernoulliMode::PerSample {
+                any = false;
+                let p = probs[k] as f32;
+                for c in coeff.iter_mut().take(batch) {
+                    if bern.bernoulli(probs[k]) {
+                        *c = 1.0 / p;
+                        any = true;
+                    } else {
+                        *c = 0.0;
+                    }
+                }
+            }
+            if !any {
+                continue;
+            }
+
+            // Evaluate f^k (and f^{k-1} if it exists) with caching so a
+            // level fired as both "upper" and "lower" runs once per step.
+            for l in [Some(k), k.checked_sub(1)].into_iter().flatten() {
+                if !cached[l] {
+                    let (head, tail) = cache.split_at_mut(l + 1);
+                    family.levels[l].eval(x, t, &mut head[l]);
+                    let _ = tail; // (split borrows cache disjointly)
+                    cached[l] = true;
+                    report.batch_evals[l] += 1;
+                    report.image_evals[l] += batch as u64;
+                    report.cost_units += family.levels[l].cost() * batch as f64;
+                }
+            }
+
+            match mode {
+                BernoulliMode::Shared => {
+                    let w = (1.0 / probs[k]) as f32;
+                    let fk = &cache[k];
+                    if k == 0 {
+                        for j in 0..x.len() {
+                            total[j] += w * fk[j];
+                        }
+                    } else {
+                        let fkm = &cache[k - 1];
+                        for j in 0..x.len() {
+                            total[j] += w * (fk[j] - fkm[j]);
+                        }
+                    }
+                }
+                BernoulliMode::PerSample => {
+                    let fk = &cache[k];
+                    for s in 0..batch {
+                        let w = coeff[s];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let off = s * dim;
+                        if k == 0 {
+                            for j in off..off + dim {
+                                total[j] += w * fk[j];
+                            }
+                        } else {
+                            let fkm = &cache[k - 1];
+                            for j in off..off + dim {
+                                total[j] += w * (fk[j] - fkm[j]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. State update with shared Brownian increment.
+        let gt = g(t) as f32;
+        if gt != 0.0 {
+            path.coarse_dw(i, grid.n, &mut dw);
+            for j in 0..x.len() {
+                x[j] += eta * total[j] + gt * dw[j];
+            }
+        } else {
+            for j in 0..x.len() {
+                x[j] += eta * total[j];
+            }
+        }
+    }
+
+    report.wall = start.elapsed();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::drift::SumDrift;
+    use crate::sde::em::em_sample;
+    use crate::util::proptest_lite as pt;
+
+    /// Constant drift (value independent of x and t).
+    struct Const {
+        v: Vec<f32>,
+        cost: f64,
+    }
+
+    impl Drift for Const {
+        fn dim(&self) -> usize {
+            self.v.len()
+        }
+        fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+            let d = self.v.len();
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = self.v[i % d];
+            }
+            let _ = x;
+        }
+        fn cost(&self) -> f64 {
+            self.cost
+        }
+    }
+
+    /// Linear drift a*x with relative error knob: f^k = (a + e)*x.
+    struct Lin {
+        a: f32,
+    }
+
+    impl Drift for Lin {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+            for i in 0..x.len() {
+                out[i] = self.a * x[i];
+            }
+        }
+    }
+
+    fn family_of<'a>(levels: &'a [Box<dyn Drift>]) -> MlemFamily<'a> {
+        MlemFamily { base: None, levels: levels.iter().map(|b| b.as_ref()).collect() }
+    }
+
+    #[test]
+    fn all_probs_one_degenerates_to_em_with_top_level() {
+        let levels: Vec<Box<dyn Drift>> =
+            vec![Box::new(Lin { a: -0.5 }), Box::new(Lin { a: -0.9 }), Box::new(Lin { a: -1.0 })];
+        let fam = family_of(&levels);
+        let mut rng = Rng::new(1);
+        let path = BrownianPath::sample(&mut rng, 64, 1, 1.0);
+        let grid = TimeGrid::new(1.0, 0.0, 64);
+
+        let mut x_ml = vec![1.0f32];
+        let mut bern = Rng::new(2);
+        mlem_sample(&fam, &|_, _| 1.0, BernoulliMode::Shared, |_| 1.0, &mut x_ml, 1, &grid, &path, &mut bern);
+
+        let top = Lin { a: -1.0 };
+        let mut x_em = vec![1.0f32];
+        em_sample(&top, |_| 1.0, &mut x_em, &grid, &path);
+
+        assert!((x_ml[0] - x_em[0]).abs() < 1e-5, "{} vs {}", x_ml[0], x_em[0]);
+    }
+
+    #[test]
+    fn base_plus_levels_matches_sum_drift_when_all_fire() {
+        let base = Lin { a: 0.3 };
+        let levels: Vec<Box<dyn Drift>> = vec![Box::new(Lin { a: -1.3 })];
+        let fam = MlemFamily { base: Some(&base), levels: vec![levels[0].as_ref()] };
+        let mut rng = Rng::new(4);
+        let path = BrownianPath::sample(&mut rng, 32, 1, 1.0);
+        let grid = TimeGrid::new(1.0, 0.0, 32);
+        let mut x_ml = vec![0.7f32];
+        let mut bern = Rng::new(5);
+        mlem_sample(&fam, &|_, _| 1.0, BernoulliMode::Shared, |_| 0.5, &mut x_ml, 1, &grid, &path, &mut bern);
+
+        let top = Lin { a: -1.3 };
+        let sum = SumDrift { a: &base, b: &top };
+        let mut x_em = vec![0.7f32];
+        em_sample(&sum, |_| 0.5, &mut x_em, &grid, &path);
+        assert!((x_ml[0] - x_em[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_step_is_unbiased_estimator_of_top_level_step() {
+        // E[y'] over Bernoullis must equal the EM step with f^{k_max}.
+        pt::check("mlem_unbiased", 20, |gen| {
+            let v1 = gen.f64_range(-1.0, 1.0) as f32;
+            let v2 = v1 + gen.f64_range(-0.3, 0.3) as f32;
+            let v3 = v2 + gen.f64_range(-0.1, 0.1) as f32;
+            let p2 = gen.prob();
+            let p3 = gen.prob();
+            let levels: Vec<Box<dyn Drift>> = vec![
+                Box::new(Const { v: vec![v1], cost: 1.0 }),
+                Box::new(Const { v: vec![v2], cost: 2.0 }),
+                Box::new(Const { v: vec![v3], cost: 4.0 }),
+            ];
+            let fam = family_of(&levels);
+            let probs = [1.0, p2, p3];
+            let policy = move |k: usize, _t: f64| probs[k];
+            let grid = TimeGrid::new(1.0, 0.75, 1); // single step, eta=0.25
+            let mut rng = Rng::new(77);
+            let path = BrownianPath::sample(&mut rng, 1, 1, 0.25);
+            let mut bern = gen.rng().split();
+            let reps = 6000;
+            let mut mean = 0.0f64;
+            for _ in 0..reps {
+                let mut x = vec![0.0f32];
+                mlem_sample(&fam, &policy, BernoulliMode::Shared, |_| 0.0, &mut x, 1, &grid, &path, &mut bern);
+                mean += x[0] as f64;
+            }
+            mean /= reps as f64;
+            let expect = 0.25 * v3 as f64; // eta * f^top (constant drift, no noise)
+            // std of estimator ~ eta*sqrt(sum (1-p)/p dk^2)/sqrt(reps)
+            let tol = 0.25
+                * ((1.0 - p2) / p2 * ((v2 - v1) as f64).powi(2)
+                    + (1.0 - p3) / p3 * ((v3 - v2) as f64).powi(2))
+                .sqrt()
+                / (reps as f64).sqrt()
+                * 6.0
+                + 1e-4;
+            if (mean - expect).abs() <= tol {
+                Ok(())
+            } else {
+                Err(format!("bias: mean {mean} expect {expect} tol {tol}"))
+            }
+        });
+    }
+
+    #[test]
+    fn per_step_variance_matches_closed_form() {
+        // Var[ eta * sum_k (B_k/p_k) d_k ] = eta^2 sum_k (1-p_k)/p_k d_k^2
+        let d = [0.8f32, -0.5, 0.3];
+        let mut vals = vec![0.0f32];
+        let mut levels: Vec<Box<dyn Drift>> = Vec::new();
+        let mut acc = 0.0f32;
+        for &dk in &d {
+            acc += dk;
+            vals[0] = acc;
+            levels.push(Box::new(Const { v: vals.clone(), cost: 1.0 }));
+        }
+        let fam = family_of(&levels);
+        let probs = [0.9, 0.4, 0.15];
+        let policy = move |k: usize, _t: f64| probs[k];
+        let grid = TimeGrid::new(1.0, 0.5, 1);
+        let eta = grid.eta();
+        let mut rng = Rng::new(3);
+        let path = BrownianPath::sample(&mut rng, 1, 1, 0.5);
+        let mut bern = Rng::new(8);
+        let reps = 40_000;
+        let mut w = crate::util::stats::Welford::default();
+        for _ in 0..reps {
+            let mut x = vec![0.0f32];
+            mlem_sample(&fam, &policy, BernoulliMode::Shared, |_| 0.0, &mut x, 1, &grid, &path, &mut bern);
+            w.push(x[0] as f64);
+        }
+        let var_expect: f64 = eta * eta
+            * d.iter()
+                .zip(&probs)
+                .map(|(&dk, &p)| (1.0 - p) / p * (dk as f64).powi(2))
+                .sum::<f64>();
+        let rel = (w.variance() - var_expect).abs() / var_expect;
+        assert!(rel < 0.08, "var {} expect {} rel {}", w.variance(), var_expect, rel);
+    }
+
+    #[test]
+    fn realised_cost_concentrates_on_expected() {
+        let levels: Vec<Box<dyn Drift>> = vec![
+            Box::new(Const { v: vec![1.0], cost: 1.0 }),
+            Box::new(Const { v: vec![1.1], cost: 8.0 }),
+            Box::new(Const { v: vec![1.11], cost: 64.0 }),
+        ];
+        let fam = family_of(&levels);
+        let policy = |k: usize, _t: f64| [1.0, 0.25, 0.05][k];
+        let grid = TimeGrid::new(1.0, 0.0, 400);
+        let mut rng = Rng::new(6);
+        let path = BrownianPath::sample(&mut rng, 400, 1, 1.0);
+        let mut bern = Rng::new(9);
+        let mut x = vec![0.0f32];
+        let rep = mlem_sample(&fam, &policy, BernoulliMode::Shared, |_| 0.0, &mut x, 1, &grid, &path, &mut bern);
+        // Note expected_cost_units counts both f^k and f^{k-1} evals; the
+        // realised cost uses the cache so it's <= expectation. Check the
+        // cheaper sanity bound: within 35% (caching + concentration).
+        let ratio = rep.cost_units / rep.expected_cost_units;
+        assert!(ratio > 0.4 && ratio < 1.1, "ratio {ratio}");
+        assert_eq!(rep.steps, 400);
+        assert!(rep.batch_evals[0] >= 390, "level 0 fires ~always");
+        let l2 = rep.batch_evals[2] as f64;
+        assert!(l2 > 5.0 && l2 < 60.0, "level 2 fired {l2} times");
+    }
+
+    #[test]
+    fn per_sample_mode_unbiased_and_weights_individual() {
+        // batch of 2: coefficients differ per sample; expectation still EM.
+        let levels: Vec<Box<dyn Drift>> = vec![
+            Box::new(Const { v: vec![0.5], cost: 1.0 }),
+            Box::new(Const { v: vec![1.0], cost: 2.0 }),
+        ];
+        let fam = family_of(&levels);
+        let policy = |k: usize, _t: f64| [1.0, 0.3][k];
+        let grid = TimeGrid::new(1.0, 0.5, 1);
+        let mut rng = Rng::new(10);
+        let path = BrownianPath::sample(&mut rng, 1, 2, 0.5);
+        let mut bern = Rng::new(11);
+        let reps = 20_000;
+        let mut m = [0.0f64; 2];
+        for _ in 0..reps {
+            let mut x = vec![0.0f32; 2];
+            mlem_sample(&fam, &policy, BernoulliMode::PerSample, |_| 0.0, &mut x, 2, &grid, &path, &mut bern);
+            m[0] += x[0] as f64;
+            m[1] += x[1] as f64;
+        }
+        let expect = 0.5 * 1.0; // eta * top drift
+        for v in &mut m {
+            *v /= reps as f64;
+            assert!((*v - expect).abs() < 0.02, "{v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn shared_mode_is_all_or_nothing_across_batch() {
+        // With shared draws, per-step the two samples' updates are equal
+        // for a constant drift (same coefficient), so the trajectories of
+        // identical initial states coincide.
+        let levels: Vec<Box<dyn Drift>> =
+            vec![Box::new(Const { v: vec![0.7], cost: 1.0 }), Box::new(Const { v: vec![1.3], cost: 3.0 })];
+        let fam = family_of(&levels);
+        let policy = |k: usize, _t: f64| [1.0, 0.2][k];
+        let grid = TimeGrid::new(1.0, 0.0, 50);
+        let mut rng = Rng::new(12);
+        // zero-noise path: identical states stay identical iff shared
+        let path = BrownianPath::sample(&mut rng, 50, 2, 0.0);
+        let mut bern = Rng::new(13);
+        let mut x = vec![0.0f32; 2];
+        mlem_sample(&fam, &policy, BernoulliMode::Shared, |_| 0.0, &mut x, 2, &grid, &path, &mut bern);
+        assert!((x[0] - x[1]).abs() < 1e-6, "shared draws must move the batch together");
+    }
+}

@@ -1,0 +1,20 @@
+//! SDE/ODE integration engine.
+//!
+//! The substrate under the paper's contribution: drift/denoiser traits,
+//! the cosine noise schedule, Brownian paths with coarsening (so runs
+//! with different step counts share the *same* underlying noise, as the
+//! paper's Fig 1 protocol requires), the baseline Euler–Maruyama sampler,
+//! the exact DDPM/DDIM discretisations (Appendix A), and the paper's
+//! **Multilevel Euler–Maruyama** sampler.
+
+pub mod brownian;
+pub mod ddpm;
+pub mod drift;
+pub mod em;
+pub mod mlem;
+pub mod schedule;
+
+pub use brownian::BrownianPath;
+pub use drift::{Denoiser, DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift, SumDrift};
+pub use em::{em_sample, TimeGrid};
+pub use mlem::{mlem_sample, BernoulliMode, MlemFamily, SampleReport};

@@ -1,0 +1,113 @@
+//! Cosine noise schedule — the exact mirror of `python/compile/schedule.py`.
+//!
+//! Continuous time `t ∈ [0, 1]`: `t = 0` is clean data, `t = 1` pure
+//! noise.  Identities (tested here and in `python/tests/test_schedule.py`):
+//!
+//! ```text
+//! alpha_bar(t) = cos²((t+s)/(1+s)·π/2) / cos²(s/(1+s)·π/2)
+//! sigma(t)     = sqrt(1 − alpha_bar(t))
+//! beta(t)      = −d/dt log alpha_bar(t)
+//! score(x, t)  = −eps_hat(x, t) / sigma(t)
+//! ```
+//!
+//! Backward processes integrated by the samplers:
+//!
+//! ```text
+//! SDE:  −dx = beta(t)·[x/2 + score] dt + sqrt(beta(t)) dW      (DDPM)
+//! ODE:  −dx/dt = beta(t)·[x/2 + score/2]                        (DDIM)
+//! ```
+
+/// Cosine-schedule offset (standard value; keeps beta(0) finite).
+pub const COSINE_S: f64 = 0.008;
+
+/// Upper integration limit: clip t away from 1 where `alpha_bar -> 0`
+/// and the score estimate blows up.  Must match the Python exporter.
+pub const T_MAX: f64 = 0.9946;
+
+/// Lower integration limit (avoids the t=0 singularity of the learned
+/// score near clean data).
+pub const T_MIN: f64 = 0.002;
+
+/// Cumulative signal level `alpha_bar(t)`, normalised to 1 at t=0.
+pub fn alpha_bar(t: f64) -> f64 {
+    let s = COSINE_S;
+    let num = ((t + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos().powi(2);
+    let den = (s / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos().powi(2);
+    num / den
+}
+
+/// Noise level `sqrt(1 − alpha_bar(t))`, floored for numerical safety.
+pub fn sigma(t: f64) -> f64 {
+    (1.0 - alpha_bar(t)).max(1e-12).sqrt()
+}
+
+/// Instantaneous rate `beta(t) = −d/dt log alpha_bar(t)` (closed form).
+pub fn beta(t: f64) -> f64 {
+    let s = COSINE_S;
+    let u = (t + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2;
+    2.0 * u.tan() * std::f64::consts::FRAC_PI_2 / (1.0 + s)
+}
+
+/// Forward-diffuse a clean sample: `x_t = sqrt(ab)·x0 + sigma(t)·eps`.
+pub fn diffuse(x0: &[f32], t: f64, eps: &[f32], out: &mut [f32]) {
+    let a = alpha_bar(t).sqrt() as f32;
+    let s = sigma(t) as f32;
+    for i in 0..x0.len() {
+        out[i] = a * x0[i] + s * eps[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_bar_boundary_values() {
+        assert!((alpha_bar(0.0) - 1.0).abs() < 1e-12);
+        assert!(alpha_bar(T_MAX) < 0.01, "alpha_bar(T_MAX) = {}", alpha_bar(T_MAX));
+        assert!(alpha_bar(T_MAX) > 0.0);
+    }
+
+    #[test]
+    fn alpha_bar_monotone_decreasing() {
+        let mut prev = alpha_bar(0.0);
+        for i in 1..=100 {
+            let t = i as f64 / 100.0 * T_MAX;
+            let a = alpha_bar(t);
+            assert!(a < prev, "alpha_bar not decreasing at t={t}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn beta_matches_log_derivative() {
+        for &t in &[0.05, 0.2, 0.5, 0.8, 0.95] {
+            let h = 1e-6;
+            let fd = -(alpha_bar(t + h).ln() - alpha_bar(t - h).ln()) / (2.0 * h);
+            let b = beta(t);
+            assert!(
+                (b - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "beta({t}) = {b} but finite diff = {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigma_squared_plus_alpha_bar_is_one() {
+        for &t in &[0.1, 0.4, 0.7, 0.9] {
+            assert!((sigma(t).powi(2) + alpha_bar(t) - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn diffuse_interpolates() {
+        let x0 = [2.0f32, -2.0];
+        let eps = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        diffuse(&x0, 0.0, &eps, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-5);
+        diffuse(&x0, T_MAX, &eps, &mut out);
+        // nearly pure noise
+        assert!((out[0] - 1.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Benchmark harness substrate (no `criterion` available offline).
+//!
+//! Used by every `cargo bench` target: warmup + timed iterations with
+//! mean / p50 / p95 reporting, aligned-table printing, and CSV dumps to
+//! `target/bench_out/` so EXPERIMENTS.md numbers are regenerable.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for at least `min_time` (after `warmup` iterations).
+pub fn bench(name: &str, warmup: u64, min_time: Duration, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || samples_ns.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples_ns.push(t.elapsed().as_nanos() as f64);
+        if samples_ns.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, &samples_ns)
+}
+
+/// Build a result from externally collected per-iteration nanoseconds.
+pub fn summarize(name: &str, samples_ns: &[f64]) -> BenchResult {
+    use super::stats;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ns.len() as u64,
+        mean_ns: stats::mean(samples_ns),
+        p50_ns: stats::percentile(samples_ns, 50.0),
+        p95_ns: stats::percentile(samples_ns, 95.0),
+        min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Convenience: human-scale formatting of nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// An aligned text table that doubles as a CSV writer — the shared output
+/// device of all paper-figure benches.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Raw row access (benches post-process their own tables).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Render the aligned table to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", hdr.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(hdr.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    /// Print to stdout and dump CSV to `target/bench_out/<slug>.csv`.
+    pub fn emit(&self) {
+        print!("{}", self.render());
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let dir = std::path::Path::new("target/bench_out");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let mut csv = String::new();
+            let _ = writeln!(csv, "{}", self.columns.join(","));
+            for row in &self.rows {
+                let _ = writeln!(csv, "{}", row.join(","));
+            }
+            let path = dir.join(format!("{slug}.csv"));
+            if std::fs::write(&path, csv).is_ok() {
+                println!("[csv] {}", path.display());
+            }
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", 2, Duration::from_millis(5), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).ends_with("µs"));
+        assert!(fmt_ns(2_500_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_500_000_000.0).ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("longer"));
+        // all data lines equally long
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(lines[1].len(), lines[2].len().max(lines[3].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Command-line parsing substrate (no `clap` available offline).
+//!
+//! Supports the subcommand + `--key value` / `--flag` shape used by the
+//! `mlem` binary, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: an optional subcommand plus options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token, if any.
+    pub command: Option<String>,
+    /// Remaining positional (non-flag) tokens after the subcommand.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    ///
+    /// Rules: `--key value` sets an option; `--key=value` too; a `--key`
+    /// followed by another `--...` token (or end of input) is a boolean
+    /// flag; the first bare token is the subcommand, later bare tokens are
+    /// positional.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.opts.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of f64s.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number '{s}'")))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of usizes.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --port 9000 --artifacts art --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("9000"));
+        assert_eq!(a.str_or("artifacts", "x"), "art");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("gen --steps=250 --eta=0.004");
+        assert_eq!(a.usize_or("steps", 0), 250);
+        assert!((a.f64_or("eta", 0.0) - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("gen");
+        assert_eq!(a.usize_or("steps", 100), 100);
+        assert_eq!(a.str_or("mode", "mlem"), "mlem");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse("run a b --k v c");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --probs 0.5,0.25, 0.125 --ns 1,2,3");
+        // note: comma-separated with no spaces inside a single token
+        let a2 = parse("x --probs 0.5,0.25,0.125 --ns 1,2,3");
+        assert_eq!(a2.f64_list("probs", &[]), vec![0.5, 0.25, 0.125]);
+        assert_eq!(a2.usize_list("ns", &[]), vec![1, 2, 3]);
+        assert_eq!(a.usize_list("missing", &[9]), vec![9]);
+    }
+}

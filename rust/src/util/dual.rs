@@ -1,0 +1,288 @@
+//! Forward-mode automatic differentiation substrate (dual numbers).
+//!
+//! The paper's adaptive method (§3.1) replaces backprop with *forward*
+//! gradient computation: a single directional tangent is pushed through
+//! the whole trajectory at O(1) memory in the number of steps.  This
+//! module provides the scalar dual type used by the analytic drifts; the
+//! neural drifts use AOT-exported JVP artifacts instead (same contract,
+//! see `runtime::NeuralDrift`).
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// A scalar dual number `v + d·ε` with `ε² = 0`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dual {
+    /// Primal value.
+    pub v: f64,
+    /// Tangent (directional derivative).
+    pub d: f64,
+}
+
+impl Dual {
+    /// Constant (zero tangent).
+    pub const fn c(v: f64) -> Dual {
+        Dual { v, d: 0.0 }
+    }
+
+    /// Variable seeded with unit tangent.
+    pub const fn var(v: f64) -> Dual {
+        Dual { v, d: 1.0 }
+    }
+
+    pub const fn new(v: f64, d: f64) -> Dual {
+        Dual { v, d }
+    }
+
+    pub fn exp(self) -> Dual {
+        let e = self.v.exp();
+        Dual { v: e, d: self.d * e }
+    }
+
+    pub fn ln(self) -> Dual {
+        Dual { v: self.v.ln(), d: self.d / self.v }
+    }
+
+    pub fn sqrt(self) -> Dual {
+        let s = self.v.sqrt();
+        Dual { v: s, d: self.d / (2.0 * s) }
+    }
+
+    pub fn powi(self, n: i32) -> Dual {
+        Dual {
+            v: self.v.powi(n),
+            d: self.d * n as f64 * self.v.powi(n - 1),
+        }
+    }
+
+    pub fn sin(self) -> Dual {
+        Dual { v: self.v.sin(), d: self.d * self.v.cos() }
+    }
+
+    pub fn cos(self) -> Dual {
+        Dual { v: self.v.cos(), d: -self.d * self.v.sin() }
+    }
+
+    pub fn tanh(self) -> Dual {
+        let t = self.v.tanh();
+        Dual { v: t, d: self.d * (1.0 - t * t) }
+    }
+
+    /// Logistic sigmoid — the paper parametrises `p_k(t)` through it.
+    pub fn sigmoid(self) -> Dual {
+        let s = 1.0 / (1.0 + (-self.v).exp());
+        Dual { v: s, d: self.d * s * (1.0 - s) }
+    }
+
+    pub fn abs(self) -> Dual {
+        if self.v >= 0.0 {
+            self
+        } else {
+            -self
+        }
+    }
+
+    pub fn max(self, other: Dual) -> Dual {
+        if self.v >= other.v {
+            self
+        } else {
+            other
+        }
+    }
+
+    pub fn min(self, other: Dual) -> Dual {
+        if self.v <= other.v {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Add for Dual {
+    type Output = Dual;
+    fn add(self, o: Dual) -> Dual {
+        Dual { v: self.v + o.v, d: self.d + o.d }
+    }
+}
+
+impl Sub for Dual {
+    type Output = Dual;
+    fn sub(self, o: Dual) -> Dual {
+        Dual { v: self.v - o.v, d: self.d - o.d }
+    }
+}
+
+impl Mul for Dual {
+    type Output = Dual;
+    fn mul(self, o: Dual) -> Dual {
+        Dual { v: self.v * o.v, d: self.d * o.v + self.v * o.d }
+    }
+}
+
+impl Div for Dual {
+    type Output = Dual;
+    fn div(self, o: Dual) -> Dual {
+        Dual {
+            v: self.v / o.v,
+            d: (self.d * o.v - self.v * o.d) / (o.v * o.v),
+        }
+    }
+}
+
+impl Neg for Dual {
+    type Output = Dual;
+    fn neg(self) -> Dual {
+        Dual { v: -self.v, d: -self.d }
+    }
+}
+
+impl Add<f64> for Dual {
+    type Output = Dual;
+    fn add(self, o: f64) -> Dual {
+        Dual { v: self.v + o, d: self.d }
+    }
+}
+
+impl Sub<f64> for Dual {
+    type Output = Dual;
+    fn sub(self, o: f64) -> Dual {
+        Dual { v: self.v - o, d: self.d }
+    }
+}
+
+impl Mul<f64> for Dual {
+    type Output = Dual;
+    fn mul(self, o: f64) -> Dual {
+        Dual { v: self.v * o, d: self.d * o }
+    }
+}
+
+impl Div<f64> for Dual {
+    type Output = Dual;
+    fn div(self, o: f64) -> Dual {
+        Dual { v: self.v / o, d: self.d / o }
+    }
+}
+
+/// A primal/tangent pair of state vectors: the trajectory and its
+/// directional derivative, advanced together by forward-mode sampling.
+#[derive(Clone, Debug)]
+pub struct DualVec {
+    pub val: Vec<f32>,
+    pub tan: Vec<f32>,
+}
+
+impl DualVec {
+    /// Constant vector (zero tangent).
+    pub fn c(val: Vec<f32>) -> DualVec {
+        let tan = vec![0.0; val.len()];
+        DualVec { val, tan }
+    }
+
+    pub fn len(&self) -> usize {
+        self.val.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.val.is_empty()
+    }
+
+    /// `self += a * other` on both primal and tangent lanes.
+    pub fn axpy(&mut self, a: f32, other: &DualVec) {
+        for i in 0..self.val.len() {
+            self.val[i] += a * other.val[i];
+            self.tan[i] += a * other.tan[i];
+        }
+    }
+
+    /// `self += (a + ε·da) * other`, the dual-scalar scaled add:
+    /// tangent lane picks up `a·other.tan + da·other.val`.
+    pub fn axpy_dual(&mut self, a: f32, da: f32, other: &DualVec) {
+        for i in 0..self.val.len() {
+            self.val[i] += a * other.val[i];
+            self.tan[i] += a * other.tan[i] + da * other.val[i];
+        }
+    }
+
+    /// Add a constant (zero-tangent) vector scaled by `a` to the primal.
+    pub fn axpy_const(&mut self, a: f32, other: &[f32]) {
+        for i in 0..self.val.len() {
+            self.val[i] += a * other[i];
+        }
+    }
+}
+
+/// Central finite difference, for testing dual implementations.
+pub fn finite_diff(f: impl Fn(f64) -> f64, x: f64, h: f64) -> f64 {
+    (f(x + h) - f(x - h)) / (2.0 * h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(f_dual: impl Fn(Dual) -> Dual, f: impl Fn(f64) -> f64 + Copy, x: f64) {
+        let d = f_dual(Dual::var(x));
+        assert!((d.v - f(x)).abs() < 1e-12, "primal mismatch at {x}");
+        let fd = finite_diff(f, x, 1e-6);
+        assert!(
+            (d.d - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+            "tangent mismatch at {x}: dual {} vs fd {}",
+            d.d,
+            fd
+        );
+    }
+
+    #[test]
+    fn arithmetic_rules() {
+        check(|x| x * x + x * 3.0 - 1.0, |x| x * x + 3.0 * x - 1.0, 0.7);
+        check(|x| (x + 2.0) / (x * x + 1.0), |x| (x + 2.0) / (x * x + 1.0), -0.3);
+        check(|x| -x * x, |x| -x * x, 1.5);
+    }
+
+    #[test]
+    fn transcendental_rules() {
+        check(|x| x.exp(), f64::exp, 0.4);
+        check(|x| x.ln(), f64::ln, 2.3);
+        check(|x| x.sqrt(), f64::sqrt, 1.9);
+        check(|x| x.sin() * x.cos(), |x| x.sin() * x.cos(), 0.8);
+        check(|x| x.tanh(), f64::tanh, -0.6);
+        check(|x| x.sigmoid(), |x| 1.0 / (1.0 + (-x).exp()), 0.25);
+        check(|x| x.powi(3), |x| x * x * x, 1.1);
+    }
+
+    #[test]
+    fn chain_rule_composition() {
+        check(
+            |x| (x.sin() + 1.5).ln().sqrt(),
+            |x| (x.sin() + 1.5).ln().sqrt(),
+            0.9,
+        );
+    }
+
+    #[test]
+    fn constants_have_zero_tangent() {
+        let y = Dual::c(3.0) * Dual::c(4.0) + Dual::c(1.0);
+        assert_eq!(y.d, 0.0);
+    }
+
+    #[test]
+    fn dualvec_axpy_dual_product_rule() {
+        // self += (a + ε da) * other with other = (o, ot):
+        // tangent must be a*ot + da*o.
+        let mut s = DualVec { val: vec![1.0], tan: vec![0.5] };
+        let o = DualVec { val: vec![2.0], tan: vec![3.0] };
+        s.axpy_dual(4.0, 5.0, &o);
+        assert_eq!(s.val[0], 1.0 + 4.0 * 2.0);
+        assert_eq!(s.tan[0], 0.5 + 4.0 * 3.0 + 5.0 * 2.0);
+    }
+
+    #[test]
+    fn minmax_select_branch_tangent() {
+        let a = Dual::new(1.0, 10.0);
+        let b = Dual::new(2.0, 20.0);
+        assert_eq!(a.max(b).d, 20.0);
+        assert_eq!(a.min(b).d, 10.0);
+        assert_eq!(Dual::new(-1.0, 3.0).abs().d, -3.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Property-based testing substrate (no `proptest` available offline).
+//!
+//! A seeded generator + runner: each property runs a few hundred cases
+//! with values drawn from [`Gen`]; on failure the case's seed is printed
+//! so the exact counterexample replays with
+//! `MLEM_PROP_SEED=<seed> cargo test <name>`.  No structural shrinking —
+//! instead generators are biased toward small/edge values so small
+//! counterexamples are likely from the start.
+
+use super::rng::Rng;
+
+/// Value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    /// Direct access to the underlying stream.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform f64 in `[lo, hi)`, with a 20% bias toward the endpoints.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        match self.rng.below(10) {
+            0 => lo,
+            1 => hi - (hi - lo) * 1e-9,
+            _ => self.rng.uniform(lo, hi),
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`, biased toward the endpoints.
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        match self.rng.below(10) {
+            0 => lo,
+            1 => hi - 1,
+            _ => lo + self.rng.below(hi - lo),
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Probability in `(eps, 1]` — the range valid for ML-EM level probs.
+    pub fn prob(&mut self) -> f64 {
+        self.f64_range(1e-3, 1.0).max(1e-3)
+    }
+
+    /// Standard normal scalar.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of f32s from `N(0, scale²)`.
+    pub fn vec_normal_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32() * scale).collect()
+    }
+
+    /// Vector of f64 uniforms.
+    pub fn vec_uniform(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` property cases; panics (with replay instructions) on the
+/// first failure.  A property returns `Err(description)` to fail.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Replay mode: a single pinned case.
+    if let Ok(seed) = std::env::var("MLEM_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("MLEM_PROP_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    // Base seed is derived from the property name so distinct properties
+    // explore distinct streams but runs stay deterministic.
+    let base: u64 = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (case {case}/{cases}): {msg}\n\
+                 replay with: MLEM_PROP_SEED={seed} cargo test"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // interior mutability via a cell to count invocations
+        let counter = std::cell::Cell::new(0u64);
+        check("always_true", 50, |g| {
+            counter.set(counter.get() + 1);
+            let x = g.f64_range(-1.0, 1.0);
+            if x.abs() <= 1.0 {
+                Ok(())
+            } else {
+                Err(format!("|{x}| > 1"))
+            }
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn ranges_are_respected() {
+        check("usize_range", 200, |g| {
+            let n = g.usize_range(3, 17);
+            if (3..17).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("{n} outside [3,17)"))
+            }
+        });
+        check("prob_range", 200, |g| {
+            let p = g.prob();
+            if (0.0..=1.0).contains(&p) && p > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("bad prob {p}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |tag: &str| {
+            let mut vals = Vec::new();
+            check(tag, 20, |g| {
+                vals.push(g.normal());
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(collect("det"), collect("det"));
+        assert_ne!(collect("det"), collect("other"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Deterministic pseudo-randomness substrate (no `rand` crate offline).
+//!
+//! * xoshiro256++ core generator, seeded through SplitMix64;
+//! * Box-Muller (polar) standard normals with one-value cache;
+//! * independent derived streams via [`Rng::split`] — used so every
+//!   request / trajectory owns a reproducible stream regardless of
+//!   scheduling order (a coordinator invariant tested in
+//!   `coordinator::state`).
+//!
+//! Everything is `f64` internally; `f32` helpers exist for buffer fills.
+
+/// xoshiro256++ PRNG with derived-stream support.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller normal, if any.
+    cache: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed a new generator (SplitMix64-expanded to the full state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // xoshiro must not start from the all-zero state.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Rng { s, cache: None }
+    }
+
+    /// Derive an independent stream keyed by `key` without disturbing the
+    /// parent's sequence position determinism (parent advances once).
+    pub fn derive(&mut self, key: u64) -> Rng {
+        let base = self.next_u64();
+        Rng::new(base ^ key.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    /// Derive an independent child stream (shorthand for `derive(0)`).
+    pub fn split(&mut self) -> Rng {
+        self.derive(0x5851F42D4C957F2D)
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` (f32 convenience).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)`; `n` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift rejection-free mapping; bias negligible for our n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli draw with probability `p` (clamped to [0, 1]).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via the polar Box-Muller method (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.cache.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.cache = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Standard normal (f32 convenience).
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for x in out {
+            *x = self.normal() as f32;
+        }
+    }
+
+    /// Fresh vector of standard normals.
+    pub fn normal_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill_normal_f32(&mut v);
+        v
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 5e-3);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m1 += x;
+            m2 += x * x;
+            m3 += x * x * x;
+        }
+        let n = n as f64;
+        assert!((m1 / n).abs() < 0.01, "mean {}", m1 / n);
+        assert!((m2 / n - 1.0).abs() < 0.02, "var {}", m2 / n);
+        assert!((m3 / n).abs() < 0.05, "skew {}", m3 / n);
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut r = Rng::new(3);
+        for &p in &[0.05, 0.3, 0.9] {
+            let n = 50_000;
+            let hits = (0..n).filter(|_| r.bernoulli(p)).count();
+            assert!((hits as f64 / n as f64 - p).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn bernoulli_degenerate() {
+        let mut r = Rng::new(3);
+        assert!((0..100).all(|_| r.bernoulli(1.1)));
+        assert!((0..100).all(|_| !r.bernoulli(-0.5)));
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_reproducible() {
+        let mut parent1 = Rng::new(9);
+        let mut parent2 = Rng::new(9);
+        let mut c1 = parent1.split();
+        let mut c2 = parent2.split();
+        for _ in 0..100 {
+            assert_eq!(c1.next_u64(), c2.next_u64());
+        }
+        // child vs parent sequences differ
+        let mut p = Rng::new(9);
+        let mut c = p.split();
+        assert_ne!(p.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn derive_keys_give_distinct_streams() {
+        let mut p = Rng::new(5);
+        let mut a = p.derive(1);
+        let mut p2 = Rng::new(5);
+        let mut b = p2.derive(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+        // all residues reachable
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

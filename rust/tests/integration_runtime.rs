@@ -1,0 +1,224 @@
+//! Integration: PJRT runtime against the real artifacts.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).  Covers the
+//! cross-language contract: the HLO loaded through the `xla` crate must
+//! reproduce jax's outputs (golden probes), the Pallas-flavour artifact
+//! must agree with the jnp flavour, batch bucketing must be transparent,
+//! and the measured denoising-error ladder must decrease with level.
+
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::sde::schedule;
+use mlem::util::json::Json;
+use mlem::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn golden_eps_outputs_match_jax() {
+    let dir = require_artifacts!();
+    let golden_path = dir.join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("skipping: no golden.json (re-run make artifacts)");
+        return;
+    }
+    let g = Json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+    let t = g.f64_of("t").unwrap();
+    let x: Vec<f32> = g
+        .get("x")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let eps_map = g.get("eps").unwrap();
+    let Json::Obj(fields) = eps_map else { panic!() };
+    for (level, expect) in fields {
+        let level: usize = level.parse().unwrap();
+        let expect: Vec<f32> = expect
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let got = handle.eps(level, &x, t).unwrap();
+        assert_eq!(got.len(), expect.len());
+        let max_err = got
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_err < 1e-4,
+            "level {level}: rust-PJRT vs jax max err {max_err}"
+        );
+    }
+    handle.stop();
+}
+
+#[test]
+fn pallas_flavour_matches_jnp_flavour() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let parity_level = manifest
+        .levels
+        .iter()
+        .find(|l| !l.eps_pallas.is_empty())
+        .map(|l| (l.level, *l.eps_pallas.keys().next().unwrap()));
+    let Some((level, bucket)) = parity_level else {
+        panic!("manifest must carry a pallas parity artifact");
+    };
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let mut rng = Rng::new(42);
+    let x = rng.normal_vec_f32(bucket * dim);
+    let a = handle.eps(level, &x, 0.37).unwrap();
+    let b = handle.eps_pallas(level, &x, 0.37).unwrap();
+    let max_err = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "pallas parity max err {max_err}");
+    handle.stop();
+}
+
+#[test]
+fn batch_bucketing_is_transparent() {
+    // eps over an awkward batch (e.g. 11 images) must equal per-image
+    // evals — padding/chunking must not leak into results.
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let mut rng = Rng::new(7);
+    let n = 11;
+    let x = rng.normal_vec_f32(n * dim);
+    let t = 0.61;
+    let batched = handle.eps(2, &x, t).unwrap();
+    for i in 0..n {
+        let single = handle.eps(2, &x[i * dim..(i + 1) * dim], t).unwrap();
+        let max_err = batched[i * dim..(i + 1) * dim]
+            .iter()
+            .zip(&single)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "image {i}: batched vs single err {max_err}");
+    }
+    handle.stop();
+}
+
+#[test]
+fn jvp_artifact_matches_finite_difference() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let mut rng = Rng::new(9);
+    let x = rng.normal_vec_f32(dim);
+    let v = rng.normal_vec_f32(dim);
+    let t = 0.5;
+    let (eps, jv) = handle.eps_jvp(3, &x, t, &v).unwrap();
+    // eps part must equal the plain artifact
+    let eps2 = handle.eps(3, &x, t).unwrap();
+    for i in 0..dim {
+        assert!((eps[i] - eps2[i]).abs() < 1e-4);
+    }
+    // jvp vs finite difference
+    let h = 1e-3f32;
+    let xp: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a + h * b).collect();
+    let xm: Vec<f32> = x.iter().zip(&v).map(|(a, b)| a - h * b).collect();
+    let fp = handle.eps(3, &xp, t).unwrap();
+    let fm = handle.eps(3, &xm, t).unwrap();
+    let mut max_err = 0.0f32;
+    for i in 0..dim {
+        let fd = (fp[i] - fm[i]) / (2.0 * h);
+        max_err = max_err.max((jv[i] - fd).abs());
+    }
+    assert!(max_err < 5e-2, "jvp vs fd max err {max_err}");
+    handle.stop();
+}
+
+#[test]
+fn combine_artifact_matches_native_math() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let (b, k, d) = (manifest.combine.batch, manifest.combine.levels, manifest.dim);
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let mut rng = Rng::new(11);
+    let y = rng.normal_vec_f32(b * d);
+    let deltas = rng.normal_vec_f32(k * b * d);
+    let coeffs: Vec<f32> = (0..k).map(|i| (i + 1) as f32).collect();
+    let z = rng.normal_vec_f32(b * d);
+    let (eta, sigma) = (0.013f64, 0.8f64);
+    for pallas in [false, true] {
+        let got = handle.combine(&y, &deltas, &coeffs, &z, eta, sigma, pallas).unwrap();
+        let mut max_err = 0.0f32;
+        for i in 0..b * d {
+            let mut drift = 0.0f32;
+            for kk in 0..k {
+                drift += coeffs[kk] * deltas[kk * b * d + i];
+            }
+            let expect = y[i] + eta as f32 * drift + (eta.sqrt() * sigma) as f32 * z[i];
+            max_err = max_err.max((got[i] - expect).abs());
+        }
+        assert!(max_err < 1e-4, "combine (pallas={pallas}) max err {max_err}");
+    }
+    handle.stop();
+}
+
+#[test]
+fn denoising_error_ladder_measured_in_rust() {
+    // Re-measure the error ladder through the PJRT path on the holdout:
+    // err_k = E || eps_hat_k(x_t, t) - eps ||^2 must decrease with k.
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let dim = manifest.dim;
+    let holdout = manifest.load_holdout().unwrap();
+    let n = manifest.holdout_count.min(32);
+    let levels: Vec<usize> = manifest.levels.iter().map(|l| l.level).collect();
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let mut rng = Rng::new(123);
+    let mut errs = vec![0.0f64; levels.len()];
+    let reps = 4;
+    for _ in 0..reps {
+        let t = rng.uniform(0.15, 0.85);
+        let eps: Vec<f32> = rng.normal_vec_f32(n * dim);
+        let mut xt = vec![0.0f32; n * dim];
+        schedule::diffuse(&holdout[..n * dim], t, &eps, &mut xt);
+        for (i, &level) in levels.iter().enumerate() {
+            let pred = handle.eps(level, &xt, t).unwrap();
+            let mse: f64 = pred
+                .iter()
+                .zip(&eps)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / (n * dim) as f64;
+            errs[i] += mse / reps as f64;
+        }
+    }
+    eprintln!("rust-measured denoising errors: {errs:?}");
+    for w in errs.windows(2) {
+        assert!(
+            w[1] < w[0] * 1.05,
+            "error ladder should (weakly) decrease: {errs:?}"
+        );
+    }
+    // the ladder must strictly decrease end to end
+    assert!(errs.last().unwrap() < &(errs[0] * 0.8), "{errs:?}");
+    handle.stop();
+}

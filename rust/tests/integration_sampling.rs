@@ -1,0 +1,205 @@
+//! Integration: samplers end-to-end over the trained family and the
+//! analytic GMM substrate (the Fig-1 protocol in miniature).
+
+use mlem::gmm::{Gmm, GmmDenoiser};
+use mlem::levels::Policy;
+use mlem::runtime::{spawn_executor, Manifest, NeuralDenoiser};
+use mlem::sde::ddpm::{ancestral_sample, AncestralConfig};
+use mlem::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
+use mlem::sde::em::{em_sample, TimeGrid};
+use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
+use mlem::sde::{schedule, BrownianPath};
+use mlem::util::rng::Rng;
+use mlem::util::stats;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+/// The Fig-1 measurement core, against the trained family: the "true"
+/// sample is f^5 with a fine grid; ML-EM over {f^1, f^3, f^5} with the
+/// same noise must land close to it while evaluating f^5 far fewer times
+/// than plain fine-grid EM would.
+#[test]
+fn mlem_tracks_true_sample_with_fewer_top_level_evals() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let family = NeuralDenoiser::family(&handle, 0).unwrap();
+
+    let batch = 4;
+    let steps = 120;
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
+    let mut rng = Rng::new(1);
+    let path = BrownianPath::sample(&mut rng, steps, batch * dim, grid.span());
+    let x_init: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32()).collect();
+
+    // "true" = EM with the best network on the same grid/path
+    let mut x_true = x_init.clone();
+    let top = DiffusionDrift::sde(&family[4]);
+    em_sample(&top, |t| schedule::beta(t).sqrt(), &mut x_true, &grid, &path);
+
+    // ML-EM over {f^1, f^3, f^5}
+    let base = LinearPartDrift { dim };
+    let l1 = ScorePartDrift { den: &family[0], ode: false };
+    let l3 = ScorePartDrift { den: &family[2], ode: false };
+    let l5 = ScorePartDrift { den: &family[4], ode: false };
+    let fam = MlemFamily {
+        base: Some(&base),
+        levels: vec![&l1 as &dyn Drift, &l3, &l5],
+    };
+    let costs: Vec<f64> = vec![l1.cost(), l3.cost(), l5.cost()];
+    let policy = Policy::FixedInvCost { scale: 2.0 * costs[0], costs };
+    let mut x_ml = x_init.clone();
+    let mut bern = Rng::new(2);
+    let report = mlem_sample(
+        &fam,
+        &policy,
+        BernoulliMode::Shared,
+        |t| schedule::beta(t).sqrt(),
+        &mut x_ml,
+        batch,
+        &grid,
+        &path,
+        &mut bern,
+    );
+
+    let mse = stats::mse_f32(&x_ml, &x_true);
+    eprintln!(
+        "mlem-vs-true mse = {mse:.5}; batch_evals per level = {:?} (steps {steps})",
+        report.batch_evals
+    );
+    // close to the true sample...
+    assert!(mse < 0.5, "mse {mse}");
+    // ...with far fewer top-level evals than steps
+    assert!(
+        report.batch_evals[2] < steps as u64 / 2,
+        "top level fired {} of {steps} steps",
+        report.batch_evals[2]
+    );
+    // and the cheap level fires almost every step
+    assert!(report.batch_evals[0] > steps as u64 * 8 / 10);
+    handle.stop();
+}
+
+/// EM with a finer grid must approach the fine-grid reference (pathwise
+/// convergence on the real neural drift).
+#[test]
+fn neural_em_converges_with_steps() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let dim = manifest.dim;
+    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let family = NeuralDenoiser::family(&handle, 0).unwrap();
+    let den = &family[1]; // f^2: cheap but realistic
+
+    let fine_n = 240;
+    let grid_f = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, fine_n);
+    let mut rng = Rng::new(5);
+    let path = BrownianPath::sample(&mut rng, fine_n, dim, grid_f.span());
+    let x0: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    let drift = DiffusionDrift::sde(den);
+
+    let mut x_ref = x0.clone();
+    em_sample(&drift, |t| schedule::beta(t).sqrt(), &mut x_ref, &grid_f, &path);
+
+    let mut errs = Vec::new();
+    for &n in &[30usize, 120] {
+        let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, n);
+        let mut x = x0.clone();
+        em_sample(&drift, |t| schedule::beta(t).sqrt(), &mut x, &grid, &path);
+        errs.push(stats::mse_f32(&x, &x_ref));
+    }
+    eprintln!("neural EM errors vs steps: {errs:?}");
+    assert!(errs[1] < errs[0] * 0.7, "finer grid should reduce error: {errs:?}");
+    handle.stop();
+}
+
+/// DDPM ancestral sampling with the *exact* GMM denoiser recovers the
+/// mixture's mean and covariance scale — distribution-level correctness
+/// the paper could not test on CelebA.
+#[test]
+fn ddpm_with_exact_score_recovers_gmm_moments() {
+    let gmm = Gmm::random(3, 2, 4, 1.2, 0.4);
+    let den = GmmDenoiser { gmm: &gmm, cost: 1.0 };
+    let batch = 1500;
+    let dim = 4;
+    let mut rng = Rng::new(8);
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, 300);
+    let path = BrownianPath::sample(&mut rng, 300, batch * dim, grid.span());
+    let mut x: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32()).collect();
+    ancestral_sample(&den, AncestralConfig { ddim: false, clip_x0: false }, &mut x, &grid, &path);
+
+    // target moments
+    let mut target_mean = vec![0.0f64; dim];
+    for (m, &w) in gmm.means.iter().zip(&gmm.weights) {
+        for j in 0..dim {
+            target_mean[j] += w * m[j] as f64;
+        }
+    }
+    for j in 0..dim {
+        let got: f64 = (0..batch).map(|b| x[b * dim + j] as f64).sum::<f64>() / batch as f64;
+        assert!(
+            (got - target_mean[j]).abs() < 0.15,
+            "dim {j}: mean {got:.3} vs {:.3}",
+            target_mean[j]
+        );
+    }
+}
+
+/// ML-EM over an Assumption-1 ladder on the *diffusion* drift: the
+/// perturbed exact scores play f^1..f^K; the sampler must stay unbiased
+/// and close to the exact-score EM trajectory.
+#[test]
+fn mlem_with_assumption1_ladder_matches_exact_em() {
+    use mlem::gmm::PerturbedDrift;
+    let gmm = Gmm::random(4, 3, 4, 1.5, 0.5);
+    let den = GmmDenoiser { gmm: &gmm, cost: 1.0 };
+    let exact = DiffusionDrift::sde(&den);
+
+    let lvls: Vec<PerturbedDrift> = (1..=3)
+        .map(|k| PerturbedDrift::new(&exact, 2 * k, (2f64.powi(2 * k)).powf(2.5), 77))
+        .collect();
+    let fam = MlemFamily { base: None, levels: lvls.iter().map(|p| p as &dyn Drift).collect() };
+    let policy = Policy::Manual { probs: vec![1.0, 0.4, 0.12] };
+
+    let dim = 4;
+    let batch = 32;
+    let steps = 160;
+    let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
+    let mut rng = Rng::new(10);
+    let path = BrownianPath::sample(&mut rng, steps, batch * dim, grid.span());
+    let x0: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32()).collect();
+
+    let mut x_em = x0.clone();
+    em_sample(&exact, |t| schedule::beta(t).sqrt(), &mut x_em, &grid, &path);
+
+    // average ML-EM over several Bernoulli streams -> tight to EM
+    let mut best = f64::INFINITY;
+    for seed in 0..5 {
+        let mut x_ml = x0.clone();
+        let mut bern = Rng::new(100 + seed);
+        mlem_sample(
+            &fam,
+            &policy,
+            BernoulliMode::Shared,
+            |t| schedule::beta(t).sqrt(),
+            &mut x_ml,
+            batch,
+            &grid,
+            &path,
+            &mut bern,
+        );
+        best = best.min(stats::mse_f32(&x_ml, &x_em));
+    }
+    eprintln!("best-of-5 mlem-vs-em mse on GMM ladder: {best:.5}");
+    assert!(best < 0.05, "best mse {best}");
+}

@@ -1,0 +1,142 @@
+//! Integration: the full serving path over a real TCP socket — client
+//! JSON in, batched generation against the trained models, JSON out.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use mlem::config::ServeConfig;
+use mlem::coordinator::{Scheduler, Server};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, Manifest};
+use mlem::util::json::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        writeln!(self.writer, "{req}").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect("valid json response")
+    }
+}
+
+#[test]
+fn serve_end_to_end() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        max_batch: 8,
+        max_wait_ms: 10,
+        cost_reps: 0, // FLOP costs: fast startup
+        default_steps: 40,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
+    let server = std::sync::Arc::new(Server::new(cfg, scheduler));
+
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+
+    // ping
+    let mut c = Client::connect(addr);
+    let pong = c.call(r#"{"cmd":"ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // malformed request -> error, connection stays usable
+    let err = c.call(r#"{"cmd":"generate","n":0}"#);
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+
+    // single generation with images
+    let resp = c.call(
+        r#"{"cmd":"generate","n":2,"sampler":"mlem","steps":60,"seed":5,"return_images":true}"#,
+    );
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let dim = resp.f64_of("dim").unwrap() as usize;
+    let imgs = resp.get("images").unwrap().as_arr().unwrap();
+    assert_eq!(imgs.len(), 2 * dim);
+    // outputs are finite and of sane scale (ML-EM's 1/p_k-weighted level
+    // corrections can transiently overshoot [-1,1] at coarse grids)
+    assert!(imgs.iter().all(|v| {
+        let x = v.as_f64().unwrap();
+        x.is_finite() && x.abs() < 50.0
+    }));
+
+    // determinism: same seed, same images
+    let resp2 = c.call(
+        r#"{"cmd":"generate","n":2,"sampler":"mlem","steps":60,"seed":5,"return_images":true}"#,
+    );
+    let imgs2 = resp2.get("images").unwrap().as_arr().unwrap();
+    assert_eq!(
+        imgs.iter().map(|v| v.as_f64().unwrap() as f32).collect::<Vec<_>>(),
+        imgs2.iter().map(|v| v.as_f64().unwrap() as f32).collect::<Vec<_>>(),
+        "same seed must reproduce bit-identical images"
+    );
+
+    // concurrent clients get batched together
+    let mut joins = Vec::new();
+    for i in 0..4 {
+        let addr = addr;
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let resp = c.call(&format!(
+                r#"{{"cmd":"generate","n":2,"sampler":"mlem","steps":60,"seed":{i}}}"#
+            ));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            resp.get_path(&["stats", "batch_size"]).unwrap().as_f64().unwrap()
+        }));
+    }
+    let batch_sizes: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    eprintln!("concurrent batch sizes: {batch_sizes:?}");
+    // at least one request should have shared a batch (size > its own 2)
+    assert!(
+        batch_sizes.iter().any(|&b| b > 2.0),
+        "expected some batching: {batch_sizes:?}"
+    );
+
+    // metrics snapshot
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let images = m.get_path(&["metrics", "images"]).unwrap().as_f64().unwrap();
+    assert!(images >= 12.0, "images counted: {images}");
+    let nfe = m.get_path(&["metrics", "nfe_per_level"]).unwrap().as_arr().unwrap();
+    assert!(nfe[0].as_f64().unwrap() > 0.0, "level 1 must have evals");
+
+    // EM uses only the top level
+    let em = c.call(r#"{"cmd":"generate","n":1,"sampler":"em","steps":20,"levels":[1,2]}"#);
+    assert_eq!(em.get("ok"), Some(&Json::Bool(true)));
+    let nfe = em.get_path(&["stats", "nfe"]).unwrap().as_arr().unwrap();
+    assert_eq!(nfe[0].as_f64(), Some(0.0));
+    assert_eq!(nfe[1].as_f64(), Some(20.0));
+
+    // shutdown
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    server_thread.join().unwrap();
+    handle.stop();
+}

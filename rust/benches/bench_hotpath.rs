@@ -1,0 +1,49 @@
+//! Hot-path throughput: serial vs parallel GMM ML-EM sampling.
+//!
+//! Measures the batch-sharded, allocation-free sampling path end to end
+//! (score evaluation → fused accumulate/update) at batch 64, prints the
+//! comparison table, and emits `BENCH_hotpath.json` at the repo root so
+//! the perf trajectory is tracked from this PR onward.  Target: ≥3×
+//! images/sec over serial on a 4-core runner, bit-identical output.
+//!
+//! `cargo bench --bench bench_hotpath`
+
+use mlem::benchkit::{hotpath_compare, write_bench_json, HotpathConfig};
+use mlem::util::bench::Table;
+
+fn main() {
+    let cfg = HotpathConfig::default();
+    println!(
+        "hot-path workload: batch {}, dim {}, {} mixture components, {} levels, {} steps\n",
+        cfg.batch, cfg.dim, cfg.components, cfg.levels, cfg.steps
+    );
+    let j = hotpath_compare(&cfg, 3);
+
+    let num = |key: &str| j.f64_of(key).unwrap_or(f64::NAN);
+    let mut t = Table::new(
+        "hotpath gmm mlem",
+        &["mode", "threads", "s/run", "images/s"],
+    );
+    t.row(&[
+        "serial".into(),
+        "1".into(),
+        format!("{:.4}", num("serial_sec_per_run")),
+        format!("{:.1}", num("images_per_sec_serial")),
+    ]);
+    t.row(&[
+        "parallel".into(),
+        format!("{}", num("threads_parallel") as usize),
+        format!("{:.4}", num("parallel_sec_per_run")),
+        format!("{:.1}", num("images_per_sec_parallel")),
+    ]);
+    t.emit();
+
+    println!(
+        "speedup {:.2}x | bit-identical: {} | pool allocations/step: {:.3}",
+        num("speedup"),
+        j.get("bit_identical").and_then(mlem::util::json::Json::as_bool).unwrap_or(false),
+        num("pool_allocs_per_step"),
+    );
+    let path = write_bench_json("hotpath", &j).expect("writing BENCH_hotpath.json");
+    println!("[json] {}", path.display());
+}

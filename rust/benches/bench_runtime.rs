@@ -55,23 +55,37 @@ fn main() -> anyhow::Result<()> {
 
     // --- executor channel + copy overhead ---------------------------------
     // smallest possible work: f^1 at bucket 1; compare against the
-    // measured pure-execute time reported by exec_stats deltas.
+    // measured pure-execute time reported by exec_stats deltas.  The
+    // pool hit/miss counters printed before and after the workload are
+    // the zero-copy evidence: steady-state requests ride pooled buffers
+    // (hits grow), fresh allocations (misses) stay flat.
     let x1 = rng.normal_vec_f32(dim);
     handle.eps(1, &x1, 0.5)?;
-    let (c0, n0) = handle.exec_stats()?;
+    let s0 = handle.exec_stats()?;
+    println!(
+        "exec_stats before: {} execute calls | pooled-buffer hits {} | fresh allocs {}",
+        s0.exec_calls, s0.pool_hits, s0.pool_misses
+    );
     let reps = 200;
     let t0 = Instant::now();
     for _ in 0..reps {
         handle.eps(1, &x1, 0.5)?;
     }
     let total = t0.elapsed().as_nanos() as f64 / reps as f64;
-    let (c1, n1) = handle.exec_stats()?;
-    let inside = (n1 - n0) as f64 / (c1 - c0) as f64;
+    let s1 = handle.exec_stats()?;
+    let inside = (s1.exec_ns - s0.exec_ns) as f64 / (s1.exec_calls - s0.exec_calls) as f64;
     println!(
-        "executor roundtrip f^1 b1: total {} | inside execute {} | channel+copy overhead {}\n",
+        "exec_stats after:  {} execute calls | pooled-buffer hits {} | fresh allocs {}",
+        s1.exec_calls, s1.pool_hits, s1.pool_misses
+    );
+    println!(
+        "executor roundtrip f^1 b1: total {} | inside execute {} | channel+copy overhead {} | \
+         {} payload reuses, {} fresh allocs over {reps} calls\n",
         fmt_ns(total),
         fmt_ns(inside),
-        fmt_ns(total - inside)
+        fmt_ns(total - inside),
+        s1.pool_hits - s0.pool_hits,
+        s1.pool_misses - s0.pool_misses
     );
 
     // --- fused combine: native rust vs HLO(ref) vs HLO(pallas) -----------

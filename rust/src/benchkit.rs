@@ -3,11 +3,14 @@
 
 use anyhow::Result;
 
+use crate::gmm::{assumption1_family, Gmm, LangevinDrift};
+use crate::parallel;
 use crate::runtime::{spawn_executor, ExecutorHandle, Manifest, NeuralDenoiser};
 use crate::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
 use crate::sde::em::{em_sample, TimeGrid};
 use crate::sde::mlem::{mlem_sample, BernoulliMode, LevelPolicy, MlemFamily, SampleReport};
 use crate::sde::{schedule, BrownianPath};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -286,6 +289,147 @@ fn summarize_frontier(points: &[(f64, f64, bool)]) {
     } else {
         println!("headline: no EM run matched the ML-EM error levels in this sweep\n");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path workload (bench_hotpath + tests/parity_parallel.rs)
+
+/// The canonical hot-path workload: ML-EM over a compute-heavy analytic
+/// GMM ladder (Assumption-1 levels on a Langevin drift).  Shared by
+/// `bench_hotpath` and the serial↔parallel parity tests so the number in
+/// `BENCH_hotpath.json` measures exactly the code the tests certify.
+#[derive(Clone, Debug)]
+pub struct HotpathConfig {
+    /// Generation batch (the paper's §4 batching axis).
+    pub batch: usize,
+    /// State dimensionality per image.
+    pub dim: usize,
+    /// Mixture components (drives per-row score cost).
+    pub components: usize,
+    /// Assumption-1 ladder depth.
+    pub levels: usize,
+    /// Discretisation steps.
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for HotpathConfig {
+    fn default() -> Self {
+        // Heavy enough that one score eval (~batch × components × dim
+        // f64 ops) dwarfs the scoped-thread spawn cost.
+        HotpathConfig { batch: 64, dim: 384, components: 32, levels: 3, steps: 40, seed: 42 }
+    }
+}
+
+/// Run one ML-EM trajectory of the hot-path workload with the current
+/// `PALLAS_THREADS` setting; returns (final state, report, seconds).
+pub fn hotpath_run(cfg: &HotpathConfig) -> (Vec<f32>, SampleReport, f64) {
+    let gmm = Gmm::random(cfg.seed, cfg.components, cfg.dim, 2.0, 0.6);
+    let lang = LangevinDrift { gmm: &gmm };
+    let ladder = assumption1_family(&lang, 1, cfg.levels, 1.0, 2.5, cfg.seed ^ 0x5EED);
+    let levels: Vec<&dyn Drift> = ladder.iter().map(|d| d as &dyn Drift).collect();
+    let fam = MlemFamily { base: None, levels };
+    let probs: Vec<f64> = (0..cfg.levels).map(|k| 0.35f64.powi(k as i32)).collect();
+    let policy = move |k: usize, _t: f64| probs[k];
+    let grid = TimeGrid::new(1.0, 0.0, cfg.steps);
+    let mut rng = Rng::new(cfg.seed);
+    let path = BrownianPath::sample(&mut rng, cfg.steps, cfg.batch * cfg.dim, grid.span());
+    let mut x: Vec<f32> = (0..cfg.batch * cfg.dim).map(|_| rng.normal_f32()).collect();
+    let mut bern = Rng::new(cfg.seed ^ 0xB00);
+    let t0 = std::time::Instant::now();
+    let report = mlem_sample(
+        &fam,
+        &policy,
+        BernoulliMode::Shared,
+        |_| (2.0f64).sqrt(),
+        &mut x,
+        cfg.batch,
+        &grid,
+        &path,
+        &mut bern,
+    );
+    let secs = t0.elapsed().as_secs_f64();
+    (x, report, secs)
+}
+
+/// Serial-vs-parallel hot-path measurement: runs the workload with
+/// `PALLAS_THREADS=1` and with the machine's full parallelism (best of
+/// `reps` each, after a warmup that also fills the scratch pools),
+/// asserts the two trajectories are bit-identical, and returns the JSON
+/// summary for `BENCH_hotpath.json`.  Restores the env knob afterwards.
+pub fn hotpath_compare(cfg: &HotpathConfig, reps: usize) -> Json {
+    let prev = std::env::var(parallel::THREADS_ENV).ok();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let best_of = |cfg: &HotpathConfig| {
+        let mut best = f64::INFINITY;
+        let mut x = Vec::new();
+        for _ in 0..reps.max(1) {
+            let (xr, _, secs) = hotpath_run(cfg);
+            best = best.min(secs);
+            x = xr;
+        }
+        (x, best)
+    };
+
+    std::env::set_var(parallel::THREADS_ENV, "1");
+    let _ = hotpath_run(cfg); // warm the scratch pools
+    let (m0_hits, m0_miss) = parallel::global_f32().stats();
+    let (x_serial, serial_s) = best_of(cfg);
+    let (m1_hits, m1_miss) = parallel::global_f32().stats();
+
+    std::env::set_var(parallel::THREADS_ENV, hw.to_string());
+    let _ = hotpath_run(cfg); // warm per-shard scratch at this thread count
+    let (_, p0_miss) = parallel::global_f32().stats();
+    let (x_par, par_s) = best_of(cfg);
+    let (_, p1_miss) = parallel::global_f32().stats();
+
+    match prev {
+        Some(v) => std::env::set_var(parallel::THREADS_ENV, v),
+        None => std::env::remove_var(parallel::THREADS_ENV),
+    }
+
+    let bit_identical = x_serial.len() == x_par.len()
+        && x_serial.iter().zip(&x_par).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(bit_identical, "hot path: parallel trajectory diverged from serial");
+
+    let images = cfg.batch as f64;
+    let runs = reps.max(1) as f64 * cfg.steps as f64;
+    let allocs_per_step = (m1_miss - m0_miss) as f64 / runs;
+    let allocs_per_step_parallel = (p1_miss - p0_miss) as f64 / runs;
+    Json::obj()
+        .with(
+            "workload",
+            Json::obj()
+                .with("batch", Json::num(cfg.batch as f64))
+                .with("dim", Json::num(cfg.dim as f64))
+                .with("components", Json::num(cfg.components as f64))
+                .with("levels", Json::num(cfg.levels as f64))
+                .with("steps", Json::num(cfg.steps as f64)),
+        )
+        .with("threads_serial", Json::num(1.0))
+        .with("threads_parallel", Json::num(hw as f64))
+        .with("serial_sec_per_run", Json::num(serial_s))
+        .with("parallel_sec_per_run", Json::num(par_s))
+        .with("images_per_sec_serial", Json::num(images / serial_s))
+        .with("images_per_sec_parallel", Json::num(images / par_s))
+        .with("speedup", Json::num(serial_s / par_s))
+        .with("bit_identical", Json::Bool(bit_identical))
+        .with("pool_allocs_per_step", Json::num(allocs_per_step))
+        .with("pool_allocs_per_step_parallel", Json::num(allocs_per_step_parallel))
+        .with("pool_reuses_measured", Json::num((m1_hits - m0_hits) as f64))
+}
+
+/// Write a benchmark JSON artifact as `BENCH_<name>.json` at the repo
+/// root; returns the path.
+pub fn write_bench_json(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    Ok(path)
 }
 
 /// Build the {f^1, f^3, f^5}-style score-part family over level indices

@@ -85,40 +85,47 @@ impl Gmm {
 
     /// Exact score `∇ log ρ_t` of the diffused mixture for a flattened
     /// `[batch, dim]` input.
+    ///
+    /// Rows are independent, so the batch is sharded across scoped
+    /// threads (`PALLAS_THREADS`); each shard reuses one pooled
+    /// responsibility buffer.  Per-row arithmetic is untouched, so the
+    /// output is bit-identical for every thread count.
     pub fn score_t(&self, x: &[f32], t: f64, out: &mut [f32]) {
         let dim = self.dim();
         let (mscale, var) = self.diffused(t);
-        let batch = x.len() / dim;
         let k = self.k();
-        let mut logw = vec![0.0f64; k];
-        for b in 0..batch {
-            let xb = &x[b * dim..(b + 1) * dim];
-            // responsibilities via log-sum-exp
-            let mut maxl = f64::NEG_INFINITY;
-            for (i, mu) in self.means.iter().enumerate() {
-                let mut d2 = 0.0f64;
+        let rows = x.len() / dim;
+        // per-row work ≈ 2 passes over k components × dim coords
+        let sh = crate::parallel::heavy_shards(rows, k.max(1) * dim);
+        crate::parallel::for_each_shard(x, out, dim, &sh, |_, xs, os| {
+            let mut logw = crate::parallel::global_f64().take(k);
+            for (xb, ob) in xs.chunks_exact(dim).zip(os.chunks_exact_mut(dim)) {
+                // responsibilities via log-sum-exp
+                let mut maxl = f64::NEG_INFINITY;
+                for (i, mu) in self.means.iter().enumerate() {
+                    let mut d2 = 0.0f64;
+                    for j in 0..dim {
+                        let d = xb[j] as f64 - mscale * mu[j] as f64;
+                        d2 += d * d;
+                    }
+                    logw[i] = self.weights[i].ln() - 0.5 * d2 / var;
+                    maxl = maxl.max(logw[i]);
+                }
+                let mut z = 0.0f64;
+                for l in logw.iter_mut() {
+                    *l = (*l - maxl).exp();
+                    z += *l;
+                }
+                // score = sum_i resp_i * (mscale*mu_i - x) / var
                 for j in 0..dim {
-                    let d = xb[j] as f64 - mscale * mu[j] as f64;
-                    d2 += d * d;
+                    let mut s = 0.0f64;
+                    for i in 0..k {
+                        s += (logw[i] / z) * (mscale * self.means[i][j] as f64 - xb[j] as f64);
+                    }
+                    ob[j] = (s / var) as f32;
                 }
-                logw[i] = self.weights[i].ln() - 0.5 * d2 / var;
-                maxl = maxl.max(logw[i]);
             }
-            let mut z = 0.0f64;
-            for l in logw.iter_mut() {
-                *l = (*l - maxl).exp();
-                z += *l;
-            }
-            // score = sum_i resp_i * (mscale*mu_i - x) / var
-            let ob = &mut out[b * dim..(b + 1) * dim];
-            for j in 0..dim {
-                let mut s = 0.0f64;
-                for i in 0..k {
-                    s += (logw[i] / z) * (mscale * self.means[i][j] as f64 - xb[j] as f64);
-                }
-                ob[j] = (s / var) as f32;
-            }
-        }
+        });
     }
 
     /// Log density of the diffused mixture at a single point (tests).
@@ -248,16 +255,18 @@ impl<'a> Drift for PerturbedDrift<'a> {
     fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
         self.inner.eval(x, t, out);
         let dim = self.dim();
-        let batch = x.len() / dim;
-        for b in 0..batch {
-            let xb = &x[b * dim..(b + 1) * dim];
-            let dot: f32 = xb.iter().zip(&self.w).map(|(&a, &b)| a * b).sum();
-            let bump = self.amp * (dot + self.phase).cos();
-            let ob = &mut out[b * dim..(b + 1) * dim];
-            for j in 0..dim {
-                ob[j] += bump * self.u[j];
+        // the bump is ~2 FLOPs/element, so the light grain applies: the
+        // pass shards only for very wide batches and is bit-identical to
+        // the serial loop either way.
+        crate::parallel::par_map_rows_light(x, out, dim, |_, xs, os| {
+            for (xb, ob) in xs.chunks_exact(dim).zip(os.chunks_exact_mut(dim)) {
+                let dot: f32 = xb.iter().zip(&self.w).map(|(&a, &b)| a * b).sum();
+                let bump = self.amp * (dot + self.phase).cos();
+                for j in 0..dim {
+                    ob[j] += bump * self.u[j];
+                }
             }
-        }
+        });
     }
 
     fn cost(&self) -> f64 {

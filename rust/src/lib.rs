@@ -11,19 +11,57 @@
 //!   family and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //!
 //! Python never runs on the request path: the binary loads HLO text via
-//! the `xla` crate's PJRT CPU client and is self-contained thereafter.
+//! the `xla` crate's PJRT CPU client and is self-contained thereafter
+//! (an in-tree stub stands in when the `xla` feature is off).
+//!
+//! # Hot-path architecture
+//!
+//! The sampling hot path is **parallel and allocation-free** end to end:
+//!
+//! 1. [`parallel`] provides the substrate: a deterministic batch sharder
+//!    (`[batch, dim]` rows split into contiguous [`parallel::Shard`]s,
+//!    executed on scoped threads, `PALLAS_THREADS` knob) and process-wide
+//!    [`parallel::ScratchPool`]s whose buffers are recycled instead of
+//!    reallocated.  Shard boundaries are a pure function of
+//!    `(rows, threads)` and workers own disjoint rows, so every thread
+//!    count produces **bit-identical** trajectories — verified by the
+//!    `parity_parallel` property tests.
+//! 2. The drift layer rides on it: the analytic GMM score
+//!    ([`gmm::Gmm::score_t`]) and the Assumption-1 perturbation
+//!    ([`gmm::PerturbedDrift`]) evaluate batch chunks in parallel, while
+//!    [`sde::SumDrift`] and the central-difference `Drift::jvp` /
+//!    `Denoiser::eps_jvp` defaults draw scratch from the pool instead of
+//!    allocating per call.
+//! 3. [`sde::mlem::mlem_sample`] fuses its accumulate and state-update
+//!    loops per shard: the weighted level deltas, the Brownian increment
+//!    and the Euler step stream through each cache line once per step.
+//! 4. [`runtime`]'s executor ships request payloads in pooled buffers
+//!    and reuses one response channel per handle — no per-call channel
+//!    or `to_vec` allocations on the request path.
+//!
+//! `cargo bench --bench bench_hotpath` tracks the resulting throughput
+//! (serial vs parallel images/sec, pool allocations per step) in
+//! `BENCH_hotpath.json` at the repo root.
 //!
 //! Module map (see `DESIGN.md` for the full inventory):
 //!
 //! | module | role |
 //! |---|---|
 //! | [`util`] | dependency-free substrates: RNG, stats, JSON, duals, CLI, property tests, bench harness |
+//! | [`parallel`] | batch sharder + scratch pools powering the hot path |
 //! | [`sde`] | drift traits, noise schedule, EM / **ML-EM** samplers, DDPM/DDIM discretisations |
 //! | [`gmm`] | analytic Gaussian-mixture substrate with constructed approximator ladders |
 //! | [`levels`] | level-probability policies and cost accounting |
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
 //! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts |
 //! | [`coordinator`] | serving layer: server, batcher, scheduler, state |
+
+// Kernel-style indexed loops are the idiom throughout this crate: they
+// mirror the paper's math and keep the serial and sharded variants of
+// each loop visibly identical (the bit-parity contract).  The clippy
+// range-loop and argument-count lints fight that idiom.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod util {
     //! Dependency-free substrates (offline build: no serde/rand/clap/...).
@@ -43,5 +81,6 @@ pub mod coordinator;
 pub mod gmm;
 pub mod levels;
 pub mod metrics;
+pub mod parallel;
 pub mod runtime;
 pub mod sde;

@@ -1,0 +1,34 @@
+//! Parallel, allocation-free substrate for the sampling hot path.
+//!
+//! Two pieces, both dependency-free (std scoped threads + mutexed
+//! free-lists — no rayon/crossbeam offline):
+//!
+//! * [`shard`] — a deterministic batch sharder.  A `[batch, dim]` buffer
+//!   is partitioned into contiguous *row* ranges ([`Shard`]s) that scoped
+//!   threads process independently.  The partition is a pure function of
+//!   `(rows, thread count)` and every worker touches only its own rows,
+//!   so results are **bit-identical** to the serial loop for any
+//!   `PALLAS_THREADS` setting — parallelism never reorders a single
+//!   floating-point operation within a row.
+//! * [`pool`] — [`ScratchPool`], a reusable free-list of scratch buffers
+//!   keyed by nothing (best-fit by capacity).  Hot loops that used to
+//!   allocate fresh `Vec`s per call (`Drift::jvp` central differences,
+//!   `SumDrift::eval`, the executor's request payloads, `mlem_sample`'s
+//!   per-run scratch) now borrow from the process-wide pools and return
+//!   the buffers on drop; steady state allocates nothing.
+//!
+//! Thread count comes from the `PALLAS_THREADS` env knob (default: the
+//! machine's available parallelism).  Two work-size grains gate when
+//! extra threads are actually engaged: [`HEAVY_GRAIN`] for compute-bound
+//! per-row kernels (GMM scores) and [`LIGHT_GRAIN`] for memory-bound
+//! elementwise loops (fused accumulate/update), since a thread spawn
+//! costs ~tens of microseconds and must be amortised.
+
+pub mod pool;
+pub mod shard;
+
+pub use pool::{global_f32, global_f64, ScratchGuard, ScratchPool};
+pub use shard::{
+    for_each_shard, heavy_shards, light_shards, num_threads, par_map_rows_light, run_shards,
+    shards, split_rows, split_rows_mut, Shard, HEAVY_GRAIN, LIGHT_GRAIN, THREADS_ENV,
+};

@@ -1,0 +1,230 @@
+//! Reusable scratch buffers for the sampling hot path.
+//!
+//! A [`ScratchPool`] is a mutex-guarded free-list of `Vec`s plus hit /
+//! miss counters.  `take*` hands out a buffer of the requested length
+//! (best-fit by capacity, so mixed widths coexist without churn); the
+//! RAII [`ScratchGuard`] returns it on drop, and `take_vec`/`put` do the
+//! same manually for buffers that must cross a thread boundary (the
+//! executor's request payloads).  After warmup the hot path allocates no
+//! state-width buffers per step — the `misses` counter is the measurable
+//! proof (see `bench_hotpath` / `bench_runtime`).  Small bookkeeping
+//! allocations (shard lists, task vectors) remain and are not pooled.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Free-list capacity: beyond this, returned buffers are simply dropped
+/// (bounds worst-case memory under bursty widths).
+const MAX_POOLED: usize = 64;
+
+/// A reusable pool of `Vec<T>` scratch buffers.
+pub struct ScratchPool<T: Copy + Default + Send> {
+    bufs: Mutex<Vec<Vec<T>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<T: Copy + Default + Send> ScratchPool<T> {
+    pub const fn new() -> ScratchPool<T> {
+        ScratchPool {
+            bufs: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a buffer of exactly `len` elements.  Contents are
+    /// **unspecified** (recycled data) — overwrite before reading, or use
+    /// [`ScratchPool::take_zeroed`].
+    pub fn take(&self, len: usize) -> ScratchGuard<'_, T> {
+        ScratchGuard { pool: self, buf: self.take_vec(len) }
+    }
+
+    /// Take a buffer of `len` elements filled with `T::default()`.
+    pub fn take_zeroed(&self, len: usize) -> ScratchGuard<'_, T> {
+        let mut g = self.take(len);
+        g.buf.fill(T::default());
+        g
+    }
+
+    /// Take a raw `Vec` (for sending across threads); pair with
+    /// [`ScratchPool::put`].  Same contents caveat as `take`.
+    pub fn take_vec(&self, len: usize) -> Vec<T> {
+        let popped = {
+            let mut bufs = self.bufs.lock().unwrap();
+            // Best fit: the smallest buffer whose capacity already
+            // suffices, else the largest one (it will grow the least).
+            let idx = bufs
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.capacity() >= len)
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    bufs.iter().enumerate().max_by_key(|(_, b)| b.capacity()).map(|(i, _)| i)
+                });
+            idx.map(|i| bufs.swap_remove(i))
+        };
+        let mut buf = popped.unwrap_or_default();
+        if buf.capacity() >= len {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            // About to reallocate anyway — clear first so resize's grow
+            // path doesn't memcpy the evicted buffer's stale contents.
+            buf.clear();
+        }
+        buf.resize(len, T::default());
+        buf
+    }
+
+    /// Return a buffer to the free-list (dropped when the list is full).
+    pub fn put(&self, buf: Vec<T>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < MAX_POOLED {
+            bufs.push(buf);
+        }
+    }
+
+    /// `(hits, misses)`: takes served from the free-list vs takes that
+    /// had to allocate (or grow).  Steady-state hot loops add only hits.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Buffers currently parked in the free-list.
+    pub fn parked(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+impl<T: Copy + Default + Send> Default for ScratchPool<T> {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
+}
+
+/// RAII handle to a pooled buffer; derefs to `[T]` and returns the
+/// buffer to its pool on drop.
+pub struct ScratchGuard<'a, T: Copy + Default + Send> {
+    pool: &'a ScratchPool<T>,
+    buf: Vec<T>,
+}
+
+impl<'a, T: Copy + Default + Send> Deref for ScratchGuard<'a, T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.buf
+    }
+}
+
+impl<'a, T: Copy + Default + Send> DerefMut for ScratchGuard<'a, T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.buf
+    }
+}
+
+impl<'a, T: Copy + Default + Send> Drop for ScratchGuard<'a, T> {
+    fn drop(&mut self) {
+        self.pool.put(std::mem::take(&mut self.buf));
+    }
+}
+
+static GLOBAL_F32: ScratchPool<f32> = ScratchPool::new();
+static GLOBAL_F64: ScratchPool<f64> = ScratchPool::new();
+
+/// Process-wide f32 scratch pool (state-width hot-path buffers).
+pub fn global_f32() -> &'static ScratchPool<f32> {
+    &GLOBAL_F32
+}
+
+/// Process-wide f64 scratch pool (small per-shard accumulators, e.g. the
+/// GMM responsibilities).
+pub fn global_f64() -> &'static ScratchPool<f64> {
+    &GLOBAL_F64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_requested_length() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        let g = p.take(17);
+        assert_eq!(g.len(), 17);
+        let z = p.take_zeroed(5);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn buffers_are_reused_after_drop() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        {
+            let mut g = p.take(100);
+            g[0] = 1.0;
+        } // returned here
+        assert_eq!(p.parked(), 1);
+        let _g2 = p.take(100);
+        let (hits, misses) = p.stats();
+        assert_eq!(hits, 1, "second take must be a pool hit");
+        assert_eq!(misses, 1, "first take allocates");
+        assert_eq!(p.parked(), 0);
+    }
+
+    #[test]
+    fn best_fit_prefers_adequate_capacity() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        p.put(Vec::with_capacity(8));
+        p.put(Vec::with_capacity(1024));
+        let g = p.take(512); // must pick the 1024-cap buffer, not grow the 8
+        assert!(g.buf.capacity() >= 1024);
+        let (hits, misses) = p.stats();
+        assert_eq!((hits, misses), (1, 0));
+    }
+
+    #[test]
+    fn take_vec_put_roundtrip_is_allocation_free() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        let v = p.take_vec(64);
+        p.put(v);
+        for _ in 0..10 {
+            let v = p.take_vec(64);
+            p.put(v);
+        }
+        let (hits, misses) = p.stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 10);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            p.put(vec![0.0f32; 4]);
+        }
+        assert_eq!(p.parked(), MAX_POOLED);
+    }
+
+    #[test]
+    fn concurrent_takes_are_safe() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..200 {
+                        let mut g = p.take(32);
+                        g[31] = 1.0;
+                    }
+                });
+            }
+        });
+        let (hits, misses) = p.stats();
+        assert_eq!(hits + misses, 800);
+        assert!(p.parked() <= 4);
+    }
+}

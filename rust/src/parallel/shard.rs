@@ -1,0 +1,270 @@
+//! Deterministic batch sharding over scoped threads.
+//!
+//! A shard is a contiguous range of batch *rows* of a flattened
+//! `[batch, dim]` buffer.  The shard boundaries depend only on the row
+//! count and the thread count — never on timing — and each worker writes
+//! only its own rows, so a sharded loop produces bit-identical output to
+//! its serial counterpart (same per-element operations in the same
+//! order; sharding merely interleaves rows across cores).
+
+/// Environment knob for the worker count (`PALLAS_THREADS=4`).  Unset or
+/// unparsable values fall back to the machine's available parallelism.
+pub const THREADS_ENV: &str = "PALLAS_THREADS";
+
+/// Minimum *work units* (≈ scalar float ops) per shard for compute-bound
+/// per-row kernels before an extra thread is engaged.  ~32K f64 ops is
+/// tens of microseconds — a few multiples of one thread spawn.  Callers
+/// estimate work per row (e.g. `components × dim` for the GMM score) and
+/// pass it to [`heavy_shards`].
+pub const HEAVY_GRAIN: usize = 1 << 15;
+
+/// Minimum elements per shard for memory-bound elementwise loops (fused
+/// accumulate/update: ~1 FLOP per element).  Far larger than
+/// [`HEAVY_GRAIN`] because a ~10µs thread spawn amortises only against
+/// hundreds of kilobytes of streamed data.
+pub const LIGHT_GRAIN: usize = 1 << 16;
+
+/// A contiguous range of batch rows assigned to one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// First row (inclusive).
+    pub start: usize,
+    /// Number of rows.
+    pub len: usize,
+}
+
+fn parse_threads(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
+}
+
+/// Worker count: the `PALLAS_THREADS` override when set and valid, else
+/// `std::thread::available_parallelism()`.  Read per call (not cached)
+/// so tests and benches can flip the knob within one process.
+pub fn num_threads() -> usize {
+    parse_threads(std::env::var(THREADS_ENV).ok().as_deref())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Deterministic partition of `rows` rows into at most `threads`
+/// contiguous shards: the first `rows % threads` shards get one extra
+/// row.  A pure function of its arguments — the shard→chunk assignment
+/// never depends on scheduling.
+pub fn shards(rows: usize, threads: usize) -> Vec<Shard> {
+    let t = threads.clamp(1, rows.max(1));
+    let base = rows / t;
+    let extra = rows % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push(Shard { start, len });
+        start += len;
+    }
+    out
+}
+
+fn grain_shards(rows: usize, work_per_row: usize, grain: usize) -> Vec<Shard> {
+    let cap = rows.saturating_mul(work_per_row) / grain.max(1);
+    shards(rows, num_threads().min(cap.max(1)))
+}
+
+/// Shards for compute-bound per-row work: `work_per_row` is the caller's
+/// estimate of scalar float ops per row, and a shard must amount to at
+/// least [`HEAVY_GRAIN`] of them before an extra thread is engaged.
+pub fn heavy_shards(rows: usize, work_per_row: usize) -> Vec<Shard> {
+    grain_shards(rows, work_per_row, HEAVY_GRAIN)
+}
+
+/// Shards for memory-bound elementwise work (≥ [`LIGHT_GRAIN`] elements
+/// per shard before an extra thread is engaged).
+pub fn light_shards(rows: usize, dim: usize) -> Vec<Shard> {
+    grain_shards(rows, dim, LIGHT_GRAIN)
+}
+
+/// Borrow each shard's rows of a shared `[batch, dim]` buffer.
+pub fn split_rows<'a>(buf: &'a [f32], dim: usize, sh: &[Shard]) -> Vec<&'a [f32]> {
+    sh.iter().map(|s| &buf[s.start * dim..(s.start + s.len) * dim]).collect()
+}
+
+/// Split a mutable `[batch, dim]` buffer into disjoint per-shard chunks.
+/// The shards must tile the buffer contiguously from row 0 (which is
+/// what [`shards`] produces).
+pub fn split_rows_mut<'a>(buf: &'a mut [f32], dim: usize, sh: &[Shard]) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(sh.len());
+    let mut rest = buf;
+    let mut row = 0usize;
+    for s in sh {
+        assert_eq!(s.start, row, "shards must be contiguous from row 0");
+        let (head, tail) = rest.split_at_mut(s.len * dim);
+        out.push(head);
+        rest = tail;
+        row += s.len;
+    }
+    out
+}
+
+/// Run one task per shard on scoped threads; the calling thread takes
+/// the first task, so a single-task call has zero thread overhead.
+/// Tasks typically carry the disjoint `&mut` chunks produced by
+/// [`split_rows_mut`].
+pub fn run_shards<T, F>(tasks: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    if tasks.len() <= 1 {
+        for (i, t) in tasks.into_iter().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut iter = tasks.into_iter().enumerate();
+        let first = iter.next();
+        for (i, t) in iter {
+            let fr = &f;
+            s.spawn(move || fr(i, t));
+        }
+        if let Some((i, t)) = first {
+            f(i, t);
+        }
+    });
+}
+
+/// Evaluate `f(shard, x_chunk, out_chunk)` over the given row shards —
+/// the workhorse behind the parallel drift evaluations.  Serial when one
+/// shard; bit-identical to serial always.
+pub fn for_each_shard(
+    x: &[f32],
+    out: &mut [f32],
+    dim: usize,
+    sh: &[Shard],
+    f: impl Fn(Shard, &[f32], &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(x.len(), out.len(), "for_each_shard buffer size mismatch");
+    if sh.len() <= 1 {
+        let rows = if dim == 0 { 0 } else { x.len() / dim };
+        let shard = sh.first().copied().unwrap_or(Shard { start: 0, len: rows });
+        f(shard, x, out);
+        return;
+    }
+    let xs = split_rows(x, dim, sh);
+    let os = split_rows_mut(out, dim, sh);
+    let tasks: Vec<(Shard, &[f32], &mut [f32])> =
+        sh.iter().copied().zip(xs).zip(os).map(|((s, xc), oc)| (s, xc, oc)).collect();
+    run_shards(tasks, |_, (s, xc, oc)| f(s, xc, oc));
+}
+
+/// [`for_each_shard`] over [`light_shards`] — for memory-bound
+/// elementwise passes (adds, bumps, scalings).
+pub fn par_map_rows_light(
+    x: &[f32],
+    out: &mut [f32],
+    dim: usize,
+    f: impl Fn(Shard, &[f32], &mut [f32]) + Sync,
+) {
+    let rows = if dim == 0 { 0 } else { x.len() / dim };
+    for_each_shard(x, out, dim, &light_shards(rows, dim), f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_tile_exactly() {
+        for rows in [0usize, 1, 2, 7, 64, 1000] {
+            for t in [1usize, 2, 3, 4, 8, 33] {
+                let sh = shards(rows, t);
+                assert!(!sh.is_empty());
+                assert!(sh.len() <= t.max(1));
+                let mut row = 0;
+                for s in &sh {
+                    assert_eq!(s.start, row);
+                    row += s.len;
+                }
+                assert_eq!(row, rows, "rows {rows} threads {t}");
+                // balanced: sizes differ by at most one
+                let min = sh.iter().map(|s| s.len).min().unwrap();
+                let max = sh.iter().map(|s| s.len).max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn shards_are_deterministic() {
+        assert_eq!(shards(10, 3), shards(10, 3));
+        assert_eq!(shards(10, 3)[0], Shard { start: 0, len: 4 });
+        assert_eq!(shards(10, 3)[2], Shard { start: 7, len: 3 });
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_integers_only() {
+        assert_eq!(parse_threads(Some("4")), Some(4));
+        assert_eq!(parse_threads(Some(" 2 ")), Some(2));
+        assert_eq!(parse_threads(Some("0")), None);
+        assert_eq!(parse_threads(Some("-1")), None);
+        assert_eq!(parse_threads(Some("lots")), None);
+        assert_eq!(parse_threads(None), None);
+    }
+
+    #[test]
+    fn split_rows_mut_partitions_disjointly() {
+        let dim = 3;
+        let mut buf = vec![0.0f32; 10 * dim];
+        let sh = shards(10, 4);
+        let chunks = split_rows_mut(&mut buf, dim, &sh);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 10 * dim);
+        for (s, c) in sh.iter().zip(&chunks) {
+            assert_eq!(c.len(), s.len * dim);
+        }
+    }
+
+    #[test]
+    fn run_shards_executes_every_task_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits: Vec<AtomicU64> = (0..9).map(|_| AtomicU64::new(0)).collect();
+        let tasks: Vec<usize> = (0..9).collect();
+        run_shards(tasks, |i, t| {
+            assert_eq!(i, t);
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn for_each_shard_matches_serial_bitwise() {
+        let dim = 5;
+        let rows = 137;
+        let x: Vec<f32> = (0..rows * dim).map(|i| (i as f32).sin()).collect();
+        let kernel = |_s: Shard, xs: &[f32], os: &mut [f32]| {
+            for (xb, ob) in xs.chunks_exact(dim).zip(os.chunks_exact_mut(dim)) {
+                let dot: f32 = xb.iter().map(|&v| v * v).sum();
+                for j in 0..dim {
+                    ob[j] = xb[j] * dot.sqrt() + 1.0;
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; rows * dim];
+        for_each_shard(&x, &mut serial, dim, &shards(rows, 1), kernel);
+        for t in [2usize, 3, 7] {
+            let mut par = vec![0.0f32; rows * dim];
+            for_each_shard(&x, &mut par, dim, &shards(rows, t), kernel);
+            assert!(
+                serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads {t} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn grain_caps_thread_count() {
+        // tiny work never shards beyond one chunk
+        let sh = grain_shards(4, 2, HEAVY_GRAIN);
+        assert_eq!(sh.len(), 1);
+    }
+}

@@ -12,6 +12,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::Manifest;
+// With the `xla` feature off, the in-tree stub stands in for the PJRT
+// bindings (same API; client construction fails at runtime).
+#[cfg(not(feature = "xla"))]
+use super::xla_shim as xla;
 
 /// Executable cache keyed by artifact file name.
 pub struct Engine {

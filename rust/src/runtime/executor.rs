@@ -2,21 +2,55 @@
 //! over a channel.  [`ExecutorHandle`] is `Clone + Send + Sync`, so the
 //! samplers (which require `Sync` drifts) and the multi-threaded
 //! coordinator can all share one device owner.
+//!
+//! Zero-copy discipline (perf pass): request payloads travel in buffers
+//! borrowed from the global [`crate::parallel`] scratch pool — the
+//! executor returns them to the pool once the engine has consumed them —
+//! and every handle owns **one** reusable response channel instead of
+//! allocating a fresh channel per job.  Steady-state request traffic
+//! performs no channel or payload allocations; [`ExecStats`] exposes the
+//! counters that prove it (see `bench_runtime`).
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use super::engine::Engine;
 use super::manifest::Manifest;
 use crate::metrics::Metrics;
+use crate::parallel;
 
-type Resp<T> = Sender<Result<T>>;
+/// Executor-side counters: PJRT execute accounting plus the global
+/// scratch-pool hit/miss totals (the zero-copy evidence — a miss is a
+/// fresh allocation, a hit is a reused buffer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Number of PJRT execute calls.
+    pub exec_calls: u64,
+    /// Cumulative nanoseconds inside PJRT execute.
+    pub exec_ns: u64,
+    /// Global f32 scratch-pool takes served from the free-list.
+    pub pool_hits: u64,
+    /// Global f32 scratch-pool takes that had to allocate (or grow).
+    pub pool_misses: u64,
+}
+
+/// Unified response message (one channel per handle carries them all).
+enum Resp {
+    Vec(Result<Vec<f32>>),
+    Pair(Result<(Vec<f32>, Vec<f32>)>),
+    Costs(Result<Vec<f64>>),
+    Unit(Result<()>),
+    Stats(Result<ExecStats>),
+}
 
 enum Job {
-    Eps { level: usize, x: Vec<f32>, t: f64, pallas: bool, resp: Resp<Vec<f32>> },
-    EpsJvp { level: usize, x: Vec<f32>, t: f64, v: Vec<f32>, resp: Resp<(Vec<f32>, Vec<f32>)> },
+    Eps { level: usize, x: Vec<f32>, t: f64, pallas: bool, resp: Sender<Resp> },
+    EpsJvp { level: usize, x: Vec<f32>, t: f64, v: Vec<f32>, resp: Sender<Resp> },
     Combine {
         y: Vec<f32>,
         deltas: Vec<f32>,
@@ -25,23 +59,86 @@ enum Job {
         eta: f64,
         sigma: f64,
         pallas: bool,
-        resp: Resp<Vec<f32>>,
+        resp: Sender<Resp>,
     },
-    MeasureCosts { reps: usize, resp: Resp<Vec<f64>> },
-    Warmup { bucket: usize, resp: Resp<()> },
-    ExecStats { resp: Resp<(u64, u64)> },
+    MeasureCosts { reps: usize, resp: Sender<Resp> },
+    Warmup { bucket: usize, resp: Sender<Resp> },
+    ExecStats { resp: Sender<Resp> },
     Stop,
 }
 
-/// Cloneable, thread-safe handle to the executor thread.
-#[derive(Clone)]
+/// Refuse a job because the engine never came up: recycle its pooled
+/// payload buffers and answer with an error.  Returns true on `Stop`.
+fn refuse(job: Job) -> bool {
+    let pool = parallel::global_f32();
+    let unavailable = || anyhow!("engine unavailable");
+    match job {
+        Job::Eps { x, resp, .. } => {
+            pool.put(x);
+            let _ = resp.send(Resp::Vec(Err(unavailable())));
+        }
+        Job::EpsJvp { x, v, resp, .. } => {
+            pool.put(x);
+            pool.put(v);
+            let _ = resp.send(Resp::Pair(Err(unavailable())));
+        }
+        Job::Combine { y, deltas, coeffs, z, resp, .. } => {
+            pool.put(y);
+            pool.put(deltas);
+            pool.put(coeffs);
+            pool.put(z);
+            let _ = resp.send(Resp::Vec(Err(unavailable())));
+        }
+        Job::MeasureCosts { resp, .. } => {
+            let _ = resp.send(Resp::Costs(Err(unavailable())));
+        }
+        Job::Warmup { resp, .. } => {
+            let _ = resp.send(Resp::Unit(Err(unavailable())));
+        }
+        Job::ExecStats { resp } => {
+            let _ = resp.send(Resp::Stats(Err(unavailable())));
+        }
+        Job::Stop => return true,
+    }
+    false
+}
+
+/// Cloneable, thread-safe handle to the executor thread.  Each clone
+/// owns its response channel; concurrent calls through one clone are
+/// serialised (clone per thread for parallelism — the executor thread
+/// serialises device work anyway).
 pub struct ExecutorHandle {
     tx: Sender<Job>,
     manifest: Manifest,
+    /// Cleared by [`AliveGuard`] when the executor thread exits for any
+    /// reason (Stop, channel close, panic).  Because the handle keeps a
+    /// `Sender` for its reusable response channel, `recv` alone would
+    /// never observe executor death — this flag is what turns an
+    /// in-flight request into an error instead of a hang.
+    alive: Arc<AtomicBool>,
+    resp: Mutex<(Sender<Resp>, Receiver<Resp>)>,
 }
 
-// Sender<Job> is Send+Sync (Job: Send); Manifest is plain data.
-// ExecutorHandle derives both automatically.
+impl Clone for ExecutorHandle {
+    fn clone(&self) -> ExecutorHandle {
+        ExecutorHandle {
+            tx: self.tx.clone(),
+            manifest: self.manifest.clone(),
+            alive: self.alive.clone(),
+            resp: Mutex::new(channel()),
+        }
+    }
+}
+
+/// Clears the executor-liveness flag on every exit path, including
+/// panics unwinding out of engine calls.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
 
 /// Spawn the executor thread over `manifest`'s artifacts.  Returns the
 /// handle and the join handle (join after dropping all handles/Stop).
@@ -51,41 +148,31 @@ pub fn spawn_executor(
 ) -> Result<(ExecutorHandle, JoinHandle<()>)> {
     let (tx, rx) = channel::<Job>();
     let handle_manifest = manifest.clone();
+    let alive = Arc::new(AtomicBool::new(true));
+    let alive_flag = alive.clone();
     let join = std::thread::Builder::new()
         .name("pjrt-executor".to_string())
         .spawn(move || {
+            let _alive = AliveGuard(alive_flag);
             let mut engine = match Engine::new(manifest) {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("[executor] failed to start engine: {e:#}");
                     // Drain jobs with errors so callers unblock.
-                    for job in rx {
-                        match job {
-                            Job::Eps { resp, .. } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::EpsJvp { resp, .. } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::Combine { resp, .. } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::MeasureCosts { resp, .. } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::Warmup { resp, .. } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::ExecStats { resp } => {
-                                let _ = resp.send(Err(anyhow!("engine unavailable")));
-                            }
-                            Job::Stop => break,
+                    for job in rx.iter() {
+                        if refuse(job) {
+                            break;
                         }
+                    }
+                    // Answer anything still queued behind the Stop.
+                    while let Ok(job) = rx.try_recv() {
+                        refuse(job);
                     }
                     return;
                 }
             };
-            for job in rx {
+            let pool = parallel::global_f32();
+            for job in rx.iter() {
                 match job {
                     Job::Eps { level, x, t, pallas, resp } => {
                         let t0 = std::time::Instant::now();
@@ -93,30 +180,59 @@ pub fn spawn_executor(
                         if let Some(m) = &metrics {
                             m.execute_latency.record(t0.elapsed());
                         }
-                        let _ = resp.send(r);
+                        pool.put(x);
+                        let _ = resp.send(Resp::Vec(r));
                     }
                     Job::EpsJvp { level, x, t, v, resp } => {
                         let r = engine.eps_jvp(level, &x, t, &v);
-                        let _ = resp.send(r);
+                        pool.put(x);
+                        pool.put(v);
+                        let _ = resp.send(Resp::Pair(r));
                     }
                     Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp } => {
                         let r = engine.combine(&y, &deltas, &coeffs, &z, eta, sigma, pallas);
-                        let _ = resp.send(r);
+                        pool.put(y);
+                        pool.put(deltas);
+                        pool.put(coeffs);
+                        pool.put(z);
+                        let _ = resp.send(Resp::Vec(r));
                     }
                     Job::MeasureCosts { reps, resp } => {
-                        let _ = resp.send(engine.measure_costs(reps));
+                        let _ = resp.send(Resp::Costs(engine.measure_costs(reps)));
                     }
                     Job::Warmup { bucket, resp } => {
-                        let _ = resp.send(engine.warmup(bucket));
+                        let _ = resp.send(Resp::Unit(engine.warmup(bucket)));
                     }
                     Job::ExecStats { resp } => {
-                        let _ = resp.send(Ok((engine.exec_calls, engine.exec_ns)));
+                        let (pool_hits, pool_misses) = pool.stats();
+                        let _ = resp.send(Resp::Stats(Ok(ExecStats {
+                            exec_calls: engine.exec_calls,
+                            exec_ns: engine.exec_ns,
+                            pool_hits,
+                            pool_misses,
+                        })));
                     }
                     Job::Stop => break,
                 }
             }
+            // Stop raced with queued work: answer it rather than leaving
+            // callers waiting on a response that will never come.
+            while let Ok(job) = rx.try_recv() {
+                refuse(job);
+            }
         })?;
-    Ok((ExecutorHandle { tx, manifest: handle_manifest }, join))
+    Ok((
+        ExecutorHandle { tx, manifest: handle_manifest, alive, resp: Mutex::new(channel()) },
+        join,
+    ))
+}
+
+/// Copy a payload into a pooled buffer (reused, not allocated, after
+/// warmup) for the trip to the executor thread.
+fn pooled_copy(src: &[f32]) -> Vec<f32> {
+    let mut buf = parallel::global_f32().take_vec(src.len());
+    buf.copy_from_slice(src);
+    buf
 }
 
 impl ExecutorHandle {
@@ -124,27 +240,62 @@ impl ExecutorHandle {
         &self.manifest
     }
 
-    fn call<T>(&self, job: Job, rx: std::sync::mpsc::Receiver<Result<T>>) -> Result<T> {
-        self.tx.send(job).map_err(|_| anyhow!("executor thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("executor dropped response"))?
+    /// Send one job and wait for its answer on this handle's reusable
+    /// response channel.  Waiting polls the liveness flag: if the
+    /// executor thread exits (Stop race, engine panic) with this request
+    /// in flight, the call errors instead of hanging — the handle's own
+    /// `Sender` keeps the response channel connected, so disconnect can
+    /// never signal death here.
+    fn call(&self, make: impl FnOnce(Sender<Resp>) -> Job) -> Result<Resp> {
+        let slot = self.resp.lock().map_err(|_| anyhow!("executor handle poisoned"))?;
+        self.tx.send(make(slot.0.clone())).map_err(|_| anyhow!("executor thread gone"))?;
+        loop {
+            match slot.1.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => return Ok(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.alive.load(Ordering::SeqCst) {
+                        // One last look: the answer may have been sent
+                        // just before the thread exited.
+                        if let Ok(r) = slot.1.try_recv() {
+                            return Ok(r);
+                        }
+                        return Err(anyhow!("executor thread exited with the request in flight"));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("executor dropped response"));
+                }
+            }
+        }
+    }
+
+    fn call_vec(&self, make: impl FnOnce(Sender<Resp>) -> Job) -> Result<Vec<f32>> {
+        match self.call(make)? {
+            Resp::Vec(r) => r,
+            _ => Err(anyhow!("executor protocol mismatch")),
+        }
     }
 
     /// Evaluate a level's eps network on a flattened `[n, dim]` batch.
     pub fn eps(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
-        let (resp, rx) = channel();
-        self.call(Job::Eps { level, x: x.to_vec(), t, pallas: false, resp }, rx)
+        let x = pooled_copy(x);
+        self.call_vec(|resp| Job::Eps { level, x, t, pallas: false, resp })
     }
 
     /// Same through the Pallas-flavour parity artifact.
     pub fn eps_pallas(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
-        let (resp, rx) = channel();
-        self.call(Job::Eps { level, x: x.to_vec(), t, pallas: true, resp }, rx)
+        let x = pooled_copy(x);
+        self.call_vec(|resp| Job::Eps { level, x, t, pallas: true, resp })
     }
 
     /// Evaluate (eps, ∂eps·v).
     pub fn eps_jvp(&self, level: usize, x: &[f32], t: f64, v: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let (resp, rx) = channel();
-        self.call(Job::EpsJvp { level, x: x.to_vec(), t, v: v.to_vec(), resp }, rx)
+        let x = pooled_copy(x);
+        let v = pooled_copy(v);
+        match self.call(|resp| Job::EpsJvp { level, x, t, v, resp })? {
+            Resp::Pair(r) => r,
+            _ => Err(anyhow!("executor protocol mismatch")),
+        }
     }
 
     /// Fused ML-EM combine step (see `engine::Engine::combine`).
@@ -159,38 +310,35 @@ impl ExecutorHandle {
         sigma: f64,
         pallas: bool,
     ) -> Result<Vec<f32>> {
-        let (resp, rx) = channel();
-        self.call(
-            Job::Combine {
-                y: y.to_vec(),
-                deltas: deltas.to_vec(),
-                coeffs: coeffs.to_vec(),
-                z: z.to_vec(),
-                eta,
-                sigma,
-                pallas,
-                resp,
-            },
-            rx,
-        )
+        let y = pooled_copy(y);
+        let deltas = pooled_copy(deltas);
+        let coeffs = pooled_copy(coeffs);
+        let z = pooled_copy(z);
+        self.call_vec(|resp| Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp })
     }
 
     /// Measure per-level cost in seconds/image (see engine).
     pub fn measure_costs(&self, reps: usize) -> Result<Vec<f64>> {
-        let (resp, rx) = channel();
-        self.call(Job::MeasureCosts { reps, resp }, rx)
+        match self.call(|resp| Job::MeasureCosts { reps, resp })? {
+            Resp::Costs(r) => r,
+            _ => Err(anyhow!("executor protocol mismatch")),
+        }
     }
 
     /// Pre-compile all levels at a bucket size.
     pub fn warmup(&self, bucket: usize) -> Result<()> {
-        let (resp, rx) = channel();
-        self.call(Job::Warmup { bucket, resp }, rx)
+        match self.call(|resp| Job::Warmup { bucket, resp })? {
+            Resp::Unit(r) => r,
+            _ => Err(anyhow!("executor protocol mismatch")),
+        }
     }
 
-    /// (execute-call count, cumulative ns inside PJRT execute).
-    pub fn exec_stats(&self) -> Result<(u64, u64)> {
-        let (resp, rx) = channel();
-        self.call(Job::ExecStats { resp }, rx)
+    /// Execute-call and buffer-reuse counters (see [`ExecStats`]).
+    pub fn exec_stats(&self) -> Result<ExecStats> {
+        match self.call(|resp| Job::ExecStats { resp })? {
+            Resp::Stats(r) => r,
+            _ => Err(anyhow!("executor protocol mismatch")),
+        }
     }
 
     /// Ask the executor thread to exit.

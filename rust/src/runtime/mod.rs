@@ -18,7 +18,9 @@ pub mod engine;
 pub mod executor;
 pub mod manifest;
 pub mod neural;
+#[cfg(not(feature = "xla"))]
+pub(crate) mod xla_shim;
 
-pub use executor::{spawn_executor, ExecutorHandle};
+pub use executor::{spawn_executor, ExecStats, ExecutorHandle};
 pub use manifest::Manifest;
 pub use neural::NeuralDenoiser;

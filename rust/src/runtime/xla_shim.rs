@@ -1,0 +1,89 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The container build has no XLA toolchain, so the real bindings are
+//! behind the (off-by-default) `xla` cargo feature; this shim mirrors
+//! exactly the API surface `engine.rs` uses.  `PjRtClient::cpu()` fails,
+//! which routes every executor job through the engine-unavailable drain
+//! (benches print their skip notice, artifact-less tests pass), while
+//! all downstream methods typecheck so the engine compiles unchanged.
+
+// Several stub types exist only in type position (they are never
+// constructed because `PjRtClient::cpu()` fails first).
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+fn unavailable() -> anyhow::Error {
+    anyhow!("PJRT backend not compiled in (build with the `xla` feature and the xla bindings crate)")
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_v: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}

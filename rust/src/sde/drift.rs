@@ -6,6 +6,32 @@
 
 use super::schedule;
 
+/// Central-difference JVP shared by the [`Drift`] and [`Denoiser`]
+/// default implementations: `out_jv ← (f(x + h·v) − f(x − h·v)) / 2h`
+/// with pooled scratch (no per-call allocations).
+fn central_diff_jvp(
+    eval: impl Fn(&[f32], &mut [f32]),
+    x: &[f32],
+    v: &[f32],
+    out_jv: &mut [f32],
+) {
+    let h = 1e-3f32;
+    let pool = crate::parallel::global_f32();
+    let mut xp = pool.take(x.len());
+    let mut xm = pool.take(x.len());
+    for i in 0..x.len() {
+        xp[i] = x[i] + h * v[i];
+        xm[i] = x[i] - h * v[i];
+    }
+    let mut fp = pool.take(x.len());
+    let mut fm = pool.take(x.len());
+    eval(&xp, &mut fp);
+    eval(&xm, &mut fm);
+    for i in 0..x.len() {
+        out_jv[i] = (fp[i] - fm[i]) / (2.0 * h);
+    }
+}
+
 /// A time-dependent vector field `f_t(x)` over batched states.
 pub trait Drift: Sync {
     /// State dimensionality per batch element.
@@ -18,23 +44,11 @@ pub trait Drift: Sync {
     /// `∂f_t/∂x · v` into `out_jv`.  Needed by the adaptive learner's
     /// forward-gradient pass; default falls back to central differences
     /// (2 extra evals — fine for analytic drifts, overridden by neural
-    /// drifts with exported JVP artifacts).
+    /// drifts with exported JVP artifacts).  Scratch comes from the
+    /// process-wide pool: no per-call allocations.
     fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
         self.eval(x, t, out_f);
-        let h = 1e-3f32;
-        let mut xp = x.to_vec();
-        let mut xm = x.to_vec();
-        for i in 0..x.len() {
-            xp[i] += h * v[i];
-            xm[i] -= h * v[i];
-        }
-        let mut fp = vec![0.0f32; x.len()];
-        let mut fm = vec![0.0f32; x.len()];
-        self.eval(&xp, t, &mut fp);
-        self.eval(&xm, t, &mut fm);
-        for i in 0..x.len() {
-            out_jv[i] = (fp[i] - fm[i]) / (2.0 * h);
-        }
+        central_diff_jvp(|xx, oo| self.eval(xx, t, oo), x, v, out_jv);
     }
 
     /// Relative compute cost of one batch-element evaluation (arbitrary
@@ -59,23 +73,11 @@ pub trait Denoiser: Sync {
     /// Predict the noise for a batch.
     fn eps(&self, x: &[f32], t: f64, out: &mut [f32]);
 
-    /// JVP of `eps` w.r.t. `x` (defaults to central differences).
+    /// JVP of `eps` w.r.t. `x` (defaults to central differences, with
+    /// pooled scratch — no per-call allocations).
     fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
         self.eps(x, t, out_eps);
-        let h = 1e-3f32;
-        let mut xp = x.to_vec();
-        let mut xm = x.to_vec();
-        for i in 0..x.len() {
-            xp[i] += h * v[i];
-            xm[i] -= h * v[i];
-        }
-        let mut fp = vec![0.0f32; x.len()];
-        let mut fm = vec![0.0f32; x.len()];
-        self.eps(&xp, t, &mut fp);
-        self.eps(&xm, t, &mut fm);
-        for i in 0..x.len() {
-            out_jv[i] = (fp[i] - fm[i]) / (2.0 * h);
-        }
+        central_diff_jvp(|xx, oo| self.eps(xx, t, oo), x, v, out_jv);
     }
 
     /// Relative cost of one image evaluation.
@@ -255,17 +257,22 @@ impl<'a> Drift for SumDrift<'a> {
 
     fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
         self.a.eval(x, t, out);
-        let mut tmp = vec![0.0f32; x.len()];
+        let pool = crate::parallel::global_f32();
+        let mut tmp = pool.take(x.len());
         self.b.eval(x, t, &mut tmp);
-        for i in 0..out.len() {
-            out[i] += tmp[i];
-        }
+        // memory-bound elementwise add: sharded only for very wide batches
+        crate::parallel::par_map_rows_light(&tmp, out, self.dim(), |_, tc, oc| {
+            for i in 0..oc.len() {
+                oc[i] += tc[i];
+            }
+        });
     }
 
     fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
         self.a.jvp(x, t, v, out_f, out_jv);
-        let mut tf = vec![0.0f32; x.len()];
-        let mut tj = vec![0.0f32; x.len()];
+        let pool = crate::parallel::global_f32();
+        let mut tf = pool.take(x.len());
+        let mut tj = pool.take(x.len());
         self.b.jvp(x, t, v, &mut tf, &mut tj);
         for i in 0..out_f.len() {
             out_f[i] += tf[i];

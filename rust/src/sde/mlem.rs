@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 use super::brownian::BrownianPath;
 use super::drift::Drift;
 use super::em::TimeGrid;
+use crate::parallel::{self, Shard};
 use crate::util::rng::Rng;
 
 /// How Bernoulli level draws relate to the generation batch.
@@ -99,11 +100,105 @@ impl SampleReport {
     }
 }
 
+/// Read-only per-step context shared by every fused-update shard.
+struct StepCtx<'a> {
+    dim: usize,
+    batch: usize,
+    eta: f32,
+    gt: f32,
+    mode: BernoulliMode,
+    /// Which levels fired this step.
+    fired: &'a [bool],
+    /// Clamped level probabilities at this step's time.
+    probs: &'a [f64],
+    /// Full-batch level evaluations, index = level.
+    cache: &'a [Vec<f32>],
+    /// Per-sample `B/p` weights, laid out `[level][batch]` (PerSample).
+    coeff: &'a [f32],
+    /// Full-width Brownian increment (valid only when `gt != 0`).
+    dw: &'a [f32],
+}
+
+impl<'a> StepCtx<'a> {
+    /// Fused accumulate + Euler update for one shard of batch rows:
+    /// every fired level's weighted delta is added to `total`, then the
+    /// state update streams `total`, `dw` and `x` through each cache
+    /// line exactly once.  `total` arrives pre-filled with the base part
+    /// and `x`/`total` are this shard's chunks; per-element operations
+    /// and their order match the historical serial loops exactly, so the
+    /// result is bit-identical for any shard count.
+    fn fused_rows(&self, shard: Shard, total: &mut [f32], x: &mut [f32]) {
+        let dim = self.dim;
+        let lo = shard.start * dim;
+        let n = shard.len * dim;
+        debug_assert_eq!(total.len(), n);
+        debug_assert_eq!(x.len(), n);
+        for (k, &hit) in self.fired.iter().enumerate() {
+            if !hit {
+                continue;
+            }
+            let fk = &self.cache[k][lo..lo + n];
+            match self.mode {
+                BernoulliMode::Shared => {
+                    let w = (1.0 / self.probs[k]) as f32;
+                    if k == 0 {
+                        for j in 0..n {
+                            total[j] += w * fk[j];
+                        }
+                    } else {
+                        let fkm = &self.cache[k - 1][lo..lo + n];
+                        for j in 0..n {
+                            total[j] += w * (fk[j] - fkm[j]);
+                        }
+                    }
+                }
+                BernoulliMode::PerSample => {
+                    for r in 0..shard.len {
+                        let w = self.coeff[k * self.batch + shard.start + r];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let off = r * dim;
+                        if k == 0 {
+                            for j in off..off + dim {
+                                total[j] += w * fk[j];
+                            }
+                        } else {
+                            let fkm = &self.cache[k - 1][lo..lo + n];
+                            for j in off..off + dim {
+                                total[j] += w * (fk[j] - fkm[j]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if self.gt != 0.0 {
+            let dw = &self.dw[lo..lo + n];
+            for j in 0..n {
+                x[j] += self.eta * total[j] + self.gt * dw[j];
+            }
+        } else {
+            for j in 0..n {
+                x[j] += self.eta * total[j];
+            }
+        }
+    }
+}
+
 /// Run the ML-EM sampler over `grid`, mutating the `[batch, dim]` state
 /// `x` in place.  `g` is the diffusion coefficient (0 for ODE mode);
 /// `bern` drives the level Bernoullis (the Brownian noise lives in
 /// `path`, so Fig 1's best-of-R trick resamples `bern` while keeping the
 /// path fixed).
+///
+/// Hot-path contract: all scratch comes from the process-wide
+/// [`crate::parallel`] pools (steady state allocates nothing), leaf
+/// drifts shard their batch across `PALLAS_THREADS` scoped threads, and
+/// the accumulate/update loops are fused per shard.  Bernoulli draws
+/// stay on one serial RNG stream, so trajectories and
+/// [`SampleReport`] accounting are **bit-identical for every thread
+/// count** (property-tested in `tests/parity_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn mlem_sample(
     family: &MlemFamily,
@@ -128,15 +223,17 @@ pub fn mlem_sample(
     let mut report = SampleReport::new(nk);
     report.steps = grid.n;
 
-    // Scratch: per-level eval cache + accumulators (allocated once).
-    let mut cache: Vec<Vec<f32>> = (0..nk).map(|_| vec![0.0f32; x.len()]).collect();
+    // Scratch from the global pool: per-level eval cache, accumulator,
+    // Brownian increment, per-(level, sample) coefficients.
+    let pool = parallel::global_f32();
+    let width = x.len();
+    let mut cache: Vec<Vec<f32>> = (0..nk).map(|_| pool.take_vec(width)).collect();
+    let mut total = pool.take_vec(width);
+    let mut dw = pool.take_vec(width);
+    let mut coeff = pool.take_vec(nk * batch);
     let mut cached = vec![false; nk];
-    let mut total = vec![0.0f32; x.len()];
-    let mut dw = vec![0.0f32; x.len()];
-    let mut coeff = vec![0.0f32; batch]; // per-sample B/p for one level
     let mut fired = vec![false; nk];
     let mut probs = vec![0.0f64; nk];
-    let mut any_fired_per_level = vec![false; nk];
 
     for i in 0..grid.n {
         let t = grid.t(i);
@@ -150,6 +247,9 @@ pub fn mlem_sample(
         }
 
         // 2. Draw Bernoullis and decide which levels must be evaluated.
+        //    Serial, single RNG stream: the draw order (level-major,
+        //    sample-minor) is part of the reproducibility contract and is
+        //    independent of the thread count.
         for k in 0..nk {
             probs[k] = policy.prob(k, t).clamp(PROB_FLOOR, 1.0);
             report.expected_cost_units += probs[k]
@@ -157,107 +257,88 @@ pub fn mlem_sample(
                     + if k > 0 { family.levels[k - 1].cost() } else { 0.0 })
                 * batch as f64;
             fired[k] = false;
-            any_fired_per_level[k] = false;
         }
         match mode {
             BernoulliMode::Shared => {
                 for k in 0..nk {
                     if bern.bernoulli(probs[k]) {
                         fired[k] = true;
-                        any_fired_per_level[k] = true;
                     }
                 }
             }
             BernoulliMode::PerSample => {
-                // Drawn lazily below (needs per-sample coefficients).
+                for k in 0..nk {
+                    let p = probs[k] as f32;
+                    let mut any = false;
+                    for c in coeff[k * batch..(k + 1) * batch].iter_mut() {
+                        if bern.bernoulli(probs[k]) {
+                            *c = 1.0 / p;
+                            any = true;
+                        } else {
+                            *c = 0.0;
+                        }
+                    }
+                    fired[k] = any;
+                }
             }
         }
 
-        // 3. Accumulate the weighted level deltas.
+        // 3. Evaluate the levels the fired deltas need (whole-batch calls
+        //    — leaf drifts shard internally), cached so a level used as
+        //    both "upper" and "lower" runs once per step.
         for k in 0..nk {
-            // Per-sample draws for this level.
-            let mut any = fired[k];
-            if mode == BernoulliMode::PerSample {
-                any = false;
-                let p = probs[k] as f32;
-                for c in coeff.iter_mut().take(batch) {
-                    if bern.bernoulli(probs[k]) {
-                        *c = 1.0 / p;
-                        any = true;
-                    } else {
-                        *c = 0.0;
-                    }
-                }
-            }
-            if !any {
+            if !fired[k] {
                 continue;
             }
-
-            // Evaluate f^k (and f^{k-1} if it exists) with caching so a
-            // level fired as both "upper" and "lower" runs once per step.
             for l in [Some(k), k.checked_sub(1)].into_iter().flatten() {
                 if !cached[l] {
-                    let (head, tail) = cache.split_at_mut(l + 1);
-                    family.levels[l].eval(x, t, &mut head[l]);
-                    let _ = tail; // (split borrows cache disjointly)
+                    family.levels[l].eval(x, t, &mut cache[l]);
                     cached[l] = true;
                     report.batch_evals[l] += 1;
                     report.image_evals[l] += batch as u64;
                     report.cost_units += family.levels[l].cost() * batch as f64;
                 }
             }
-
-            match mode {
-                BernoulliMode::Shared => {
-                    let w = (1.0 / probs[k]) as f32;
-                    let fk = &cache[k];
-                    if k == 0 {
-                        for j in 0..x.len() {
-                            total[j] += w * fk[j];
-                        }
-                    } else {
-                        let fkm = &cache[k - 1];
-                        for j in 0..x.len() {
-                            total[j] += w * (fk[j] - fkm[j]);
-                        }
-                    }
-                }
-                BernoulliMode::PerSample => {
-                    let fk = &cache[k];
-                    for s in 0..batch {
-                        let w = coeff[s];
-                        if w == 0.0 {
-                            continue;
-                        }
-                        let off = s * dim;
-                        if k == 0 {
-                            for j in off..off + dim {
-                                total[j] += w * fk[j];
-                            }
-                        } else {
-                            let fkm = &cache[k - 1];
-                            for j in off..off + dim {
-                                total[j] += w * (fk[j] - fkm[j]);
-                            }
-                        }
-                    }
-                }
-            }
         }
 
-        // 4. State update with shared Brownian increment.
+        // 4. Fused accumulate + state update, sharded over batch rows
+        //    (memory-bound, so the light grain applies: extra threads
+        //    engage only for very wide batches).
         let gt = g(t) as f32;
         if gt != 0.0 {
             path.coarse_dw(i, grid.n, &mut dw);
-            for j in 0..x.len() {
-                x[j] += eta * total[j] + gt * dw[j];
-            }
+        }
+        let ctx = StepCtx {
+            dim,
+            batch,
+            eta,
+            gt,
+            mode,
+            fired: &fired,
+            probs: &probs,
+            cache: &cache,
+            coeff: &coeff,
+            dw: &dw,
+        };
+        let sh = parallel::light_shards(batch, dim);
+        if sh.len() <= 1 {
+            ctx.fused_rows(Shard { start: 0, len: batch }, &mut total, x);
         } else {
-            for j in 0..x.len() {
-                x[j] += eta * total[j];
-            }
+            let totals = parallel::split_rows_mut(&mut total, dim, &sh);
+            let xs = parallel::split_rows_mut(x, dim, &sh);
+            let tasks: Vec<(Shard, &mut [f32], &mut [f32])> =
+                sh.iter().copied().zip(totals).zip(xs).map(|((s, tc), xc)| (s, tc, xc)).collect();
+            parallel::run_shards(tasks, |_, (s, tc, xc)| ctx.fused_rows(s, tc, xc));
         }
     }
+
+    // Park the scratch for the next run.
+    for buf in cache {
+        pool.put(buf);
+    }
+    pool.put(total);
+    pool.put(dw);
+    pool.put(coeff);
 
     report.wall = start.elapsed();
     report

@@ -1,0 +1,151 @@
+//! Serial ↔ parallel parity: changing `PALLAS_THREADS` must not change a
+//! single bit of ML-EM output — trajectories AND `SampleReport` cost
+//! accounting — in either `BernoulliMode`.  This is the contract that
+//! makes the batch-sharded hot path safe to ship: parallelism only
+//! splits row ranges, it never reorders floating-point work.
+//!
+//! The tests in this file mutate the process-wide `PALLAS_THREADS` env
+//! knob, so they serialise on `ENV_LOCK` (the rest of the suite lives in
+//! other test binaries / processes).
+
+use std::sync::Mutex;
+
+use mlem::benchkit::{hotpath_compare, write_bench_json, HotpathConfig};
+use mlem::gmm::{assumption1_family, Gmm, LangevinDrift};
+use mlem::parallel;
+use mlem::sde::drift::Drift;
+use mlem::sde::em::TimeGrid;
+use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily, SampleReport};
+use mlem::sde::BrownianPath;
+use mlem::util::proptest_lite as pt;
+use mlem::util::rng::Rng;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// One full ML-EM run of a GMM Assumption-1 family with a pinned thread
+/// count; everything else is a pure function of the seeds.
+fn run_with_threads(
+    threads: usize,
+    seed: u64,
+    batch: usize,
+    dim: usize,
+    mode: BernoulliMode,
+    steps: usize,
+) -> (Vec<f32>, SampleReport) {
+    std::env::set_var(parallel::THREADS_ENV, threads.to_string());
+    assert_eq!(parallel::num_threads(), threads);
+    let gmm = Gmm::random(seed, 16, dim, 2.0, 0.5);
+    let lang = LangevinDrift { gmm: &gmm };
+    let ladder = assumption1_family(&lang, 1, 3, 1.0, 2.5, seed ^ 0xABCD);
+    let levels: Vec<&dyn Drift> = ladder.iter().map(|d| d as &dyn Drift).collect();
+    let fam = MlemFamily { base: None, levels };
+    let policy = |k: usize, _t: f64| [1.0, 0.4, 0.15][k];
+    let grid = TimeGrid::new(1.0, 0.0, steps);
+    let mut rng = Rng::new(seed ^ 0x1234);
+    let path = BrownianPath::sample(&mut rng, steps, batch * dim, grid.span());
+    let mut x: Vec<f32> = (0..batch * dim).map(|_| rng.normal_f32()).collect();
+    let mut bern = Rng::new(seed ^ 0x77);
+    let report = mlem_sample(&fam, &policy, mode, |_| 0.7, &mut x, batch, &grid, &path, &mut bern);
+    (x, report)
+}
+
+fn assert_identical(
+    label: &str,
+    (x_a, r_a): &(Vec<f32>, SampleReport),
+    (x_b, r_b): &(Vec<f32>, SampleReport),
+) -> Result<(), String> {
+    if x_a.len() != x_b.len() {
+        return Err(format!("{label}: state lengths differ"));
+    }
+    for (i, (a, b)) in x_a.iter().zip(x_b.iter()).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("{label}: x[{i}] differs bitwise: {a} vs {b}"));
+        }
+    }
+    if r_a.batch_evals != r_b.batch_evals || r_a.image_evals != r_b.image_evals {
+        return Err(format!(
+            "{label}: eval accounting differs: {:?}/{:?} vs {:?}/{:?}",
+            r_a.batch_evals, r_a.image_evals, r_b.batch_evals, r_b.image_evals
+        ));
+    }
+    if r_a.cost_units.to_bits() != r_b.cost_units.to_bits()
+        || r_a.expected_cost_units.to_bits() != r_b.expected_cost_units.to_bits()
+    {
+        return Err(format!(
+            "{label}: cost accounting differs: {} / {} vs {} / {}",
+            r_a.cost_units, r_a.expected_cost_units, r_b.cost_units, r_b.expected_cost_units
+        ));
+    }
+    if r_a.steps != r_b.steps {
+        return Err(format!("{label}: steps differ"));
+    }
+    Ok(())
+}
+
+#[test]
+fn mlem_bit_identical_across_thread_counts_property() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    pt::check("mlem_thread_parity", 8, |gen| {
+        let batch = gen.usize_range(1, 65);
+        let dim = [2usize, 7, 16][gen.usize_range(0, 3)];
+        let steps = gen.usize_range(4, 32);
+        let seed = gen.rng().next_u64();
+        for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
+            let serial = run_with_threads(1, seed, batch, dim, mode, steps);
+            let par = run_with_threads(4, seed, batch, dim, mode, steps);
+            assert_identical(
+                &format!("mode {mode:?} batch {batch} dim {dim} steps {steps}"),
+                &serial,
+                &par,
+            )?;
+        }
+        Ok(())
+    });
+    std::env::remove_var(parallel::THREADS_ENV);
+}
+
+#[test]
+fn mlem_bit_identical_when_shards_really_engage() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    // Heavy enough that the score kernel really shards (per-row work =
+    // 16 components × 128 dims; 64 rows ≫ HEAVY_GRAIN), with odd thread
+    // counts exercising uneven row splits.
+    assert!(64 * 16 * 128 >= 4 * parallel::HEAVY_GRAIN);
+    for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
+        let serial = run_with_threads(1, 99, 64, 128, mode, 8);
+        for threads in [2usize, 3, 5, 8] {
+            let par = run_with_threads(threads, 99, 64, 128, mode, 8);
+            assert_identical(&format!("mode {mode:?} threads {threads}"), &serial, &par)
+                .unwrap();
+        }
+    }
+    std::env::remove_var(parallel::THREADS_ENV);
+}
+
+#[test]
+fn fused_update_parity_at_light_grain_widths() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    // batch·dim = 512·256 = 131072 = 2·LIGHT_GRAIN: the fused
+    // accumulate/update path itself shards (not just the score kernel).
+    assert!(512 * 256 >= 2 * parallel::LIGHT_GRAIN);
+    for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
+        let serial = run_with_threads(1, 7, 512, 256, mode, 3);
+        let par = run_with_threads(6, 7, 512, 256, mode, 3);
+        assert_identical(&format!("light-grain fused update, mode {mode:?}"), &serial, &par)
+            .unwrap();
+    }
+    std::env::remove_var(parallel::THREADS_ENV);
+}
+
+#[test]
+fn hotpath_bench_artifact_is_produced_and_consistent() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    // The full bench workload (smaller step count to keep the suite
+    // fast): certifies bit-identity on the exact bench code path and
+    // guarantees BENCH_hotpath.json exists after `cargo test` alone.
+    let cfg = HotpathConfig { steps: 12, ..HotpathConfig::default() };
+    let j = hotpath_compare(&cfg, 2); // asserts bit-identity internally
+    assert_eq!(j.get("bit_identical"), Some(&mlem::util::json::Json::Bool(true)));
+    let path = write_bench_json("hotpath", &j).expect("write BENCH_hotpath.json");
+    assert!(path.exists());
+}

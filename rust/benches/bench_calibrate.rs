@@ -1,0 +1,68 @@
+//! Online γ-calibration headline (the PR-2 systems claim): on a GMM
+//! ladder whose exponent is known *by construction*, the blind online
+//! calibrator must rediscover γ within 10%, and the autopilot policy it
+//! derives must serve within 10% of the hand-tuned Theorem-1 policy —
+//! the repo discovering the paper's constants instead of replaying them.
+//!
+//! `cargo bench --bench bench_calibrate` → `BENCH_calibrate.json`
+
+use mlem::benchkit::{calibrate_compare, write_bench_json, CalibrateConfig};
+use mlem::util::bench::Table;
+use mlem::util::json::Json;
+
+fn num_at(j: &Json, path: &[&str]) -> f64 {
+    j.get_path(path).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = CalibrateConfig::default();
+    let j = calibrate_compare(&cfg);
+
+    let gamma_ok = j.get("gamma_within_10pct") == Some(&Json::Bool(true));
+    let mut t = Table::new(
+        "online gamma calibration",
+        &["quantity", "hand-tuned", "autopilot", "verdict"],
+    );
+    t.row(&[
+        "gamma".into(),
+        format!("{:.3} (true)", cfg.gamma),
+        format!("{:.3} +- {:.3}", num_at(&j, &["gamma_hat"]), num_at(&j, &["se_gamma"])),
+        format!(
+            "rel err {:.1}% ({})",
+            num_at(&j, &["gamma_rel_err"]) * 100.0,
+            if gamma_ok { "within 10%" } else { "OUT OF SPEC" }
+        ),
+    ]);
+    t.row(&[
+        "images/sec".into(),
+        format!("{:.1}", num_at(&j, &["hand", "images_per_sec"])),
+        format!("{:.1}", num_at(&j, &["autopilot", "images_per_sec"])),
+        format!("ratio {:.3}", num_at(&j, &["throughput_ratio_autopilot_vs_hand"])),
+    ]);
+    t.row(&[
+        "expected cost units/run".into(),
+        format!("{:.1}", num_at(&j, &["hand", "expected_cost_units"])),
+        format!("{:.1}", num_at(&j, &["autopilot", "expected_cost_units"])),
+        format!("ratio {:.4}", num_at(&j, &["expected_cost_ratio_autopilot_vs_hand"])),
+    ]);
+    t.row(&[
+        "mse vs top-level EM".into(),
+        format!("{:.5}", num_at(&j, &["hand", "mse_vs_top_em"])),
+        format!("{:.5}", num_at(&j, &["autopilot", "mse_vs_top_em"])),
+        format!(
+            "probs delta {:.2}% at gamma-hat",
+            num_at(&j, &["probs_max_rel_err_at_gamma_hat"]) * 100.0
+        ),
+    ]);
+    t.emit();
+
+    println!(
+        "Reading: the calibrator never sees the constructed exponent — it probes live\n\
+         batches, fits eps ~ T^(-1/gamma) across the ladder, and solves the Theorem-1\n\
+         scale for the hand policy's budget.  Matching probs/cost means a production\n\
+         coordinator can derive its serving ladder from traffic alone.\n"
+    );
+    let path = write_bench_json("calibrate", &j)?;
+    println!("[json] {}", path.display());
+    Ok(())
+}

@@ -58,7 +58,9 @@ fn main() -> anyhow::Result<()> {
     // measured pure-execute time reported by exec_stats deltas.  The
     // pool hit/miss counters printed before and after the workload are
     // the zero-copy evidence: steady-state requests ride pooled buffers
-    // (hits grow), fresh allocations (misses) stay flat.
+    // (hits grow), fresh allocations (misses) stay flat.  The counters
+    // read the executor's *own* payload pool, so sampler scratch traffic
+    // on the global pools cannot dilute them.
     let x1 = rng.normal_vec_f32(dim);
     handle.eps(1, &x1, 0.5)?;
     let s0 = handle.exec_stats()?;

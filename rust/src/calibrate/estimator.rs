@@ -1,0 +1,267 @@
+//! Streaming per-level cost and inter-level error estimators.
+//!
+//! The raw material of the online γ fit: for every ladder member `f^k`
+//! the calibrator tracks
+//!
+//! * `T̂_k` — an EWMA of measured (or declared) per-image evaluation
+//!   cost, observed by the scheduler on sampled live batches, and
+//! * `Ê_k` — an EWMA of the per-image inter-level error
+//!   `E‖f^k(x_t) − f^{k−1}(x_t)‖²` (with `f^{−1} ≡ 0`, so `Ê_0` is the
+//!   squared norm of the lowest level itself — the same convention the
+//!   ML-EM sampler uses for its telescoping deltas).
+//!
+//! [`probe_family`] produces one `(T, E)` observation per level from a
+//! single batch.  All probe scratch comes from the process-wide
+//! [`crate::parallel`] pools, so sampling a fraction of live traffic
+//! adds no steady-state allocations to the serving path.
+
+use std::time::Instant;
+
+use crate::parallel;
+use crate::sde::drift::Drift;
+
+/// Exponentially weighted moving average.  The first observation seeds
+/// the value directly (no bias-correction bookkeeping needed).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    count: u64,
+}
+
+impl Ewma {
+    /// `alpha` is the weight of a fresh observation (0 < alpha <= 1).
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma { alpha: alpha.clamp(1e-6, 1.0), value: 0.0, count: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        if self.count == 0 {
+            self.value = x;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.count += 1;
+    }
+
+    /// Current estimate; `None` before the first observation.
+    pub fn value(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.value)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Where a probe's per-level cost observation comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostSource {
+    /// Wall-clock seconds per image, timed around the eval call — the
+    /// production source (neural levels through the executor).
+    Measured,
+    /// The drift's declared [`Drift::cost`] — used by the GMM substrate,
+    /// whose constructed ladders declare `T_k ∝ 2^{γk}` but execute in
+    /// near-constant wall time.
+    Declared,
+}
+
+/// One probe's worth of per-level observations (index = ladder position).
+#[derive(Clone, Debug)]
+pub struct ProbeSample {
+    /// Per-image evaluation cost of each level.
+    pub costs: Vec<f64>,
+    /// Per-image `‖f^k − f^{k−1}‖²` (index 0: `‖f^0‖²`).
+    pub err2: Vec<f64>,
+}
+
+/// Evaluate every ladder member on one `[n, dim]` batch and measure the
+/// per-level costs and adjacent-level errors.  Scratch is pooled; the
+/// per-row arithmetic reuses the drifts' own (possibly sharded) eval.
+pub fn probe_family(levels: &[&dyn Drift], x: &[f32], t: f64, source: CostSource) -> ProbeSample {
+    assert!(!levels.is_empty(), "probe needs at least one level");
+    let dim = levels[0].dim();
+    assert!(dim > 0 && x.len() % dim == 0, "probe batch shape mismatch");
+    let n = x.len() / dim;
+    assert!(n > 0, "probe needs at least one row");
+
+    let pool = parallel::global_f32();
+    let mut prev = pool.take(x.len());
+    let mut cur = pool.take(x.len());
+    let mut costs = Vec::with_capacity(levels.len());
+    let mut err2 = Vec::with_capacity(levels.len());
+    for (k, level) in levels.iter().enumerate() {
+        let t0 = Instant::now();
+        level.eval(x, t, &mut cur);
+        let secs = t0.elapsed().as_secs_f64();
+        costs.push(match source {
+            CostSource::Measured => secs / n as f64,
+            CostSource::Declared => level.cost(),
+        });
+        let d2: f64 = if k == 0 {
+            cur.iter().map(|&v| (v as f64) * (v as f64)).sum()
+        } else {
+            cur.iter()
+                .zip(prev.iter())
+                .map(|(&a, &b)| {
+                    let d = (a - b) as f64;
+                    d * d
+                })
+                .sum()
+        };
+        err2.push(d2 / n as f64);
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    ProbeSample { costs, err2 }
+}
+
+/// Per-level estimate snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct LevelEstimate {
+    /// EWMA per-image cost `T̂_k`.
+    pub cost: f64,
+    /// EWMA inter-level error `Ê_k`.
+    pub err2: f64,
+    /// Observations folded into both EWMAs.
+    pub probes: u64,
+}
+
+/// Streaming estimates for a whole ladder.
+#[derive(Clone, Debug)]
+pub struct LadderEstimator {
+    costs: Vec<Ewma>,
+    err2: Vec<Ewma>,
+    probes: u64,
+}
+
+impl LadderEstimator {
+    pub fn new(levels: usize, alpha: f64) -> LadderEstimator {
+        LadderEstimator {
+            costs: (0..levels).map(|_| Ewma::new(alpha)).collect(),
+            err2: (0..levels).map(|_| Ewma::new(alpha)).collect(),
+            probes: 0,
+        }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+
+    /// Fold one probe into the EWMAs (sample lengths must match).
+    pub fn record(&mut self, sample: &ProbeSample) {
+        assert_eq!(sample.costs.len(), self.costs.len(), "probe ladder size mismatch");
+        assert_eq!(sample.err2.len(), self.err2.len(), "probe ladder size mismatch");
+        for (e, &x) in self.costs.iter_mut().zip(&sample.costs) {
+            e.observe(x);
+        }
+        for (e, &x) in self.err2.iter_mut().zip(&sample.err2) {
+            e.observe(x);
+        }
+        self.probes += 1;
+    }
+
+    /// Current per-level estimates; `None` until every level has at
+    /// least one observation.
+    pub fn estimates(&self) -> Option<Vec<LevelEstimate>> {
+        self.costs
+            .iter()
+            .zip(&self.err2)
+            .map(|(c, e)| {
+                Some(LevelEstimate {
+                    cost: c.value()?,
+                    err2: e.value()?,
+                    probes: c.count().min(e.count()),
+                })
+            })
+            .collect()
+    }
+
+    /// `(T̂_k, δ̂_k)` pairs for the γ fit: the *inter-level* points
+    /// `k ≥ 1` only (level 0's "delta" is the field itself — O(1), not
+    /// on the Assumption-1 power law).  Errors are returned as RMS
+    /// (`sqrt(Ê_k)`), matching the paper's `ε ∝ T^{−1/γ}` axis.
+    pub fn fit_points(&self) -> Option<(Vec<f64>, Vec<f64>)> {
+        let est = self.estimates()?;
+        if est.len() < 2 {
+            return None;
+        }
+        let costs: Vec<f64> = est[1..].iter().map(|e| e.cost).collect();
+        let errs: Vec<f64> = est[1..].iter().map(|e| e.err2.max(0.0).sqrt()).collect();
+        Some((costs, errs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::{assumption1_family, Gmm, LangevinDrift};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        e.observe(10.0);
+        assert_eq!(e.value(), Some(10.0));
+        e.observe(20.0);
+        assert!((e.value().unwrap() - 15.0).abs() < 1e-12);
+        assert_eq!(e.count(), 2);
+        e.observe(f64::NAN); // ignored
+        assert_eq!(e.count(), 2);
+    }
+
+    #[test]
+    fn probe_measures_constructed_ladder_errors() {
+        // Assumption-1 ladder: adjacent deltas are bounded sinusoidal
+        // bumps of amplitude 2^{-k} (level k) minus 2^{-(k-1)}, so the
+        // per-image squared delta must sit within the triangle bounds
+        // (|a| - |b|)^2 .. (|a| + |b|)^2 of the two bump amplitudes.
+        let gmm = Gmm::random(3, 4, 6, 2.0, 0.5);
+        let lang = LangevinDrift { gmm: &gmm };
+        let ladder = assumption1_family(&lang, 1, 3, 1.0, 2.5, 77);
+        let levels: Vec<&dyn Drift> = ladder.iter().map(|d| d as &dyn Drift).collect();
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec_f32(64 * 6);
+        let s = probe_family(&levels, &x, 0.0, CostSource::Declared);
+        assert_eq!(s.costs.len(), 3);
+        assert_eq!(s.err2.len(), 3);
+        // declared costs pass through
+        for (c, l) in s.costs.iter().zip(&ladder) {
+            assert!((c - l.cost).abs() < 1e-12);
+        }
+        // inter-level deltas bounded by the construction
+        for k in 1..3 {
+            let hi: f64 = 2f64.powi(-(k as i32 + 1)) + 2f64.powi(-(k as i32));
+            assert!(s.err2[k] > 0.0, "delta {k} must be non-degenerate");
+            assert!(s.err2[k] <= hi * hi * 1.0001, "delta {k}: {} > {}", s.err2[k], hi * hi);
+        }
+        // level-0 "delta" is the full field: much larger than the bumps
+        assert!(s.err2[0] > s.err2[1]);
+    }
+
+    #[test]
+    fn ladder_estimator_converges_to_mean_of_probes() {
+        let mut est = LadderEstimator::new(2, 0.3);
+        assert!(est.estimates().is_none());
+        for i in 0..200 {
+            // costs fixed, errors alternate around a mean of 4.0
+            let e = if i % 2 == 0 { 3.0 } else { 5.0 };
+            est.record(&ProbeSample { costs: vec![1.0, 8.0], err2: vec![10.0, e] });
+        }
+        let snap = est.estimates().unwrap();
+        assert_eq!(est.probes(), 200);
+        assert!((snap[0].cost - 1.0).abs() < 1e-9);
+        assert!((snap[1].cost - 8.0).abs() < 1e-9);
+        assert!((snap[1].err2 - 4.0).abs() < 1.1, "EWMA around the mean");
+        let (costs, errs) = est.fit_points().unwrap();
+        assert_eq!(costs, vec![8.0]);
+        assert!((errs[0] - snap[1].err2.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Fitting the HTMC exponent γ from streamed (cost, error) pairs.
+//!
+//! The paper's Assumption 1 ties per-level error and cost through
+//! `ε_k ∝ T_k^{−1/γ}` — a straight line of slope `−1/γ` in log–log
+//! space.  [`fit_gamma`] performs the ordinary least-squares fit (same
+//! estimator as the offline `bench_figure2_gamma`, but over the
+//! calibrator's live EWMA points) and additionally reports a
+//! delta-method standard error for γ̂ so the autopilot can refuse to act
+//! on noise.  [`drifted`] is the refit trigger: when fresh estimates
+//! stray from the last fitted line by more than a log-space tolerance,
+//! the workload has changed (new model family, different traffic
+//! distribution) and the ladder must be recalibrated.
+
+/// A fitted exponent with uncertainty.
+#[derive(Clone, Copy, Debug)]
+pub struct GammaFit {
+    /// The HTMC exponent estimate `γ̂ = −1/slope`.
+    pub gamma: f64,
+    /// Log–log slope (`≈ −1/γ`).
+    pub slope: f64,
+    /// Log–log intercept (`ln c` of `ε = c·T^{−1/γ}`).
+    pub intercept: f64,
+    /// Coefficient of determination of the log–log fit.
+    pub r2: f64,
+    /// Delta-method standard error of γ̂ (0 when there are too few
+    /// points for a residual estimate, i.e. fewer than 3).
+    pub se_gamma: f64,
+    /// Number of (cost, error) pairs used.
+    pub points: usize,
+}
+
+/// OLS fit of `ln err = slope·ln cost + intercept` with slope standard
+/// error.  Returns `None` when fewer than two strictly positive pairs
+/// exist, when the costs are degenerate, or when the slope is
+/// non-negative (errors that don't decay with cost admit no γ).
+pub fn fit_gamma(costs: &[f64], errs: &[f64]) -> Option<GammaFit> {
+    assert_eq!(costs.len(), errs.len());
+    let pts: Vec<(f64, f64)> = costs
+        .iter()
+        .zip(errs)
+        .filter(|(&c, &e)| c > 0.0 && e > 0.0)
+        .map(|(&c, &e)| (c.ln(), e.ln()))
+        .collect();
+    let n = pts.len();
+    if n < 2 {
+        return None;
+    }
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n as f64;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n as f64;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for &(x, y) in &pts {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 {
+        return None;
+    }
+    let slope = sxy / sxx;
+    if slope >= 0.0 {
+        return None;
+    }
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    // Residual variance needs n − 2 degrees of freedom; with exactly two
+    // points the line interpolates and the error is unknowable (0 here).
+    let se_slope = if n > 2 {
+        let sse = (syy - slope * sxy).max(0.0);
+        (sse / (n - 2) as f64 / sxx).sqrt()
+    } else {
+        0.0
+    };
+    let gamma = -1.0 / slope;
+    // Delta method: γ = −1/b  ⇒  se_γ ≈ se_b / b².
+    let se_gamma = se_slope / (slope * slope);
+    Some(GammaFit { gamma, slope, intercept, r2, se_gamma, points: n })
+}
+
+/// Largest absolute log-space residual of fresh `(cost, err)` points
+/// against a previous fit — the drift statistic.
+pub fn max_log_residual(fit: &GammaFit, costs: &[f64], errs: &[f64]) -> f64 {
+    costs
+        .iter()
+        .zip(errs)
+        .filter(|(&c, &e)| c > 0.0 && e > 0.0)
+        .map(|(&c, &e)| (e.ln() - (fit.intercept + fit.slope * c.ln())).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Drift trigger: fresh estimates sit off the fitted line by more than
+/// `tol` in log space (`tol = 0.5` ≈ a factor of `e^0.5 ≈ 1.65`).
+pub fn drifted(fit: &GammaFit, costs: &[f64], errs: &[f64], tol: f64) -> bool {
+    max_log_residual(fit, costs, errs) > tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power_law(gamma: f64, c: f64, costs: &[f64]) -> Vec<f64> {
+        costs.iter().map(|t| c * t.powf(-1.0 / gamma)).collect()
+    }
+
+    #[test]
+    fn recovers_exact_power_law() {
+        let gamma = 2.5;
+        let costs: Vec<f64> = (1..=5).map(|k| 2f64.powf(gamma * k as f64)).collect();
+        let errs = power_law(gamma, 3.0, &costs);
+        let f = fit_gamma(&costs, &errs).unwrap();
+        assert!((f.gamma - gamma).abs() < 1e-9, "gamma {}", f.gamma);
+        assert!((f.intercept - 3f64.ln()).abs() < 1e-9);
+        assert!((f.r2 - 1.0).abs() < 1e-9);
+        assert!(f.se_gamma < 1e-9, "noise-free fit has ~0 se");
+        assert_eq!(f.points, 5);
+    }
+
+    #[test]
+    fn se_grows_with_noise() {
+        let gamma = 2.0;
+        let costs: Vec<f64> = (1..=6).map(|k| 4f64.powi(k)).collect();
+        let clean = power_law(gamma, 1.0, &costs);
+        let noisy: Vec<f64> = clean
+            .iter()
+            .enumerate()
+            .map(|(i, e)| e * if i % 2 == 0 { 1.4 } else { 0.7 })
+            .collect();
+        let f0 = fit_gamma(&costs, &clean).unwrap();
+        let f1 = fit_gamma(&costs, &noisy).unwrap();
+        assert!(f1.se_gamma > f0.se_gamma);
+        assert!(f1.se_gamma > 0.0);
+        // still in the right ballpark
+        assert!((f1.gamma - gamma).abs() / gamma < 0.25, "gamma {}", f1.gamma);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(fit_gamma(&[1.0], &[1.0]).is_none(), "one point");
+        assert!(fit_gamma(&[1.0, 1.0], &[1.0, 2.0]).is_none(), "zero cost variance");
+        assert!(fit_gamma(&[1.0, 2.0], &[1.0, 2.0]).is_none(), "growing errors");
+        assert!(fit_gamma(&[0.0, -1.0], &[1.0, 1.0]).is_none(), "non-positive pairs");
+    }
+
+    #[test]
+    fn two_points_fit_with_zero_se() {
+        let f = fit_gamma(&[1.0, 32.0], &[1.0, 0.25]).unwrap();
+        assert_eq!(f.points, 2);
+        assert_eq!(f.se_gamma, 0.0);
+        assert!(f.gamma > 0.0);
+    }
+
+    #[test]
+    fn drift_detector_fires_on_regime_change() {
+        let gamma = 2.5;
+        let costs: Vec<f64> = (1..=4).map(|k| 2f64.powf(gamma * k as f64)).collect();
+        let errs = power_law(gamma, 1.0, &costs);
+        let f = fit_gamma(&costs, &errs).unwrap();
+        assert!(!drifted(&f, &costs, &errs, 0.1), "clean points must not drift");
+        // errors doubled: log residual = ln 2 ≈ 0.69
+        let shifted: Vec<f64> = errs.iter().map(|e| e * 2.0).collect();
+        assert!(drifted(&f, &costs, &shifted, 0.5));
+        assert!(!drifted(&f, &costs, &shifted, 0.8), "tolerance respected");
+        assert!((max_log_residual(&f, &costs, &shifted) - 2f64.ln()).abs() < 1e-9);
+    }
+}

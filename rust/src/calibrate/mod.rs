@@ -1,0 +1,463 @@
+//! Online γ-calibration: measure the HTMC exponent from live traffic
+//! and auto-derive the Theorem-1-optimal level ladder.
+//!
+//! The paper's speedup claim rests on one measured quantity — the HTMC
+//! exponent γ (≈2.5 on CelebA) — yet a static deployment has to be
+//! handed γ and the level probabilities as config.  This subsystem turns
+//! the coordinator into its own instrument, in three stages:
+//!
+//! | file | role |
+//! |---|---|
+//! | [`estimator`] | streaming per-level cost `T̂_k` and inter-level error `Ê_k` EWMAs, fed by probes on a sampled fraction of live batches (pooled scratch, no steady-state allocations) |
+//! | [`fit`] | log–log least squares `ε ∝ T^{−1/γ}` ⇒ γ̂ with a delta-method standard error, plus residual-based drift detection |
+//! | [`autopilot`] | solve the Theorem-1 scale for a compute budget, drop levels that don't pay for themselves, emit a live [`Policy::FixedTheory`] |
+//!
+//! [`Calibrator`] owns the cadence: `should_probe` gates which batches
+//! get probed, `record` folds a probe in, and `maybe_refit` refits γ̂ on
+//! a probe-count cadence — or early, when drift detection says the
+//! fitted line no longer describes the traffic.  The derived policy is
+//! swapped into the scheduler atomically (single mutex, cloned out per
+//! request); the `calibration` admin request exposes every number here
+//! and accepts a `set_budget` knob (see `coordinator::protocol`).
+//!
+//! The cost/error-driven adaptivity mirrors MSE-adaptive MLMC (Hoel et
+//! al.) and small-noise MLMC level allocation (Anderson–Higham): level
+//! schedules derived from measured statistics, not a priori constants.
+
+pub mod autopilot;
+pub mod estimator;
+pub mod fit;
+
+use std::sync::Mutex;
+
+pub use autopilot::{derive, DerivedPolicy};
+pub use estimator::{probe_family, CostSource, LadderEstimator, LevelEstimate, ProbeSample};
+pub use fit::{fit_gamma, GammaFit};
+
+use crate::levels::Policy;
+use crate::util::json::Json;
+
+/// Calibration knobs (`ServeConfig` carries the serving-facing subset).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// Probe every Nth batch (0 disables probing entirely).
+    pub sample_every: usize,
+    /// Refit γ̂ after this many fresh probes.
+    pub refit_every: usize,
+    /// Expected per-image per-step compute budget, in the same cost
+    /// units as the tracked `T̂_k`.  0 = auto: match the expected step
+    /// cost of the baseline inverse-cost policy (so switching the
+    /// autopilot on is cost-neutral by construction).
+    pub budget: f64,
+    /// Swap the derived policy into live serving; when false the
+    /// calibrator only observes and reports.
+    pub autopilot: bool,
+    /// Log-space residual tolerance that triggers an early refit.
+    pub drift_tol: f64,
+    /// EWMA weight of a fresh probe.
+    pub ewma_alpha: f64,
+    /// Never derive a ladder shorter than this.
+    pub min_levels: usize,
+    /// The baseline policy's `prob_scale` (for the auto budget).
+    pub baseline_scale: f64,
+    /// Noise gate: a fit with ≥ 3 points must reach this log–log `r²`
+    /// before it (and its derived policy) is installed.  A 2-point fit
+    /// interpolates exactly, so the gate cannot apply there — the EWMA
+    /// smoothing over `refit_every` probes is the mitigation instead.
+    pub min_r2: f64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> CalibConfig {
+        CalibConfig {
+            sample_every: 16,
+            refit_every: 8,
+            budget: 0.0,
+            autopilot: true,
+            drift_tol: 0.5,
+            ewma_alpha: 0.2,
+            min_levels: 1,
+            baseline_scale: 1.0,
+            min_r2: 0.8,
+        }
+    }
+}
+
+struct CalibState {
+    est: LadderEstimator,
+    /// Batches seen by `should_probe` (probe cadence counter).
+    batches: u64,
+    probes_since_fit: u64,
+    fit: Option<GammaFit>,
+    derived: Option<DerivedPolicy>,
+    /// Live budget (admin-settable); 0 = auto.
+    budget: f64,
+    refits: u64,
+}
+
+/// Thread-safe online calibrator for one serving ladder.  All methods
+/// take `&self`; a single mutex guards the streaming state (calls happen
+/// per *batch* on a sampled fraction — never inside the per-step hot
+/// loop).
+pub struct Calibrator {
+    cfg: CalibConfig,
+    state: Mutex<CalibState>,
+}
+
+impl Calibrator {
+    /// `levels` is the ladder length (number of serving levels tracked).
+    pub fn new(levels: usize, cfg: CalibConfig) -> Calibrator {
+        assert!(levels > 0, "calibrator needs a non-empty ladder");
+        let state = CalibState {
+            est: LadderEstimator::new(levels, cfg.ewma_alpha),
+            batches: 0,
+            probes_since_fit: 0,
+            fit: None,
+            derived: None,
+            budget: cfg.budget.max(0.0),
+            refits: 0,
+        };
+        Calibrator { cfg, state: Mutex::new(state) }
+    }
+
+    pub fn num_levels(&self) -> usize {
+        self.state.lock().unwrap().est.num_levels()
+    }
+
+    /// Count one batch; true when this batch should carry a probe
+    /// (every `sample_every`-th batch, starting with the first).
+    pub fn should_probe(&self) -> bool {
+        if self.cfg.sample_every == 0 {
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.batches += 1;
+        (st.batches - 1) % self.cfg.sample_every as u64 == 0
+    }
+
+    /// Probes folded in so far (also the deterministic probe-stream key).
+    pub fn probes(&self) -> u64 {
+        self.state.lock().unwrap().est.probes()
+    }
+
+    pub fn refits(&self) -> u64 {
+        self.state.lock().unwrap().refits
+    }
+
+    /// Fold one probe's observations into the EWMAs.
+    pub fn record(&self, sample: &ProbeSample) {
+        let mut st = self.state.lock().unwrap();
+        st.est.record(sample);
+        st.probes_since_fit += 1;
+    }
+
+    /// Refit γ̂ and re-derive the policy when the probe cadence is due —
+    /// or early when the fresh estimates have drifted off the fitted
+    /// line.  Returns true when a new fit was installed.
+    pub fn maybe_refit(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let due = st.probes_since_fit >= self.cfg.refit_every.max(1) as u64;
+        let drift = match (&st.fit, st.est.fit_points()) {
+            (Some(f), Some((costs, errs))) => {
+                st.probes_since_fit > 0 && fit::drifted(f, &costs, &errs, self.cfg.drift_tol)
+            }
+            _ => false,
+        };
+        if due || drift {
+            self.refit_locked(&mut st)
+        } else {
+            false
+        }
+    }
+
+    /// Set the live compute budget (0 = auto) and re-derive immediately
+    /// when a fit exists.  Returns true when the policy was re-derived.
+    pub fn set_budget(&self, budget: f64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        st.budget = budget.max(0.0);
+        if st.fit.is_some() {
+            self.refit_locked(&mut st)
+        } else {
+            false
+        }
+    }
+
+    fn refit_locked(&self, st: &mut CalibState) -> bool {
+        let Some(est) = st.est.estimates() else { return false };
+        let Some((fit_costs, fit_errs)) = st.est.fit_points() else { return false };
+        let Some(f) = fit::fit_gamma(&fit_costs, &fit_errs) else { return false };
+        // Noise gate: refuse to act on fits that are visibly not a power
+        // law (low r² with enough points for residuals) or physically
+        // implausible — the previous fit/policy stays live and the next
+        // probe retries.
+        if (f.points >= 3 && f.r2 < self.cfg.min_r2) || !(0.1..=50.0).contains(&f.gamma) {
+            return false;
+        }
+        let costs: Vec<f64> = est.iter().map(|e| e.cost).collect();
+        let err2: Vec<f64> = est.iter().map(|e| e.err2).collect();
+        let budget = if st.budget > 0.0 {
+            st.budget
+        } else {
+            // Auto: spend what the baseline `p_k = min(C·T_0/T_k, 1)`
+            // inverse-cost policy would, at the measured costs.
+            let probs: Vec<f64> = costs
+                .iter()
+                .map(|&t| (self.cfg.baseline_scale * costs[0] / t.max(1e-300)).min(1.0))
+                .collect();
+            autopilot::step_cost(&probs, &costs)
+        };
+        st.fit = Some(f);
+        st.derived = autopilot::derive(f.gamma, &costs, &err2, budget, self.cfg.min_levels);
+        st.probes_since_fit = 0;
+        st.refits += 1;
+        true
+    }
+
+    /// Latest exponent estimate.
+    pub fn gamma_hat(&self) -> Option<f64> {
+        self.state.lock().unwrap().fit.map(|f| f.gamma)
+    }
+
+    pub fn fit(&self) -> Option<GammaFit> {
+        self.state.lock().unwrap().fit
+    }
+
+    /// Latest derived operating point (regardless of autopilot mode).
+    pub fn derived(&self) -> Option<DerivedPolicy> {
+        self.state.lock().unwrap().derived.clone()
+    }
+
+    /// The policy to serve with — `Some((policy, kept_levels))` only
+    /// when autopilot mode is on and a derivation exists.  Cloned out
+    /// under the lock: readers never observe a half-swapped policy.
+    pub fn active_policy(&self) -> Option<(Policy, usize)> {
+        if !self.cfg.autopilot {
+            return None;
+        }
+        let st = self.state.lock().unwrap();
+        st.derived.as_ref().map(|d| (d.policy.clone(), d.kept))
+    }
+
+    /// Everything the `calibration` admin request reports.
+    pub fn snapshot(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let levels = match st.est.estimates() {
+            Some(est) => Json::Arr(
+                est.iter()
+                    .map(|e| {
+                        Json::obj()
+                            .with("cost", Json::num(e.cost))
+                            .with("err2", Json::num(e.err2))
+                            .with("probes", Json::num(e.probes as f64))
+                    })
+                    .collect(),
+            ),
+            None => Json::Arr(Vec::new()),
+        };
+        let policy = match &st.derived {
+            Some(d) => Json::obj()
+                .with("kind", Json::str("fixed-theory"))
+                .with("kept", Json::num(d.kept as f64))
+                .with("scale", Json::num(d.scale))
+                .with("gamma", Json::num(d.gamma))
+                .with("probs", Json::arr_f64(&d.probs))
+                .with("step_cost", Json::num(d.step_cost))
+                .with("variance_proxy", Json::num(d.variance_proxy))
+                .with("budget", Json::num(d.budget)),
+            None => Json::Null,
+        };
+        let mut o = Json::obj()
+            .with("enabled", Json::Bool(true))
+            .with("autopilot", Json::Bool(self.cfg.autopilot))
+            .with("ladder_levels", Json::num(st.est.num_levels() as f64))
+            .with("probes", Json::num(st.est.probes() as f64))
+            .with("batches", Json::num(st.batches as f64))
+            .with("refits", Json::num(st.refits as f64))
+            .with("budget", Json::num(st.budget));
+        match st.fit {
+            Some(f) => {
+                o = o
+                    .with("gamma", Json::num(f.gamma))
+                    .with("se_gamma", Json::num(f.se_gamma))
+                    .with("r2", Json::num(f.r2))
+                    .with("fit_points", Json::num(f.points as f64));
+            }
+            None => {
+                o = o.with("gamma", Json::Null);
+            }
+        }
+        o.with("levels", levels).with("policy", policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::mlem::LevelPolicy;
+
+    fn synthetic_sample(gamma: f64, levels: usize, err_scale: f64) -> ProbeSample {
+        ProbeSample {
+            costs: (0..levels).map(|k| 2f64.powf(gamma * k as f64)).collect(),
+            err2: (0..levels).map(|k| err_scale * 4f64.powi(-(k as i32))).collect(),
+        }
+    }
+
+    #[test]
+    fn probe_cadence_counts_batches() {
+        let cal = Calibrator::new(3, CalibConfig { sample_every: 3, ..CalibConfig::default() });
+        let pattern: Vec<bool> = (0..7).map(|_| cal.should_probe()).collect();
+        assert_eq!(pattern, vec![true, false, false, true, false, false, true]);
+        let off = Calibrator::new(3, CalibConfig { sample_every: 0, ..CalibConfig::default() });
+        assert!((0..5).all(|_| !off.should_probe()));
+    }
+
+    #[test]
+    fn fits_and_derives_on_cadence() {
+        let gamma = 2.5;
+        let cfg = CalibConfig {
+            sample_every: 1,
+            refit_every: 3,
+            budget: 10.0,
+            ..CalibConfig::default()
+        };
+        let cal = Calibrator::new(4, cfg);
+        assert_eq!(cal.gamma_hat(), None);
+        assert!(cal.active_policy().is_none());
+        for i in 0..3 {
+            cal.record(&synthetic_sample(gamma, 4, 1.0));
+            assert_eq!(cal.maybe_refit(), i == 2, "refit only once the cadence is due");
+        }
+        let g = cal.gamma_hat().expect("fit after cadence");
+        assert!((g - gamma).abs() < 1e-6, "gamma {g}");
+        let f = cal.fit().unwrap();
+        assert!(f.r2 > 0.999);
+        assert_eq!(f.points, 3);
+        let (policy, kept) = cal.active_policy().expect("autopilot policy");
+        assert!((1..=4).contains(&kept));
+        let d = cal.derived().unwrap();
+        assert!(d.step_cost <= 10.0 * (1.0 + 1e-6), "budget respected: {}", d.step_cost);
+        // the served policy is exactly the derived FixedTheory
+        for k in 0..kept {
+            assert!((policy.prob(k, 0.1) - d.probs[k]).abs() < 1e-12);
+        }
+        assert_eq!(cal.refits(), 1);
+    }
+
+    #[test]
+    fn drift_triggers_early_refit() {
+        let gamma = 2.5;
+        let cfg = CalibConfig {
+            sample_every: 1,
+            refit_every: 3,
+            budget: 10.0,
+            drift_tol: 0.3,
+            ewma_alpha: 0.5,
+            ..CalibConfig::default()
+        };
+        let cal = Calibrator::new(4, cfg);
+        for _ in 0..3 {
+            cal.record(&synthetic_sample(gamma, 4, 1.0));
+            cal.maybe_refit();
+        }
+        assert_eq!(cal.refits(), 1);
+        // regime change: all inter-level errors 10x — one probe at
+        // alpha 0.5 moves the log-residual past 0.3 well before the
+        // 3-probe cadence.
+        cal.record(&synthetic_sample(gamma, 4, 10.0));
+        assert!(cal.maybe_refit(), "drift must trigger an early refit");
+        assert_eq!(cal.refits(), 2);
+    }
+
+    #[test]
+    fn set_budget_rederives_policy() {
+        let gamma = 2.5;
+        let cfg = CalibConfig {
+            sample_every: 1,
+            refit_every: 1,
+            budget: 20.0,
+            ..CalibConfig::default()
+        };
+        let cal = Calibrator::new(4, cfg);
+        assert!(!cal.set_budget(5.0), "no fit yet: nothing to re-derive");
+        cal.record(&synthetic_sample(gamma, 4, 1.0));
+        assert!(cal.maybe_refit());
+        let wide = cal.derived().unwrap();
+        assert!(cal.set_budget(2.0));
+        let narrow = cal.derived().unwrap();
+        assert!(narrow.step_cost < wide.step_cost);
+        assert!((narrow.budget - 2.0).abs() < 1e-12);
+        assert_eq!(cal.refits(), 2);
+    }
+
+    #[test]
+    fn noisy_fit_is_not_installed() {
+        let gamma = 2.5;
+        let cfg = CalibConfig {
+            sample_every: 1,
+            refit_every: 1,
+            budget: 10.0,
+            ..CalibConfig::default()
+        };
+        let cal = Calibrator::new(4, cfg);
+        // errors that don't follow a power law: slope is still negative
+        // but r² ≈ 0.75 < min_r2 — the fit must be refused.
+        let costs: Vec<f64> = (0..4).map(|k| 2f64.powf(gamma * k as f64)).collect();
+        cal.record(&ProbeSample { costs: costs.clone(), err2: vec![1.0, 0.25, 0.25, 0.015625] });
+        assert!(!cal.maybe_refit(), "noisy fit must not be installed");
+        assert_eq!(cal.gamma_hat(), None);
+        assert!(cal.active_policy().is_none());
+        // clean probes wash the contamination out of the EWMAs and the
+        // gate opens
+        for _ in 0..40 {
+            cal.record(&synthetic_sample(gamma, 4, 1.0));
+        }
+        assert!(cal.maybe_refit());
+        let g = cal.gamma_hat().unwrap();
+        assert!((g - gamma).abs() / gamma < 0.05, "gamma {g}");
+    }
+
+    #[test]
+    fn snapshot_is_valid_json_with_and_without_fit() {
+        let cal = Calibrator::new(3, CalibConfig { budget: 8.0, ..CalibConfig::default() });
+        let before = cal.snapshot().to_string();
+        let j = Json::parse(&before).unwrap();
+        assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("gamma"), Some(&Json::Null));
+        assert_eq!(j.get("policy"), Some(&Json::Null));
+        cal.record(&synthetic_sample(2.5, 3, 1.0));
+        for _ in 0..8 {
+            cal.record(&synthetic_sample(2.5, 3, 1.0));
+        }
+        assert!(cal.maybe_refit());
+        let after = Json::parse(&cal.snapshot().to_string()).unwrap();
+        assert!(after.f64_of("gamma").is_some());
+        assert_eq!(after.get("levels").unwrap().as_arr().unwrap().len(), 3);
+        let pol = after.get("policy").unwrap();
+        assert_eq!(pol.str_of("kind"), Some("fixed-theory"));
+        assert!(pol.f64_of("step_cost").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn auto_budget_matches_baseline_inverse_cost_spend() {
+        // budget 0 ⇒ the derived policy spends what the baseline
+        // p_k = min(T_0/T_k, 1) policy would (cost-neutral switch-on).
+        let gamma = 2.5;
+        let cfg = CalibConfig {
+            sample_every: 1,
+            refit_every: 1,
+            budget: 0.0,
+            baseline_scale: 1.0,
+            min_levels: 4,
+            ..CalibConfig::default()
+        };
+        let cal = Calibrator::new(4, cfg);
+        let s = synthetic_sample(gamma, 4, 1.0);
+        cal.record(&s);
+        assert!(cal.maybe_refit());
+        let d = cal.derived().unwrap();
+        let base_probs: Vec<f64> = s.costs.iter().map(|&t| (s.costs[0] / t).min(1.0)).collect();
+        let base_cost = autopilot::step_cost(&base_probs, &s.costs);
+        assert!((d.budget - base_cost).abs() < 1e-9, "{} vs {base_cost}", d.budget);
+        assert!((d.step_cost - base_cost).abs() < 1e-5 * base_cost);
+    }
+}

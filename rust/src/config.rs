@@ -67,6 +67,19 @@ pub struct ServeConfig {
     pub prob_scale: f64,
     /// Repetitions for startup cost measurement (0 = use FLOP estimates).
     pub cost_reps: usize,
+    /// Online γ-calibration: probe every Nth batch (0 disables the
+    /// whole subsystem; see `calibrate`).
+    pub calib_sample_every: usize,
+    /// Refit γ̂ after this many fresh probes (drift can refit earlier).
+    pub calib_refit_every: usize,
+    /// Autopilot compute budget: expected per-image per-step cost units
+    /// for the derived policy.  0 = auto (match the baseline inverse-cost
+    /// policy's spend).  Also settable live via the `calibration` admin
+    /// request's `set_budget`.
+    pub calib_budget: f64,
+    /// Swap the calibrated `FixedTheory` policy into live serving once
+    /// fitted; false = observe-and-report only.
+    pub calib_autopilot: bool,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +95,10 @@ impl Default for ServeConfig {
             mlem_levels: vec![1, 3, 5],
             prob_scale: 1.0,
             cost_reps: 3,
+            calib_sample_every: 16,
+            calib_refit_every: 8,
+            calib_budget: 0.0,
+            calib_autopilot: true,
         }
     }
 }
@@ -114,6 +131,21 @@ impl ServeConfig {
                 }
                 "prob_scale" => self.prob_scale = v.as_f64().ok_or_else(|| anyhow!("prob_scale: num"))?,
                 "cost_reps" => self.cost_reps = v.as_usize().ok_or_else(|| anyhow!("cost_reps: int"))?,
+                "calib_sample_every" => {
+                    self.calib_sample_every =
+                        v.as_usize().ok_or_else(|| anyhow!("calib_sample_every: int"))?
+                }
+                "calib_refit_every" => {
+                    self.calib_refit_every =
+                        v.as_usize().ok_or_else(|| anyhow!("calib_refit_every: int"))?
+                }
+                "calib_budget" => {
+                    self.calib_budget = v.as_f64().ok_or_else(|| anyhow!("calib_budget: num"))?
+                }
+                "calib_autopilot" => {
+                    self.calib_autopilot =
+                        v.as_bool().ok_or_else(|| anyhow!("calib_autopilot: bool"))?
+                }
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
         }
@@ -141,6 +173,16 @@ impl ServeConfig {
         cfg.mlem_levels = args.usize_list("mlem-levels", &cfg.mlem_levels);
         cfg.prob_scale = args.f64_or("prob-scale", cfg.prob_scale);
         cfg.cost_reps = args.usize_or("cost-reps", cfg.cost_reps);
+        cfg.calib_sample_every = args.usize_or("calib-sample-every", cfg.calib_sample_every);
+        cfg.calib_refit_every = args.usize_or("calib-refit-every", cfg.calib_refit_every);
+        cfg.calib_budget = args.f64_or("calib-budget", cfg.calib_budget);
+        if let Some(v) = args.get("calib-autopilot") {
+            cfg.calib_autopilot = match v {
+                "1" | "true" | "on" => true,
+                "0" | "false" | "off" => false,
+                other => return Err(anyhow!("--calib-autopilot expects on|off, got '{other}'")),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -202,6 +244,28 @@ mod tests {
     fn bad_levels_rejected() {
         assert!(ServeConfig::from_args(&args("serve --mlem-levels 3,1")).is_err());
         assert!(ServeConfig::from_args(&args("serve --mlem-levels 1,1,2")).is_err());
+    }
+
+    #[test]
+    fn calibration_config_keys_apply() {
+        let mut cfg = ServeConfig::default();
+        let j = Json::parse(
+            r#"{"calib_sample_every":4,"calib_refit_every":2,"calib_budget":3.5,"calib_autopilot":false}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.calib_sample_every, 4);
+        assert_eq!(cfg.calib_refit_every, 2);
+        assert!((cfg.calib_budget - 3.5).abs() < 1e-12);
+        assert!(!cfg.calib_autopilot);
+        let cli = ServeConfig::from_args(&args(
+            "serve --calib-sample-every 2 --calib-autopilot off --calib-budget 1.25",
+        ))
+        .unwrap();
+        assert_eq!(cli.calib_sample_every, 2);
+        assert!(!cli.calib_autopilot);
+        assert!((cli.calib_budget - 1.25).abs() < 1e-12);
+        assert!(ServeConfig::from_args(&args("serve --calib-autopilot maybe")).is_err());
     }
 
     #[test]

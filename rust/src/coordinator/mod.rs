@@ -11,8 +11,25 @@
 //! |---|---|
 //! | [`protocol`] | wire types: request/response JSON |
 //! | [`batcher`]  | queueing + compatibility grouping |
-//! | [`scheduler`] | sampler dispatch, noise assembly, best-of-R |
+//! | [`scheduler`] | sampler dispatch, noise assembly, calibration probes |
 //! | [`server`] | TCP front end + worker threads |
+//!
+//! The scheduler also hosts the online γ-calibrator
+//! ([`crate::calibrate`]): a sampled fraction of live batches is probed
+//! for per-level costs and inter-level errors, γ̂ is refit on a cadence,
+//! and the autopilot swaps a Theorem-1 `FixedTheory` policy into live
+//! serving.  The `calibration` admin request exposes it all:
+//!
+//! ```json
+//! {"cmd":"calibration"}
+//! {"cmd":"calibration","set_budget":2.5}
+//! ```
+//!
+//! returns `{"ok":true,"calibration":{"gamma":…,"se_gamma":…,"r2":…,
+//! "levels":[{"cost":…,"err2":…,…},…],"policy":{"kind":"fixed-theory",
+//! "kept":…,"probs":[…],…},…}}` — γ̂ with uncertainty, the streaming
+//! per-level estimates, and the active policy; `set_budget` re-derives
+//! the policy at a new compute budget before snapshotting.
 
 pub mod batcher;
 pub mod protocol;

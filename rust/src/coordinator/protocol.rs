@@ -6,9 +6,18 @@
 //! {"cmd":"generate","n":4,"sampler":"mlem","steps":200,"seed":7,
 //!  "levels":[1,3,5],"delta":0.0,"return_images":true}
 //! {"cmd":"metrics"}
+//! {"cmd":"calibration"}
+//! {"cmd":"calibration","set_budget":2.5}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
+//!
+//! `calibration` is the online-γ admin request: it returns the
+//! calibrator's snapshot (γ̂ with uncertainty, per-level cost/error
+//! estimates, the active autopilot policy) and, when `set_budget` is
+//! present, first re-derives the policy at that compute budget.
+//! `set_budget: 0` reverts to the auto budget (match the baseline
+//! policy's spend); negative or non-finite values are rejected.
 //!
 //! Responses are single JSON objects with `"ok"` plus either payload
 //! fields or `"error"`.
@@ -41,6 +50,8 @@ pub struct GenRequest {
 pub enum Request {
     Generate(GenRequest),
     Metrics,
+    /// Calibration snapshot; optionally sets the autopilot budget first.
+    Calibration { set_budget: Option<f64> },
     Ping,
     Shutdown,
 }
@@ -71,6 +82,8 @@ pub struct GenResponse {
 pub enum Response {
     Gen(GenResponse),
     Metrics(Json),
+    /// Calibrator snapshot (`{"enabled":false}` when calibration is off).
+    Calibration(Json),
     Pong,
     Error(String),
     ShuttingDown,
@@ -89,6 +102,19 @@ impl Request {
             "ping" => Ok(Request::Ping),
             "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
+            "calibration" => {
+                let set_budget = match j.get("set_budget") {
+                    None => None,
+                    Some(v) => {
+                        let b = v.as_f64().ok_or_else(|| anyhow!("set_budget must be a number"))?;
+                        if !b.is_finite() || b < 0.0 {
+                            return Err(anyhow!("set_budget must be >= 0 (0 = auto)"));
+                        }
+                        Some(b)
+                    }
+                };
+                Ok(Request::Calibration { set_budget })
+            }
             "generate" => {
                 let n = j.usize_of("n").unwrap_or(1);
                 if n == 0 || n > MAX_N {
@@ -139,6 +165,9 @@ impl Response {
                 .with("ok", Json::Bool(false))
                 .with("error", Json::str(msg.clone())),
             Response::Metrics(m) => Json::obj().with("ok", Json::Bool(true)).with("metrics", m.clone()),
+            Response::Calibration(c) => {
+                Json::obj().with("ok", Json::Bool(true)).with("calibration", c.clone())
+            }
             Response::Gen(g) => {
                 let stats = Json::obj()
                     .with("wall_ms", Json::num(g.stats.wall_ms))
@@ -208,6 +237,33 @@ mod tests {
             Request::parse(r#"{"cmd":"shutdown"}"#, &defaults()).unwrap(),
             Request::Shutdown
         );
+    }
+
+    #[test]
+    fn parse_calibration_request() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"calibration"}"#, &defaults()).unwrap(),
+            Request::Calibration { set_budget: None }
+        );
+        let r = Request::parse(r#"{"cmd":"calibration","set_budget":2.5}"#, &defaults()).unwrap();
+        assert_eq!(r, Request::Calibration { set_budget: Some(2.5) });
+        // 0 reverts to the auto budget; negatives are rejected
+        let r0 = Request::parse(r#"{"cmd":"calibration","set_budget":0}"#, &defaults()).unwrap();
+        assert_eq!(r0, Request::Calibration { set_budget: Some(0.0) });
+        assert!(Request::parse(r#"{"cmd":"calibration","set_budget":-1}"#, &defaults()).is_err());
+        // present-but-non-numeric must error, not silently degrade
+        assert!(
+            Request::parse(r#"{"cmd":"calibration","set_budget":"2.5"}"#, &defaults()).is_err()
+        );
+    }
+
+    #[test]
+    fn calibration_response_serializes() {
+        let snap = Json::obj().with("enabled", Json::Bool(true)).with("gamma", Json::num(2.5));
+        let line = Response::Calibration(snap).to_json().to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(parsed.get_path(&["calibration", "gamma"]), Some(&Json::Num(2.5)));
     }
 
     #[test]

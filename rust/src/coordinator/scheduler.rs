@@ -6,24 +6,38 @@
 //! a pure function of its own seed, so results are reproducible per
 //! request; the Bernoulli level draws are shared across the batch (§4)
 //! and keyed by the combined batch seed.
+//!
+//! Calibration: every `calib_sample_every`-th batch is probed after its
+//! run — each serving-ladder level is timed on the batch state diffused
+//! to a random schedule time, and the adjacent-level deltas are measured
+//! — feeding the online γ estimator (see [`crate::calibrate`]).  Once
+//! fitted, the autopilot's `FixedTheory` policy replaces the static
+//! inverse-cost default for requests on the configured ladder (a policy
+//! refit therefore changes which Bernoulli sequence a given seed maps
+//! to; per-request reproducibility holds between refits, exactly as it
+//! holds per server configuration).
 
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::calibrate::{probe_family, CalibConfig, Calibrator, CostSource};
 use crate::config::{SamplerKind, ServeConfig};
 use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats};
 use crate::levels::Policy;
 use crate::metrics::Metrics;
+use crate::parallel;
 use crate::runtime::{ExecutorHandle, NeuralDenoiser};
 use crate::sde::ddpm::{ancestral_sample, AncestralConfig};
 use crate::sde::drift::{DiffusionDrift, LinearPartDrift, ScorePartDrift};
 use crate::sde::em::{em_sample, TimeGrid};
 use crate::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
 use crate::sde::{schedule, BrownianPath};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Owns the denoiser family + measured costs; stateless per call.
+/// Owns the denoiser family + measured costs; stateless per call except
+/// for the streaming calibrator.
 pub struct Scheduler {
     handle: ExecutorHandle,
     /// All levels, index = level − 1.
@@ -32,6 +46,9 @@ pub struct Scheduler {
     pub costs: Vec<f64>,
     cfg: ServeConfig,
     metrics: Metrics,
+    /// Online γ-calibrator over the configured `mlem_levels` ladder;
+    /// `None` when disabled or the ladder is too short to calibrate.
+    calibrator: Option<Calibrator>,
 }
 
 impl Scheduler {
@@ -40,14 +57,38 @@ impl Scheduler {
     pub fn new(handle: ExecutorHandle, cfg: ServeConfig, metrics: Metrics) -> Result<Scheduler> {
         let denoisers = NeuralDenoiser::family(&handle, cfg.cost_reps)?;
         // Pre-compile every level at the serving buckets so the first
-        // request doesn't pay lazy-compilation latency.
+        // request doesn't pay lazy-compilation latency.  Soft-fail per
+        // bucket: a backend that can't precompile (the offline shim, or
+        // one transiently failing bucket) still serves admin requests
+        // and still warms the remaining buckets; generation pays lazy
+        // compilation or reports the engine error per request.
         for &b in &handle.manifest().batch_buckets.clone() {
             if b <= cfg.max_batch {
-                handle.warmup(b)?;
+                if let Err(e) = handle.warmup(b) {
+                    eprintln!("[scheduler] warmup skipped (bucket {b}): {e:#}");
+                }
             }
         }
-        let costs = denoisers.iter().map(|d| d.cost).collect();
-        Ok(Scheduler { handle, denoisers, costs, cfg, metrics })
+        let costs: Vec<f64> = denoisers.iter().map(|d| d.cost).collect();
+        // The γ fit regresses over inter-level points (level 0's delta is
+        // the field itself), so a ladder needs ≥ 3 members to ever
+        // produce a fit — probing a shorter one would be pure overhead.
+        let ladder_valid = cfg.mlem_levels.len() >= 3
+            && cfg.mlem_levels.iter().all(|&l| (1..=denoisers.len()).contains(&l));
+        let calibrator = (cfg.calib_sample_every > 0 && ladder_valid).then(|| {
+            Calibrator::new(
+                cfg.mlem_levels.len(),
+                CalibConfig {
+                    sample_every: cfg.calib_sample_every,
+                    refit_every: cfg.calib_refit_every,
+                    budget: cfg.calib_budget,
+                    autopilot: cfg.calib_autopilot,
+                    baseline_scale: cfg.prob_scale,
+                    ..CalibConfig::default()
+                },
+            )
+        });
+        Ok(Scheduler { handle, denoisers, costs, cfg, metrics, calibrator })
     }
 
     pub fn handle(&self) -> &ExecutorHandle {
@@ -75,14 +116,99 @@ impl Scheduler {
         Ok(())
     }
 
-    /// The serving policy for a request: fixed inverse-cost probabilities
-    /// (`p_k = min(C/T_k, 1)`) over the request's level subset, shifted
-    /// by the request's Δ.
+    /// The baseline serving policy for a request: fixed inverse-cost
+    /// probabilities (`p_k = min(C/T_k, 1)`) over the request's level
+    /// subset, shifted by the request's Δ.
     fn policy_for(&self, levels: &[usize], delta: f64) -> Policy {
         let costs: Vec<f64> = levels.iter().map(|&l| self.costs[l - 1].max(1e-12)).collect();
         // Normalise so the lowest level sits at p=1 at Δ=0.
         let scale = self.cfg.prob_scale * costs[0];
         Policy::FixedInvCost { scale, costs }.with_delta(delta)
+    }
+
+    /// The (policy, level subset) a request actually runs with: requests
+    /// on the configured ladder get the autopilot's calibrated
+    /// `FixedTheory` policy once one exists (possibly a shortened
+    /// ladder); everything else keeps the baseline inverse-cost policy.
+    fn plan_for(&self, levels: &[usize], delta: f64) -> (Policy, Vec<usize>) {
+        if let Some(cal) = &self.calibrator {
+            if levels == self.cfg.mlem_levels.as_slice() {
+                if let Some((policy, kept)) = cal.active_policy() {
+                    return (policy.with_delta(delta), self.cfg.mlem_levels[..kept].to_vec());
+                }
+            }
+        }
+        (self.policy_for(levels, delta), levels.to_vec())
+    }
+
+    /// Admin entry point for the `calibration` request: optionally set
+    /// the autopilot budget, then snapshot the calibrator.
+    pub fn calibration(&self, set_budget: Option<f64>) -> Json {
+        match &self.calibrator {
+            None => Json::obj().with("enabled", Json::Bool(false)),
+            Some(cal) => {
+                if let Some(b) = set_budget {
+                    if cal.set_budget(b) {
+                        self.metrics.recalibrations.inc();
+                        if let Some(g) = cal.gamma_hat() {
+                            self.metrics.gamma_hat.set(g);
+                        }
+                    }
+                }
+                cal.snapshot()
+            }
+        }
+    }
+
+    /// The live calibrator (None when calibration is disabled).
+    pub fn calibrator(&self) -> Option<&Calibrator> {
+        self.calibrator.as_ref()
+    }
+
+    /// Probe the serving ladder on a just-generated batch: diffuse the
+    /// batch state to a random schedule time, time every ladder level on
+    /// it, measure adjacent-level deltas, and fold the observations into
+    /// the calibrator — refitting γ̂ when the cadence (or drift) says so.
+    /// All scratch is pooled; runs on the batch worker thread, never
+    /// inside the sampler's step loop.
+    fn run_probe(&self, cal: &Calibrator, x_clean: &[f32]) {
+        // Deterministic probe stream keyed by the probe counter.
+        let mut rng = Rng::new(0xCA11_B007 ^ cal.probes().wrapping_mul(0x9E3779B97F4A7C15));
+        let t = rng.uniform(schedule::T_MIN.max(0.02), schedule::T_MAX);
+        let pool = parallel::global_f32();
+        let mut eps = pool.take(x_clean.len());
+        rng.fill_normal_f32(&mut eps);
+        let mut xt = pool.take(x_clean.len());
+        schedule::diffuse(x_clean, t, &eps, &mut xt);
+        let parts: Vec<ScorePartDrift<&NeuralDenoiser>> = self
+            .cfg
+            .mlem_levels
+            .iter()
+            .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })
+            .collect();
+        let drifts: Vec<&dyn crate::sde::Drift> =
+            parts.iter().map(|p| p as &dyn crate::sde::Drift).collect();
+        // Untimed warm pass before every timed pass: startup warmup is
+        // soft-fail and buckets compile lazily, so any probe could be
+        // the first to touch a (level, bucket) pair — compile seconds
+        // must never reach the cost EWMAs.  Probes are rare (every
+        // `calib_sample_every`-th batch), so the doubled eval cost is
+        // noise next to the batch's own multi-step sampling run.
+        {
+            let mut warm = pool.take(xt.len());
+            for d in &drifts {
+                d.eval(&xt, t, &mut warm);
+            }
+        }
+        let sample = probe_family(&drifts, &xt, t, CostSource::Measured);
+        cal.record(&sample);
+        self.metrics.calib_probes.inc();
+        if cal.maybe_refit() {
+            self.metrics.recalibrations.inc();
+            if let Some(g) = cal.gamma_hat() {
+                self.metrics.gamma_hat.set(g);
+            }
+        }
     }
 
     /// Execute one compatible batch; returns one response per request,
@@ -119,8 +245,8 @@ impl Scheduler {
         match first.sampler {
             SamplerKind::Mlem => {
                 let base = LinearPartDrift { dim };
-                let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = first
-                    .levels
+                let (policy, eff_levels) = self.plan_for(&first.levels, first.delta);
+                let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = eff_levels
                     .iter()
                     .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })
                     .collect();
@@ -128,7 +254,6 @@ impl Scheduler {
                     base: Some(&base),
                     levels: score_parts.iter().map(|s| s as &dyn crate::sde::Drift).collect(),
                 };
-                let policy = self.policy_for(&first.levels, first.delta);
                 let mut bern = Rng::new(batch_seed);
                 let report = mlem_sample(
                     &fam,
@@ -141,7 +266,7 @@ impl Scheduler {
                     &path,
                     &mut bern,
                 );
-                for (i, &l) in first.levels.iter().enumerate() {
+                for (i, &l) in eff_levels.iter().enumerate() {
                     nfe[l - 1] += report.image_evals[i];
                 }
                 cost_units = report.cost_units;
@@ -192,6 +317,20 @@ impl Scheduler {
                     cost_units,
                 },
             });
+        }
+
+        // Calibration probe on a sampled fraction of batches.  It runs
+        // last — after the run (a dead engine fails the request, not the
+        // probe) and after `wall_ms` is stamped, so probe work is not
+        // attributed to serving in the stats.  The probed batch's
+        // clients do still wait for it (responses are dispatched by the
+        // batch worker once `execute` returns): two ladder evals per
+        // probed batch, ~1% of a multi-step sampling run, amortised
+        // across the `calib_sample_every` cadence.
+        if let Some(cal) = &self.calibrator {
+            if cal.should_probe() {
+                self.run_probe(cal, &x);
+            }
         }
         Ok(out)
     }

@@ -183,6 +183,9 @@ fn handle_conn(
             }
             Ok(Request::Ping) => Response::Pong,
             Ok(Request::Metrics) => Response::Metrics(metrics.snapshot()),
+            Ok(Request::Calibration { set_budget }) => {
+                Response::Calibration(scheduler.calibration(set_budget))
+            }
             Ok(Request::Shutdown) => {
                 shared.stop.store(true, Ordering::SeqCst);
                 shared.wake.notify_all();

@@ -185,6 +185,92 @@ mod tests {
     }
 
     #[test]
+    fn expected_step_cost_across_all_variants() {
+        let costs = vec![1.0, 4.0, 16.0];
+        // FixedInvCost: p = [1, 0.5, 0.125] => 1 + 2 + 2 = 5
+        let inv = Policy::FixedInvCost { scale: 2.0, costs: costs.clone() };
+        assert!((inv.expected_step_cost(0.7, &costs) - 5.0).abs() < 1e-12);
+        // FixedTheory: p_k = min(scale·T^{-e}, 1); Σ p_k·T_k by hand
+        let gamma = 2.0;
+        let e = 1.0 / gamma + 0.5;
+        let th = Policy::FixedTheory { scale: 0.5, gamma, costs: costs.clone() };
+        let expect: f64 = costs.iter().map(|&t| (0.5 * t.powf(-e)).min(1.0) * t).sum();
+        assert!((th.expected_step_cost(0.0, &costs) - expect).abs() < 1e-12);
+        // Learned: time-dependent — evaluates the sigmoid at the given t
+        let le = Policy::Learned { alpha: vec![0.0; 3], beta: vec![0.0; 3], delta: 0.1 };
+        let half_sum: f64 = 0.5 * costs.iter().sum::<f64>();
+        assert!((le.expected_step_cost(0.3, &costs) - half_sum).abs() < 1e-12);
+        // Manual: plain dot product
+        let ma = Policy::Manual { probs: vec![1.0, 0.25, 0.0625] };
+        assert!((ma.expected_step_cost(0.0, &costs) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn with_delta_scales_every_variant_consistently() {
+        let costs = vec![1.0, 8.0, 64.0];
+        let d = 0.7f64;
+        // Multiplicative e^Δ on probabilities for the fixed families
+        // (below the clamp), matching the Learned family's β-shift in
+        // the small-probability regime where sigmoid(z) ≈ e^z.
+        let inv = Policy::FixedInvCost { scale: 0.5, costs: costs.clone() };
+        let th = Policy::FixedTheory { scale: 1e-2, gamma: 2.5, costs: costs.clone() };
+        let ma = Policy::Manual { probs: vec![0.2, 0.05, 0.0125] };
+        for (name, p) in [("inv", inv), ("theory", th), ("manual", ma)] {
+            let up = p.with_delta(d);
+            for k in 0..3 {
+                let (a, b) = (p.prob(k, 0.4), up.prob(k, 0.4));
+                if b < 1.0 {
+                    assert!((b / a - d.exp()).abs() < 1e-9, "{name}[{k}]: {b}/{a} != e^{d}");
+                }
+            }
+            // num_levels preserved
+            assert_eq!(up.num_levels(), 3);
+        }
+        // Manual clamps at 1 after scaling
+        let ma = Policy::Manual { probs: vec![0.9, 0.1] };
+        assert_eq!(ma.with_delta(1.0).prob(0, 0.0), 1.0);
+        // Learned: additive shift in β — exact sigmoid identity
+        let le = Policy::Learned { alpha: vec![1.5], beta: vec![-0.25], delta: 0.1 };
+        let up = le.with_delta(d);
+        let z = 1.5 * (0.4f64 + 0.1).ln() - 0.25;
+        assert!((up.prob(0, 0.4) - sigmoid(z + d)).abs() < 1e-12);
+        // Δ = 0 is the identity for every variant
+        let le0 = le.with_delta(0.0);
+        assert!((le0.prob(0, 0.4) - le.prob(0, 0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_theory_exponent_identity_on_dyadic_ladder() {
+        // On the dyadic cost ladder T_k = 2^{γk}, the cost-expressed
+        // exponent reproduces the paper's level-indexed form exactly:
+        // T_k^{−(1/γ+1/2)} = 2^{−(1+γ/2)k}.
+        for &gamma in &[1.5f64, 2.0, 2.5, 3.0] {
+            let e = 1.0 / gamma + 0.5;
+            for k in 0..7 {
+                let t_k = 2f64.powf(gamma * k as f64);
+                let via_cost = t_k.powf(-e);
+                let via_level = 2f64.powf(-(1.0 + gamma / 2.0) * k as f64);
+                assert!(
+                    (via_cost - via_level).abs() <= 1e-12 * via_level,
+                    "gamma {gamma} k {k}: {via_cost} vs {via_level}"
+                );
+            }
+            // and the FixedTheory policy therefore matches theory_probs
+            // on the same ladder (scale = C, k_min = 0)
+            let c_const = 0.8;
+            let costs: Vec<f64> = (0..5).map(|k| 2f64.powf(gamma * k as f64)).collect();
+            let p_cost = Policy::FixedTheory { scale: c_const, gamma, costs };
+            let p_level = theory_probs(c_const, gamma, 0, 4);
+            for k in 0..5 {
+                assert!(
+                    (p_cost.prob(k, 0.0) - p_level.prob(k, 0.0)).abs() < 1e-12,
+                    "gamma {gamma} k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn e_gamma_regimes() {
         // gamma < 2: quadratic in r
         let a = e_gamma(1.5, 10.0);

@@ -35,9 +35,11 @@
 //! 3. [`sde::mlem::mlem_sample`] fuses its accumulate and state-update
 //!    loops per shard: the weighted level deltas, the Brownian increment
 //!    and the Euler step stream through each cache line once per step.
-//! 4. [`runtime`]'s executor ships request payloads in pooled buffers
-//!    and reuses one response channel per handle — no per-call channel
-//!    or `to_vec` allocations on the request path.
+//! 4. [`runtime`]'s executor ships request payloads in buffers from its
+//!    own dedicated payload pool (so `ExecStats.pool_hits/misses` stay
+//!    attributable to the request path even when samplers churn the
+//!    global pools) and reuses one response channel per handle — no
+//!    per-call channel or `to_vec` allocations on the request path.
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
@@ -53,6 +55,7 @@
 //! | [`gmm`] | analytic Gaussian-mixture substrate with constructed approximator ladders |
 //! | [`levels`] | level-probability policies and cost accounting |
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
+//! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
 //! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts |
 //! | [`coordinator`] | serving layer: server, batcher, scheduler, state |
 
@@ -76,6 +79,7 @@ pub mod util {
 
 pub mod adaptive;
 pub mod benchkit;
+pub mod calibrate;
 pub mod config;
 pub mod coordinator;
 pub mod gmm;

@@ -31,6 +31,24 @@ impl Counter {
     }
 }
 
+/// Lock-free f64 gauge (bit-cast through an `AtomicU64`); reads see the
+/// last completed `set` — exactly what a sampled metric like γ̂ needs.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value (0.0 until the first `set`).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
 const HIST_BUCKETS: usize = 512;
 /// Bucket width in log space: each bucket is ~5% wider than the last,
 /// spanning 1ns .. ~66 minutes over 512 buckets.
@@ -144,6 +162,13 @@ pub struct MetricsInner {
     pub execute_latency: Histogram,
     /// Time requests wait in the batcher queue.
     pub queue_latency: Histogram,
+    /// Latest fitted HTMC exponent γ̂ (0 until the calibrator's first
+    /// fit; see `calibrate`).
+    pub gamma_hat: Gauge,
+    /// Calibration refits installed (cadence, drift, or `set_budget`).
+    pub recalibrations: Counter,
+    /// Live batches probed by the calibrator.
+    pub calib_probes: Counter,
 }
 
 impl std::ops::Deref for Metrics {
@@ -186,6 +211,9 @@ impl Metrics {
             .with("images", Json::num(self.images.get() as f64))
             .with("nfe_per_level", nfe)
             .with("flops", Json::num(self.flops.get() as f64))
+            .with("gamma_hat", Json::num(self.gamma_hat.get()))
+            .with("recalibrations", Json::num(self.recalibrations.get() as f64))
+            .with("calib_probes", Json::num(self.calib_probes.get() as f64))
             .with("request_latency", self.request_latency.snapshot())
             .with("execute_latency", self.execute_latency.snapshot())
             .with("queue_latency", self.queue_latency.snapshot())
@@ -246,6 +274,20 @@ mod tests {
         let s = m.snapshot().to_string();
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.f64_of("requests"), Some(1.0));
+        assert_eq!(parsed.f64_of("gamma_hat"), Some(0.0));
+    }
+
+    #[test]
+    fn gauge_stores_f64() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set(-0.125);
+        assert_eq!(g.get(), -0.125);
+        let m = Metrics::new();
+        m.gamma_hat.set(2.47);
+        assert!((m.snapshot().f64_of("gamma_hat").unwrap() - 2.47).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Integration: the online γ-calibration subsystem against a GMM ladder
+//! whose exponent is known by construction (Assumption 1 literal).
+//!
+//! The calibrator is blind to the constructed constants: it probes live
+//! batches, fits `ε ∝ T^{−1/γ}`, and derives the Theorem-1 policy.  The
+//! acceptance targets: γ̂ within 10% of ground truth, autopilot probs
+//! within 5% of a hand-constructed `FixedTheory` at the same (γ̂,
+//! budget), and serving cost on par with the hand-tuned policy.  Also
+//! emits `BENCH_calibrate.json` so the artifact exists after plain
+//! `cargo test` (same pattern as `parity_parallel` / BENCH_hotpath).
+
+use mlem::benchkit::{calibrate_compare, write_bench_json, CalibrateConfig};
+use mlem::calibrate::{autopilot, probe_family, CalibConfig, Calibrator, CostSource, ProbeSample};
+use mlem::gmm::{assumption1_family, Gmm, LangevinDrift};
+use mlem::sde::drift::Drift;
+use mlem::util::json::Json;
+use mlem::util::rng::Rng;
+
+fn test_config() -> CalibrateConfig {
+    // The default bench workload, lightly trimmed for the test suite.
+    CalibrateConfig { probes: 16, steps: 200, reps: 2, ..CalibrateConfig::default() }
+}
+
+#[test]
+fn gamma_recovered_within_10pct_and_autopilot_matches_hand_policy() {
+    let cfg = test_config();
+    let j = calibrate_compare(&cfg);
+
+    // γ̂ accuracy: the blind fit must land within 10% of the
+    // constructed exponent.
+    let rel = j.f64_of("gamma_rel_err").unwrap();
+    assert!(
+        rel <= 0.10,
+        "gamma_hat {} vs true {} (rel err {rel})",
+        j.f64_of("gamma_hat").unwrap(),
+        cfg.gamma
+    );
+    assert!(j.f64_of("r2").unwrap() > 0.97, "power law must fit cleanly");
+
+    // Autopilot probabilities vs the hand-constructed FixedTheory at
+    // (γ̂, same budget): within 5% per level.
+    let probs_err = j.f64_of("probs_max_rel_err_at_gamma_hat").unwrap();
+    assert!(probs_err <= 0.05, "probs rel err {probs_err}");
+
+    // Serving cost parity with the hand-tuned true-γ policy: the
+    // expected per-run compute must agree (both solve the same budget;
+    // realised units depend on whether the rare top level fired, so the
+    // JSON reports them without a hard bound).
+    let cost_ratio = j.f64_of("expected_cost_ratio_autopilot_vs_hand").unwrap();
+    assert!((1.0 - cost_ratio).abs() <= 1e-3, "expected cost ratio {cost_ratio}");
+    // Wall-clock sanity only (CI machines are noisy; the bench reports
+    // the tight number).
+    let wall_ratio = j.f64_of("throughput_ratio_autopilot_vs_hand").unwrap();
+    assert!(
+        wall_ratio > 0.5 && wall_ratio < 2.0,
+        "throughput ratio {wall_ratio} out of sanity range"
+    );
+
+    let path = write_bench_json("calibrate", &j).expect("write BENCH_calibrate.json");
+    assert!(path.exists());
+}
+
+#[test]
+fn estimator_probes_recover_ladder_statistics_online() {
+    // Feed the streaming estimator real probes from the GMM ladder and
+    // check the EWMAs land on the constructed geometry: costs exactly
+    // declared, inter-level errors decaying ~4x per level.
+    let gmm = Gmm::random(9, 6, 32, 2.0, 0.5);
+    let lang = LangevinDrift { gmm: &gmm };
+    let gamma = 2.5;
+    let ladder = assumption1_family(&lang, 1, 5, 1.0, gamma, 0xFEED);
+    let levels: Vec<&dyn Drift> = ladder.iter().map(|d| d as &dyn Drift).collect();
+    let cal = Calibrator::new(
+        5,
+        CalibConfig { sample_every: 1, refit_every: 12, budget: 30.0, ..CalibConfig::default() },
+    );
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..12 {
+        let x: Vec<f32> = (0..48 * 32).map(|_| rng.normal_f32() * 2.0).collect();
+        cal.record(&probe_family(&levels, &x, 0.0, CostSource::Declared));
+    }
+    assert!(cal.maybe_refit());
+    let snap = cal.snapshot();
+    let levels_j = snap.get("levels").unwrap().as_arr().unwrap();
+    assert_eq!(levels_j.len(), 5);
+    for (k, l) in levels_j.iter().enumerate() {
+        let cost = l.f64_of("cost").unwrap();
+        let declared = (2f64.powi(k as i32 + 1)).powf(gamma);
+        assert!((cost - declared).abs() < 1e-9, "level {k} cost {cost} vs {declared}");
+    }
+    // adjacent error ratio ≈ 4 (amp halves per level, squared)
+    for k in 2..5 {
+        let a = levels_j[k - 1].f64_of("err2").unwrap();
+        let b = levels_j[k].f64_of("err2").unwrap();
+        let ratio = a / b;
+        assert!(ratio > 2.0 && ratio < 8.0, "err2 ratio at level {k}: {ratio}");
+    }
+    // Looser than the headline test: this 5-level ladder has only 4 fit
+    // points to average the bumps' fixed phase-dependent deviations.
+    let g = snap.f64_of("gamma").unwrap();
+    assert!((g - gamma).abs() / gamma <= 0.15, "snapshot gamma {g}");
+}
+
+#[test]
+fn starved_budget_shortens_the_served_ladder() {
+    // End-to-end level dropping: with a budget far below the ladder's
+    // appetite, the derived policy must keep a strict prefix.
+    let gamma = 2.5;
+    let costs: Vec<f64> = (1..=5).map(|k| 2f64.powf(gamma * k as f64)).collect();
+    let err2: Vec<f64> = (1..=5).map(|k| 4f64.powi(-(k as i32))).collect();
+    let cal = Calibrator::new(
+        5,
+        CalibConfig { sample_every: 1, refit_every: 1, budget: 8.0, ..CalibConfig::default() },
+    );
+    cal.record(&ProbeSample { costs: costs.clone(), err2 });
+    assert!(cal.maybe_refit());
+    let d = cal.derived().unwrap();
+    assert!(d.kept < 5, "kept {} of 5 at a starved budget", d.kept);
+    assert!(d.step_cost <= 8.0 * (1.0 + 1e-6));
+    // the full-rate check: generous budget keeps everything
+    assert!(cal.set_budget(autopilot::step_cost(&[1.0; 5], &costs) * 2.0));
+    assert_eq!(cal.derived().unwrap().kept, 5);
+}
+
+#[test]
+fn bench_json_contract() {
+    // The JSON artifact carries the fields ROADMAP/CI consumers read.
+    let cfg = CalibrateConfig {
+        levels: 4,
+        probes: 6,
+        steps: 40,
+        reps: 1,
+        batch: 16,
+        dim: 24,
+        components: 4,
+        ..CalibrateConfig::default()
+    };
+    let j = calibrate_compare(&cfg);
+    let parsed = Json::parse(&j.to_string()).unwrap();
+    for key in [
+        "gamma_hat",
+        "gamma_rel_err",
+        "se_gamma",
+        "r2",
+        "budget",
+        "probs_max_rel_err_at_gamma_hat",
+        "throughput_ratio_autopilot_vs_hand",
+        "expected_cost_ratio_autopilot_vs_hand",
+    ] {
+        assert!(parsed.f64_of(key).is_some(), "missing {key}");
+    }
+    assert!(parsed.get_path(&["hand", "images_per_sec"]).is_some());
+    assert!(parsed.get_path(&["autopilot", "probs"]).is_some());
+    assert_eq!(parsed.get_path(&["workload", "levels"]).and_then(Json::as_f64), Some(4.0));
+}

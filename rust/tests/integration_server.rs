@@ -1,11 +1,14 @@
 //! Integration: the full serving path over a real TCP socket — client
 //! JSON in, batched generation against the trained models, JSON out.
+//! Plus the calibration admin path end to end, which (deliberately)
+//! works without artifacts: admin requests never touch the engine.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
 use std::time::Duration;
 
+use mlem::calibrate::ProbeSample;
 use mlem::config::ServeConfig;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
@@ -127,6 +130,16 @@ fn serve_end_to_end() {
     let nfe = m.get_path(&["metrics", "nfe_per_level"]).unwrap().as_arr().unwrap();
     assert!(nfe[0].as_f64().unwrap() > 0.0, "level 1 must have evals");
 
+    // calibration admin request answers on the live ladder
+    let cal = c.call(r#"{"cmd":"calibration"}"#);
+    assert_eq!(cal.get("ok"), Some(&Json::Bool(true)), "{cal}");
+    let snap = cal.get("calibration").unwrap();
+    assert_eq!(snap.get("enabled"), Some(&Json::Bool(true)));
+    assert_eq!(snap.f64_of("ladder_levels"), Some(3.0)); // {1,3,5}
+    // bad budget rejected, connection stays usable
+    let bad = c.call(r#"{"cmd":"calibration","set_budget":-1}"#);
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
     // EM uses only the top level
     let em = c.call(r#"{"cmd":"generate","n":1,"sampler":"em","steps":20,"levels":[1,2]}"#);
     assert_eq!(em.get("ok"), Some(&Json::Bool(true)));
@@ -139,4 +152,121 @@ fn serve_end_to_end() {
     assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
     server_thread.join().unwrap();
     handle.stop();
+}
+
+/// A minimal-but-valid artifact directory whose HLO files are empty
+/// stubs: enough for the scheduler/server to boot with the offline shim
+/// (the engine refuses jobs; the admin path never needs one).
+fn synthetic_artifacts() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlem-calib-admin-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for f in ["l1.hlo.txt", "l2.hlo.txt", "l3.hlo.txt"] {
+        std::fs::write(dir.join(f), "").unwrap();
+    }
+    let manifest = format!(
+        concat!(
+            r#"{{"img":2,"channels":1,"dim":4,"batch_buckets":[4],"jvp_buckets":[],"#,
+            r#""schedule":{{"s":{},"t_max":{}}},"#,
+            r#""combine":{{"batch":4,"levels":3,"ref":"","pallas":""}},"#,
+            r#""holdout":{{"file":"holdout.bin","count":0}},"#,
+            r#""levels":["#,
+            r#"{{"level":1,"params":10,"flops_per_image":100,"holdout_loss":0.5,"eps":{{"4":"l1.hlo.txt"}},"eps_jvp":{{}},"eps_pallas":{{}}}},"#,
+            r#"{{"level":2,"params":20,"flops_per_image":800,"holdout_loss":0.25,"eps":{{"4":"l2.hlo.txt"}},"eps_jvp":{{}},"eps_pallas":{{}}}},"#,
+            r#"{{"level":3,"params":30,"flops_per_image":6400,"holdout_loss":0.12,"eps":{{"4":"l3.hlo.txt"}},"eps_jvp":{{}},"eps_pallas":{{}}}}"#,
+            r#"]}}"#
+        ),
+        mlem::sde::schedule::COSINE_S,
+        mlem::sde::schedule::T_MAX
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+/// The calibration admin request end to end — TCP in, TCP out — with an
+/// injected fit (the shim backend can't run real generation traffic, so
+/// the probes are fed to the calibrator directly; the artifact-gated
+/// test above covers the live-traffic probe path when artifacts exist).
+#[test]
+fn calibration_admin_end_to_end() {
+    let dir = synthetic_artifacts();
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 4,
+        cost_reps: 0, // no engine: manifest FLOP costs
+        mlem_levels: vec![1, 2, 3],
+        calib_sample_every: 1,
+        calib_refit_every: 2,
+        calib_budget: 500.0,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap();
+
+    // Inject observations exactly as live probes would deliver them.
+    let gamma = 2.5;
+    let cal = scheduler.calibrator().expect("calibration enabled");
+    let sample = ProbeSample {
+        costs: (0..3).map(|k| 2f64.powf(gamma * k as f64)).collect(),
+        err2: (0..3).map(|k| 4f64.powi(-(k as i32))).collect(),
+    };
+    cal.record(&sample);
+    cal.record(&sample);
+    assert!(cal.maybe_refit(), "cadence of 2 probes must refit");
+
+    let server = std::sync::Arc::new(Server::new(cfg, scheduler));
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+    let mut c = Client::connect(addr);
+
+    let pong = c.call(r#"{"cmd":"ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // snapshot over the wire: γ̂ fitted from the injected ladder
+    let resp = c.call(r#"{"cmd":"calibration"}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    let snap = resp.get("calibration").unwrap();
+    assert_eq!(snap.get("enabled"), Some(&Json::Bool(true)));
+    let g = snap.f64_of("gamma").expect("gamma fitted");
+    assert!((g - gamma).abs() < 1e-6, "gamma over the wire: {g}");
+    assert_eq!(snap.f64_of("ladder_levels"), Some(3.0));
+    assert_eq!(snap.f64_of("probes"), Some(2.0));
+    let pol = snap.get("policy").unwrap();
+    assert_eq!(pol.str_of("kind"), Some("fixed-theory"));
+    let generous_cost = pol.f64_of("step_cost").unwrap();
+
+    // set_budget re-derives the policy live
+    let resp2 = c.call(r#"{"cmd":"calibration","set_budget":3.0}"#);
+    assert_eq!(resp2.get("ok"), Some(&Json::Bool(true)), "{resp2}");
+    let snap2 = resp2.get("calibration").unwrap();
+    assert_eq!(snap2.f64_of("budget"), Some(3.0));
+    let pol2 = snap2.get("policy").unwrap();
+    let tight_cost = pol2.f64_of("step_cost").unwrap();
+    assert!(
+        tight_cost < generous_cost && tight_cost <= 3.0 * (1.0 + 1e-6),
+        "step cost {tight_cost} must respect the new budget (was {generous_cost})"
+    );
+
+    // the gauge + counters surface through the ordinary metrics request
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let gh = m.get_path(&["metrics", "gamma_hat"]).unwrap().as_f64().unwrap();
+    assert!((gh - gamma).abs() < 1e-6, "gamma_hat gauge: {gh}");
+    let recal = m.get_path(&["metrics", "recalibrations"]).unwrap().as_f64().unwrap();
+    assert!(recal >= 1.0, "set_budget counts as a recalibration");
+
+    // malformed budget rejected at parse time
+    let bad = c.call(r#"{"cmd":"calibration","set_budget":-2}"#);
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    server_thread.join().unwrap();
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,236 @@
+//! Dispatch-path microbench: the persistent worker pool vs the
+//! historical scoped-spawn path vs the inline serial loop.
+//!
+//! The workload is a fused-update-shaped kernel (weighted accumulate +
+//! Euler update, the memory traffic of `StepCtx::fused_rows` without the
+//! sampler plumbing) over a `[batch, dim]` state at batch ∈ {8, 64,
+//! 512}.  Shard counts are pinned (no engagement grains) so the three
+//! paths run the *identical* per-shard work and the measurement isolates
+//! pure dispatch cost — the ~10µs-per-worker scoped spawn the pool
+//! exists to delete.  A bitwise parity check runs first; timings land in
+//! `BENCH_workers.json` at the repo root, including the headline
+//! `pool_beats_scoped_small_batches` flag (batch ≤ 64 is exactly the
+//! regime the old spawn cost kept serial).
+//!
+//! `cargo bench --bench bench_workers`
+
+use std::time::Instant;
+
+use mlem::benchkit::write_bench_json;
+use mlem::parallel;
+use mlem::util::bench::Table;
+use mlem::util::json::Json;
+
+const DIM: usize = 384;
+const BATCHES: [usize; 3] = [8, 64, 512];
+
+/// One fused-step-shaped pass over a shard's rows.
+fn fused_kernel(total: &mut [f32], x: &mut [f32], fk: &[f32], dw: &[f32]) {
+    let (w, eta, gt) = (1.7f32, 0.01f32, 0.3f32);
+    for j in 0..total.len() {
+        total[j] += w * fk[j];
+    }
+    for j in 0..x.len() {
+        x[j] += eta * total[j] + gt * dw[j];
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Path {
+    Serial,
+    Scoped,
+    Pool,
+}
+
+/// Run one dispatch of the workload through the chosen path, splitting
+/// the buffers per call exactly as the samplers do.
+fn dispatch(
+    path: Path,
+    sh: &[parallel::Shard],
+    total: &mut [f32],
+    x: &mut [f32],
+    fk: &[f32],
+    dw: &[f32],
+) {
+    if path == Path::Serial {
+        fused_kernel(total, x, fk, dw);
+        return;
+    }
+    let tots = parallel::split_rows_mut(total, DIM, sh);
+    let xs = parallel::split_rows_mut(x, DIM, sh);
+    let fks = parallel::split_rows(fk, DIM, sh);
+    let dws = parallel::split_rows(dw, DIM, sh);
+    let tasks: Vec<(&mut [f32], &mut [f32], &[f32], &[f32])> = tots
+        .into_iter()
+        .zip(xs)
+        .zip(fks)
+        .zip(dws)
+        .map(|(((tc, xc), fc), dc)| (tc, xc, fc, dc))
+        .collect();
+    match path {
+        Path::Scoped => {
+            parallel::run_shards_scoped(tasks, |_, (tc, xc, fc, dc)| fused_kernel(tc, xc, fc, dc))
+        }
+        Path::Pool => {
+            parallel::run_shards(tasks, |_, (tc, xc, fc, dc)| fused_kernel(tc, xc, fc, dc))
+        }
+        Path::Serial => unreachable!(),
+    }
+}
+
+/// Fixed per-batch workload buffers (deterministic contents).
+fn buffers(batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = batch * DIM;
+    let total: Vec<f32> = (0..n).map(|i| (i as f32 * 0.13).sin() * 1e-3).collect();
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.29).cos()).collect();
+    let fk: Vec<f32> = (0..n).map(|i| (i as f32 * 0.07).sin()).collect();
+    let dw: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos() * 0.1).collect();
+    (total, x, fk, dw)
+}
+
+/// Best-of-5 blocks of `block` dispatches; returns ns per dispatch.
+/// Values saturate over repeated accumulation, which leaves the memory
+/// traffic (and so the timing) unchanged — only dispatch cost differs
+/// between paths.
+fn time_path(path: Path, sh: &[parallel::Shard], batch: usize) -> f64 {
+    let (mut total, mut x, fk, dw) = buffers(batch);
+    let block: usize = (2_000_000 / (batch * DIM)).clamp(50, 2000);
+    for _ in 0..block / 2 {
+        dispatch(path, sh, &mut total, &mut x, &fk, &dw); // warmup
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..block {
+            dispatch(path, sh, &mut total, &mut x, &fk, &dw);
+        }
+        best = best.min(t0.elapsed().as_nanos() as f64 / block as f64);
+    }
+    best
+}
+
+/// All three paths must produce bit-identical state from equal inputs.
+fn assert_parity(sh: &[parallel::Shard], batch: usize) {
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for path in [Path::Serial, Path::Scoped, Path::Pool] {
+        let (mut total, mut x, fk, dw) = buffers(batch);
+        dispatch(path, sh, &mut total, &mut x, &fk, &dw);
+        outs.push(x);
+    }
+    for (label, out) in [("scoped", &outs[1]), ("pool", &outs[2])] {
+        assert!(
+            outs[0].iter().zip(out.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{label} dispatch diverged from serial at batch {batch}"
+        );
+    }
+}
+
+fn main() {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = parallel::num_threads().min(hw.max(2)).max(2).min(8);
+    println!(
+        "worker-pool dispatch bench: dim {DIM}, {threads} shards pinned, machine parallelism {hw}\n"
+    );
+
+    let mut table = Table::new(
+        "workers dispatch",
+        &["batch", "shards", "serial_us", "scoped_us", "pool_us", "pool vs scoped"],
+    );
+    let mut rows = Vec::new();
+    let mut small_batch_ok = true;
+    for &batch in &BATCHES {
+        let sh = parallel::shards(batch, threads);
+        assert_parity(&sh, batch);
+        let serial_ns = time_path(Path::Serial, &sh, batch);
+        let scoped_ns = time_path(Path::Scoped, &sh, batch);
+        let pool_ns = time_path(Path::Pool, &sh, batch);
+        let vs_scoped = scoped_ns / pool_ns;
+        if batch <= 64 && sh.len() > 1 && pool_ns >= scoped_ns {
+            small_batch_ok = false;
+        }
+        table.row(&[
+            format!("{batch}"),
+            format!("{}", sh.len()),
+            format!("{:.2}", serial_ns / 1e3),
+            format!("{:.2}", scoped_ns / 1e3),
+            format!("{:.2}", pool_ns / 1e3),
+            format!("{vs_scoped:.2}x"),
+        ]);
+        rows.push(
+            Json::obj()
+                .with("batch", Json::num(batch as f64))
+                .with("shards", Json::num(sh.len() as f64))
+                .with("serial_ns", Json::num(serial_ns))
+                .with("scoped_ns", Json::num(scoped_ns))
+                .with("pool_ns", Json::num(pool_ns))
+                .with("pool_vs_scoped_speedup", Json::num(vs_scoped))
+                .with("pool_vs_serial_speedup", Json::num(serial_ns / pool_ns)),
+        );
+    }
+    table.emit();
+
+    // Sharded-vs-plain payload memcpy — the executor's `pooled_copy`
+    // shape.  par_copy only engages the pool above COPY_GRAIN, so this
+    // measures the crossover it is gated on.
+    let copy_len = 3 * parallel::COPY_GRAIN;
+    let src: Vec<f32> = (0..copy_len).map(|i| (i % 1013) as f32).collect();
+    let mut dst = vec![0.0f32; copy_len];
+    let mut time_copy = |sharded: bool| {
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            for _ in 0..8 {
+                if sharded {
+                    parallel::par_copy(&src, &mut dst);
+                } else {
+                    dst.copy_from_slice(&src);
+                }
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / 8.0);
+        }
+        best
+    };
+    let copy_plain_ns = time_copy(false);
+    let copy_sharded_ns = time_copy(true);
+    println!(
+        "payload memcpy ({} MB): plain {:.0}us, pool-sharded {:.0}us ({:.2}x)",
+        copy_len * 4 / (1 << 20),
+        copy_plain_ns / 1e3,
+        copy_sharded_ns / 1e3,
+        copy_plain_ns / copy_sharded_ns
+    );
+
+    let stats = parallel::pool_stats();
+    println!(
+        "pool: {} workers, {} runs, {} spawns avoided, {} barrier waits | \
+         small-batch (<=64) pool beats scoped: {small_batch_ok}",
+        stats.workers, stats.runs, stats.spawns_avoided, stats.barrier_waits
+    );
+
+    let j = Json::obj()
+        .with("dim", Json::num(DIM as f64))
+        .with("shards_pinned", Json::num(threads as f64))
+        .with("machine_parallelism", Json::num(hw as f64))
+        .with("batches", Json::Arr(rows))
+        .with("pool_beats_scoped_small_batches", Json::Bool(small_batch_ok))
+        .with(
+            "payload_copy",
+            Json::obj()
+                .with("elements", Json::num(copy_len as f64))
+                .with("plain_ns", Json::num(copy_plain_ns))
+                .with("sharded_ns", Json::num(copy_sharded_ns))
+                .with("sharded_vs_plain_speedup", Json::num(copy_plain_ns / copy_sharded_ns)),
+        )
+        .with(
+            "pool_stats",
+            Json::obj()
+                .with("workers", Json::num(stats.workers as f64))
+                .with("runs", Json::num(stats.runs as f64))
+                .with("inline_runs", Json::num(stats.inline_runs as f64))
+                .with("spawns_avoided", Json::num(stats.spawns_avoided as f64))
+                .with("barrier_waits", Json::num(stats.barrier_waits as f64))
+                .with("barrier_wait_ns", Json::num(stats.barrier_wait_ns as f64)),
+        );
+    let path = write_bench_json("workers", &j).expect("writing BENCH_workers.json");
+    println!("[json] {}", path.display());
+}

@@ -316,7 +316,7 @@ pub struct HotpathConfig {
 impl Default for HotpathConfig {
     fn default() -> Self {
         // Heavy enough that one score eval (~batch × components × dim
-        // f64 ops) dwarfs the scoped-thread spawn cost.
+        // f64 ops) dwarfs the worker-pool dispatch cost.
         HotpathConfig { batch: 64, dim: 384, components: 32, levels: 3, steps: 40, seed: 42 }
     }
 }

@@ -80,6 +80,13 @@ pub struct ServeConfig {
     /// Swap the calibrated `FixedTheory` policy into live serving once
     /// fitted; false = observe-and-report only.
     pub calib_autopilot: bool,
+    /// Sampler worker threads (the `PALLAS_THREADS` knob as config):
+    /// 0 = auto (env var if set, else the machine's parallelism).  A
+    /// positive value is exported to `PALLAS_THREADS` by
+    /// [`ServeConfig::apply_threads`] *before* the persistent worker
+    /// pool fixes its size at first use — so it both shapes shard
+    /// counts and sizes the pool, in either direction.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +106,7 @@ impl Default for ServeConfig {
             calib_refit_every: 8,
             calib_budget: 0.0,
             calib_autopilot: true,
+            threads: 0,
         }
     }
 }
@@ -146,6 +154,7 @@ impl ServeConfig {
                     self.calib_autopilot =
                         v.as_bool().ok_or_else(|| anyhow!("calib_autopilot: bool"))?
                 }
+                "threads" => self.threads = v.as_usize().ok_or_else(|| anyhow!("threads: int"))?,
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
         }
@@ -183,8 +192,35 @@ impl ServeConfig {
                 other => return Err(anyhow!("--calib-autopilot expects on|off, got '{other}'")),
             };
         }
+        cfg.threads = args.usize_or("threads", cfg.threads);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Fix the sampler worker pool under the `threads` knob: export a
+    /// positive value to `PALLAS_THREADS` (the env var a bare-env
+    /// deployment would set), then spin the pool up now so its size is
+    /// decided here and not by whatever work arrives first.  Called by
+    /// `Server::new` and the `mlem` binary's scheduler bootstrap, so the
+    /// flag binds for every subcommand (serve, generate, …).  The pool's
+    /// size is frozen at its first use process-wide; a later conflicting
+    /// request can still reshape shard counts but not the pool, so it is
+    /// reported instead of silently half-applying.
+    pub fn apply_threads(&self) {
+        if self.threads > 0 {
+            if let Some(workers) = crate::parallel::pool_size() {
+                if workers + 1 != self.threads {
+                    eprintln!(
+                        "[config] threads={} requested, but the worker pool already started \
+                         with {} workers (+ the calling thread) and cannot be resized; \
+                         shard counts follow the new value",
+                        self.threads, workers
+                    );
+                }
+            }
+            std::env::set_var(crate::parallel::THREADS_ENV, self.threads.to_string());
+        }
+        crate::parallel::ensure_started();
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -193,6 +229,11 @@ impl ServeConfig {
         }
         if self.mlem_levels.is_empty() {
             return Err(anyhow!("mlem_levels must not be empty"));
+        }
+        // Sanity cap: a typo'd huge value would otherwise panic at boot
+        // when the pool tries to spawn that many OS threads.
+        if self.threads > 1024 {
+            return Err(anyhow!("threads: {} exceeds the sanity cap (1024; 0=auto)", self.threads));
         }
         let mut sorted = self.mlem_levels.clone();
         sorted.sort_unstable();
@@ -266,6 +307,19 @@ mod tests {
         assert!(!cli.calib_autopilot);
         assert!((cli.calib_budget - 1.25).abs() < 1e-12);
         assert!(ServeConfig::from_args(&args("serve --calib-autopilot maybe")).is_err());
+    }
+
+    #[test]
+    fn threads_knob_applies() {
+        assert_eq!(ServeConfig::default().threads, 0, "auto by default");
+        let cli = ServeConfig::from_args(&args("serve --threads 6")).unwrap();
+        assert_eq!(cli.threads, 6);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"threads": 3}"#).unwrap()).unwrap();
+        assert_eq!(cfg.threads, 3);
+        // typo protection: absurd values are a config error, not a
+        // thread-spawn panic at boot
+        assert!(ServeConfig::from_args(&args("serve --threads 1000000")).is_err());
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub struct Server {
 
 impl Server {
     pub fn new(cfg: ServeConfig, scheduler: Scheduler) -> Server {
+        // Fix the sampler worker pool under the operator's `threads`
+        // knob before any request can create it at an arbitrary size.
+        cfg.apply_threads();
         let metrics = scheduler.metrics().clone();
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::new(

@@ -86,8 +86,9 @@ impl Gmm {
     /// Exact score `∇ log ρ_t` of the diffused mixture for a flattened
     /// `[batch, dim]` input.
     ///
-    /// Rows are independent, so the batch is sharded across scoped
-    /// threads (`PALLAS_THREADS`); each shard reuses one pooled
+    /// Rows are independent, so the batch is sharded across the
+    /// persistent worker pool (`PALLAS_THREADS`, spawn-free dispatch —
+    /// small batches shard too); each shard reuses one pooled
     /// responsibility buffer.  Per-row arithmetic is untouched, so the
     /// output is bit-identical for every thread count.
     pub fn score_t(&self, x: &[f32], t: f64, out: &mut [f32]) {

@@ -20,12 +20,16 @@
 //!
 //! 1. [`parallel`] provides the substrate: a deterministic batch sharder
 //!    (`[batch, dim]` rows split into contiguous [`parallel::Shard`]s,
-//!    executed on scoped threads, `PALLAS_THREADS` knob) and process-wide
-//!    [`parallel::ScratchPool`]s whose buffers are recycled instead of
-//!    reallocated.  Shard boundaries are a pure function of
-//!    `(rows, threads)` and workers own disjoint rows, so every thread
-//!    count produces **bit-identical** trajectories — verified by the
-//!    `parity_parallel` property tests.
+//!    `PALLAS_THREADS` knob), the persistent [`parallel::WorkerPool`]
+//!    (long-lived threads parked on an epoch barrier execute the shards —
+//!    dispatch is a ~1–2µs wake instead of a ~10µs-per-worker scoped
+//!    spawn, so the engagement grains are low enough for small batches to
+//!    shard), and process-wide [`parallel::ScratchPool`]s whose buffers
+//!    are recycled instead of reallocated.  Shard boundaries are a pure
+//!    function of `(rows, threads)`, workers own disjoint rows, and the
+//!    calling thread still takes shard 0, so every thread count — and
+//!    pool vs. serial dispatch — produces **bit-identical** trajectories;
+//!    verified by the `parity_parallel` property tests.
 //! 2. The drift layer rides on it: the analytic GMM score
 //!    ([`gmm::Gmm::score_t`]) and the Assumption-1 perturbation
 //!    ([`gmm::PerturbedDrift`]) evaluate batch chunks in parallel, while
@@ -43,14 +47,16 @@
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
-//! `BENCH_hotpath.json` at the repo root.
+//! `BENCH_hotpath.json` at the repo root; `cargo bench --bench
+//! bench_workers` races the pool against the historical scoped-spawn
+//! dispatch across batch sizes into `BENCH_workers.json`.
 //!
 //! Module map (see `DESIGN.md` for the full inventory):
 //!
 //! | module | role |
 //! |---|---|
 //! | [`util`] | dependency-free substrates: RNG, stats, JSON, duals, CLI, property tests, bench harness |
-//! | [`parallel`] | batch sharder + scratch pools powering the hot path |
+//! | [`parallel`] | batch sharder + persistent worker pool + scratch pools powering the hot path |
 //! | [`sde`] | drift traits, noise schedule, EM / **ML-EM** samplers, DDPM/DDIM discretisations |
 //! | [`gmm`] | analytic Gaussian-mixture substrate with constructed approximator ladders |
 //! | [`levels`] | level-probability policies and cost accounting |

@@ -1,7 +1,8 @@
 //! `mlem` — the leader binary.
 //!
 //! ```text
-//! mlem serve      [--artifacts DIR] [--addr HOST:PORT] [--max-batch N] ...
+//! mlem serve      [--artifacts DIR] [--addr HOST:PORT] [--max-batch N]
+//!                 [--threads T]  # sampler worker pool size (0 = auto) ...
 //! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
 //!                 [--levels 1,3,5] [--delta D] [--out images.pgm]
 //! mlem gamma-fit  [--artifacts DIR]      # Fig-2 style γ estimate
@@ -19,6 +20,9 @@ use mlem::util::cli::Args;
 use mlem::util::stats;
 
 fn build_scheduler(cfg: &ServeConfig) -> Result<Scheduler> {
+    // Bind the --threads knob for every subcommand (generate included),
+    // not just serve: the pool's size is fixed at its first use.
+    cfg.apply_threads();
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
     let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;

@@ -196,6 +196,12 @@ impl Metrics {
     }
 
     /// JSON snapshot served by the coordinator's `metrics` command.
+    /// Includes the process-wide sampler worker-pool counters
+    /// ([`crate::parallel::pool_stats`]): `spawns_avoided` is the thread
+    /// spawns the pre-pool scoped dispatch would have paid, and
+    /// `barrier_waits` counts dispatches where the submitting thread
+    /// actually blocked at the completion barrier — together the
+    /// evidence that the persistent pool is doing its job.
     pub fn snapshot(&self) -> Json {
         let nfe = Json::Arr(
             self.nfe_per_level
@@ -203,6 +209,14 @@ impl Metrics {
                 .map(|c| Json::num(c.get() as f64))
                 .collect(),
         );
+        let wp = crate::parallel::pool_stats();
+        let worker_pool = Json::obj()
+            .with("workers", Json::num(wp.workers as f64))
+            .with("runs", Json::num(wp.runs as f64))
+            .with("inline_runs", Json::num(wp.inline_runs as f64))
+            .with("spawns_avoided", Json::num(wp.spawns_avoided as f64))
+            .with("barrier_waits", Json::num(wp.barrier_waits as f64))
+            .with("barrier_wait_ns", Json::num(wp.barrier_wait_ns as f64));
         Json::obj()
             .with("requests", Json::num(self.requests.get() as f64))
             .with("completed", Json::num(self.completed.get() as f64))
@@ -214,6 +228,7 @@ impl Metrics {
             .with("gamma_hat", Json::num(self.gamma_hat.get()))
             .with("recalibrations", Json::num(self.recalibrations.get() as f64))
             .with("calib_probes", Json::num(self.calib_probes.get() as f64))
+            .with("worker_pool", worker_pool)
             .with("request_latency", self.request_latency.snapshot())
             .with("execute_latency", self.execute_latency.snapshot())
             .with("queue_latency", self.queue_latency.snapshot())
@@ -275,6 +290,10 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.f64_of("requests"), Some(1.0));
         assert_eq!(parsed.f64_of("gamma_hat"), Some(0.0));
+        // worker-pool counters ride along (zeros until first dispatch)
+        let wp = parsed.get("worker_pool").expect("worker_pool section");
+        assert!(wp.f64_of("spawns_avoided").is_some());
+        assert!(wp.f64_of("barrier_waits").is_some());
     }
 
     #[test]

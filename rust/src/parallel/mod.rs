@@ -1,15 +1,21 @@
 //! Parallel, allocation-free substrate for the sampling hot path.
 //!
-//! Two pieces, both dependency-free (std scoped threads + mutexed
-//! free-lists — no rayon/crossbeam offline):
+//! Three pieces, all dependency-free (std threads + mutexed free-lists —
+//! no rayon/crossbeam offline):
 //!
 //! * [`shard`] — a deterministic batch sharder.  A `[batch, dim]` buffer
-//!   is partitioned into contiguous *row* ranges ([`Shard`]s) that scoped
-//!   threads process independently.  The partition is a pure function of
+//!   is partitioned into contiguous *row* ranges ([`Shard`]s) that
+//!   workers process independently.  The partition is a pure function of
 //!   `(rows, thread count)` and every worker touches only its own rows,
 //!   so results are **bit-identical** to the serial loop for any
 //!   `PALLAS_THREADS` setting — parallelism never reorders a single
 //!   floating-point operation within a row.
+//! * [`workers`] — the persistent [`WorkerPool`]: long-lived threads
+//!   parked on an epoch barrier execute the sharded tasks.  Dispatch is
+//!   one lock + wake (~1–2µs) instead of the ~10µs-per-thread scoped
+//!   spawn it replaced, the calling thread still takes shard 0, and the
+//!   pool size is fixed at first use (`PALLAS_THREADS`, else the
+//!   machine's parallelism).
 //! * [`pool`] — [`ScratchPool`], a reusable free-list of scratch buffers
 //!   keyed by nothing (best-fit by capacity).  Hot loops that used to
 //!   allocate fresh `Vec`s per call (`Drift::jvp` central differences,
@@ -19,16 +25,20 @@
 //!
 //! Thread count comes from the `PALLAS_THREADS` env knob (default: the
 //! machine's available parallelism).  Two work-size grains gate when
-//! extra threads are actually engaged: [`HEAVY_GRAIN`] for compute-bound
+//! extra workers are actually engaged: [`HEAVY_GRAIN`] for compute-bound
 //! per-row kernels (GMM scores) and [`LIGHT_GRAIN`] for memory-bound
-//! elementwise loops (fused accumulate/update), since a thread spawn
-//! costs ~tens of microseconds and must be amortised.
+//! elementwise loops (fused accumulate/update).  Both dropped by 8×/4×
+//! when dispatch moved from scoped spawns to the parked pool — small
+//! batches shard now.
 
 pub mod pool;
 pub mod shard;
+pub mod workers;
 
 pub use pool::{global_f32, global_f64, ScratchGuard, ScratchPool};
 pub use shard::{
-    for_each_shard, heavy_shards, light_shards, num_threads, par_map_rows_light, run_shards,
-    shards, split_rows, split_rows_mut, Shard, HEAVY_GRAIN, LIGHT_GRAIN, THREADS_ENV,
+    for_each_shard, heavy_shards, light_shards, num_threads, par_copy, par_map_rows_light,
+    run_shards, run_shards_scoped, shards, split_rows, split_rows_mut, Shard, COPY_GRAIN,
+    HEAVY_GRAIN, LIGHT_GRAIN, THREADS_ENV,
 };
+pub use workers::{ensure_started, pool_size, pool_stats, PoolStats, WorkerPool};

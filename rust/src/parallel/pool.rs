@@ -23,6 +23,11 @@ pub struct ScratchPool<T: Copy + Default + Send> {
     bufs: Mutex<Vec<Vec<T>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Most buffers ever parked at once.  Bounded by the peak number of
+    /// concurrent borrowers (a fresh buffer is only created when the
+    /// free-list is empty, i.e. every existing buffer is live), which
+    /// the concurrency stress test asserts.
+    high_water: AtomicU64,
 }
 
 impl<T: Copy + Default + Send> ScratchPool<T> {
@@ -31,6 +36,7 @@ impl<T: Copy + Default + Send> ScratchPool<T> {
             bufs: Mutex::new(Vec::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
         }
     }
 
@@ -87,6 +93,7 @@ impl<T: Copy + Default + Send> ScratchPool<T> {
         let mut bufs = self.bufs.lock().unwrap();
         if bufs.len() < MAX_POOLED {
             bufs.push(buf);
+            self.high_water.fetch_max(bufs.len() as u64, Ordering::Relaxed);
         }
     }
 
@@ -99,6 +106,12 @@ impl<T: Copy + Default + Send> ScratchPool<T> {
     /// Buffers currently parked in the free-list.
     pub fn parked(&self) -> usize {
         self.bufs.lock().unwrap().len()
+    }
+
+    /// Most buffers ever parked at once (see the field docs: bounded by
+    /// the peak number of concurrent borrowers).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed) as usize
     }
 }
 
@@ -208,6 +221,67 @@ mod tests {
             p.put(vec![0.0f32; 4]);
         }
         assert_eq!(p.parked(), MAX_POOLED);
+    }
+
+    /// Concurrency stress: N threads × M iterations of borrow → mutate →
+    /// drop with mixed widths.  Asserts the free-list loses no buffers
+    /// (every take is accounted, buffers survive to be re-parked), the
+    /// parked high-water mark never exceeds peak concurrency (a fresh
+    /// buffer is only created when every existing one is live), and a
+    /// live guard's contents are never visible to another live guard.
+    #[test]
+    fn concurrent_stress_borrow_mutate_drop() {
+        const THREADS: usize = 8;
+        const ITERS: usize = 400;
+        let p: ScratchPool<f32> = ScratchPool::new();
+        std::thread::scope(|s| {
+            for tid in 0..THREADS {
+                let p = &p;
+                s.spawn(move || {
+                    for it in 0..ITERS {
+                        // mixed widths so best-fit churns the free-list
+                        let len = 16 + (tid * 31 + it * 7) % 96;
+                        let tag = (tid * ITERS + it) as f32 + 1.0;
+                        let mut g = p.take(len);
+                        assert_eq!(g.len(), len);
+                        for v in g.iter_mut() {
+                            *v = tag;
+                        }
+                        // while other guards are live and writing their
+                        // own tags, ours must still be intact
+                        assert!(
+                            g.iter().all(|&v| v == tag),
+                            "buffer shared across live guards (thread {tid}, iter {it})"
+                        );
+                    } // guard drops: buffer returns to the free-list
+                });
+            }
+        });
+        let (hits, misses) = p.stats();
+        assert_eq!(hits + misses, (THREADS * ITERS) as u64, "every take accounted");
+        // No lost buffers: all outstanding guards dropped, so everything
+        // ever allocated is parked again...
+        assert!(p.parked() >= 1);
+        // ...and no buffer was conjured beyond peak concurrency: at most
+        // one live guard per thread, so at most THREADS distinct buffers
+        // can ever exist, parked or live.
+        assert!(p.parked() <= THREADS, "parked {} > {THREADS} borrowers", p.parked());
+        assert!(p.high_water() <= THREADS, "high water {} > {THREADS}", p.high_water());
+        assert!(p.high_water() >= p.parked());
+    }
+
+    #[test]
+    fn high_water_tracks_peak_parked() {
+        let p: ScratchPool<f32> = ScratchPool::new();
+        assert_eq!(p.high_water(), 0);
+        p.put(vec![0.0; 4]);
+        p.put(vec![0.0; 4]);
+        p.put(vec![0.0; 4]);
+        assert_eq!(p.high_water(), 3);
+        let _a = p.take(4);
+        let _b = p.take(4);
+        assert_eq!(p.parked(), 1);
+        assert_eq!(p.high_water(), 3, "high water is a peak, not a level");
     }
 
     #[test]

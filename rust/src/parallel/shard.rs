@@ -1,4 +1,4 @@
-//! Deterministic batch sharding over scoped threads.
+//! Deterministic batch sharding, executed on the persistent worker pool.
 //!
 //! A shard is a contiguous range of batch *rows* of a flattened
 //! `[batch, dim]` buffer.  The shard boundaries depend only on the row
@@ -6,23 +6,34 @@
 //! only its own rows, so a sharded loop produces bit-identical output to
 //! its serial counterpart (same per-element operations in the same
 //! order; sharding merely interleaves rows across cores).
+//!
+//! Execution lives in [`super::workers`]: [`run_shards`] hands the tasks
+//! to the process-wide [`super::workers::WorkerPool`] instead of
+//! spawning scoped threads per call, which is why the engagement grains
+//! below are an order of magnitude lower than they were under
+//! scoped-spawn dispatch.  The historical spawning path is kept as
+//! [`run_shards_scoped`] so `benches/bench_workers.rs` can measure the
+//! difference.
 
 /// Environment knob for the worker count (`PALLAS_THREADS=4`).  Unset or
 /// unparsable values fall back to the machine's available parallelism.
 pub const THREADS_ENV: &str = "PALLAS_THREADS";
 
 /// Minimum *work units* (≈ scalar float ops) per shard for compute-bound
-/// per-row kernels before an extra thread is engaged.  ~32K f64 ops is
-/// tens of microseconds — a few multiples of one thread spawn.  Callers
-/// estimate work per row (e.g. `components × dim` for the GMM score) and
-/// pass it to [`heavy_shards`].
-pub const HEAVY_GRAIN: usize = 1 << 15;
+/// per-row kernels before an extra thread is engaged.  ~4K f64 ops is a
+/// couple of microseconds — a few multiples of one pool dispatch (the
+/// barrier wake costs ~1–2µs; the scoped-thread spawn it replaced cost
+/// ~10µs and forced this gate 8× higher).  Callers estimate work per row
+/// (e.g. `components × dim` for the GMM score) and pass it to
+/// [`heavy_shards`].
+pub const HEAVY_GRAIN: usize = 1 << 12;
 
 /// Minimum elements per shard for memory-bound elementwise loops (fused
-/// accumulate/update: ~1 FLOP per element).  Far larger than
-/// [`HEAVY_GRAIN`] because a ~10µs thread spawn amortises only against
-/// hundreds of kilobytes of streamed data.
-pub const LIGHT_GRAIN: usize = 1 << 16;
+/// accumulate/update: ~1 FLOP per element).  Larger than [`HEAVY_GRAIN`]
+/// because a pool dispatch amortises only against tens of kilobytes of
+/// streamed data — but 4× lower than under scoped spawning, so mid-size
+/// batches shard too.
+pub const LIGHT_GRAIN: usize = 1 << 14;
 
 /// A contiguous range of batch rows assigned to one worker.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,7 +50,9 @@ fn parse_threads(v: Option<&str>) -> Option<usize> {
 
 /// Worker count: the `PALLAS_THREADS` override when set and valid, else
 /// `std::thread::available_parallelism()`.  Read per call (not cached)
-/// so tests and benches can flip the knob within one process.
+/// so tests and benches can flip the knob within one process; the
+/// *pool* size is fixed at first use instead (see
+/// [`super::workers::global`]) and absorbs larger counts by striding.
 pub fn num_threads() -> usize {
     parse_threads(std::env::var(THREADS_ENV).ok().as_deref())
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
@@ -63,13 +76,29 @@ pub fn shards(rows: usize, threads: usize) -> Vec<Shard> {
     out
 }
 
+/// Pure core of [`heavy_shards`]/[`light_shards`]: partition `rows` rows
+/// into at most `threads` shards such that **every shard carries at
+/// least `grain` work units** (`work_per_row` each) unless it is the
+/// only shard.  The guarantee is by construction: a shard must span at
+/// least `⌈grain / work_per_row⌉` rows, so the shard count is capped at
+/// `rows / ⌈grain / work_per_row⌉` before balancing.  Property-tested
+/// below.
+fn grain_shards_for(rows: usize, work_per_row: usize, grain: usize, threads: usize) -> Vec<Shard> {
+    let cap = if work_per_row == 0 {
+        1 // zero-work rows: sharding buys nothing
+    } else {
+        let min_rows = (grain.max(1) + work_per_row - 1) / work_per_row;
+        rows / min_rows.max(1)
+    };
+    shards(rows, threads.min(cap.max(1)))
+}
+
 fn grain_shards(rows: usize, work_per_row: usize, grain: usize) -> Vec<Shard> {
-    let cap = rows.saturating_mul(work_per_row) / grain.max(1);
-    shards(rows, num_threads().min(cap.max(1)))
+    grain_shards_for(rows, work_per_row, grain, num_threads())
 }
 
 /// Shards for compute-bound per-row work: `work_per_row` is the caller's
-/// estimate of scalar float ops per row, and a shard must amount to at
+/// estimate of scalar float ops per row, and every shard amounts to at
 /// least [`HEAVY_GRAIN`] of them before an extra thread is engaged.
 pub fn heavy_shards(rows: usize, work_per_row: usize) -> Vec<Shard> {
     grain_shards(rows, work_per_row, HEAVY_GRAIN)
@@ -103,11 +132,34 @@ pub fn split_rows_mut<'a>(buf: &'a mut [f32], dim: usize, sh: &[Shard]) -> Vec<&
     out
 }
 
-/// Run one task per shard on scoped threads; the calling thread takes
-/// the first task, so a single-task call has zero thread overhead.
-/// Tasks typically carry the disjoint `&mut` chunks produced by
-/// [`split_rows_mut`].
+/// Run one task per shard on the persistent worker pool; the calling
+/// thread takes the first task (so a single-task call is a plain inline
+/// loop with zero synchronisation), parked workers take the rest, and
+/// the call returns once every task has run.  Tasks typically carry the
+/// disjoint `&mut` chunks produced by [`split_rows_mut`].  Semantics
+/// (shard→task assignment, completion barrier) are identical to the
+/// historical scoped-spawn version, minus the ~10µs/worker spawn cost —
+/// see [`super::workers`] for the barrier protocol and
+/// [`run_shards_scoped`] for the measured baseline.
 pub fn run_shards<T, F>(tasks: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    if tasks.len() <= 1 {
+        for (i, t) in tasks.into_iter().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    super::workers::global().run(tasks, f);
+}
+
+/// The pre-pool dispatch path: one scoped thread spawned per task beyond
+/// the first, calling thread takes task 0.  Kept (not routed to by any
+/// hot path) as the baseline `benches/bench_workers.rs` measures the
+/// pool against, and as the reference semantics `run_shards` must match.
+pub fn run_shards_scoped<T, F>(tasks: Vec<T>, f: F)
 where
     T: Send,
     F: Fn(usize, T) + Sync,
@@ -167,9 +219,28 @@ pub fn par_map_rows_light(
     for_each_shard(x, out, dim, &light_shards(rows, dim), f);
 }
 
+/// Minimum elements per shard for the sharded payload memcpy
+/// ([`par_copy`]): far above [`LIGHT_GRAIN`] because a copy has no
+/// compute to hide the dispatch behind, and a small copy queuing on the
+/// pool's submit lock could stall behind an unrelated sampler kernel —
+/// so only multi-megabyte payloads shard (4 MB of f32 per chunk).
+pub const COPY_GRAIN: usize = 1 << 20;
+
+/// Sharded memcpy for wide buffers (the executor's request payloads):
+/// plain `copy_from_slice` below [`COPY_GRAIN`], pool-sharded chunks
+/// above it.  A copy is trivially bit-identical however it is split.
+/// `bench_workers` measures the sharded-vs-plain crossover.
+pub fn par_copy(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len(), "par_copy length mismatch");
+    for_each_shard(src, dst, 1, &grain_shards(src.len(), 1, COPY_GRAIN), |_, s, d| {
+        d.copy_from_slice(s);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest_lite as pt;
 
     #[test]
     fn shards_tile_exactly() {
@@ -237,6 +308,20 @@ mod tests {
     }
 
     #[test]
+    fn run_shards_scoped_executes_every_task_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits: Vec<AtomicU64> = (0..9).map(|_| AtomicU64::new(0)).collect();
+        let tasks: Vec<usize> = (0..9).collect();
+        run_shards_scoped(tasks, |i, t| {
+            assert_eq!(i, t);
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
     fn for_each_shard_matches_serial_bitwise() {
         let dim = 5;
         let rows = 137;
@@ -266,5 +351,102 @@ mod tests {
         // tiny work never shards beyond one chunk
         let sh = grain_shards(4, 2, HEAVY_GRAIN);
         assert_eq!(sh.len(), 1);
+    }
+
+    #[test]
+    fn par_copy_is_exact() {
+        // spans both the serial (short) and sharded (wide) paths
+        for len in [0usize, 5, 1000, 2 * COPY_GRAIN + 17] {
+            let src: Vec<f32> = (0..len).map(|i| (i as f32).cos()).collect();
+            let mut dst = vec![0.0f32; len];
+            par_copy(&src, &mut dst);
+            assert!(src.iter().zip(&dst).all(|(a, b)| a.to_bits() == b.to_bits()), "len {len}");
+        }
+    }
+
+    /// Shared invariant checks for a grain-gated partition: covers every
+    /// row exactly once in order, respects the thread cap, and never
+    /// emits a shard below the grain unless it is the only shard.
+    fn check_grain_invariants(
+        sh: &[Shard],
+        rows: usize,
+        wpr: usize,
+        grain: usize,
+        threads: usize,
+    ) -> Result<(), String> {
+        if sh.is_empty() {
+            return Err("empty shard list".into());
+        }
+        if sh.len() > threads.max(1) {
+            return Err(format!("{} shards exceed {} threads", sh.len(), threads));
+        }
+        let mut row = 0usize;
+        for s in sh {
+            if s.start != row {
+                return Err(format!("shard at {} expected to start at {row}", s.start));
+            }
+            row += s.len;
+        }
+        if row != rows {
+            return Err(format!("shards cover {row} of {rows} rows"));
+        }
+        if sh.len() > 1 {
+            for s in sh {
+                if s.len * wpr < grain {
+                    return Err(format!(
+                        "shard of {} rows x {wpr} work < grain {grain} in a {}-shard split",
+                        s.len,
+                        sh.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn grain_shards_property_invariants() {
+        pt::check("grain_shards_invariants", 300, |gen| {
+            let rows = gen.usize_range(0, 2000);
+            let wpr = gen.usize_range(0, 5000);
+            let grain = [1usize, 64, HEAVY_GRAIN, LIGHT_GRAIN][gen.usize_range(0, 4)];
+            let threads = gen.usize_range(1, 64);
+            let sh = grain_shards_for(rows, wpr, grain, threads);
+            check_grain_invariants(&sh, rows, wpr, grain, threads).map_err(|e| {
+                format!("rows {rows} wpr {wpr} grain {grain} threads {threads}: {e}")
+            })?;
+            // determinism: a pure function of its arguments
+            if sh != grain_shards_for(rows, wpr, grain, threads) {
+                return Err("non-deterministic partition".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn heavy_and_light_shards_satisfy_their_grains() {
+        // The public wrappers read PALLAS_THREADS via num_threads();
+        // whatever that returns, the invariants must hold against it.
+        pt::check("heavy_light_shards_invariants", 200, |gen| {
+            let rows = gen.usize_range(0, 1024);
+            let t = num_threads();
+            let wpr = gen.usize_range(1, 1 << 16);
+            check_grain_invariants(&heavy_shards(rows, wpr), rows, wpr, HEAVY_GRAIN, t)
+                .map_err(|e| format!("heavy rows {rows} wpr {wpr}: {e}"))?;
+            let dim = gen.usize_range(1, 1024);
+            check_grain_invariants(&light_shards(rows, dim), rows, dim, LIGHT_GRAIN, t)
+                .map_err(|e| format!("light rows {rows} dim {dim}: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grain_shards_engage_all_threads_when_work_allows() {
+        // Plenty of work per row: the partition should use every thread.
+        let sh = grain_shards_for(64, HEAVY_GRAIN, HEAVY_GRAIN, 8);
+        assert_eq!(sh.len(), 8);
+        // Exactly enough for two grains: no more than two shards.
+        let sh = grain_shards_for(2, HEAVY_GRAIN, HEAVY_GRAIN, 8);
+        assert_eq!(sh.len(), 2);
     }
 }

@@ -1,0 +1,537 @@
+//! Persistent worker pool: the spawn-free execution substrate behind
+//! [`super::shard::run_shards`].
+//!
+//! The original hot path executed each sharded batch on
+//! `std::thread::scope`, paying ~10µs of thread spawn per engaged worker
+//! per call — exactly the per-step overhead ML-EM amortises worst, since
+//! Theorem 1's speedup comes from running *many* cheap-level steps for
+//! every expensive one.  A [`WorkerPool`] instead parks long-lived
+//! threads on a lightweight **epoch barrier** (std-only:
+//! `Mutex`/`Condvar`): dispatching a batch is one lock + `notify_all`
+//! (~1–2µs), which is what lets the engagement grains in [`super::shard`]
+//! drop low enough for small batches to shard at all.
+//!
+//! # Determinism
+//!
+//! [`WorkerPool::run`] keeps the exact task semantics of the historical
+//! scoped-spawn `run_shards`: the **calling thread executes task 0**
+//! synchronously, parked workers execute tasks `1..n` (worker `w` takes
+//! the strided set `{1+w, 1+w+W, …}` when there are more tasks than
+//! workers), and the call does not return until every task has run.
+//! Tasks carry disjoint `&mut` row chunks and each task's per-element
+//! arithmetic is untouched, so *which* thread runs a task can never
+//! change a bit of output — trajectories stay bit-identical to the
+//! serial loop for every pool size (property-tested in
+//! `tests/parity_parallel.rs`).
+//!
+//! # Lifecycle
+//!
+//! The process-wide pool ([`global`]) is created at its first multi-task
+//! dispatch; its size is **fixed at first use** as
+//! [`super::shard::num_threads`]` − 1` workers (`PALLAS_THREADS` when
+//! set — smaller *or* larger than the machine — else available
+//! parallelism; the caller is the extra hand).  Later `PALLAS_THREADS`
+//! changes still shape shard counts per call; task counts beyond the
+//! worker count are absorbed by striding.  Locally created pools shut
+//! down gracefully on drop: workers observe the shutdown flag, exit
+//! their park loop, and are joined.
+//!
+//! # Re-entrancy
+//!
+//! A dispatch from inside a pool task (nested parallelism) or from a
+//! thread that is already mid-dispatch falls back to the inline serial
+//! loop instead of deadlocking on the single shared job slot — same
+//! results, no surprise.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+thread_local! {
+    /// True on pool worker threads always, and on any thread while it is
+    /// inside a pooled dispatch — nested [`WorkerPool::run`] calls from
+    /// such threads run inline (see module docs).
+    static POOL_BUSY: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Type-erased "execute task `i`" callback for the current batch.  The
+/// pointee lives on the submitting thread's stack; the barrier protocol
+/// guarantees no worker touches it after `run` returns.
+#[derive(Clone, Copy)]
+struct BatchFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the raw pointer is only dereferenced by workers between batch
+// publication and the completion barrier, while the pointee is alive and
+// `Sync` (asserted by `WorkerPool::run`'s bounds).
+unsafe impl Send for BatchFn {}
+
+/// One published batch of tasks.
+#[derive(Clone, Copy)]
+struct Batch {
+    run_one: BatchFn,
+    tasks: usize,
+}
+
+/// Barrier state shared between the submitter and the workers.
+struct State {
+    /// Bumped once per published batch; workers park until it moves.
+    epoch: u64,
+    /// The in-flight batch (`None` between dispatches).
+    batch: Option<Batch>,
+    /// Participating workers that have not yet finished their share.
+    remaining: usize,
+    /// First panic payload caught in a worker task this batch.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for the epoch to move.
+    work: Condvar,
+    /// The submitter parks here waiting for `remaining` to hit zero.
+    done: Condvar,
+}
+
+/// Cumulative dispatch counters (process-global for the [`global`] pool;
+/// per-pool otherwise).  `spawns_avoided` counts the scoped threads the
+/// historical `run_shards` would have spawned for the same calls —
+/// the pool's reason to exist — while `barrier_waits` counts dispatches
+/// where the caller actually blocked at the completion barrier after
+/// finishing its own task 0 (`barrier_wait_ns` is the time it spent
+/// there).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parked worker threads (pool size; caller thread not included).
+    pub workers: usize,
+    /// Multi-task dispatches that went through the barrier.
+    pub runs: u64,
+    /// Dispatches executed inline (nested/re-entrant calls, or a pool
+    /// with zero workers).
+    pub inline_runs: u64,
+    /// Thread spawns the scoped-spawn path would have paid (`tasks − 1`
+    /// summed over pooled dispatches).
+    pub spawns_avoided: u64,
+    /// Pooled dispatches where the caller blocked at the barrier.
+    pub barrier_waits: u64,
+    /// Cumulative nanoseconds the caller spent blocked at the barrier.
+    pub barrier_wait_ns: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    runs: AtomicU64,
+    inline_runs: AtomicU64,
+    spawns_avoided: AtomicU64,
+    barrier_waits: AtomicU64,
+    barrier_wait_ns: AtomicU64,
+}
+
+/// A fixed-size pool of parked worker threads executing sharded batches
+/// published through an epoch barrier.  See the module docs for the
+/// protocol and determinism argument.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serialises submitters: one batch in flight at a time (a second
+    /// top-level caller blocks here until the pool is free again).
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+    counters: Counters,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads.  `with_workers(0)` is a valid
+    /// pool whose dispatches all run inline on the caller.
+    pub fn with_workers(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                batch: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mlem-worker-{w}"))
+                    .spawn(move || worker_loop(&shared, w, workers))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), handles, counters: Counters::default() }
+    }
+
+    /// Parked worker threads (the caller thread is the `+1`).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute one task per entry of `tasks`; the calling thread runs
+    /// task 0, parked workers run the rest, and the call returns only
+    /// once every task has finished (a task panic is re-raised here).
+    /// Exact drop-in for the scoped-spawn `run_shards` semantics.
+    pub fn run<T, F>(&self, tasks: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        let n = tasks.len();
+        if n <= 1 || self.handles.is_empty() || POOL_BUSY.with(Cell::get) {
+            self.counters.inline_runs.fetch_add(1, Ordering::Relaxed);
+            for (i, t) in tasks.into_iter().enumerate() {
+                f(i, t);
+            }
+            return;
+        }
+
+        // Each task is parked in a cell claimed by exactly one thread:
+        // index 0 by the caller, index i ≥ 1 by worker (i − 1) % W.
+        let cells: Vec<TaskCell<T>> =
+            tasks.into_iter().map(|t| TaskCell(UnsafeCell::new(Some(t)))).collect();
+        let run_one = |i: usize| {
+            // SAFETY: disjoint claim per index (see above); the cell is
+            // alive for the whole dispatch.
+            let t = unsafe { (*cells[i].0.get()).take() }.expect("pool task claimed twice");
+            f(i, t);
+        };
+        let erased: &(dyn Fn(usize) + Sync) = &run_one;
+        let participants = self.handles.len().min(n - 1);
+
+        POOL_BUSY.with(|b| b.set(true));
+        let submit = self.submit.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.batch = Some(Batch { run_one: BatchFn(erased as *const _), tasks: n });
+            st.remaining = participants;
+            st.panic = None;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+
+        // The caller takes task 0 (the run_shards contract).  A panic
+        // here must still wait out the barrier: workers hold pointers
+        // into this stack frame until `remaining` hits zero.
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_one(0)));
+
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.remaining > 0 {
+                let t0 = Instant::now();
+                while st.remaining > 0 {
+                    st = self.shared.done.wait(st).unwrap();
+                }
+                self.counters.barrier_waits.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .barrier_wait_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            st.batch = None;
+            st.panic.take()
+        };
+        drop(submit);
+        POOL_BUSY.with(|b| b.set(false));
+
+        self.counters.runs.fetch_add(1, Ordering::Relaxed);
+        self.counters.spawns_avoided.fetch_add((n - 1) as u64, Ordering::Relaxed);
+        if let Some(p) = panicked {
+            std::panic::resume_unwind(p);
+        }
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Dispatch counters since pool creation.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.handles.len(),
+            runs: self.counters.runs.load(Ordering::Relaxed),
+            inline_runs: self.counters.inline_runs.load(Ordering::Relaxed),
+            spawns_avoided: self.counters.spawns_avoided.load(Ordering::Relaxed),
+            barrier_waits: self.counters.barrier_waits.load(Ordering::Relaxed),
+            barrier_wait_ns: self.counters.barrier_wait_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Graceful shutdown: flag, wake everyone, join.
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// `Option<T>` slot claimed by exactly one thread per dispatch.
+struct TaskCell<T>(UnsafeCell<Option<T>>);
+
+// SAFETY: each cell is read/written by a single thread (disjoint static
+// claim — caller: index 0, worker w: indices {1+w, 1+w+W, …}); `T: Send`
+// lets the value cross from the submitting thread to that worker.
+unsafe impl<T: Send> Sync for TaskCell<T> {}
+
+fn worker_loop(shared: &Shared, w: usize, workers: usize) {
+    // Workers are always "busy": a task that itself dispatches to the
+    // pool must run that inner batch inline rather than deadlock.
+    POOL_BUSY.with(|b| b.set(true));
+    let mut seen = 0u64;
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            st.batch
+        };
+        // `batch` can be `None` only on a spurious epoch observation
+        // after the submitter already cleared it — nothing to do.
+        let Some(batch) = batch else { continue };
+        if 1 + w >= batch.tasks {
+            // Not a participant this round: the submitter did not count
+            // us in `remaining`, so just park again.
+            continue;
+        }
+        // SAFETY: we are a counted participant, so the submitter blocks
+        // until we decrement `remaining` below — the pointee outlives
+        // every dereference here.
+        let run_one = unsafe { &*batch.run_one.0 };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut i = 1 + w;
+            while i < batch.tasks {
+                run_one(i);
+                i += workers;
+            }
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = caught {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool used by [`super::shard::run_shards`].  Created
+/// on first call; size fixed then (see module docs).  Honouring a
+/// below-machine `PALLAS_THREADS` here — not `max`ing it with the
+/// hardware — is what lets an operator *bound* the sampler's thread
+/// footprint; oversubscribed shard counts later just stride.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::with_workers(super::shard::num_threads().saturating_sub(1)))
+}
+
+/// Force-create the global pool now (the serving coordinator calls this
+/// after applying its `threads` config so the size is fixed under the
+/// operator's knob, not whatever request arrives first).
+pub fn ensure_started() {
+    let _ = global();
+}
+
+/// Counters of the process-wide pool; zeros (with `workers: 0`) until
+/// its first multi-task dispatch creates it.
+pub fn pool_stats() -> PoolStats {
+    GLOBAL.get().map(WorkerPool::stats).unwrap_or_default()
+}
+
+/// Worker count of the process-wide pool, or `None` while it has not
+/// been created yet (unlike [`pool_stats`], distinguishes "not started"
+/// from a started zero-worker pool — `ServeConfig::apply_threads` uses
+/// this to report an unsatisfiable resize).
+pub fn pool_size() -> Option<usize> {
+    GLOBAL.get().map(WorkerPool::workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn executes_every_task_exactly_once_with_matching_index() {
+        let pool = WorkerPool::with_workers(3);
+        for n in [2usize, 3, 4, 7, 16] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let tasks: Vec<usize> = (0..n).collect();
+            pool.run(tasks, |i, t| {
+                assert_eq!(i, t, "index/task mismatch");
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_tasks_than_workers_stride_correctly() {
+        let pool = WorkerPool::with_workers(2);
+        let n = 11;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run((0..n).collect(), |_, t: usize| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_single_task_run_inline() {
+        let pool = WorkerPool::with_workers(2);
+        pool.run(Vec::<usize>::new(), |_, _| panic!("no tasks to run"));
+        let ran = AtomicUsize::new(0);
+        pool.run(vec![42usize], |i, t| {
+            assert_eq!((i, t), (0, 42));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+        let s = pool.stats();
+        assert_eq!(s.runs, 0, "inline paths must not count as pooled runs");
+        assert_eq!(s.inline_runs, 2);
+    }
+
+    #[test]
+    fn matches_serial_loop_bitwise() {
+        let pool = WorkerPool::with_workers(3);
+        let dim = 5;
+        let rows = 97;
+        let x: Vec<f32> = (0..rows * dim).map(|i| (i as f32).sin()).collect();
+        let kernel = |xc: &[f32], oc: &mut [f32]| {
+            for (xb, ob) in xc.chunks_exact(dim).zip(oc.chunks_exact_mut(dim)) {
+                let dot: f32 = xb.iter().map(|&v| v * v).sum();
+                for j in 0..dim {
+                    ob[j] = xb[j] * dot.sqrt() - 0.5;
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; rows * dim];
+        kernel(&x, &mut serial);
+        for shards in [2usize, 3, 4, 9] {
+            let sh = crate::parallel::shards(rows, shards);
+            let mut out = vec![0.0f32; rows * dim];
+            let xs = crate::parallel::split_rows(&x, dim, &sh);
+            let os = crate::parallel::split_rows_mut(&mut out, dim, &sh);
+            let tasks: Vec<(&[f32], &mut [f32])> = xs.into_iter().zip(os).collect();
+            pool.run(tasks, |_, (xc, oc)| kernel(xc, oc));
+            assert!(
+                serial.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{shards}-shard pool run diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn repeated_small_dispatches_reuse_the_same_pool() {
+        // Epoch hygiene: hundreds of back-to-back small batches through
+        // one pool, every task observed exactly once per batch.
+        let pool = WorkerPool::with_workers(4);
+        for round in 0..300usize {
+            let n = 2 + round % 6;
+            let sum = AtomicUsize::new(0);
+            pool.run((0..n).collect(), |_, t: usize| {
+                sum.fetch_add(t + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2, "round {round}");
+        }
+        let s = pool.stats();
+        assert_eq!(s.runs, 300);
+        assert!(s.spawns_avoided >= 300, "each run avoids >= 1 spawn");
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_instead_of_deadlocking() {
+        let pool = WorkerPool::with_workers(2);
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(vec![0usize, 1, 2], |_, _| {
+            // Dispatch from inside a pool task: must fall back to the
+            // serial loop (POOL_BUSY), not wait on the occupied barrier.
+            pool.run(vec![10usize, 11], |i, t| {
+                assert_eq!(t - 10, i);
+                inner_hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::Relaxed), 6);
+        assert!(pool.stats().inline_runs >= 3);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialise_on_the_pool() {
+        let pool = WorkerPool::with_workers(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        pool.run(vec![1usize, 2, 3], |_, t| {
+                            total.fetch_add(t, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 6);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::with_workers(3);
+        pool.run(vec![0usize, 1, 2, 3], |_, _| {});
+        drop(pool); // hangs (and times the test out) if shutdown is broken
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_submitter() {
+        let pool = WorkerPool::with_workers(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(vec![0usize, 1, 2], |_, t| {
+                if t == 2 {
+                    panic!("boom in task {t}");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "task panic must reach the submitter");
+        // The pool must stay usable afterwards.
+        let ok = AtomicUsize::new(0);
+        pool.run(vec![0usize, 1], |_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stats_track_barrier_traffic() {
+        let pool = WorkerPool::with_workers(2);
+        pool.run(vec![0usize, 1, 2], |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let s = pool.stats();
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.spawns_avoided, 2);
+        assert!(s.barrier_waits <= 1);
+    }
+}

@@ -240,10 +240,13 @@ pub fn spawn_executor(
 
 /// Copy a payload into a buffer from the executor's payload pool
 /// (reused, not allocated, after warmup) for the trip to the executor
-/// thread.
+/// thread.  Multi-megabyte batch payloads are memcpy'd in parallel on
+/// the worker pool ([`crate::parallel::par_copy`] shards above
+/// `COPY_GRAIN`); everything smaller stays a plain wait-free
+/// `copy_from_slice`.
 fn pooled_copy(src: &[f32]) -> Vec<f32> {
     let mut buf = payload_pool().take_vec(src.len());
-    buf.copy_from_slice(src);
+    crate::parallel::par_copy(src, &mut buf);
     buf
 }
 

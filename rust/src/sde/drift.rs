@@ -260,7 +260,8 @@ impl<'a> Drift for SumDrift<'a> {
         let pool = crate::parallel::global_f32();
         let mut tmp = pool.take(x.len());
         self.b.eval(x, t, &mut tmp);
-        // memory-bound elementwise add: sharded only for very wide batches
+        // memory-bound elementwise add: worker-pool sharded above the
+        // light grain, plain loop below it
         crate::parallel::par_map_rows_light(&tmp, out, self.dim(), |_, tc, oc| {
             for i in 0..oc.len() {
                 oc[i] += tc[i];

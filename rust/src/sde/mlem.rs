@@ -194,11 +194,12 @@ impl<'a> StepCtx<'a> {
 ///
 /// Hot-path contract: all scratch comes from the process-wide
 /// [`crate::parallel`] pools (steady state allocates nothing), leaf
-/// drifts shard their batch across `PALLAS_THREADS` scoped threads, and
-/// the accumulate/update loops are fused per shard.  Bernoulli draws
-/// stay on one serial RNG stream, so trajectories and
-/// [`SampleReport`] accounting are **bit-identical for every thread
-/// count** (property-tested in `tests/parity_parallel.rs`).
+/// drifts shard their batch across the persistent `PALLAS_THREADS`-sized
+/// worker pool (parked threads woken per step — no per-call spawns, so
+/// even small batches shard), and the accumulate/update loops are fused
+/// per shard.  Bernoulli draws stay on one serial RNG stream, so
+/// trajectories and [`SampleReport`] accounting are **bit-identical for
+/// every thread count** (property-tested in `tests/parity_parallel.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn mlem_sample(
     family: &MlemFamily,
@@ -301,9 +302,9 @@ pub fn mlem_sample(
             }
         }
 
-        // 4. Fused accumulate + state update, sharded over batch rows
-        //    (memory-bound, so the light grain applies: extra threads
-        //    engage only for very wide batches).
+        // 4. Fused accumulate + state update, sharded over batch rows on
+        //    the worker pool (memory-bound, so the light grain applies:
+        //    extra workers engage only for wide batches).
         let gt = g(t) as f32;
         if gt != 0.0 {
             path.coarse_dw(i, grid.n, &mut dw);

@@ -4,6 +4,15 @@
 //! makes the batch-sharded hot path safe to ship: parallelism only
 //! splits row ranges, it never reorders floating-point work.
 //!
+//! Since the persistent worker pool replaced per-call scoped spawns,
+//! this suite is also the pool's parity certificate: every multi-shard
+//! dispatch in the process goes through **one** long-lived
+//! `parallel::WorkerPool`, so the `PALLAS_THREADS ∈ {1, 2, 4, 8}` sweeps
+//! below compare pool execution (threads > 1) against the inline serial
+//! loop (threads = 1), and the small-batch reuse test hammers the same
+//! pool with hundreds of back-to-back dispatches to surface any
+//! barrier-epoch bookkeeping bug.
+//!
 //! The tests in this file mutate the process-wide `PALLAS_THREADS` env
 //! knob, so they serialise on `ENV_LOCK` (the rest of the suite lives in
 //! other test binaries / processes).
@@ -91,13 +100,20 @@ fn mlem_bit_identical_across_thread_counts_property() {
         let steps = gen.usize_range(4, 32);
         let seed = gen.rng().next_u64();
         for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
+            // threads = 1 never touches the pool (inline serial loop);
+            // every other count dispatches through it — this is the
+            // pool-vs-serial comparison, at every supported count.
             let serial = run_with_threads(1, seed, batch, dim, mode, steps);
-            let par = run_with_threads(4, seed, batch, dim, mode, steps);
-            assert_identical(
-                &format!("mode {mode:?} batch {batch} dim {dim} steps {steps}"),
-                &serial,
-                &par,
-            )?;
+            for threads in [2usize, 4, 8] {
+                let par = run_with_threads(threads, seed, batch, dim, mode, steps);
+                assert_identical(
+                    &format!(
+                        "mode {mode:?} batch {batch} dim {dim} steps {steps} threads {threads}"
+                    ),
+                    &serial,
+                    &par,
+                )?;
+            }
         }
         Ok(())
     });
@@ -125,7 +141,7 @@ fn mlem_bit_identical_when_shards_really_engage() {
 #[test]
 fn fused_update_parity_at_light_grain_widths() {
     let _guard = ENV_LOCK.lock().unwrap();
-    // batch·dim = 512·256 = 131072 = 2·LIGHT_GRAIN: the fused
+    // batch·dim = 512·256 = 131072 = 8·LIGHT_GRAIN: the fused
     // accumulate/update path itself shards (not just the score kernel).
     assert!(512 * 256 >= 2 * parallel::LIGHT_GRAIN);
     for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
@@ -133,6 +149,93 @@ fn fused_update_parity_at_light_grain_widths() {
         let par = run_with_threads(6, 7, 512, 256, mode, 3);
         assert_identical(&format!("light-grain fused update, mode {mode:?}"), &serial, &par)
             .unwrap();
+    }
+    std::env::remove_var(parallel::THREADS_ENV);
+}
+
+#[test]
+fn worker_pool_reused_across_many_small_batches() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    std::env::set_var(parallel::THREADS_ENV, "4");
+
+    // Dispatch-level hammer: hundreds of consecutive small batches
+    // through the shared pool, shard counts churning 2..=4, every row
+    // visited exactly once per batch.  A stale epoch, a lost wakeup or a
+    // miscounted barrier shows up here as a wrong or missing row.
+    for round in 0..400usize {
+        let rows = 2 + round % 6;
+        let dim = 3;
+        let x: Vec<f32> = (0..rows * dim).map(|i| (i + round) as f32).collect();
+        let mut out = vec![0.0f32; rows * dim];
+        let sh = parallel::shards(rows, 4);
+        assert!(sh.len() > 1, "small batches must still multi-shard here");
+        parallel::for_each_shard(&x, &mut out, dim, &sh, |_, xc, oc| {
+            for (a, b) in xc.iter().zip(oc.iter_mut()) {
+                *b = a + 1.0;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i + round) as f32 + 1.0, "round {round} element {i}");
+        }
+    }
+
+    // Sampler-level: many short small-batch ML-EM runs reusing the same
+    // pool, each checked bit-identical against its serial twin.  At
+    // batch 12 × dim 64 the GMM score kernel really shards under the
+    // lowered HEAVY_GRAIN (16 components × 64 dims = 1024 work/row,
+    // min 4 rows/shard) — exactly the small-batch regime the pool exists
+    // for, and one the scoped-spawn grains kept serial.
+    assert!(12 * 16 * 64 >= 2 * parallel::HEAVY_GRAIN, "workload must multi-shard");
+    for seed in 0..6u64 {
+        for mode in [BernoulliMode::Shared, BernoulliMode::PerSample] {
+            let serial = run_with_threads(1, seed, 12, 64, mode, 6);
+            let pooled = run_with_threads(8, seed, 12, 64, mode, 6);
+            let label = format!("small-batch reuse seed {seed} mode {mode:?}");
+            assert_identical(&label, &serial, &pooled).unwrap();
+        }
+    }
+    std::env::remove_var(parallel::THREADS_ENV);
+}
+
+#[test]
+fn pool_scoped_and_serial_dispatch_agree_bitwise() {
+    let _guard = ENV_LOCK.lock().unwrap();
+    std::env::set_var(parallel::THREADS_ENV, "4");
+    // The same sharded kernel through all three dispatch paths: inline
+    // serial loop, the historical scoped-spawn baseline, and the
+    // persistent pool (run_shards).  All three must agree to the bit.
+    let dim = 7;
+    let rows = 129;
+    let x: Vec<f32> = (0..rows * dim).map(|i| (i as f32 * 0.37).sin()).collect();
+    let kernel = |xc: &[f32], oc: &mut [f32]| {
+        for (xb, ob) in xc.chunks_exact(dim).zip(oc.chunks_exact_mut(dim)) {
+            let norm: f32 = xb.iter().map(|&v| v * v).sum::<f32>().sqrt();
+            for j in 0..dim {
+                ob[j] = (xb[j] + norm).tanh();
+            }
+        }
+    };
+    let mut serial = vec![0.0f32; rows * dim];
+    kernel(&x, &mut serial);
+
+    let sh = parallel::shards(rows, 4);
+    let run = |via_pool: bool| {
+        let mut out = vec![0.0f32; rows * dim];
+        let xs = parallel::split_rows(&x, dim, &sh);
+        let os = parallel::split_rows_mut(&mut out, dim, &sh);
+        let tasks: Vec<(&[f32], &mut [f32])> = xs.into_iter().zip(os).collect();
+        if via_pool {
+            parallel::run_shards(tasks, |_, (xc, oc)| kernel(xc, oc));
+        } else {
+            parallel::run_shards_scoped(tasks, |_, (xc, oc)| kernel(xc, oc));
+        }
+        out
+    };
+    for (label, out) in [("pool", run(true)), ("scoped", run(false))] {
+        assert!(
+            serial.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{label} dispatch diverged from the serial loop"
+        );
     }
     std::env::remove_var(parallel::THREADS_ENV);
 }

@@ -1,0 +1,109 @@
+//! Executor cross-request micro-batching bench: grouped vs serial
+//! dispatch under concurrent handles sharing (level, bucket, t) eps
+//! traffic.
+//!
+//! The workload is the serving anti-pattern the aggregation loop
+//! exists for: H concurrent handle clones each issuing single-image
+//! requests against a bucket-8 artifact.  The serial path (grouping
+//! disabled, `exec_max_group = 1`) pads every request to the bucket on
+//! its own — 8 concurrent clients cost eight 8-row executes per round —
+//! while the grouped path packs the same in-flight requests into one
+//! padded-bucket execute.  Runs on the offline shim's synthetic
+//! interpreter, so the measured executes are real device-shaped work
+//! (per-element tanh recurrence, `work=256`) without `make artifacts`.
+//!
+//! Measurement and schema live in `benchkit::exec_batching_point` /
+//! `exec_batching_json` (shared with `tests/exec_batching.rs`, which
+//! emits a compressed single-point version of the same artifact).
+//! `BENCH_exec_batching.json` carries jobs/s per handle count for both
+//! paths, the grouped-path occupancy evidence, the
+//! `grouped_ge_1p5x_at_8` headline flag the CI bench-gate tracks, and a
+//! `bit_identical` flag from comparing every grouped output against its
+//! serial twin.
+//!
+//! `cargo bench --bench bench_exec_batching`
+
+use mlem::benchkit::{
+    exec_batching_json, exec_batching_point, synth_artifact_dir, write_bench_json,
+    ExecBatchingWorkload, SynthLevel,
+};
+use mlem::runtime::{spawn_executor_with, ExecOptions, Manifest};
+use mlem::util::bench::Table;
+
+const HANDLES: [usize; 4] = [1, 2, 4, 8];
+/// Requests per handle per storm.
+const REQS: usize = 40;
+
+fn main() -> anyhow::Result<()> {
+    let workload = ExecBatchingWorkload {
+        dim: 16, // img 4, 1 channel
+        bucket: 8,
+        rows_per_req: 1,
+        synthetic_work: 256,
+        linger_us: 200,
+        max_group: 8,
+    };
+    let dir = synth_artifact_dir(
+        "bench-exec-batching",
+        4,
+        1,
+        &[workload.bucket],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work }],
+    )?;
+    let manifest = Manifest::load(&dir)?;
+    let (serial, serial_join) = spawn_executor_with(
+        manifest.clone(),
+        None,
+        ExecOptions { linger_us: 0, max_group: 1 },
+    )?;
+    let (grouped, grouped_join) = spawn_executor_with(
+        manifest,
+        None,
+        ExecOptions { linger_us: workload.linger_us, max_group: workload.max_group },
+    )?;
+    serial.warmup(workload.bucket)?;
+    grouped.warmup(workload.bucket)?;
+
+    let mut table = Table::new(
+        "executor micro-batching",
+        &["handles", "serial jobs/s", "grouped jobs/s", "speedup"],
+    );
+    let mut points = Vec::new();
+    for &h in &HANDLES {
+        let p = exec_batching_point(&serial, &grouped, h, REQS, workload.rows_per_req, 1, 0.5, 3);
+        assert!(p.bit_identical, "grouped outputs diverged from serial at {h} handles");
+        table.row(&[
+            format!("{h}"),
+            format!("{:.0}", p.serial_jobs_per_s),
+            format!("{:.0}", p.grouped_jobs_per_s),
+            format!("{:.2}x", p.speedup),
+        ]);
+        points.push(p);
+    }
+    table.emit();
+
+    let gs = grouped.exec_stats()?;
+    let ss = serial.exec_stats()?;
+    assert_eq!(ss.exec_groups, 0, "max_group=1 must never form a group");
+    let occupancy = if gs.exec_groups > 0 {
+        gs.grouped_jobs as f64 / gs.exec_groups as f64
+    } else {
+        0.0
+    };
+    let speedup_at_8 = points.last().map(|p| p.speedup).unwrap_or(0.0);
+    println!(
+        "grouped executor: {} groups, {} grouped jobs (mean occupancy {occupancy:.2}), \
+         {} executes vs serial's {} | speedup at 8 handles: {speedup_at_8:.2}x",
+        gs.exec_groups, gs.grouped_jobs, gs.exec_calls, ss.exec_calls
+    );
+    let j = exec_batching_json(&workload, &points, gs, ss);
+    let path = write_bench_json("exec_batching", &j).expect("writing BENCH_exec_batching.json");
+    println!("[json] {}", path.display());
+
+    serial.stop();
+    grouped.stop();
+    let _ = serial_join.join();
+    let _ = grouped_join.join();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

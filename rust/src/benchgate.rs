@@ -1,0 +1,328 @@
+//! Bench-regression gate: compare the current run's `BENCH_*.json`
+//! artifacts against a baseline set and fail on tracked-metric
+//! regressions beyond a tolerance.
+//!
+//! The CI `bench-gate` job feeds it the fresh `bench-json` artifact, a
+//! baseline (the previous successful run's artifact, falling back to
+//! the committed `ci/bench_baselines/`), and the committed floors
+//! themselves — per metric the *stricter* of baseline and floor wins,
+//! so a slow sequence of sub-tolerance regressions can never ratchet
+//! the baseline below the committed floor unnoticed.  It fails the PR
+//! when any tracked metric regresses by more than 20%, printing a
+//! before/after table into the job summary.  Tracked metrics are
+//! intentionally few and dimensionless (speedups, relative errors):
+//! ratios survive runner-fleet churn far better than absolute
+//! wall-clock numbers do.
+//!
+//! The directory walking lives in the `bench_gate` binary; this module
+//! is the pure comparison logic, unit-tested in place.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One metric the gate watches.
+pub struct TrackedMetric {
+    /// Bench artifact file name (e.g. `BENCH_hotpath.json`).
+    pub file: &'static str,
+    /// Path of object keys to the numeric value.
+    pub path: &'static [&'static str],
+    /// Direction: true = bigger is better (speedups, throughput);
+    /// false = smaller is better (errors).
+    pub higher_is_better: bool,
+    /// Absolute slack added on top of the relative tolerance — for
+    /// metrics whose baseline sits near zero (e.g. relative errors),
+    /// where a pure percentage band would be noise-tight.
+    pub min_slack: f64,
+    /// Human name for the report table.
+    pub label: &'static str,
+}
+
+/// The tracked set.  Keep it short: every entry is a promise that a 20%
+/// move is a real regression, not runner noise.
+pub const TRACKED: &[TrackedMetric] = &[
+    TrackedMetric {
+        file: "BENCH_hotpath.json",
+        path: &["speedup"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "hotpath parallel-vs-serial speedup",
+    },
+    TrackedMetric {
+        file: "BENCH_exec_batching.json",
+        path: &["speedup_at_8"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "executor grouping speedup @ 8 handles",
+    },
+    TrackedMetric {
+        file: "BENCH_calibrate.json",
+        path: &["gamma_rel_err"],
+        higher_is_better: false,
+        min_slack: 0.05,
+        label: "calibration gamma relative error",
+    },
+];
+
+/// Outcome per tracked metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateStatus {
+    /// Within tolerance (or improved).
+    Ok,
+    /// Regressed beyond tolerance — fails the gate.
+    Regressed,
+    /// Baseline missing (first run / new metric) — passes with a note.
+    NoBaseline,
+    /// Current value missing — fails the gate (a bench stopped
+    /// emitting is exactly the rot this job exists to catch).
+    MissingCurrent,
+}
+
+/// One comparison row of the report.
+pub struct GateRow {
+    pub label: &'static str,
+    pub file: &'static str,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    pub status: GateStatus,
+}
+
+fn metric_value(dir: &Path, m: &TrackedMetric) -> Option<f64> {
+    let text = std::fs::read_to_string(dir.join(m.file)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    j.get_path(m.path).and_then(Json::as_f64)
+}
+
+/// Classify one (baseline, current) pair under `tolerance` (fractional,
+/// e.g. 0.20 = fail on >20% regressions).
+pub fn classify(
+    m: &TrackedMetric,
+    baseline: Option<f64>,
+    current: Option<f64>,
+    tolerance: f64,
+) -> GateStatus {
+    let Some(cur) = current else { return GateStatus::MissingCurrent };
+    let Some(base) = baseline else { return GateStatus::NoBaseline };
+    let regressed = if m.higher_is_better {
+        cur < base * (1.0 - tolerance) - m.min_slack
+    } else {
+        cur > base * (1.0 + tolerance) + m.min_slack
+    };
+    if regressed {
+        GateStatus::Regressed
+    } else {
+        GateStatus::Ok
+    }
+}
+
+/// The stricter of two candidate baselines for a metric: the larger
+/// for higher-is-better, the smaller for lower-is-better.  `None`s
+/// defer to the other side.
+fn stricter(m: &TrackedMetric, a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(if m.higher_is_better { x.max(y) } else { x.min(y) }),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+/// Compare every tracked metric of `current` against `baseline`,
+/// tightened per metric by the committed `floors` directory when given
+/// — a previous run that drifted below a floor cannot loosen the gate.
+pub fn compare_dirs(
+    baseline: &Path,
+    floors: Option<&Path>,
+    current: &Path,
+    tolerance: f64,
+) -> Vec<GateRow> {
+    TRACKED
+        .iter()
+        .map(|m| {
+            let prev = metric_value(baseline, m);
+            let floor = floors.and_then(|d| metric_value(d, m));
+            let base = stricter(m, prev, floor);
+            let cur = metric_value(current, m);
+            GateRow {
+                label: m.label,
+                file: m.file,
+                baseline: base,
+                current: cur,
+                status: classify(m, base, cur, tolerance),
+            }
+        })
+        .collect()
+}
+
+/// True when any row fails the gate.
+pub fn gate_fails(rows: &[GateRow]) -> bool {
+    rows.iter()
+        .any(|r| matches!(r.status, GateStatus::Regressed | GateStatus::MissingCurrent))
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.4}"),
+        None => "—".to_string(),
+    }
+}
+
+fn status_word(s: GateStatus) -> &'static str {
+    match s {
+        GateStatus::Ok => "ok",
+        GateStatus::Regressed => "REGRESSED",
+        GateStatus::NoBaseline => "no baseline",
+        GateStatus::MissingCurrent => "MISSING",
+    }
+}
+
+/// GitHub-flavoured markdown before/after table (for the job summary).
+pub fn render_markdown(rows: &[GateRow], tolerance: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "### Bench gate (tolerance {:.0}%)\n\n| metric | baseline | current | status |\n|---|---|---|---|\n",
+        tolerance * 100.0
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "| {} (`{}`) | {} | {} | {} |\n",
+            r.label,
+            r.file,
+            fmt_opt(r.baseline),
+            fmt_opt(r.current),
+            status_word(r.status)
+        ));
+    }
+    out
+}
+
+/// Plain-text report for the job log.
+pub fn render_text(rows: &[GateRow], tolerance: f64) -> String {
+    let mut t = crate::util::bench::Table::new(
+        &format!("bench gate (tolerance {:.0}%)", tolerance * 100.0),
+        &["metric", "file", "baseline", "current", "status"],
+    );
+    for r in rows {
+        t.row(&[
+            r.label.to_string(),
+            r.file.to_string(),
+            fmt_opt(r.baseline),
+            fmt_opt(r.current),
+            status_word(r.status).to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HIB: TrackedMetric = TrackedMetric {
+        file: "BENCH_x.json",
+        path: &["v"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "x",
+    };
+    const LIB: TrackedMetric = TrackedMetric {
+        file: "BENCH_y.json",
+        path: &["v"],
+        higher_is_better: false,
+        min_slack: 0.05,
+        label: "y",
+    };
+
+    #[test]
+    fn classify_directions_and_tolerance() {
+        // higher-is-better: 20% band
+        assert_eq!(classify(&HIB, Some(2.0), Some(2.0), 0.2), GateStatus::Ok);
+        assert_eq!(classify(&HIB, Some(2.0), Some(1.7), 0.2), GateStatus::Ok, "-15% passes");
+        assert_eq!(classify(&HIB, Some(2.0), Some(1.5), 0.2), GateStatus::Regressed, "-25% fails");
+        assert_eq!(classify(&HIB, Some(2.0), Some(3.0), 0.2), GateStatus::Ok, "improvement passes");
+        // lower-is-better with absolute slack: near-zero baselines don't
+        // flake on percentage noise
+        assert_eq!(classify(&LIB, Some(0.02), Some(0.06), 0.2), GateStatus::Ok, "within slack");
+        assert_eq!(classify(&LIB, Some(0.02), Some(0.09), 0.2), GateStatus::Regressed);
+    }
+
+    #[test]
+    fn missing_sides_classify_as_designed() {
+        assert_eq!(classify(&HIB, None, Some(1.0), 0.2), GateStatus::NoBaseline);
+        assert_eq!(classify(&HIB, Some(1.0), None, 0.2), GateStatus::MissingCurrent);
+        assert_eq!(classify(&HIB, None, None, 0.2), GateStatus::MissingCurrent);
+    }
+
+    fn row(status: GateStatus) -> GateRow {
+        GateRow { label: "m", file: "f", baseline: Some(1.0), current: Some(1.0), status }
+    }
+
+    #[test]
+    fn gate_fails_on_regression_or_missing_only() {
+        assert!(!gate_fails(&[row(GateStatus::Ok), row(GateStatus::NoBaseline)]));
+        assert!(gate_fails(&[row(GateStatus::Ok), row(GateStatus::Regressed)]));
+        assert!(gate_fails(&[row(GateStatus::MissingCurrent)]));
+    }
+
+    #[test]
+    fn compare_dirs_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("mlem-gate-test-{}", std::process::id()));
+        let (base, cur) = (dir.join("base"), dir.join("cur"));
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::create_dir_all(&cur).unwrap();
+        // hotpath regresses on speedup; exec_batching improves; calibrate
+        // absent on both sides (current missing → MISSING, not NoBaseline)
+        std::fs::write(base.join("BENCH_hotpath.json"), r#"{"speedup": 3.0}"#).unwrap();
+        std::fs::write(cur.join("BENCH_hotpath.json"), r#"{"speedup": 1.0}"#).unwrap();
+        std::fs::write(base.join("BENCH_exec_batching.json"), r#"{"speedup_at_8": 2.0}"#).unwrap();
+        std::fs::write(cur.join("BENCH_exec_batching.json"), r#"{"speedup_at_8": 4.0}"#).unwrap();
+        let rows = compare_dirs(&base, None, &cur, 0.2);
+        assert_eq!(rows.len(), TRACKED.len());
+        assert_eq!(rows[0].status, GateStatus::Regressed, "speedup 3.0 -> 1.0");
+        assert_eq!(rows[1].status, GateStatus::Ok, "improvement");
+        assert_eq!(rows[2].status, GateStatus::MissingCurrent, "calibrate json absent");
+        assert!(gate_fails(&rows));
+        let md = render_markdown(&rows, 0.2);
+        assert!(md.contains("REGRESSED") && md.contains("| metric |"), "{md}");
+        let txt = render_text(&rows, 0.2);
+        assert!(txt.contains("bench gate"), "{txt}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn committed_floors_stop_baseline_ratchet() {
+        let dir = std::env::temp_dir().join(format!("mlem-gate-floor-{}", std::process::id()));
+        let (base, floor, cur) = (dir.join("base"), dir.join("floor"), dir.join("cur"));
+        for d in [&base, &floor, &cur] {
+            std::fs::create_dir_all(d).unwrap();
+        }
+        // A previous run already drifted to 1.22 (one sub-20% step below
+        // the committed 1.5 floor); the next sub-20% step to 0.99 must
+        // still fail because the floor, not the drifted run, is the
+        // effective baseline.
+        std::fs::write(base.join("BENCH_exec_batching.json"), r#"{"speedup_at_8": 1.22}"#)
+            .unwrap();
+        std::fs::write(floor.join("BENCH_exec_batching.json"), r#"{"speedup_at_8": 1.5}"#)
+            .unwrap();
+        std::fs::write(cur.join("BENCH_exec_batching.json"), r#"{"speedup_at_8": 0.99}"#)
+            .unwrap();
+        let rows = compare_dirs(&base, Some(floor.as_path()), &cur, 0.2);
+        let row = rows.iter().find(|r| r.file == "BENCH_exec_batching.json").unwrap();
+        assert_eq!(row.baseline, Some(1.5), "floor wins over the drifted previous run");
+        assert_eq!(row.status, GateStatus::Regressed);
+        // Without floors the drift would have passed — the ratchet the
+        // merge exists to stop.
+        let loose = compare_dirs(&base, None, &cur, 0.2);
+        let loose_row = loose.iter().find(|r| r.file == "BENCH_exec_batching.json").unwrap();
+        assert_eq!(loose_row.status, GateStatus::Ok);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stricter_respects_direction_and_nones() {
+        assert_eq!(stricter(&HIB, Some(1.0), Some(2.0)), Some(2.0));
+        assert_eq!(stricter(&LIB, Some(0.1), Some(0.05)), Some(0.05));
+        assert_eq!(stricter(&HIB, None, Some(2.0)), Some(2.0));
+        assert_eq!(stricter(&HIB, Some(1.0), None), Some(1.0));
+        assert_eq!(stricter(&HIB, None, None), None);
+    }
+}

@@ -661,6 +661,285 @@ pub fn calibrate_compare(cfg: &CalibrateConfig) -> Json {
         .with("cost_parity_within_10pct", Json::Bool((1.0 - expected_cost_ratio).abs() <= 0.10))
 }
 
+// ---------------------------------------------------------------------------
+// Synthetic runtime artifacts + the executor micro-batching workload
+// (bench_exec_batching + tests/exec_batching.rs + tests/parity_parallel.rs)
+
+/// One synthetic level: kind ∈ {"eps", "fail", "panic"} (see
+/// `runtime::xla_shim` for the interpreter).  "eps" levels also get
+/// matching `eps_jvp` and `eps_pallas` artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthLevel {
+    pub kind: &'static str,
+    /// Gain of the elementwise recurrence (levels differ by scale).
+    pub scale: f64,
+    /// Recurrence iterations per element — the compute knob that makes
+    /// one execute dominate channel/dispatch overhead.
+    pub work: usize,
+}
+
+/// Header the offline shim recognises (kept in sync with
+/// `runtime::xla_shim::SYNTH_MAGIC`; duplicated here because the shim
+/// module only exists when the `xla` feature is off).
+const SYNTH_MAGIC: &str = "// synthetic-hlo v1";
+
+/// Write a synthetic artifact directory (manifest + interpreter-backed
+/// HLO stand-ins) under the system temp dir and return its path.  Gives
+/// the executor/engine stack a *working* device offline: the executor
+/// grouping bench and tests run real execute traffic without `make
+/// artifacts`.  Callers should `std::fs::remove_dir_all` the directory
+/// when done.
+pub fn synth_artifact_dir(
+    tag: &str,
+    img: usize,
+    channels: usize,
+    buckets: &[usize],
+    levels: &[SynthLevel],
+) -> Result<std::path::PathBuf> {
+    use crate::sde::schedule;
+    let dir = std::env::temp_dir().join(format!("mlem-synth-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let dim = img * img * channels;
+    let max_bucket = buckets.iter().copied().max().unwrap_or(1);
+    let spec_line = |kind: &str, scale: f64, work: usize| {
+        format!("{SYNTH_MAGIC} kind={kind} scale={scale} work={work}\n")
+    };
+    let bucket_obj = |files: &[(usize, String)]| {
+        let mut o = Json::obj();
+        for (b, f) in files {
+            o = o.with(&b.to_string(), Json::str(f.clone()));
+        }
+        o
+    };
+    let mut level_objs = Vec::new();
+    for (i, l) in levels.iter().enumerate() {
+        let k = i + 1;
+        let mut eps_files = Vec::new();
+        let mut jvp_files = Vec::new();
+        let mut pallas_files = Vec::new();
+        for &b in buckets {
+            let eps_name = format!("l{k}_b{b}.hlo.txt");
+            std::fs::write(dir.join(&eps_name), spec_line(l.kind, l.scale, l.work))?;
+            eps_files.push((b, eps_name.clone()));
+            if l.kind == "eps" {
+                let jvp_name = format!("l{k}jvp_b{b}.hlo.txt");
+                std::fs::write(dir.join(&jvp_name), spec_line("eps_jvp", l.scale, l.work))?;
+                jvp_files.push((b, jvp_name));
+                // Pallas flavour: identical spec, so parity is exact.
+                pallas_files.push((b, eps_name.clone()));
+            }
+        }
+        level_objs.push(
+            Json::obj()
+                .with("level", Json::num(k as f64))
+                .with("params", Json::num((100 * (k + 1)) as f64))
+                .with("flops_per_image", Json::num((100.0 * 8f64.powi(i as i32)).round()))
+                .with("holdout_loss", Json::num(0.5 * 0.5f64.powi(i as i32)))
+                .with("eps", bucket_obj(&eps_files))
+                .with("eps_jvp", bucket_obj(&jvp_files))
+                .with("eps_pallas", bucket_obj(&pallas_files)),
+        );
+    }
+    std::fs::write(dir.join("combine.hlo.txt"), spec_line("combine", 1.0, 1))?;
+    let manifest = Json::obj()
+        .with("img", Json::num(img as f64))
+        .with("channels", Json::num(channels as f64))
+        .with("dim", Json::num(dim as f64))
+        .with(
+            "batch_buckets",
+            Json::Arr(buckets.iter().map(|&b| Json::num(b as f64)).collect()),
+        )
+        .with(
+            "jvp_buckets",
+            Json::Arr(buckets.iter().map(|&b| Json::num(b as f64)).collect()),
+        )
+        .with(
+            "schedule",
+            Json::obj()
+                .with("s", Json::num(schedule::COSINE_S))
+                .with("t_max", Json::num(schedule::T_MAX)),
+        )
+        .with(
+            "combine",
+            Json::obj()
+                .with("batch", Json::num(max_bucket as f64))
+                .with("levels", Json::num(levels.len() as f64))
+                .with("ref", Json::str("combine.hlo.txt"))
+                .with("pallas", Json::str("combine.hlo.txt")),
+        )
+        .with(
+            "holdout",
+            Json::obj().with("file", Json::str("holdout.bin")).with("count", Json::num(0.0)),
+        )
+        .with("levels", Json::Arr(level_objs));
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(dir)
+}
+
+/// Deterministic request payload for client `h`, request `r` of the
+/// executor micro-batching workload — a pure function of its arguments,
+/// so two executors fed the same (h, r) grid are comparable bitwise.
+pub fn exec_batching_payload(h: usize, r: usize, rows: usize, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0xE9EC ^ ((h as u64) << 32) ^ r as u64);
+    rng.normal_vec_f32(rows * dim)
+}
+
+/// Drive `handles` concurrent clients, each issuing `reqs_per_handle`
+/// eps requests of `rows` rows at the same (level, t) through its own
+/// handle clone — the shared-kernel traffic the executor's aggregation
+/// loop fuses.  Returns the outputs in deterministic (client, request)
+/// order plus the wall seconds for the whole storm.  Panics on request
+/// errors (callers race healthy engines).
+pub fn exec_batching_storm(
+    handle: &crate::runtime::ExecutorHandle,
+    handles: usize,
+    reqs_per_handle: usize,
+    rows: usize,
+    level: usize,
+    t: f64,
+) -> (Vec<Vec<f32>>, f64) {
+    let dim = handle.manifest().dim;
+    let t0 = std::time::Instant::now();
+    let mut outs: Vec<Vec<Vec<f32>>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for h in 0..handles {
+            let ch = handle.clone();
+            joins.push(s.spawn(move || {
+                let mut mine = Vec::with_capacity(reqs_per_handle);
+                for r in 0..reqs_per_handle {
+                    let x = exec_batching_payload(h, r, rows, dim);
+                    mine.push(ch.eps(level, &x, t).expect("storm eps failed"));
+                }
+                mine
+            }));
+        }
+        for j in joins {
+            outs.push(j.join().expect("storm client panicked"));
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    (outs.into_iter().flatten().collect(), secs)
+}
+
+/// Workload descriptor for the executor micro-batching comparison
+/// (recorded verbatim into `BENCH_exec_batching.json`).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecBatchingWorkload {
+    pub dim: usize,
+    pub bucket: usize,
+    pub rows_per_req: usize,
+    pub synthetic_work: usize,
+    pub linger_us: u64,
+    pub max_group: usize,
+}
+
+/// One grouped-vs-serial measurement at a fixed concurrent-handle count.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecBatchingPoint {
+    pub handles: usize,
+    pub reqs_per_handle: usize,
+    pub serial_jobs_per_s: f64,
+    pub grouped_jobs_per_s: f64,
+    pub speedup: f64,
+    pub bit_identical: bool,
+}
+
+/// Measure grouped vs serial dispatch at one handle count: a parity
+/// storm through each executor first (every grouped output compared
+/// bitwise against its serial twin — this also warms queues/compiles),
+/// then best-of-`reps` throughput per path.  Shared by
+/// `bench_exec_batching` and `tests/exec_batching.rs` so the artifact
+/// schema and the measurement recipe exist exactly once.
+pub fn exec_batching_point(
+    serial: &crate::runtime::ExecutorHandle,
+    grouped: &crate::runtime::ExecutorHandle,
+    handles: usize,
+    reqs_per_handle: usize,
+    rows: usize,
+    level: usize,
+    t: f64,
+    reps: usize,
+) -> ExecBatchingPoint {
+    let (out_s, _) = exec_batching_storm(serial, handles, reqs_per_handle, rows, level, t);
+    let (out_g, _) = exec_batching_storm(grouped, handles, reqs_per_handle, rows, level, t);
+    let bit_identical = out_s.len() == out_g.len()
+        && out_s.iter().zip(&out_g).all(|(a, b)| {
+            a.len() == b.len() && a.iter().zip(b.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        });
+    let best = |h: &crate::runtime::ExecutorHandle| {
+        let mut secs = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let (_, s) = exec_batching_storm(h, handles, reqs_per_handle, rows, level, t);
+            secs = secs.min(s);
+        }
+        (handles * reqs_per_handle) as f64 / secs
+    };
+    let serial_jobs_per_s = best(serial);
+    let grouped_jobs_per_s = best(grouped);
+    ExecBatchingPoint {
+        handles,
+        reqs_per_handle,
+        serial_jobs_per_s,
+        grouped_jobs_per_s,
+        speedup: grouped_jobs_per_s / serial_jobs_per_s,
+        bit_identical,
+    }
+}
+
+/// Assemble the `BENCH_exec_batching.json` payload from measured points
+/// plus both executors' stats (single source of the schema).  The
+/// headline `speedup_at_8` comes from the highest-handle-count point.
+pub fn exec_batching_json(
+    workload: &ExecBatchingWorkload,
+    points: &[ExecBatchingPoint],
+    grouped_stats: crate::runtime::ExecStats,
+    serial_stats: crate::runtime::ExecStats,
+) -> Json {
+    let top = points.iter().max_by_key(|p| p.handles).expect("at least one point");
+    let bit_identical = points.iter().all(|p| p.bit_identical);
+    let occupancy = if grouped_stats.exec_groups > 0 {
+        grouped_stats.grouped_jobs as f64 / grouped_stats.exec_groups as f64
+    } else {
+        0.0
+    };
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .with("handles", Json::num(p.handles as f64))
+                .with("reqs_per_handle", Json::num(p.reqs_per_handle as f64))
+                .with("serial_jobs_per_s", Json::num(p.serial_jobs_per_s))
+                .with("grouped_jobs_per_s", Json::num(p.grouped_jobs_per_s))
+                .with("grouped_vs_serial_speedup", Json::num(p.speedup))
+        })
+        .collect();
+    Json::obj()
+        .with(
+            "workload",
+            Json::obj()
+                .with("dim", Json::num(workload.dim as f64))
+                .with("bucket", Json::num(workload.bucket as f64))
+                .with("rows_per_req", Json::num(workload.rows_per_req as f64))
+                .with("synthetic_work", Json::num(workload.synthetic_work as f64))
+                .with("linger_us", Json::num(workload.linger_us as f64))
+                .with("max_group", Json::num(workload.max_group as f64)),
+        )
+        .with("handles", Json::Arr(rows))
+        .with("speedup_at_8", Json::num(top.speedup))
+        .with("grouped_ge_1p5x_at_8", Json::Bool(top.speedup >= 1.5))
+        .with("bit_identical", Json::Bool(bit_identical))
+        .with(
+            "grouped_exec_stats",
+            Json::obj()
+                .with("exec_calls", Json::num(grouped_stats.exec_calls as f64))
+                .with("exec_groups", Json::num(grouped_stats.exec_groups as f64))
+                .with("grouped_jobs", Json::num(grouped_stats.grouped_jobs as f64))
+                .with("mean_occupancy", Json::num(occupancy)),
+        )
+        .with("serial_exec_calls", Json::num(serial_stats.exec_calls as f64))
+}
+
 /// Write a benchmark JSON artifact as `BENCH_<name>.json` at the repo
 /// root; returns the path.
 pub fn write_bench_json(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {

@@ -1,0 +1,58 @@
+//! `bench_gate` — the CI bench-regression gate.
+//!
+//! ```text
+//! bench_gate --baseline DIR --current DIR [--floors DIR] [--tolerance 0.20]
+//! ```
+//!
+//! Compares the tracked metrics of `DIR/BENCH_*.json` (see
+//! `mlem::benchgate::TRACKED`) against the baseline tightened by the
+//! committed floors (per metric the stricter of the two wins, so
+//! sub-tolerance drift can't ratchet the gate loose), prints a
+//! before/after table, appends the markdown version to
+//! `$GITHUB_STEP_SUMMARY` when set, and exits non-zero if any tracked
+//! metric regressed beyond the tolerance or stopped being emitted.
+//! Missing baselines pass with a note, so the gate bootstraps cleanly
+//! on first run.
+
+use std::path::PathBuf;
+
+use mlem::benchgate::{compare_dirs, gate_fails, render_markdown, render_text};
+use mlem::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let baseline = PathBuf::from(args.str_or("baseline", "ci/bench_baselines"));
+    let current = PathBuf::from(args.str_or("current", "."));
+    let floors = PathBuf::from(args.str_or("floors", "../ci/bench_baselines"));
+    let tolerance = args.f64_or("tolerance", 0.20);
+    if !(0.0..1.0).contains(&tolerance) {
+        eprintln!("--tolerance must be a fraction in [0, 1), got {tolerance}");
+        std::process::exit(2);
+    }
+
+    let floors_opt = floors.is_dir().then_some(floors.as_path());
+    let rows = compare_dirs(&baseline, floors_opt, &current, tolerance);
+    print!("{}", render_text(&rows, tolerance));
+    println!(
+        "baseline: {}  floors: {}  current: {}",
+        baseline.display(),
+        if floors_opt.is_some() { floors.display().to_string() } else { "(none)".into() },
+        current.display()
+    );
+
+    if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(summary) {
+            let _ = writeln!(f, "{}", render_markdown(&rows, tolerance));
+        }
+    }
+
+    if gate_fails(&rows) {
+        eprintln!(
+            "bench gate FAILED: a tracked metric regressed >{:.0}% (or went missing)",
+            tolerance * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("bench gate passed");
+}

@@ -80,6 +80,17 @@ pub struct ServeConfig {
     /// Swap the calibrated `FixedTheory` policy into live serving once
     /// fitted; false = observe-and-report only.
     pub calib_autopilot: bool,
+    /// Executor micro-batching: how long (µs) the executor may hold an
+    /// eps/jvp job to let more same-(level, bucket, t) jobs arrive and
+    /// share one device dispatch.  The window only opens when a
+    /// groupable peer is already queued and no unrelated job is, so
+    /// solo-request latency is unchanged and non-peer jobs are never
+    /// stalled; 0 (default) groups only work that is concurrently in
+    /// flight.  See `runtime::executor::ExecOptions`.
+    pub exec_linger_us: u64,
+    /// Executor micro-batching: maximum jobs fused into one grouped
+    /// device dispatch; 1 disables grouping entirely.
+    pub exec_max_group: usize,
     /// Sampler worker threads (the `PALLAS_THREADS` knob as config):
     /// 0 = auto (env var if set, else the machine's parallelism).  A
     /// positive value is exported to `PALLAS_THREADS` by
@@ -106,6 +117,8 @@ impl Default for ServeConfig {
             calib_refit_every: 8,
             calib_budget: 0.0,
             calib_autopilot: true,
+            exec_linger_us: 0,
+            exec_max_group: 16,
             threads: 0,
         }
     }
@@ -154,6 +167,14 @@ impl ServeConfig {
                     self.calib_autopilot =
                         v.as_bool().ok_or_else(|| anyhow!("calib_autopilot: bool"))?
                 }
+                "exec_linger_us" => {
+                    self.exec_linger_us =
+                        v.as_usize().ok_or_else(|| anyhow!("exec_linger_us: int"))? as u64
+                }
+                "exec_max_group" => {
+                    self.exec_max_group =
+                        v.as_usize().ok_or_else(|| anyhow!("exec_max_group: int"))?
+                }
                 "threads" => self.threads = v.as_usize().ok_or_else(|| anyhow!("threads: int"))?,
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
@@ -192,9 +213,19 @@ impl ServeConfig {
                 other => return Err(anyhow!("--calib-autopilot expects on|off, got '{other}'")),
             };
         }
+        cfg.exec_linger_us = args.u64_or("exec-linger-us", cfg.exec_linger_us);
+        cfg.exec_max_group = args.usize_or("exec-max-group", cfg.exec_max_group);
         cfg.threads = args.usize_or("threads", cfg.threads);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The executor aggregation knobs as the runtime consumes them.
+    pub fn exec_options(&self) -> crate::runtime::ExecOptions {
+        crate::runtime::ExecOptions {
+            linger_us: self.exec_linger_us,
+            max_group: self.exec_max_group.max(1),
+        }
     }
 
     /// Fix the sampler worker pool under the `threads` knob: export a
@@ -234,6 +265,17 @@ impl ServeConfig {
         // when the pool tries to spawn that many OS threads.
         if self.threads > 1024 {
             return Err(anyhow!("threads: {} exceeds the sanity cap (1024; 0=auto)", self.threads));
+        }
+        if self.exec_max_group == 0 {
+            return Err(anyhow!("exec_max_group must be >= 1 (1 disables grouping)"));
+        }
+        // A linger window is sub-millisecond territory; a typo'd huge
+        // value would stall every grouped dispatch behind it.
+        if self.exec_linger_us > 1_000_000 {
+            return Err(anyhow!(
+                "exec_linger_us: {} exceeds the sanity cap (1s)",
+                self.exec_linger_us
+            ));
         }
         let mut sorted = self.mlem_levels.clone();
         sorted.sort_unstable();
@@ -320,6 +362,26 @@ mod tests {
         // typo protection: absurd values are a config error, not a
         // thread-spawn panic at boot
         assert!(ServeConfig::from_args(&args("serve --threads 1000000")).is_err());
+    }
+
+    #[test]
+    fn exec_batching_knobs_apply() {
+        let d = ServeConfig::default();
+        assert_eq!(d.exec_linger_us, 0, "no added latency by default");
+        assert!(d.exec_max_group > 1, "grouping on by default");
+        assert_eq!(d.exec_options().max_group, d.exec_max_group);
+        let cli = ServeConfig::from_args(&args("serve --exec-linger-us 250 --exec-max-group 4"))
+            .unwrap();
+        assert_eq!(cli.exec_linger_us, 250);
+        assert_eq!(cli.exec_max_group, 4);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"exec_linger_us": 50, "exec_max_group": 1}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.exec_linger_us, 50);
+        assert_eq!(cfg.exec_max_group, 1, "1 = grouping off, still valid");
+        cfg.validate().unwrap();
+        assert!(ServeConfig::from_args(&args("serve --exec-max-group 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --exec-linger-us 2000000")).is_err());
     }
 
     #[test]

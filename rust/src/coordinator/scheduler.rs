@@ -54,8 +54,16 @@ pub struct Scheduler {
 impl Scheduler {
     /// Build the scheduler; measures per-level costs when
     /// `cfg.cost_reps > 0` (otherwise uses manifest FLOPs).
+    ///
+    /// The denoiser family routes multi-bucket eps batches as concurrent
+    /// bucket-sized sub-requests through cloned executor handles
+    /// (aggregation-eligible executor-side; see `runtime::executor`)
+    /// whenever the config leaves grouping on — with `exec_max_group`
+    /// at 1 both the executor's grouping and the shard routing are off,
+    /// so the two knobs always travel together.
     pub fn new(handle: ExecutorHandle, cfg: ServeConfig, metrics: Metrics) -> Result<Scheduler> {
-        let denoisers = NeuralDenoiser::family(&handle, cfg.cost_reps)?;
+        let denoisers =
+            NeuralDenoiser::family_with(&handle, cfg.cost_reps, cfg.exec_max_group > 1)?;
         // Pre-compile every level at the serving buckets so the first
         // request doesn't pay lazy-compilation latency.  Soft-fail per
         // bucket: a backend that can't precompile (the offline shim, or

@@ -44,6 +44,11 @@
 //!    attributable to the request path even when samplers churn the
 //!    global pools) and reuses one response channel per handle — no
 //!    per-call channel or `to_vec` allocations on the request path.
+//!    Concurrent eps/jvp jobs sharing `(level, bucket, t)` are fused
+//!    executor-side into **one** padded-bucket device execute
+//!    (cross-request micro-batching; `exec_linger_us`/`exec_max_group`
+//!    knobs, bit-identical to singleton dispatch, measured by
+//!    `bench_exec_batching` into `BENCH_exec_batching.json`).
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
@@ -62,8 +67,9 @@
 //! | [`levels`] | level-probability policies and cost accounting |
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
 //! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
-//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts |
+//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching |
 //! | [`coordinator`] | serving layer: server, batcher, scheduler, state |
+//! | [`benchgate`] | CI bench-regression gate over the `BENCH_*.json` artifacts |
 
 // Kernel-style indexed loops are the idiom throughout this crate: they
 // mirror the paper's math and keep the serial and sharded variants of
@@ -84,6 +90,7 @@ pub mod util {
 }
 
 pub mod adaptive;
+pub mod benchgate;
 pub mod benchkit;
 pub mod calibrate;
 pub mod config;

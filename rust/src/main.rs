@@ -3,6 +3,7 @@
 //! ```text
 //! mlem serve      [--artifacts DIR] [--addr HOST:PORT] [--max-batch N]
 //!                 [--threads T]  # sampler worker pool size (0 = auto) ...
+//!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
 //! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
 //!                 [--levels 1,3,5] [--delta D] [--out images.pgm]
 //! mlem gamma-fit  [--artifacts DIR]      # Fig-2 style γ estimate
@@ -15,7 +16,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::GenRequest;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor, Manifest};
+use mlem::runtime::{spawn_executor_with, Manifest};
 use mlem::util::cli::Args;
 use mlem::util::stats;
 
@@ -25,7 +26,9 @@ fn build_scheduler(cfg: &ServeConfig) -> Result<Scheduler> {
     cfg.apply_threads();
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    // The --exec-linger-us / --exec-max-group knobs bind here: the
+    // executor thread is spawned with the config's aggregation options.
+    let (handle, _join) = spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
     Scheduler::new(handle, cfg.clone(), metrics)
 }
 

@@ -162,6 +162,14 @@ pub struct MetricsInner {
     pub execute_latency: Histogram,
     /// Time requests wait in the batcher queue.
     pub queue_latency: Histogram,
+    /// Multi-job executor groups dispatched as one device execute (the
+    /// cross-request micro-batching evidence; see `runtime::executor`).
+    pub exec_groups: Counter,
+    /// Jobs that rode in multi-job executor groups.
+    pub grouped_jobs: Counter,
+    /// Running mean jobs per multi-job group (`grouped_jobs /
+    /// exec_groups`), updated by the executor after every group.
+    pub group_occupancy: Gauge,
     /// Latest fitted HTMC exponent γ̂ (0 until the calibrator's first
     /// fit; see `calibrate`).
     pub gamma_hat: Gauge,
@@ -225,6 +233,9 @@ impl Metrics {
             .with("images", Json::num(self.images.get() as f64))
             .with("nfe_per_level", nfe)
             .with("flops", Json::num(self.flops.get() as f64))
+            .with("exec_groups", Json::num(self.exec_groups.get() as f64))
+            .with("grouped_jobs", Json::num(self.grouped_jobs.get() as f64))
+            .with("group_occupancy", Json::num(self.group_occupancy.get()))
             .with("gamma_hat", Json::num(self.gamma_hat.get()))
             .with("recalibrations", Json::num(self.recalibrations.get() as f64))
             .with("calib_probes", Json::num(self.calib_probes.get() as f64))
@@ -294,6 +305,10 @@ mod tests {
         let wp = parsed.get("worker_pool").expect("worker_pool section");
         assert!(wp.f64_of("spawns_avoided").is_some());
         assert!(wp.f64_of("barrier_waits").is_some());
+        // executor grouping counters ride along too
+        assert_eq!(parsed.f64_of("exec_groups"), Some(0.0));
+        assert_eq!(parsed.f64_of("grouped_jobs"), Some(0.0));
+        assert_eq!(parsed.f64_of("group_occupancy"), Some(0.0));
     }
 
     #[test]

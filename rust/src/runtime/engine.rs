@@ -12,8 +12,12 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::Manifest;
-// With the `xla` feature off, the in-tree stub stands in for the PJRT
-// bindings (same API; client construction fails at runtime).
+// With the `xla` feature on, the real-PJRT adapter module is compiled
+// (its API surface is what `cargo check --features xla` locks in CI);
+// with it off, the in-tree offline shim stands in (same API, plus a
+// synthetic-artifact interpreter for tests/benches).
+#[cfg(feature = "xla")]
+use super::xla_pjrt as xla;
 #[cfg(not(feature = "xla"))]
 use super::xla_shim as xla;
 
@@ -22,6 +26,12 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Reusable packing buffers for the grouped multi-request entry
+    /// points ([`Engine::eps_group`] / [`Engine::eps_jvp_group`], which
+    /// needs the pair) — steady-state groups allocate no fresh payload
+    /// buffer.
+    pack_buf: Vec<f32>,
+    pack_buf2: Vec<f32>,
     /// Cumulative time spent inside `execute` (for profiling).
     pub exec_ns: u64,
     /// Number of `execute` calls.
@@ -43,7 +53,15 @@ impl Engine {
     /// on first use and stay cached).
     pub fn new(manifest: Manifest) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest, execs: BTreeMap::new(), exec_ns: 0, exec_calls: 0 })
+        Ok(Engine {
+            client,
+            manifest,
+            execs: BTreeMap::new(),
+            pack_buf: Vec::new(),
+            pack_buf2: Vec::new(),
+            exec_ns: 0,
+            exec_calls: 0,
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -86,8 +104,10 @@ impl Engine {
         Ok(())
     }
 
-    /// Smallest bucket ≥ n, or the largest bucket if none fits.
-    fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    /// Smallest bucket ≥ n, or the largest bucket if none fits.  Shared
+    /// with the executor's aggregation loop, whose grouping key includes
+    /// the bucket a job would run in on its own.
+    pub(crate) fn pick_bucket(buckets: &[usize], n: usize) -> usize {
         buckets
             .iter()
             .copied()
@@ -129,9 +149,11 @@ impl Engine {
                 if pallas { "pallas" } else { "eps" }
             ));
         }
-        // Hot path: resolve (bucket -> file) pairs without cloning the
-        // string table (perf pass: this clone was ~1µs/call of pure
-        // allocator traffic on the request path).
+        // Copy the (bucket -> file) pairs out of the manifest once per
+        // call: the chunk loop below needs `&mut self` for the device
+        // runs, so it cannot keep borrowing `meta` — but it *can* borrow
+        // this independent local, so each chunk resolves its file
+        // allocation-free.
         let table: Vec<(usize, String)> =
             table.iter().map(|(b, f)| (*b, f.clone())).collect();
         let buckets: Vec<usize> = table.iter().map(|(b, _)| *b).collect();
@@ -146,8 +168,7 @@ impl Engine {
             let take = remaining.min(b);
             let chunk = &x[off * dim..(off + take) * dim];
             let res = if take == b {
-                let f = file_of(b).to_string();
-                self.run_eps_exact(&f, chunk, t, b)?
+                self.run_eps_exact(file_of(b), chunk, t, b)?
             } else {
                 // pad by replicating the last row
                 let mut padded = Vec::with_capacity(b * dim);
@@ -156,8 +177,7 @@ impl Engine {
                 for _ in take..b {
                     padded.extend_from_slice(last);
                 }
-                let f = file_of(b).to_string();
-                let mut r = self.run_eps_exact(&f, &padded, t, b)?;
+                let mut r = self.run_eps_exact(file_of(b), &padded, t, b)?;
                 r.truncate(take * dim);
                 r
             };
@@ -222,6 +242,86 @@ impl Engine {
             off += take;
         }
         Ok((out_e, out_j))
+    }
+
+    /// Grouped multi-request eps: pack several requests' rows into one
+    /// contiguous batch, run the ordinary bucket/pad loop **once** over
+    /// the whole group (so the group pads at most one tail chunk instead
+    /// of one per request), and split the results back out per request.
+    ///
+    /// Every artifact is row-local (the batch dimension never mixes), so
+    /// each request's slice equals what a singleton [`Engine::eps`] call
+    /// produces — **bit**-identical whenever the executable that ends up
+    /// processing a row computes it bitwise like the singleton's would.
+    /// That holds unconditionally for the offline synthetic interpreter
+    /// (what the grouped-dispatch parity suite certifies, including
+    /// across bucket boundaries) and whenever the packed walk lands rows
+    /// in their singleton bucket; a real-XLA backend compiles each
+    /// bucket size separately and only promises row-local *math*, not
+    /// bitwise equality across differently-sized executables — the same
+    /// caveat the coordinator's dynamic batcher has always had, since
+    /// batch composition picks the bucket there too.
+    pub fn eps_group(
+        &mut self,
+        level: usize,
+        parts: &[&[f32]],
+        t: f64,
+        pallas: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut packed = std::mem::take(&mut self.pack_buf);
+        packed.clear();
+        packed.reserve(parts.iter().map(|p| p.len()).sum());
+        for p in parts {
+            packed.extend_from_slice(p);
+        }
+        let result = self.eps(level, &packed, t, pallas);
+        self.pack_buf = packed;
+        let out = result?;
+        let mut split = Vec::with_capacity(parts.len());
+        let mut off = 0usize;
+        for p in parts {
+            split.push(out[off..off + p.len()].to_vec());
+            off += p.len();
+        }
+        Ok(split)
+    }
+
+    /// Grouped multi-request (eps, JVP): same packing discipline as
+    /// [`Engine::eps_group`] over the paired `(x, v)` payloads.
+    pub fn eps_jvp_group(
+        &mut self,
+        level: usize,
+        parts: &[(&[f32], &[f32])],
+        t: f64,
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let total: usize = parts.iter().map(|(x, _)| x.len()).sum();
+        let mut packed_x = std::mem::take(&mut self.pack_buf);
+        let mut packed_v = std::mem::take(&mut self.pack_buf2);
+        packed_x.clear();
+        packed_v.clear();
+        packed_x.reserve(total);
+        packed_v.reserve(total);
+        let mut shapes_ok = true;
+        for (x, v) in parts {
+            shapes_ok &= v.len() == x.len();
+            packed_x.extend_from_slice(x);
+            packed_v.extend_from_slice(v);
+        }
+        let result = if shapes_ok {
+            self.eps_jvp(level, &packed_x, t, &packed_v)
+        } else {
+            Err(anyhow!("eps_jvp_group: x/v length mismatch"))
+        };
+        self.pack_buf = packed_x;
+        self.pack_buf2 = packed_v;
+        let (e, j) = result?;
+        let mut split = Vec::with_capacity(parts.len());
+        let mut off = 0usize;
+        for (x, _) in parts {
+            split.push((e[off..off + x.len()].to_vec(), j[off..off + x.len()].to_vec()));
+            off += x.len();
+        }
+        Ok(split)
     }
 
     /// Run the fused ML-EM combine artifact (`y + eta·Σ c_k Δ_k + √eta·σ·z`)

@@ -13,12 +13,28 @@
 //! from [`crate::parallel::global_f32`]: samplers churn the global pool
 //! with their own scratch, and sharing counters would dilute the
 //! executor's zero-copy evidence beyond attribution.
+//!
+//! Cross-request micro-batching (CI pass): instead of handling one job
+//! per loop turn, the executor drains its channel (plus an optional
+//! linger window) and groups pending `Eps`/`EpsJvp` jobs by
+//! `(level, bucket, t_bits, pallas)` — the same key under which their
+//! device executions are interchangeable.  A multi-job group runs as
+//! **one** padded-bucket execute ([`super::engine::Engine::eps_group`])
+//! whose result slices are scattered back to each job's response
+//! channel; a singleton group takes exactly the historical
+//! one-job-at-a-time path, so latency and bit-exactness are unchanged
+//! when there is no concurrency.  This is the MLMC amortisation move
+//! applied across requests: many cheap evaluations sharing one kernel
+//! should share one dispatch.  [`ExecOptions`] carries the knobs
+//! (`exec_linger_us` / `exec_max_group` in the serve config); the
+//! group counters land in [`ExecStats`] and the coordinator metrics.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -35,9 +51,34 @@ fn payload_pool() -> &'static ScratchPool<f32> {
     &PAYLOAD_POOL
 }
 
+/// Aggregation knobs for the executor's event loop (the serve config's
+/// `exec_linger_us` / `exec_max_group`; see `config.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOptions {
+    /// How long (µs) the executor may hold an eps/jvp job to let more
+    /// group members arrive.  The window only opens when at least one
+    /// groupable peer is **already** queued and nothing else is — solo
+    /// traffic never waits, and a queued non-peer job (another key, an
+    /// admin call) is never stalled behind someone else's group, so
+    /// lingering can only trade latency the waiting peers themselves
+    /// opted into.  0 disables lingering entirely (drain-only grouping:
+    /// only jobs that were concurrently in flight share a dispatch).
+    pub linger_us: u64,
+    /// Maximum jobs fused into one grouped execute; 1 disables grouping
+    /// (every job takes the historical singleton path).
+    pub max_group: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { linger_us: 0, max_group: 16 }
+    }
+}
+
 /// Executor-side counters: PJRT execute accounting plus the executor's
 /// payload-pool hit/miss totals (the zero-copy evidence — a miss is a
-/// fresh allocation, a hit is a reused buffer).
+/// fresh allocation, a hit is a reused buffer) and the micro-batching
+/// evidence (groups formed, jobs that rode in them).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExecStats {
     /// Number of PJRT execute calls.
@@ -48,6 +89,11 @@ pub struct ExecStats {
     pub pool_hits: u64,
     /// Payload-pool takes that had to allocate (or grow).
     pub pool_misses: u64,
+    /// Multi-job groups dispatched as one execute.
+    pub exec_groups: u64,
+    /// Jobs that rode in multi-job groups (mean occupancy =
+    /// `grouped_jobs / exec_groups`).
+    pub grouped_jobs: u64,
 }
 
 /// Unified response message (one channel per handle carries them all).
@@ -78,8 +124,11 @@ enum Job {
     Stop,
 }
 
-/// Refuse a job because the engine never came up: recycle its pooled
-/// payload buffers and answer with an error.  Returns true on `Stop`.
+/// Refuse a job (engine never came up, or it was still queued — alone or
+/// in a pending aggregation group — when the executor stopped): recycle
+/// its pooled payload buffers and answer with an error, so no caller is
+/// ever left hanging on a response that cannot come.  Returns true on
+/// `Stop`.
 fn refuse(job: Job) -> bool {
     let pool = payload_pool();
     let unavailable = || anyhow!("engine unavailable");
@@ -114,10 +163,71 @@ fn refuse(job: Job) -> bool {
     false
 }
 
+/// The key under which two jobs' device executions are interchangeable:
+/// same artifact table entry (level + flavour), same singleton bucket,
+/// bit-identical schedule time.  Jobs agreeing on all of it can share
+/// one padded-bucket execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct GroupKey {
+    jvp: bool,
+    level: usize,
+    bucket: usize,
+    t_bits: u64,
+    pallas: bool,
+}
+
+/// Per-level bucket tables snapshot (the part of the manifest the
+/// grouping key needs), resolved once at executor start.
+struct LevelBuckets {
+    level: usize,
+    eps: Vec<usize>,
+    eps_pallas: Vec<usize>,
+    jvp: Vec<usize>,
+}
+
+fn bucket_tables(manifest: &Manifest) -> Vec<LevelBuckets> {
+    manifest
+        .levels
+        .iter()
+        .map(|l| LevelBuckets {
+            level: l.level,
+            eps: l.eps.keys().copied().collect(),
+            eps_pallas: l.eps_pallas.keys().copied().collect(),
+            jvp: l.eps_jvp.keys().copied().collect(),
+        })
+        .collect()
+}
+
+/// The grouping key of a job, or `None` for jobs that never aggregate
+/// (combine, admin, stop) and for levels without a bucket table.
+fn key_of(job: &Job, dim: usize, tables: &[LevelBuckets]) -> Option<GroupKey> {
+    let (jvp, level, x, t, pallas) = match job {
+        Job::Eps { level, x, t, pallas, .. } => (false, *level, x, *t, *pallas),
+        Job::EpsJvp { level, x, t, .. } => (true, *level, x, *t, false),
+        _ => return None,
+    };
+    let lb = tables.iter().find(|l| l.level == level)?;
+    let buckets = match (jvp, pallas) {
+        (true, _) => &lb.jvp,
+        (false, true) => &lb.eps_pallas,
+        (false, false) => &lb.eps,
+    };
+    if buckets.is_empty() || dim == 0 {
+        return None;
+    }
+    let bucket = Engine::pick_bucket(buckets, x.len() / dim);
+    Some(GroupKey { jvp, level, bucket, t_bits: t.to_bits(), pallas })
+}
+
+/// Upper bound on jobs parked executor-side per drain turn (backstop
+/// against a runaway producer; normal traffic never approaches it).
+const DRAIN_CAP: usize = 4096;
+
 /// Cloneable, thread-safe handle to the executor thread.  Each clone
 /// owns its response channel; concurrent calls through one clone are
-/// serialised (clone per thread for parallelism — the executor thread
-/// serialises device work anyway).
+/// serialised (clone per thread for parallelism — concurrent clones'
+/// jobs on the same (level, bucket, t) are exactly what the aggregation
+/// loop fuses into one dispatch).
 pub struct ExecutorHandle {
     tx: Sender<Job>,
     manifest: Manifest,
@@ -151,11 +261,22 @@ impl Drop for AliveGuard {
     }
 }
 
-/// Spawn the executor thread over `manifest`'s artifacts.  Returns the
-/// handle and the join handle (join after dropping all handles/Stop).
+/// Spawn the executor thread over `manifest`'s artifacts with default
+/// aggregation knobs.  Returns the handle and the join handle (join
+/// after dropping all handles/Stop).
 pub fn spawn_executor(
     manifest: Manifest,
     metrics: Option<Metrics>,
+) -> Result<(ExecutorHandle, JoinHandle<()>)> {
+    spawn_executor_with(manifest, metrics, ExecOptions::default())
+}
+
+/// [`spawn_executor`] with explicit aggregation knobs (the serve
+/// config's `exec_linger_us` / `exec_max_group`).
+pub fn spawn_executor_with(
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+    opts: ExecOptions,
 ) -> Result<(ExecutorHandle, JoinHandle<()>)> {
     let (tx, rx) = channel::<Job>();
     let handle_manifest = manifest.clone();
@@ -165,7 +286,7 @@ pub fn spawn_executor(
         .name("pjrt-executor".to_string())
         .spawn(move || {
             let _alive = AliveGuard(alive_flag);
-            let mut engine = match Engine::new(manifest) {
+            let engine = match Engine::new(manifest) {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("[executor] failed to start engine: {e:#}");
@@ -182,60 +303,287 @@ pub fn spawn_executor(
                     return;
                 }
             };
-            let pool = payload_pool();
-            for job in rx.iter() {
-                match job {
-                    Job::Eps { level, x, t, pallas, resp } => {
-                        let t0 = std::time::Instant::now();
-                        let r = engine.eps(level, &x, t, pallas);
-                        if let Some(m) = &metrics {
-                            m.execute_latency.record(t0.elapsed());
-                        }
-                        pool.put(x);
-                        let _ = resp.send(Resp::Vec(r));
-                    }
-                    Job::EpsJvp { level, x, t, v, resp } => {
-                        let r = engine.eps_jvp(level, &x, t, &v);
-                        pool.put(x);
-                        pool.put(v);
-                        let _ = resp.send(Resp::Pair(r));
-                    }
-                    Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp } => {
-                        let r = engine.combine(&y, &deltas, &coeffs, &z, eta, sigma, pallas);
-                        pool.put(y);
-                        pool.put(deltas);
-                        pool.put(coeffs);
-                        pool.put(z);
-                        let _ = resp.send(Resp::Vec(r));
-                    }
-                    Job::MeasureCosts { reps, resp } => {
-                        let _ = resp.send(Resp::Costs(engine.measure_costs(reps)));
-                    }
-                    Job::Warmup { bucket, resp } => {
-                        let _ = resp.send(Resp::Unit(engine.warmup(bucket)));
-                    }
-                    Job::ExecStats { resp } => {
-                        let (pool_hits, pool_misses) = pool.stats();
-                        let _ = resp.send(Resp::Stats(Ok(ExecStats {
-                            exec_calls: engine.exec_calls,
-                            exec_ns: engine.exec_ns,
-                            pool_hits,
-                            pool_misses,
-                        })));
-                    }
-                    Job::Stop => break,
-                }
-            }
-            // Stop raced with queued work: answer it rather than leaving
-            // callers waiting on a response that will never come.
-            while let Ok(job) = rx.try_recv() {
-                refuse(job);
-            }
+            serve_loop(engine, rx, metrics, opts);
         })?;
     Ok((
         ExecutorHandle { tx, manifest: handle_manifest, alive, resp: Mutex::new(channel()) },
         join,
     ))
+}
+
+/// The executor's event loop: aggregation over the job channel.
+fn serve_loop(mut engine: Engine, rx: Receiver<Job>, metrics: Option<Metrics>, opts: ExecOptions) {
+    let dim = engine.manifest().dim;
+    let tables = bucket_tables(engine.manifest());
+    let max_group = opts.max_group.max(1);
+    // Jobs drained off the channel but not yet handled, in arrival order.
+    let mut pending: VecDeque<Job> = VecDeque::new();
+    // Lifetime group counters (surfaced through ExecStats).
+    let mut exec_groups = 0u64;
+    let mut grouped_jobs = 0u64;
+    'serve: loop {
+        let job = match pending.pop_front() {
+            Some(j) => j,
+            None => match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break 'serve, // all handles dropped
+            },
+        };
+        if matches!(job, Job::Stop) {
+            break 'serve;
+        }
+
+        // Try to grow a group around an aggregatable head job.
+        let head_key = if max_group > 1 { key_of(&job, dim, &tables) } else { None };
+        let mut group: Vec<Job> = vec![job];
+        if let Some(key) = head_key {
+            // Opportunistic drain: everything already queued is a
+            // grouping candidate at zero latency cost.
+            while pending.len() < DRAIN_CAP {
+                match rx.try_recv() {
+                    Ok(j) => pending.push_back(j),
+                    Err(_) => break,
+                }
+            }
+            // One O(pending) census (each job's key computed once):
+            // same-key peers vs everything else.  A Stop counts as
+            // "other" and ends the scan — nothing behind it matters for
+            // this turn.
+            let mut peers = 0usize;
+            let mut others = 0usize;
+            for j in &pending {
+                if matches!(*j, Job::Stop) {
+                    others += 1;
+                    break;
+                }
+                if key_of(j, dim, &tables) == Some(key) {
+                    peers += 1;
+                } else {
+                    others += 1;
+                }
+            }
+            // Linger: hold the group open for up to `linger_us` — but
+            // only while at least one groupable peer is already waiting
+            // (solo callers never wait) and nothing *else* is queued (a
+            // non-peer job must not stall behind someone else's group).
+            // Counts update incrementally per arrival: no rescans on the
+            // device-owner thread.
+            if opts.linger_us > 0 && peers >= 1 && others == 0 {
+                let deadline = Instant::now() + Duration::from_micros(opts.linger_us);
+                while 1 + peers < max_group && others == 0 {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(j) => {
+                            if matches!(j, Job::Stop) {
+                                others += 1;
+                            } else if key_of(&j, dim, &tables) == Some(key) {
+                                peers += 1;
+                            } else {
+                                others += 1;
+                            }
+                            pending.push_back(j);
+                        }
+                        Err(_) => break, // timeout or disconnect
+                    }
+                }
+            }
+            // Extract up to max_group-1 same-key peers, preserving the
+            // arrival order of everything else.  The scan stops at the
+            // first Stop: jobs sent after a shutdown request are never
+            // pulled forward past it.
+            if peers > 0 {
+                let mut kept: VecDeque<Job> = VecDeque::with_capacity(pending.len());
+                let mut sealed = false;
+                for j in pending.drain(..) {
+                    if matches!(j, Job::Stop) {
+                        sealed = true;
+                        kept.push_back(j);
+                    } else if !sealed
+                        && group.len() < max_group
+                        && key_of(&j, dim, &tables) == Some(key)
+                    {
+                        group.push(j);
+                    } else {
+                        kept.push_back(j);
+                    }
+                }
+                pending = kept;
+            }
+        }
+
+        if group.len() > 1 {
+            let n = group.len() as u64;
+            exec_groups += 1;
+            grouped_jobs += n;
+            if let Some(m) = &metrics {
+                m.exec_groups.inc();
+                m.grouped_jobs.add(n);
+                m.group_occupancy.set(grouped_jobs as f64 / exec_groups as f64);
+            }
+            run_group(&mut engine, group, &metrics);
+        } else {
+            run_single(
+                &mut engine,
+                group.pop().expect("singleton group"),
+                &metrics,
+                (exec_groups, grouped_jobs),
+            );
+        }
+    }
+    // Stop (or handle drop) raced with queued work — possibly including
+    // members of a not-yet-dispatched aggregation group parked in
+    // `pending`: answer every one of them rather than leaving callers
+    // waiting on a response that will never come.
+    for job in pending {
+        refuse(job);
+    }
+    while let Ok(job) = rx.try_recv() {
+        refuse(job);
+    }
+}
+
+/// The shared (kind, level, t, pallas) of a formed group, copied out of
+/// its first member before the jobs are consumed.
+enum GroupKind {
+    Eps { level: usize, t: f64, pallas: bool },
+    Jvp { level: usize, t: f64 },
+}
+
+/// Dispatch one multi-job group as a single padded-bucket execute and
+/// scatter the result slices back per job.  If the engine errors
+/// mid-group, **every** member receives the error — a dead engine must
+/// never turn into a hang for the jobs that happened to share its last
+/// dispatch.
+fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
+    let pool = payload_pool();
+    // All jobs in a group share kind/level/t/pallas by construction.
+    let kind = match group.first() {
+        Some(Job::Eps { level, t, pallas, .. }) => {
+            GroupKind::Eps { level: *level, t: *t, pallas: *pallas }
+        }
+        Some(Job::EpsJvp { level, t, .. }) => GroupKind::Jvp { level: *level, t: *t },
+        _ => unreachable!("only eps/jvp jobs are grouped"),
+    };
+    match kind {
+        GroupKind::Eps { level, t, pallas } => {
+            let mut xs = Vec::with_capacity(group.len());
+            let mut resps = Vec::with_capacity(group.len());
+            for job in group {
+                if let Job::Eps { x, resp, .. } = job {
+                    xs.push(x);
+                    resps.push(resp);
+                }
+            }
+            let parts: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let t0 = Instant::now();
+            let r = engine.eps_group(level, &parts, t, pallas);
+            if let Some(m) = metrics {
+                m.execute_latency.record(t0.elapsed());
+            }
+            match r {
+                Ok(outs) => {
+                    for (out, resp) in outs.into_iter().zip(&resps) {
+                        let _ = resp.send(Resp::Vec(Ok(out)));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for resp in &resps {
+                        let _ = resp.send(Resp::Vec(Err(anyhow!("grouped eps failed: {msg}"))));
+                    }
+                }
+            }
+            for x in xs {
+                pool.put(x);
+            }
+        }
+        GroupKind::Jvp { level, t } => {
+            let mut xvs = Vec::with_capacity(group.len());
+            let mut resps = Vec::with_capacity(group.len());
+            for job in group {
+                if let Job::EpsJvp { x, v, resp, .. } = job {
+                    xvs.push((x, v));
+                    resps.push(resp);
+                }
+            }
+            let parts: Vec<(&[f32], &[f32])> =
+                xvs.iter().map(|(x, v)| (x.as_slice(), v.as_slice())).collect();
+            let r = engine.eps_jvp_group(level, &parts, t);
+            match r {
+                Ok(outs) => {
+                    for (out, resp) in outs.into_iter().zip(&resps) {
+                        let _ = resp.send(Resp::Pair(Ok(out)));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for resp in &resps {
+                        let _ = resp.send(Resp::Pair(Err(anyhow!("grouped jvp failed: {msg}"))));
+                    }
+                }
+            }
+            for (x, v) in xvs {
+                pool.put(x);
+                pool.put(v);
+            }
+        }
+    }
+}
+
+/// Handle one job exactly as the historical one-at-a-time loop did.
+fn run_single(
+    engine: &mut Engine,
+    job: Job,
+    metrics: &Option<Metrics>,
+    group_counters: (u64, u64),
+) {
+    let pool = payload_pool();
+    match job {
+        Job::Eps { level, x, t, pallas, resp } => {
+            let t0 = Instant::now();
+            let r = engine.eps(level, &x, t, pallas);
+            if let Some(m) = metrics {
+                m.execute_latency.record(t0.elapsed());
+            }
+            pool.put(x);
+            let _ = resp.send(Resp::Vec(r));
+        }
+        Job::EpsJvp { level, x, t, v, resp } => {
+            let r = engine.eps_jvp(level, &x, t, &v);
+            pool.put(x);
+            pool.put(v);
+            let _ = resp.send(Resp::Pair(r));
+        }
+        Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp } => {
+            let r = engine.combine(&y, &deltas, &coeffs, &z, eta, sigma, pallas);
+            pool.put(y);
+            pool.put(deltas);
+            pool.put(coeffs);
+            pool.put(z);
+            let _ = resp.send(Resp::Vec(r));
+        }
+        Job::MeasureCosts { reps, resp } => {
+            let _ = resp.send(Resp::Costs(engine.measure_costs(reps)));
+        }
+        Job::Warmup { bucket, resp } => {
+            let _ = resp.send(Resp::Unit(engine.warmup(bucket)));
+        }
+        Job::ExecStats { resp } => {
+            let (pool_hits, pool_misses) = pool.stats();
+            let _ = resp.send(Resp::Stats(Ok(ExecStats {
+                exec_calls: engine.exec_calls,
+                exec_ns: engine.exec_ns,
+                pool_hits,
+                pool_misses,
+                exec_groups: group_counters.0,
+                grouped_jobs: group_counters.1,
+            })));
+        }
+        Job::Stop => unreachable!("Stop is handled by the serve loop"),
+    }
 }
 
 /// Copy a payload into a buffer from the executor's payload pool
@@ -348,7 +696,8 @@ impl ExecutorHandle {
         }
     }
 
-    /// Execute-call and buffer-reuse counters (see [`ExecStats`]).
+    /// Execute-call, buffer-reuse, and grouping counters (see
+    /// [`ExecStats`]).
     pub fn exec_stats(&self) -> Result<ExecStats> {
         match self.call(|resp| Job::ExecStats { resp })? {
             Resp::Stats(r) => r,
@@ -370,6 +719,8 @@ mod tests {
     /// request payloads do, and a put/copy cycle is a pool hit (the
     /// attribution `bench_runtime` relies on).  No other test in this
     /// binary touches `PAYLOAD_POOL`, so the deltas are deterministic.
+    /// (Executor traffic tests live in `tests/exec_batching.rs` — a
+    /// separate process — for the same reason.)
     #[test]
     fn payload_pool_is_executor_local_and_reuses() {
         let (h0, m0) = payload_pool().stats();
@@ -382,5 +733,12 @@ mod tests {
         let (h1, m1) = payload_pool().stats();
         assert_eq!(m1 - m0, 1, "first copy allocates");
         assert_eq!(h1 - h0, 1, "second copy reuses the parked buffer");
+    }
+
+    #[test]
+    fn exec_options_defaults_group_without_lingering() {
+        let o = ExecOptions::default();
+        assert_eq!(o.linger_us, 0, "no added latency by default");
+        assert!(o.max_group > 1, "drain-only grouping on by default");
     }
 }

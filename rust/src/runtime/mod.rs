@@ -18,9 +18,11 @@ pub mod engine;
 pub mod executor;
 pub mod manifest;
 pub mod neural;
+#[cfg(feature = "xla")]
+pub(crate) mod xla_pjrt;
 #[cfg(not(feature = "xla"))]
 pub(crate) mod xla_shim;
 
-pub use executor::{spawn_executor, ExecStats, ExecutorHandle};
+pub use executor::{spawn_executor, spawn_executor_with, ExecOptions, ExecStats, ExecutorHandle};
 pub use manifest::Manifest;
 pub use neural::NeuralDenoiser;

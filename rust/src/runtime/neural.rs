@@ -1,5 +1,18 @@
 //! The trained UNet family as [`Denoiser`]s — the bridge between the
 //! PJRT runtime and the SDE samplers.
+//!
+//! Shard routing (CI pass): a multi-bucket eps batch used to travel as
+//! one executor job whose chunks the engine walked serially.  Each
+//! denoiser now owns a small pool of **cloned** executor handles and
+//! splits such batches into bucket-sized sub-requests dispatched
+//! concurrently on the worker pool — per-level shard calls stop
+//! serialising on one handle and become eligible for the executor's
+//! cross-request aggregation (see `runtime::executor`).  Chunk
+//! boundaries equal the engine's own greedy bucket walk, and every row
+//! is computed by the identical per-row math, so results are
+//! bit-identical to the single-job path.
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -9,9 +22,16 @@ use crate::sde::drift::Denoiser;
 /// One family member f^k served through the executor.
 pub struct NeuralDenoiser {
     handle: ExecutorHandle,
+    /// Parked handle clones for concurrent shard dispatch, grown on
+    /// demand and reused across calls (a clone per in-flight shard; each
+    /// owns its response channel, so shards never contend on one).
+    shard_handles: Mutex<Vec<ExecutorHandle>>,
     /// 1-based level index.
     pub level: usize,
     dim: usize,
+    /// Rows per shard sub-request — the largest serving bucket; 0
+    /// disables shard routing (batches travel as one job).
+    shard_rows: usize,
     /// Relative cost per image eval (seconds, from `measure_costs`, or
     /// FLOPs from the manifest — consistent units within a family).
     pub cost: f64,
@@ -20,7 +40,15 @@ pub struct NeuralDenoiser {
 impl NeuralDenoiser {
     pub fn new(handle: ExecutorHandle, level: usize, cost: f64) -> NeuralDenoiser {
         let dim = handle.manifest().dim;
-        NeuralDenoiser { handle, level, dim, cost }
+        let shard_rows = handle.manifest().batch_buckets.iter().copied().max().unwrap_or(0);
+        NeuralDenoiser {
+            handle,
+            shard_handles: Mutex::new(Vec::new()),
+            level,
+            dim,
+            shard_rows,
+            cost,
+        }
     }
 
     /// Build the whole family with measured costs (seconds/image).
@@ -28,6 +56,17 @@ impl NeuralDenoiser {
     /// `cost_reps` timing repetitions; pass 0 to fall back to the
     /// manifest's FLOP estimates (fast start, e.g. in tests).
     pub fn family(handle: &ExecutorHandle, cost_reps: usize) -> Result<Vec<NeuralDenoiser>> {
+        Self::family_with(handle, cost_reps, true)
+    }
+
+    /// [`NeuralDenoiser::family`] with shard routing explicitly on/off
+    /// (the scheduler disables it when the executor's grouping is
+    /// configured off, so the two knobs travel together).
+    pub fn family_with(
+        handle: &ExecutorHandle,
+        cost_reps: usize,
+        shard_routing: bool,
+    ) -> Result<Vec<NeuralDenoiser>> {
         let costs: Vec<f64> = if cost_reps > 0 {
             handle.measure_costs(cost_reps)?
         } else {
@@ -43,8 +82,42 @@ impl NeuralDenoiser {
             .levels
             .iter()
             .zip(costs)
-            .map(|(l, c)| NeuralDenoiser::new(handle.clone(), l.level, c))
+            .map(|(l, c)| {
+                let mut d = NeuralDenoiser::new(handle.clone(), l.level, c);
+                if !shard_routing {
+                    d.shard_rows = 0;
+                }
+                d
+            })
             .collect())
+    }
+
+    /// Concurrent bucket-sized sub-requests through parked handle
+    /// clones; each shard writes its own `out` rows.  Only called for
+    /// multi-bucket batches with worker threads available.
+    fn eps_sharded(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        let chunk = self.shard_rows * self.dim;
+        let n_chunks = x.chunks(chunk).len();
+        // Borrow one parked clone per shard (grow the pool on first use).
+        let mut handles: Vec<ExecutorHandle> = {
+            let mut parked = self.shard_handles.lock().unwrap();
+            while parked.len() < n_chunks {
+                parked.push(self.handle.clone());
+            }
+            parked.drain(..n_chunks).collect()
+        };
+        let tasks: Vec<(&[f32], &mut [f32], &ExecutorHandle)> = x
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(handles.iter())
+            .map(|((xc, oc), h)| (xc, oc, h))
+            .collect();
+        let level = self.level;
+        crate::parallel::run_shards(tasks, |_, (xc, oc, h)| {
+            let r = h.eps(level, xc, t).expect("executor eps failed");
+            oc.copy_from_slice(&r);
+        });
+        self.shard_handles.lock().unwrap().append(&mut handles);
     }
 }
 
@@ -54,6 +127,11 @@ impl Denoiser for NeuralDenoiser {
     }
 
     fn eps(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        let n = if self.dim == 0 { 0 } else { x.len() / self.dim };
+        if self.shard_rows > 0 && n > self.shard_rows && crate::parallel::num_threads() > 1 {
+            self.eps_sharded(x, t, out);
+            return;
+        }
         let r = self.handle.eps(self.level, x, t).expect("executor eps failed");
         out.copy_from_slice(&r);
     }

@@ -1,15 +1,33 @@
-//! Offline stand-in for the `xla` PJRT bindings.
+//! Offline stand-in for the `xla` PJRT bindings, with a **synthetic
+//! interpreter** for test/bench artifacts.
 //!
 //! The container build has no XLA toolchain, so the real bindings are
 //! behind the (off-by-default) `xla` cargo feature; this shim mirrors
-//! exactly the API surface `engine.rs` uses.  `PjRtClient::cpu()` fails,
-//! which routes every executor job through the engine-unavailable drain
-//! (benches print their skip notice, artifact-less tests pass), while
-//! all downstream methods typecheck so the engine compiles unchanged.
-
-// Several stub types exist only in type position (they are never
-// constructed because `PjRtClient::cpu()` fails first).
-#![allow(dead_code)]
+//! exactly the API surface `engine.rs` uses.  Two artifact classes:
+//!
+//! * Real HLO text (or anything else): `compile` fails with "backend
+//!   unavailable", which routes the job through the engine-error paths —
+//!   artifact-gated benches print their skip notice, artifact-less tests
+//!   pass, exactly as before.
+//! * **Synthetic artifacts** — files whose first line is a
+//!   `// synthetic-hlo v1 kind=… scale=… work=…` header — compile into a
+//!   tiny CPU interpreter of a row-local elementwise network.  These give
+//!   the executor/engine stack a *working* device to run against offline,
+//!   which is what lets `bench_exec_batching` and the grouped-dispatch
+//!   parity/death tests measure real execute traffic without `make
+//!   artifacts`.  See [`crate::benchkit::synth_artifact_dir`] for the
+//!   generator.
+//!
+//! The synthetic eps function is strictly per-element within a row
+//! (batch entries never mix), so batching, bucket padding, and
+//! cross-request grouping are all bit-transparent — the property the
+//! grouped-dispatch parity suite certifies.
+//!
+//! Supported `kind`s: `eps` (x, t) → eps; `eps_jvp` (x, t, v) →
+//! (eps, ∂eps·v) with the exact analytic derivative; `combine`
+//! (y, deltas, coeffs, z, eta, sigma) → fused ML-EM update; `fail`
+//! (execute returns an error — engine-death-by-error tests); `panic`
+//! (execute panics — executor-thread-death tests).
 
 use std::path::Path;
 
@@ -19,71 +37,362 @@ fn unavailable() -> anyhow::Error {
     anyhow!("PJRT backend not compiled in (build with the `xla` feature and the xla bindings crate)")
 }
 
+/// Header prefix that marks a synthetic artifact.
+pub const SYNTH_MAGIC: &str = "// synthetic-hlo v1";
+
+/// Parsed synthetic-artifact spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SynthSpec {
+    kind: SynthKind,
+    /// Gain of the elementwise recurrence (levels differ by scale).
+    scale: f32,
+    /// Iterations of the recurrence per element: the compute knob that
+    /// makes one execute dominate channel/dispatch overhead in benches.
+    work: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SynthKind {
+    Eps,
+    EpsJvp,
+    Combine,
+    Fail,
+    Panic,
+}
+
+fn parse_spec(line: &str) -> Result<SynthSpec> {
+    let mut kind = None;
+    let mut scale = 0.5f32;
+    let mut work = 1usize;
+    for tok in line[SYNTH_MAGIC.len()..].split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| anyhow!("synthetic-hlo: bad token '{tok}'"))?;
+        match k {
+            "kind" => {
+                kind = Some(match v {
+                    "eps" => SynthKind::Eps,
+                    "eps_jvp" => SynthKind::EpsJvp,
+                    "combine" => SynthKind::Combine,
+                    "fail" => SynthKind::Fail,
+                    "panic" => SynthKind::Panic,
+                    other => return Err(anyhow!("synthetic-hlo: unknown kind '{other}'")),
+                })
+            }
+            "scale" => scale = v.parse().map_err(|_| anyhow!("synthetic-hlo: bad scale '{v}'"))?,
+            "work" => work = v.parse().map_err(|_| anyhow!("synthetic-hlo: bad work '{v}'"))?,
+            other => return Err(anyhow!("synthetic-hlo: unknown key '{other}'")),
+        }
+    }
+    Ok(SynthSpec {
+        kind: kind.ok_or_else(|| anyhow!("synthetic-hlo: missing kind"))?,
+        scale,
+        work,
+    })
+}
+
+/// The synthetic per-element recurrence and its exact derivative.
+/// Row-local by construction: element `j` of row `r` depends only on
+/// `x[r][j]` and `t[r]`.
+#[inline]
+fn synth_eps_elem(spec: &SynthSpec, x: f32, t: f32) -> f32 {
+    let mut y = x;
+    for _ in 0..spec.work.max(1) {
+        y = (spec.scale * y + 0.1 * t).tanh();
+    }
+    y
+}
+
+#[inline]
+fn synth_eps_jvp_elem(spec: &SynthSpec, x: f32, t: f32, v: f32) -> (f32, f32) {
+    let mut y = x;
+    let mut d = 1.0f32;
+    for _ in 0..spec.work.max(1) {
+        y = (spec.scale * y + 0.1 * t).tanh();
+        d *= spec.scale * (1.0 - y * y);
+    }
+    (y, d * v)
+}
+
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// The synthetic interpreter needs no toolchain, so client creation
+    /// succeeds offline; artifacts decide at `compile` time whether they
+    /// can actually run.
     pub fn cpu() -> Result<PjRtClient> {
-        Err(unavailable())
+        Ok(PjRtClient)
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Err(unavailable())
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match comp.0.spec {
+            Some(spec) => Ok(PjRtLoadedExecutable { spec }),
+            None => Err(unavailable()),
+        }
     }
 }
 
-pub struct HloModuleProto;
+pub struct HloModuleProto {
+    spec: Option<SynthSpec>,
+}
 
 impl HloModuleProto {
-    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
-        Err(unavailable())
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let spec = match text.lines().next() {
+            Some(line) if line.starts_with(SYNTH_MAGIC) => Some(parse_spec(line)?),
+            _ => None,
+        };
+        Ok(HloModuleProto { spec })
     }
 }
 
-pub struct XlaComputation;
+pub struct XlaComputation(HloModuleProto);
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(HloModuleProto { spec: proto.spec })
     }
 }
 
-pub struct PjRtLoadedExecutable;
+pub struct PjRtLoadedExecutable {
+    spec: SynthSpec,
+}
 
 impl PjRtLoadedExecutable {
-    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(unavailable())
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let arg = |i: usize| -> Result<&Literal> {
+            args.get(i)
+                .map(|l| l.borrow())
+                .ok_or_else(|| anyhow!("synthetic execute: missing arg {i}"))
+        };
+        let out = match self.spec.kind {
+            SynthKind::Fail => return Err(anyhow!("synthetic failure artifact: execute refused")),
+            SynthKind::Panic => panic!("synthetic panic artifact: executor thread death"),
+            SynthKind::Eps => {
+                let x = arg(0)?;
+                let t = arg(1)?.data()?;
+                let xs = x.data()?;
+                let batch = t.len();
+                if batch == 0 || xs.len() % batch != 0 {
+                    return Err(anyhow!("synthetic eps: x {} rows vs t {}", xs.len(), batch));
+                }
+                let dim = xs.len() / batch;
+                let mut out = Vec::with_capacity(xs.len());
+                for (r, tr) in t.iter().enumerate() {
+                    for &u in &xs[r * dim..(r + 1) * dim] {
+                        out.push(synth_eps_elem(&self.spec, u, *tr));
+                    }
+                }
+                Literal::tuple(vec![Literal::vec1(&out)])
+            }
+            SynthKind::EpsJvp => {
+                let xs = arg(0)?.data()?;
+                let t = arg(1)?.data()?;
+                let vs = arg(2)?.data()?;
+                let batch = t.len();
+                if batch == 0 || xs.len() % batch != 0 || vs.len() != xs.len() {
+                    return Err(anyhow!("synthetic eps_jvp: bad shapes"));
+                }
+                let dim = xs.len() / batch;
+                let (mut e, mut j) = (Vec::with_capacity(xs.len()), Vec::with_capacity(xs.len()));
+                for (r, tr) in t.iter().enumerate() {
+                    for i in r * dim..(r + 1) * dim {
+                        let (ee, jj) = synth_eps_jvp_elem(&self.spec, xs[i], *tr, vs[i]);
+                        e.push(ee);
+                        j.push(jj);
+                    }
+                }
+                Literal::tuple(vec![Literal::vec1(&e), Literal::vec1(&j)])
+            }
+            SynthKind::Combine => {
+                let y = arg(0)?.data()?;
+                let deltas = arg(1)?.data()?;
+                let coeffs = arg(2)?.data()?;
+                let z = arg(3)?.data()?;
+                let eta = *arg(4)?.data()?.first().ok_or_else(|| anyhow!("combine: eta"))?;
+                let sigma = *arg(5)?.data()?.first().ok_or_else(|| anyhow!("combine: sigma"))?;
+                let (bd, k) = (y.len(), coeffs.len());
+                if deltas.len() != k * bd || z.len() != bd {
+                    return Err(anyhow!("synthetic combine: bad shapes"));
+                }
+                let se = eta.sqrt() * sigma;
+                let mut out = Vec::with_capacity(bd);
+                for i in 0..bd {
+                    let mut drift = 0.0f32;
+                    for (kk, c) in coeffs.iter().enumerate() {
+                        drift += c * deltas[kk * bd + i];
+                    }
+                    out.push(y[i] + eta * drift + se * z[i]);
+                }
+                Literal::tuple(vec![Literal::vec1(&out)])
+            }
+        };
+        Ok(vec![vec![PjRtBuffer(out)]])
     }
 }
 
-pub struct PjRtBuffer;
+pub struct PjRtBuffer(Literal);
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(unavailable())
+        Ok(self.0.clone())
     }
 }
 
+/// Minimal literal: flat f32 data (shape recorded but only validated),
+/// or a tuple of literals (executable outputs).
 #[derive(Clone)]
-pub struct Literal;
+pub struct Literal(LiteralRepr);
+
+#[derive(Clone)]
+enum LiteralRepr {
+    Data(Vec<f32>),
+    Tuple(Vec<Literal>),
+}
 
 impl Literal {
-    pub fn vec1(_v: &[f32]) -> Literal {
-        Literal
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal(LiteralRepr::Data(v.to_vec()))
     }
 
-    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
-        Ok(Literal)
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal(LiteralRepr::Tuple(parts))
+    }
+
+    fn data(&self) -> Result<&[f32]> {
+        match &self.0 {
+            LiteralRepr::Data(d) => Ok(d),
+            LiteralRepr::Tuple(_) => Err(anyhow!("literal is a tuple, expected data")),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.data()?.len() as i64;
+        if want != have {
+            return Err(anyhow!("reshape {dims:?} ({want}) over {have} elements"));
+        }
+        Ok(self.clone())
     }
 
     pub fn to_tuple1(self) -> Result<Literal> {
-        Err(unavailable())
+        match self.0 {
+            LiteralRepr::Tuple(mut parts) if parts.len() == 1 => Ok(parts.remove(0)),
+            _ => Err(anyhow!("literal is not a 1-tuple")),
+        }
     }
 
     pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
-        Err(unavailable())
+        match self.0 {
+            LiteralRepr::Tuple(mut parts) if parts.len() == 2 => {
+                let b = parts.remove(1);
+                let a = parts.remove(0);
+                Ok((a, b))
+            }
+            _ => Err(anyhow!("literal is not a 2-tuple")),
+        }
     }
 
-    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
-        Err(unavailable())
+    pub fn to_vec<T: FromLiteralElem>(&self) -> Result<Vec<T>> {
+        Ok(T::from_f32s(self.data()?))
+    }
+}
+
+/// Element conversion for [`Literal::to_vec`]; only f32 exists offline
+/// (mirrors the single instantiation `engine.rs` uses).
+pub trait FromLiteralElem: Sized {
+    fn from_f32s(data: &[f32]) -> Vec<Self>;
+}
+
+impl FromLiteralElem for f32 {
+    fn from_f32s(data: &[f32]) -> Vec<f32> {
+        data.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exe(line: &str) -> PjRtLoadedExecutable {
+        let proto = HloModuleProto { spec: Some(parse_spec(line).unwrap()) };
+        PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&proto)).unwrap()
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let s = parse_spec("// synthetic-hlo v1 kind=eps scale=0.75 work=3").unwrap();
+        assert_eq!(s, SynthSpec { kind: SynthKind::Eps, scale: 0.75, work: 3 });
+        assert!(parse_spec("// synthetic-hlo v1 scale=1.0").is_err(), "kind required");
+        assert!(parse_spec("// synthetic-hlo v1 kind=nope").is_err());
+        assert!(parse_spec("// synthetic-hlo v1 kind=eps gain=2").is_err());
+    }
+
+    #[test]
+    fn non_synthetic_artifacts_stay_unavailable() {
+        let proto = HloModuleProto { spec: None };
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation::from_proto(&proto)).unwrap_err();
+        assert!(err.to_string().contains("not compiled in"), "{err}");
+    }
+
+    #[test]
+    fn eps_is_row_local_under_padding() {
+        // The grouped-dispatch contract in miniature: extending a batch
+        // with extra (padding) rows must not change earlier rows' bits.
+        let e = exe("// synthetic-hlo v1 kind=eps scale=0.6 work=4");
+        let dim = 3;
+        let x2: Vec<f32> = vec![0.1, -0.4, 2.0, 0.7, -1.3, 0.05];
+        let t2 = Literal::vec1(&[0.5, 0.5]);
+        let r2 = e.execute(&[Literal::vec1(&x2), t2])
+            .unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        let r1 = e
+            .execute(&[Literal::vec1(&x2[..dim]), Literal::vec1(&[0.5])])
+            .unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(r2[..dim], r1[..], "row 0 must not see row 1");
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference_and_eps() {
+        let e = exe("// synthetic-hlo v1 kind=eps_jvp scale=0.8 work=2");
+        let spec = SynthSpec { kind: SynthKind::EpsJvp, scale: 0.8, work: 2 };
+        let (x, t, v) = (0.3f32, 0.6f32, 1.7f32);
+        let out = e
+            .execute(&[Literal::vec1(&[x]), Literal::vec1(&[t]), Literal::vec1(&[v])])
+            .unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple2()
+            .unwrap();
+        let eps = out.0.to_vec::<f32>().unwrap()[0];
+        let jv = out.1.to_vec::<f32>().unwrap()[0];
+        assert_eq!(eps, synth_eps_elem(&spec, x, t), "jvp eps part matches eps kind");
+        let h = 1e-3f32;
+        let fd = (synth_eps_elem(&spec, x + h * v, t) - synth_eps_elem(&spec, x - h * v, t))
+            / (2.0 * h);
+        assert!((jv - fd).abs() < 5e-3, "jvp {jv} vs fd {fd}");
+    }
+
+    #[test]
+    fn fail_kind_errors_on_execute() {
+        let e = exe("// synthetic-hlo v1 kind=fail");
+        let err = e.execute(&[Literal::vec1(&[0.0]), Literal::vec1(&[0.5])]).unwrap_err();
+        assert!(err.to_string().contains("synthetic failure"), "{err}");
     }
 }

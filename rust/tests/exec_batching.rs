@@ -1,0 +1,409 @@
+//! Executor cross-request micro-batching: grouping correctness, the
+//! refusal invariants when the engine dies mid-group, and the neural
+//! shard routing — all against the offline shim's synthetic artifacts
+//! (no `make artifacts` needed).
+//!
+//! Determinism discipline: the grouping tests never rely on linger
+//! timing.  They park a slow execute on the device first (`work` high
+//! enough for ~100ms), enqueue the jobs under test while the executor is
+//! provably busy, and let the drain-only aggregation path (linger 0)
+//! group them when the slow job completes.
+//!
+//! These tests run in their own process on purpose: the executor's
+//! payload pool is global per process, and the lib unit test
+//! `payload_pool_is_executor_local_and_reuses` relies on being the only
+//! pool traffic in its binary.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mlem::benchkit::{exec_batching_payload, exec_batching_storm, synth_artifact_dir, SynthLevel};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor_with, ExecOptions, ExecutorHandle, Manifest, NeuralDenoiser};
+use mlem::sde::drift::Denoiser;
+
+/// Every test here drives heavy executor traffic (multi-thread storms,
+/// ~100ms busy-executor holds), and one of them times a throughput
+/// comparison — serialise them so timing and hold windows never contend
+/// inside this test process.
+static STORM_LOCK: Mutex<()> = Mutex::new(());
+
+fn storm_guard() -> std::sync::MutexGuard<'static, ()> {
+    STORM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Levels of the shared test artifact family:
+/// 1 = slow eps (the busy-execute hold), 2 = fast eps, 3 = fail,
+/// 4 = panic.
+const SLOW: usize = 1;
+const FAST: usize = 2;
+const FAIL: usize = 3;
+const PANIC: usize = 4;
+
+fn test_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
+    let dir = synth_artifact_dir(
+        tag,
+        4, // img → dim 16
+        1,
+        &[8],
+        &[
+            SynthLevel { kind: "eps", scale: 0.45, work: 150_000 },
+            SynthLevel { kind: "eps", scale: 0.6, work: 8 },
+            SynthLevel { kind: "fail", scale: 1.0, work: 1 },
+            SynthLevel { kind: "panic", scale: 1.0, work: 1 },
+        ],
+    )
+    .expect("writing synthetic artifacts");
+    let manifest = Manifest::load(&dir).expect("synthetic manifest loads");
+    (dir, manifest)
+}
+
+/// Park a slow execute on the executor, then run `f` while it is busy
+/// (the deterministic way to get jobs queued together for one drain).
+fn with_busy_executor<R>(handle: &ExecutorHandle, f: impl FnOnce() -> R) -> R {
+    std::thread::scope(|s| {
+        let slow = {
+            let h = handle.clone();
+            s.spawn(move || {
+                let x = exec_batching_payload(999, 0, 1, 16);
+                h.eps(SLOW, &x, 0.5)
+            })
+        };
+        // Give the slow job time to reach the device (its execute then
+        // holds the executor for ~100ms of synthetic work).
+        std::thread::sleep(Duration::from_millis(30));
+        let out = f();
+        slow.join().expect("slow client panicked").expect("slow eps failed");
+        out
+    })
+}
+
+#[test]
+fn concurrent_storm_groups_and_matches_serial_bitwise() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("storm");
+    let metrics = Metrics::new();
+    let (serial, _js) = spawn_executor_with(
+        manifest.clone(),
+        None,
+        ExecOptions { linger_us: 0, max_group: 1 },
+    )
+    .unwrap();
+    let (grouped, _jg) = spawn_executor_with(
+        manifest,
+        Some(metrics.clone()),
+        ExecOptions { linger_us: 500, max_group: 8 },
+    )
+    .unwrap();
+    serial.warmup(8).unwrap();
+    grouped.warmup(8).unwrap();
+
+    let (out_s, _) = exec_batching_storm(&serial, 8, 20, 1, FAST, 0.37);
+    let (out_g, _) = exec_batching_storm(&grouped, 8, 20, 1, FAST, 0.37);
+    assert_eq!(out_s.len(), out_g.len());
+    for (i, (a, b)) in out_s.iter().zip(&out_g).enumerate() {
+        assert!(
+            a.iter().zip(b.iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "request {i}: grouped output diverged from serial"
+        );
+    }
+
+    // The serial executor must never group; the grouped one must have
+    // fused a healthy share of the 160-request storm.
+    let ss = serial.exec_stats().unwrap();
+    let gs = grouped.exec_stats().unwrap();
+    assert_eq!(ss.exec_groups, 0);
+    assert_eq!(ss.grouped_jobs, 0);
+    assert!(gs.exec_groups > 0, "8 concurrent handles must form groups");
+    assert!(gs.grouped_jobs >= 2 * gs.exec_groups, "groups have >= 2 members");
+    assert!(
+        gs.exec_calls < ss.exec_calls,
+        "grouping must reduce device executes ({} vs {})",
+        gs.exec_calls,
+        ss.exec_calls
+    );
+    // ... and the coordinator metrics carry the same evidence.
+    assert_eq!(metrics.exec_groups.get(), gs.exec_groups);
+    assert_eq!(metrics.grouped_jobs.get(), gs.grouped_jobs);
+    assert!(metrics.group_occupancy.get() >= 2.0);
+
+    serial.stop();
+    grouped.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jobs_queued_behind_a_busy_execute_group_deterministically() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("hold");
+    let (handle, _join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+    let before = handle.exec_stats().unwrap();
+
+    let (ra, rb) = with_busy_executor(&handle, || {
+        std::thread::scope(|s| {
+            let a = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAST, &exec_batching_payload(1, 0, 1, 16), 0.25))
+            };
+            let b = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAST, &exec_batching_payload(2, 0, 1, 16), 0.25))
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        })
+    });
+    let (ra, rb) = (ra.unwrap(), rb.unwrap());
+
+    let after = handle.exec_stats().unwrap();
+    assert_eq!(after.exec_groups - before.exec_groups, 1, "one group of the two held jobs");
+    assert_eq!(after.grouped_jobs - before.grouped_jobs, 2);
+
+    // Grouped results must equal what singleton dispatch produces.
+    let sa = handle.eps(FAST, &exec_batching_payload(1, 0, 1, 16), 0.25).unwrap();
+    let sb = handle.eps(FAST, &exec_batching_payload(2, 0, 1, 16), 0.25).unwrap();
+    assert!(ra.iter().zip(&sa).all(|(p, q)| p.to_bits() == q.to_bits()));
+    assert!(rb.iter().zip(&sb).all(|(p, q)| p.to_bits() == q.to_bits()));
+
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grouped_jvp_matches_singleton_dispatch() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("jvp");
+    let (handle, _join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+    let before = handle.exec_stats().unwrap();
+
+    let (ra, rb) = with_busy_executor(&handle, || {
+        std::thread::scope(|s| {
+            let a = {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let (x, v) =
+                        (exec_batching_payload(5, 0, 1, 16), exec_batching_payload(5, 1000, 1, 16));
+                    h.eps_jvp(FAST, &x, 0.4, &v)
+                })
+            };
+            let b = {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let (x, v) =
+                        (exec_batching_payload(6, 0, 1, 16), exec_batching_payload(6, 1000, 1, 16));
+                    h.eps_jvp(FAST, &x, 0.4, &v)
+                })
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        })
+    });
+    let (ra, rb) = (ra.unwrap(), rb.unwrap());
+    let after = handle.exec_stats().unwrap();
+    assert_eq!(after.exec_groups - before.exec_groups, 1, "jvp jobs group too");
+    assert_eq!(after.grouped_jobs - before.grouped_jobs, 2);
+
+    let sa = {
+        let (x, v) = (exec_batching_payload(5, 0, 1, 16), exec_batching_payload(5, 1000, 1, 16));
+        handle.eps_jvp(FAST, &x, 0.4, &v).unwrap()
+    };
+    assert!(ra.0.iter().zip(&sa.0).all(|(p, q)| p.to_bits() == q.to_bits()));
+    assert!(ra.1.iter().zip(&sa.1).all(|(p, q)| p.to_bits() == q.to_bits()));
+    assert!(!rb.0.is_empty() && !rb.1.is_empty());
+
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_error_mid_group_errors_every_member_without_hanging() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("fail-group");
+    let (handle, _join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+    let before = handle.exec_stats().unwrap();
+
+    let (ra, rb) = with_busy_executor(&handle, || {
+        std::thread::scope(|s| {
+            let a = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAIL, &exec_batching_payload(7, 0, 1, 16), 0.5))
+            };
+            let b = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAIL, &exec_batching_payload(8, 0, 1, 16), 0.5))
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        })
+    });
+    let after = handle.exec_stats().unwrap();
+    assert_eq!(after.exec_groups - before.exec_groups, 1, "the failing jobs formed a group");
+    for (label, r) in [("a", &ra), ("b", &rb)] {
+        let err = r.as_ref().expect_err(&format!("member {label} must see the engine error"));
+        assert!(
+            format!("{err:#}").contains("grouped eps failed"),
+            "member {label}: unexpected error {err:#}"
+        );
+    }
+    // The executor survived the failed group and keeps serving.
+    assert!(handle.eps(FAST, &exec_batching_payload(9, 0, 1, 16), 0.5).is_ok());
+
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn executor_death_mid_group_errors_not_hangs() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("panic-group");
+    let (handle, _join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+
+    // Two grouped jobs are in flight when the engine panics mid-execute:
+    // the liveness flag (not a response) is what unblocks their callers.
+    let (ra, rb) = with_busy_executor(&handle, || {
+        std::thread::scope(|s| {
+            let a = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(PANIC, &exec_batching_payload(3, 0, 1, 16), 0.5))
+            };
+            let b = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(PANIC, &exec_batching_payload(4, 0, 1, 16), 0.5))
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        })
+    });
+    assert!(ra.is_err() && rb.is_err(), "both grouped callers must error, not hang");
+    // The thread is gone: every later call errors instead of hanging.
+    assert!(handle.eps(FAST, &exec_batching_payload(5, 0, 1, 16), 0.5).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jobs_sent_after_stop_are_refused_not_hung() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("stop");
+    let (handle, join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+
+    let (ra, rb) = with_busy_executor(&handle, || {
+        handle.stop();
+        std::thread::scope(|s| {
+            let a = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAST, &exec_batching_payload(1, 1, 1, 16), 0.5))
+            };
+            let b = {
+                let h = handle.clone();
+                s.spawn(move || h.eps(FAST, &exec_batching_payload(2, 1, 1, 16), 0.5))
+            };
+            (a.join().unwrap(), b.join().unwrap())
+        })
+    });
+    assert!(ra.is_err() && rb.is_err(), "post-stop jobs get errors, not hangs");
+    let _ = join.join();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A compressed run of the `bench_exec_batching` comparison: certifies
+/// the ≥1.5× grouped-dispatch win on the exact bench workload shape and
+/// guarantees `BENCH_exec_batching.json` exists after `cargo test`
+/// alone (the bench overwrites it with the full handle sweep).
+#[test]
+fn exec_batching_bench_artifact_is_produced_and_shows_the_win() {
+    use mlem::benchkit::{
+        exec_batching_json, exec_batching_point, write_bench_json, ExecBatchingWorkload,
+    };
+    let _storm = storm_guard();
+
+    let workload = ExecBatchingWorkload {
+        dim: 16,
+        bucket: 8,
+        rows_per_req: 1,
+        synthetic_work: 256,
+        linger_us: 200,
+        max_group: 8,
+    };
+    let dir = synth_artifact_dir(
+        "bench-artifact",
+        4,
+        1,
+        &[workload.bucket],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work }],
+    )
+    .unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let (serial, _js) = spawn_executor_with(
+        manifest.clone(),
+        None,
+        ExecOptions { linger_us: 0, max_group: 1 },
+    )
+    .unwrap();
+    let (grouped, _jg) = spawn_executor_with(
+        manifest,
+        None,
+        ExecOptions { linger_us: workload.linger_us, max_group: workload.max_group },
+    )
+    .unwrap();
+    serial.warmup(workload.bucket).unwrap();
+    grouped.warmup(workload.bucket).unwrap();
+
+    // One compressed point at 8 handles through the shared bench driver
+    // (same measurement recipe and artifact schema as the full bench).
+    let p = exec_batching_point(&serial, &grouped, 8, 15, workload.rows_per_req, 1, 0.5, 3);
+    assert!(p.bit_identical, "grouped outputs must match serial bitwise");
+    let gs = grouped.exec_stats().unwrap();
+    let ss = serial.exec_stats().unwrap();
+    let occupancy = if gs.exec_groups > 0 {
+        gs.grouped_jobs as f64 / gs.exec_groups as f64
+    } else {
+        0.0
+    };
+    assert!(
+        p.speedup >= 1.5,
+        "grouped dispatch must be >=1.5x serial at 8 handles, got {:.2}x (occupancy {occupancy:.2})",
+        p.speedup
+    );
+
+    let j = exec_batching_json(&workload, &[p], gs, ss);
+    let path = write_bench_json("exec_batching", &j).expect("write BENCH_exec_batching.json");
+    assert!(path.exists());
+
+    serial.stop();
+    grouped.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn neural_shard_routing_is_bit_identical_to_single_job_dispatch() {
+    let _storm = storm_guard();
+    let (dir, manifest) = test_manifest("shard-routing");
+    let (handle, _join) =
+        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    handle.warmup(8).unwrap();
+
+    // cost_reps 0: FLOP costs, no measurement traffic.
+    let sharded = NeuralDenoiser::family_with(&handle, 0, true).unwrap();
+    let single = NeuralDenoiser::family_with(&handle, 0, false).unwrap();
+    let dim = 16;
+    let n = 21; // bucket 8 → sub-requests of 8, 8, 5
+    let x = exec_batching_payload(11, 0, n, dim);
+    let mut out_sharded = vec![0.0f32; n * dim];
+    let mut out_single = vec![0.0f32; n * dim];
+    sharded[FAST - 1].eps(&x, 0.61, &mut out_sharded);
+    single[FAST - 1].eps(&x, 0.61, &mut out_single);
+    assert!(
+        out_sharded.iter().zip(&out_single).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "shard routing diverged from single-job dispatch"
+    );
+
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -19,9 +19,13 @@
 
 use std::sync::Mutex;
 
-use mlem::benchkit::{hotpath_compare, write_bench_json, HotpathConfig};
+use mlem::benchkit::{
+    exec_batching_storm, hotpath_compare, synth_artifact_dir, write_bench_json, HotpathConfig,
+    SynthLevel,
+};
 use mlem::gmm::{assumption1_family, Gmm, LangevinDrift};
 use mlem::parallel;
+use mlem::runtime::{spawn_executor_with, ExecOptions, Manifest};
 use mlem::sde::drift::Drift;
 use mlem::sde::em::TimeGrid;
 use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily, SampleReport};
@@ -238,6 +242,64 @@ fn pool_scoped_and_serial_dispatch_agree_bitwise() {
         );
     }
     std::env::remove_var(parallel::THREADS_ENV);
+}
+
+/// Executor-side grouping is the one code path where concurrent
+/// requests share a device dispatch — this is its parity certificate:
+/// the identical seeded request grid through `exec_max_group = 1`
+/// (grouping off: every job takes the historical singleton path) and
+/// `exec_max_group = 8` (8 concurrent handles fusing into padded-bucket
+/// groups) must produce bit-identical outputs, request by request.
+/// The artifact carries buckets {1, 8} on purpose: singleton dispatch
+/// runs each 1-row request in the bucket-1 executable while grouped
+/// packing promotes the same rows into the bucket-8 executable — the
+/// cross-bucket case — and the outputs must still agree to the bit
+/// (the synthetic interpreter is row-local whatever the batch size).
+/// Runs on the offline shim's synthetic artifacts — no env mutation, so
+/// no ENV_LOCK needed.
+#[test]
+fn grouped_eps_bit_identical_to_singleton_dispatch() {
+    let dir = synth_artifact_dir(
+        "parity-grouping",
+        4, // dim 16
+        1,
+        &[1, 8],
+        &[SynthLevel { kind: "eps", scale: 0.55, work: 64 }],
+    )
+    .expect("synthetic artifacts");
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut outputs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for max_group in [1usize, 8] {
+        let (handle, join) = spawn_executor_with(
+            manifest.clone(),
+            None,
+            ExecOptions { linger_us: 300, max_group },
+        )
+        .unwrap();
+        handle.warmup(8).unwrap();
+        // Same seeds both rounds: the storm payload grid is a pure
+        // function of (client, request) indices.
+        let (outs, _) = exec_batching_storm(&handle, 8, 12, 1, 1, 0.43);
+        if max_group > 1 {
+            let stats = handle.exec_stats().unwrap();
+            assert!(stats.exec_groups > 0, "grouping must engage under 8 handles");
+        }
+        outputs.push(outs);
+        handle.stop();
+        let _ = join.join();
+    }
+    let (singleton, grouped) = (&outputs[0], &outputs[1]);
+    assert_eq!(singleton.len(), grouped.len());
+    for (i, (a, b)) in singleton.iter().zip(grouped).enumerate() {
+        assert_eq!(a.len(), b.len(), "request {i} length");
+        for (j, (p, q)) in a.iter().zip(b).enumerate() {
+            assert!(
+                p.to_bits() == q.to_bits(),
+                "request {i} element {j}: singleton {p} vs grouped {q}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

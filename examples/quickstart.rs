@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use mlem::config::{SamplerKind, ServeConfig};
-use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::Scheduler;
 use mlem::metrics::Metrics;
 use mlem::runtime::{spawn_executor, Manifest};
@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         seed: 7,
         levels: vec![1, 3, 5],
         delta: 0.0,
+        policy: PolicyChoice::Default,
         return_images: true,
     };
     let mlem_resp = scheduler.generate(&req)?;

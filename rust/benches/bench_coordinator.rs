@@ -1,0 +1,100 @@
+//! Multi-lane coordinator bench: end-to-end images/s and executor group
+//! occupancy as the `batch_workers` lane count grows.
+//!
+//! The workload is the serving pattern the lanes exist for: several
+//! compatibility classes (distinct Δ) of small requests against an
+//! artifact whose only bucket is much wider than one batch.  One lane
+//! integrates one batch at a time, so every eps eval pads
+//! `n_per_req → bucket` rows alone; 2–4 lanes run different classes
+//! concurrently and the executor's cross-request grouping fuses their
+//! same-`(level, bucket, t)` jobs into shared padded executes — the
+//! same device work now carries several batches.  Runs on the offline
+//! shim's synthetic interpreter (no `make artifacts` needed).
+//!
+//! Measurement and schema live in `benchkit::coord_lanes_point` /
+//! `coord_json` (shared with `tests/coordinator_lanes.rs`, which emits
+//! a compressed version of the same artifact).  `BENCH_coordinator.json`
+//! carries images/s and occupancy per lane count, the
+//! `lanes_speedup_at_4` headline the CI bench-gate tracks, and a
+//! `bit_identical` flag from comparing every lane count's outputs
+//! request-by-request against the single-lane run.
+//!
+//! `cargo bench --bench bench_coordinator`
+
+use mlem::benchkit::{
+    coord_artifact_dir, coord_json, coord_lanes_point, write_bench_json, CoordWorkload,
+};
+use mlem::util::bench::Table;
+
+const LANES: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    let workload = CoordWorkload {
+        img: 4, // dim 16
+        channels: 1,
+        bucket: 8,
+        work: 384,
+        levels: 2,
+        classes: 4,
+        reqs_per_class: 10,
+        n_per_req: 2,
+        steps: 24,
+        linger_us: 400,
+    };
+    let dir = coord_artifact_dir("bench-coordinator", &workload)?;
+
+    let mut table = Table::new(
+        "coordinator lanes",
+        &["lanes", "images/s", "speedup", "group occupancy", "executes"],
+    );
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut bit_identical = true;
+    for &lanes in &LANES {
+        let (outs, p) = coord_lanes_point(&dir, &workload, lanes, 3)?;
+        match &reference {
+            None => reference = Some(outs),
+            Some(base) => {
+                let same = base.len() == outs.len()
+                    && base.iter().zip(&outs).all(|(a, b)| {
+                        a.len() == b.len()
+                            && a.iter().zip(b.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+                    });
+                if !same {
+                    eprintln!("PARITY FAILURE: outputs diverged from single-lane at {lanes} lanes");
+                }
+                bit_identical &= same;
+            }
+        }
+        points.push(p);
+    }
+    let base = points[0].images_per_s;
+    for p in &points {
+        table.row(&[
+            format!("{}", p.lanes),
+            format!("{:.1}", p.images_per_s),
+            format!("{:.2}x", p.images_per_s / base),
+            format!("{:.2}", p.occupancy),
+            format!("{}", p.exec_calls),
+        ]);
+    }
+    table.emit();
+
+    let top = points.last().expect("points");
+    println!(
+        "headline: {:.2}x images/s at {} lanes vs 1 (occupancy {:.2} vs {:.2}), outputs {}",
+        top.images_per_s / base,
+        top.lanes,
+        top.occupancy,
+        points[0].occupancy,
+        if bit_identical { "bitwise identical" } else { "DIVERGED" }
+    );
+    let j = coord_json(&workload, &points, bit_identical);
+    let path = write_bench_json("coordinator", &j).expect("writing BENCH_coordinator.json");
+    println!("[json] {}", path.display());
+    std::fs::remove_dir_all(&dir).ok();
+    // Fail loudly on a parity break — after the artifact is written, so
+    // the recorded bit_identical flag reflects what actually happened.
+    assert!(bit_identical, "cross-lane outputs diverged (see PARITY FAILURE lines above)");
+    Ok(())
+}

@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 
 use mlem::benchkit::artifacts_dir;
 use mlem::coordinator::batcher::Batcher;
-use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::config::SamplerKind;
 use mlem::runtime::{spawn_executor, Manifest};
 use mlem::util::bench::{bench, fmt_ns, Table};
@@ -132,6 +132,7 @@ fn main() -> anyhow::Result<()> {
         seed: 0,
         levels: vec![1, 3, 5],
         delta: 0.0,
+        policy: PolicyChoice::Default,
         return_images: false,
     };
     let r = bench("batcher push+pop", 10, Duration::from_millis(200), || {

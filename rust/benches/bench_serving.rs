@@ -6,7 +6,7 @@
 
 use mlem::benchkit::artifacts_dir;
 use mlem::config::{SamplerKind, ServeConfig};
-use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::Scheduler;
 use mlem::metrics::Metrics;
 use mlem::runtime::{spawn_executor, Manifest};
@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 seed: 1,
                 levels: vec![1, 3, 5],
                 delta: 0.0,
+                policy: PolicyChoice::Default,
                 return_images: false,
             };
             // warm
@@ -81,6 +82,7 @@ fn main() -> anyhow::Result<()> {
                 seed: i as u64,
                 levels: vec![1, 3, 5],
                 delta: 0.0,
+                policy: PolicyChoice::Default,
                 return_images: false,
             })
             .collect();

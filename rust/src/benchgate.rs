@@ -62,6 +62,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.05,
         label: "calibration gamma relative error",
     },
+    TrackedMetric {
+        file: "BENCH_coordinator.json",
+        path: &["lanes_speedup_at_4"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "coordinator multi-lane images/s speedup @ 4 lanes",
+    },
 ];
 
 /// Outcome per tracked metric.

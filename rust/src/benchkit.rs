@@ -3,7 +3,11 @@
 
 use anyhow::Result;
 
+use crate::config::{SamplerKind, ServeConfig};
+use crate::coordinator::protocol::{GenRequest, PolicyChoice};
+use crate::coordinator::{LanePool, Scheduler};
 use crate::gmm::{assumption1_family, Gmm, LangevinDrift, PerturbedDrift};
+use crate::metrics::Metrics;
 use crate::parallel;
 use crate::runtime::{spawn_executor, ExecutorHandle, Manifest, NeuralDenoiser};
 use crate::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
@@ -938,6 +942,230 @@ pub fn exec_batching_json(
                 .with("mean_occupancy", Json::num(occupancy)),
         )
         .with("serial_exec_calls", Json::num(serial_stats.exec_calls as f64))
+}
+
+// ---------------------------------------------------------------------------
+// Multi-lane coordinator workload (bench_coordinator +
+// tests/coordinator_lanes.rs)
+
+/// Workload descriptor for the coordinator lane sweep (recorded
+/// verbatim into `BENCH_coordinator.json`).
+///
+/// The request storm is `classes` compatibility classes (same sampler /
+/// steps / levels, distinct Δ — Δ large enough that every level fires
+/// each step, so per-class work is deterministic and lanes stay near
+/// lockstep) × `reqs_per_class` requests of `n_per_req` images.
+/// `max_batch = n_per_req`, so every request forms its own batch and
+/// batch membership — hence per-request bits — is independent of lane
+/// timing.  The artifact carries a single `bucket`-row executable:
+/// a lone batch pads `n_per_req → bucket` rows on its own, while
+/// concurrent lanes' same-`(level, t)` jobs fuse into one execute of
+/// the *same* shape — the padding waste the lanes exist to reclaim.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordWorkload {
+    /// Image side (dim = img² · channels).
+    pub img: usize,
+    pub channels: usize,
+    /// The artifact's only batch bucket.
+    pub bucket: usize,
+    /// Synthetic per-element recurrence iterations (the compute knob).
+    pub work: usize,
+    /// Ladder length (synthetic eps levels 1..=levels).
+    pub levels: usize,
+    /// Distinct compatibility classes (distinct Δ values).
+    pub classes: usize,
+    pub reqs_per_class: usize,
+    pub n_per_req: usize,
+    pub steps: usize,
+    /// Executor linger window (µs) — lanes drift a little; a small
+    /// window lets same-t stragglers join a group.
+    pub linger_us: u64,
+}
+
+/// Build the synthetic artifact directory for a coordinator workload.
+pub fn coord_artifact_dir(tag: &str, w: &CoordWorkload) -> Result<std::path::PathBuf> {
+    let levels: Vec<SynthLevel> = (0..w.levels)
+        .map(|i| SynthLevel { kind: "eps", scale: 0.5 - 0.07 * i as f64, work: w.work })
+        .collect();
+    synth_artifact_dir(tag, w.img, w.channels, &[w.bucket], &levels)
+}
+
+/// The serve config a coordinator-workload scheduler runs under at a
+/// given lane count (calibration off: probes would add non-request
+/// work to the timing).
+pub fn coord_config(artifacts: &std::path::Path, w: &CoordWorkload, lanes: usize) -> ServeConfig {
+    ServeConfig {
+        artifacts: artifacts.to_string_lossy().into_owned(),
+        max_batch: w.n_per_req,
+        max_wait_ms: 1,
+        queue_depth: 8192,
+        mlem_levels: (1..=w.levels).collect(),
+        cost_reps: 0,
+        calib_sample_every: 0,
+        exec_linger_us: w.linger_us,
+        batch_workers: lanes,
+        ..ServeConfig::default()
+    }
+}
+
+/// The deterministic request storm: classes interleaved in arrival
+/// order, every request's seed a pure function of its (class, index).
+pub fn coord_requests(w: &CoordWorkload) -> Vec<GenRequest> {
+    let mut reqs = Vec::with_capacity(w.classes * w.reqs_per_class);
+    for r in 0..w.reqs_per_class {
+        for c in 0..w.classes {
+            reqs.push(GenRequest {
+                n: w.n_per_req,
+                sampler: SamplerKind::Mlem,
+                steps: w.steps,
+                seed: ((c as u64) << 20) | r as u64,
+                levels: (1..=w.levels).collect(),
+                // Δ ≫ 0 pushes every level's probability to 1: each
+                // class does identical deterministic work per step
+                // (lockstep lanes), while distinct Δ bits keep the
+                // classes from sharing a batch.
+                delta: 3.0 + 0.25 * c as f64,
+                policy: PolicyChoice::Default,
+                return_images: true,
+            });
+        }
+    }
+    reqs
+}
+
+/// One lane-count measurement of the coordinator workload.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordPoint {
+    pub lanes: usize,
+    pub images_per_s: f64,
+    /// Executor `group_occupancy` gauge after the storm (mean jobs per
+    /// multi-job group; 0 when no group ever formed).
+    pub occupancy: f64,
+    /// Total PJRT executes the storm cost.
+    pub exec_calls: u64,
+}
+
+/// Run the full coordinator pipeline (batcher → `lanes` runner pool →
+/// scheduler → executor) over the workload at one lane count:
+/// best-of-`reps` storms, each enqueued in full against a *paused*
+/// [`LanePool`] and released at t0 — so batch formation, and therefore
+/// every response bit, is a pure function of the request list.  Returns
+/// the per-request image payloads (submission order) and the measured
+/// point.
+pub fn coord_lanes_point(
+    dir: &std::path::Path,
+    w: &CoordWorkload,
+    lanes: usize,
+    reps: usize,
+) -> Result<(Vec<Vec<f32>>, CoordPoint)> {
+    let cfg = coord_config(dir, w, lanes);
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (handle, join) =
+        crate::runtime::spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    // The serving bucket exceeds max_batch, so the scheduler's own
+    // warmup loop skips it: compile it here, outside the timed storms.
+    handle.warmup(w.bucket)?;
+    let scheduler =
+        std::sync::Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone())?);
+    let reqs = coord_requests(w);
+    let images_total = (reqs.len() * w.n_per_req) as f64;
+
+    let mut best_secs = f64::INFINITY;
+    let mut outputs: Option<Vec<Vec<f32>>> = None;
+    for _ in 0..reps.max(1) {
+        let pool = LanePool::new_paused(scheduler.clone(), &cfg);
+        let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+        let t0 = std::time::Instant::now();
+        pool.start();
+        let mut outs = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(crate::coordinator::Response::Gen(g)) => {
+                    outs.push(g.images.expect("return_images set"))
+                }
+                Ok(crate::coordinator::Response::Error(e)) => {
+                    return Err(anyhow::anyhow!("storm request failed: {e}"))
+                }
+                other => return Err(anyhow::anyhow!("unexpected storm response: {other:?}")),
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        best_secs = best_secs.min(secs);
+        if let Some(prev) = &outputs {
+            // Reps must agree with each other bit-for-bit (determinism
+            // within a lane count, not just across counts).
+            assert!(
+                prev.len() == outs.len()
+                    && prev.iter().zip(&outs).all(|(a, b)| {
+                        a.len() == b.len()
+                            && a.iter().zip(b.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+                    }),
+                "coordinator storm outputs varied across reps at {lanes} lanes"
+            );
+        } else {
+            outputs = Some(outs);
+        }
+        pool.stop();
+        pool.join();
+    }
+    let stats = handle.exec_stats()?;
+    let point = CoordPoint {
+        lanes,
+        images_per_s: images_total / best_secs,
+        occupancy: metrics.group_occupancy.get(),
+        exec_calls: stats.exec_calls,
+    };
+    handle.stop();
+    let _ = join.join();
+    Ok((outputs.expect("at least one rep"), point))
+}
+
+/// Assemble `BENCH_coordinator.json` from measured points (single
+/// source of the schema; the headline `lanes_speedup_at_4` is what the
+/// CI bench-gate tracks).  `bit_identical` is the caller's cross-lane
+/// output comparison.
+pub fn coord_json(w: &CoordWorkload, points: &[CoordPoint], bit_identical: bool) -> Json {
+    let base = points
+        .iter()
+        .find(|p| p.lanes == 1)
+        .map(|p| p.images_per_s)
+        .unwrap_or(f64::NAN);
+    let top = points.iter().max_by_key(|p| p.lanes).expect("at least one point");
+    let mut sorted: Vec<&CoordPoint> = points.iter().collect();
+    sorted.sort_by_key(|p| p.lanes);
+    let occupancy_increasing =
+        sorted.windows(2).all(|pair| pair[1].occupancy > pair[0].occupancy);
+    let rows: Vec<Json> = sorted
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .with("lanes", Json::num(p.lanes as f64))
+                .with("images_per_s", Json::num(p.images_per_s))
+                .with("speedup_vs_1", Json::num(p.images_per_s / base))
+                .with("group_occupancy", Json::num(p.occupancy))
+                .with("exec_calls", Json::num(p.exec_calls as f64))
+        })
+        .collect();
+    Json::obj()
+        .with(
+            "workload",
+            Json::obj()
+                .with("dim", Json::num((w.img * w.img * w.channels) as f64))
+                .with("bucket", Json::num(w.bucket as f64))
+                .with("synthetic_work", Json::num(w.work as f64))
+                .with("levels", Json::num(w.levels as f64))
+                .with("classes", Json::num(w.classes as f64))
+                .with("reqs_per_class", Json::num(w.reqs_per_class as f64))
+                .with("n_per_req", Json::num(w.n_per_req as f64))
+                .with("steps", Json::num(w.steps as f64))
+                .with("linger_us", Json::num(w.linger_us as f64)),
+        )
+        .with("lanes", Json::Arr(rows))
+        .with("lanes_speedup_at_4", Json::num(top.images_per_s / base))
+        .with("lanes_ge_1p3x", Json::Bool(top.images_per_s / base >= 1.3))
+        .with("occupancy_increasing", Json::Bool(occupancy_increasing))
+        .with("bit_identical", Json::Bool(bit_identical))
 }
 
 /// Write a benchmark JSON artifact as `BENCH_<name>.json` at the repo

@@ -9,8 +9,9 @@ use anyhow::{anyhow, Result};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
-/// Which sampler a generation request uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which sampler a generation request uses.  `Hash` because the kind is
+/// part of the batcher's per-class queue key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SamplerKind {
     /// Plain Euler–Maruyama with one chosen level (the baseline).
     Em,
@@ -91,6 +92,13 @@ pub struct ServeConfig {
     /// Executor micro-batching: maximum jobs fused into one grouped
     /// device dispatch; 1 disables grouping entirely.
     pub exec_max_group: usize,
+    /// Concurrent batch-runner lanes in the coordinator: how many
+    /// batches (of *different* compatibility classes — same-class
+    /// batches stay serialized) may be inside `Scheduler::execute` at
+    /// once, keeping the executor's cross-request grouping loop fed.
+    /// 0 = auto: `min(len(mlem_levels), 4)`.  1 reproduces the
+    /// historical single-worker coordinator.
+    pub batch_workers: usize,
     /// Sampler worker threads (the `PALLAS_THREADS` knob as config):
     /// 0 = auto (env var if set, else the machine's parallelism).  A
     /// positive value is exported to `PALLAS_THREADS` by
@@ -119,6 +127,7 @@ impl Default for ServeConfig {
             calib_autopilot: true,
             exec_linger_us: 0,
             exec_max_group: 16,
+            batch_workers: 0,
             threads: 0,
         }
     }
@@ -175,6 +184,10 @@ impl ServeConfig {
                     self.exec_max_group =
                         v.as_usize().ok_or_else(|| anyhow!("exec_max_group: int"))?
                 }
+                "batch_workers" => {
+                    self.batch_workers =
+                        v.as_usize().ok_or_else(|| anyhow!("batch_workers: int"))?
+                }
                 "threads" => self.threads = v.as_usize().ok_or_else(|| anyhow!("threads: int"))?,
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
@@ -215,9 +228,23 @@ impl ServeConfig {
         }
         cfg.exec_linger_us = args.u64_or("exec-linger-us", cfg.exec_linger_us);
         cfg.exec_max_group = args.usize_or("exec-max-group", cfg.exec_max_group);
+        cfg.batch_workers = args.usize_or("batch-workers", cfg.batch_workers);
         cfg.threads = args.usize_or("threads", cfg.threads);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The batch-runner lane count the coordinator actually spawns:
+    /// the knob when positive, else `min(len(mlem_levels), 4)` — the
+    /// level count bounds how much same-t executor traffic distinct
+    /// classes can overlap, and past a handful of lanes the device
+    /// thread is the bottleneck anyway.
+    pub fn effective_batch_workers(&self) -> usize {
+        if self.batch_workers > 0 {
+            self.batch_workers
+        } else {
+            self.mlem_levels.len().clamp(1, 4)
+        }
     }
 
     /// The executor aggregation knobs as the runtime consumes them.
@@ -268,6 +295,14 @@ impl ServeConfig {
         }
         if self.exec_max_group == 0 {
             return Err(anyhow!("exec_max_group must be >= 1 (1 disables grouping)"));
+        }
+        // A typo'd huge lane count would spawn that many OS threads and
+        // thrash the (single) executor for nothing.
+        if self.batch_workers > 64 {
+            return Err(anyhow!(
+                "batch_workers: {} exceeds the sanity cap (64; 0=auto)",
+                self.batch_workers
+            ));
         }
         // A linger window is sub-millisecond territory; a typo'd huge
         // value would stall every grouped dispatch behind it.
@@ -382,6 +417,25 @@ mod tests {
         cfg.validate().unwrap();
         assert!(ServeConfig::from_args(&args("serve --exec-max-group 0")).is_err());
         assert!(ServeConfig::from_args(&args("serve --exec-linger-us 2000000")).is_err());
+    }
+
+    #[test]
+    fn batch_workers_knob_applies() {
+        let d = ServeConfig::default();
+        assert_eq!(d.batch_workers, 0, "auto by default");
+        assert_eq!(d.effective_batch_workers(), 3, "min(|{{1,3,5}}|, 4)");
+        let cli = ServeConfig::from_args(&args("serve --batch-workers 2")).unwrap();
+        assert_eq!(cli.batch_workers, 2);
+        assert_eq!(cli.effective_batch_workers(), 2);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"batch_workers": 1}"#).unwrap()).unwrap();
+        assert_eq!(cfg.effective_batch_workers(), 1, "1 = historical single worker");
+        cfg.batch_workers = 0;
+        cfg.mlem_levels = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(cfg.effective_batch_workers(), 4, "auto caps at 4");
+        cfg.mlem_levels = vec![2];
+        assert_eq!(cfg.effective_batch_workers(), 1);
+        assert!(ServeConfig::from_args(&args("serve --batch-workers 1000")).is_err());
     }
 
     #[test]

@@ -2,26 +2,64 @@
 //! Bernoulli-sharing trick amortises network evaluations across the
 //! whole batch.
 //!
-//! Compatibility = same (sampler, steps, levels, Δ): those requests can
-//! share one integration grid and one level schedule.  Requests keep
-//! FIFO order within a compatibility class; a batch is cut when it
-//! reaches `max_batch` images or the head request has waited `max_wait`.
+//! Compatibility = same (sampler, steps, levels, Δ, policy): those
+//! requests can share one integration grid and one level schedule.
+//! Since the multi-lane refactor the queue is **per compatibility
+//! class**: every class owns its own FIFO (keyed by a hashed
+//! [`GroupKey`] computed once at push — the hot paths never re-derive or
+//! clone a key per queued item), `pop` walks a fairness cursor over the
+//! classes so no class starves behind a busy one, and cutting a batch is
+//! O(batch) pops off one `VecDeque` instead of the historical O(n²)
+//! `remove(i)` scan of a single mixed queue.
+//!
+//! Concurrency contract (used by [`crate::coordinator::lanes`]): a class
+//! can be **leased** to one batch runner at a time — [`Batcher::pop_class`]
+//! leases the class it cuts from and skips leased classes, so concurrent
+//! runners always work *different* classes while each class stays
+//! strictly FIFO (one batch of a class in flight at a time — the
+//! invariant that keeps per-request bits independent of the lane count).
+//! [`Batcher::release`] returns the lease.  The batcher itself is not a
+//! lock: callers guard it with their own mutex.
+//!
+//! Requests keep FIFO order within a class; a batch is cut when the
+//! class reaches `max_batch` images or its head request has waited
+//! `max_wait`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::config::SamplerKind;
-use crate::coordinator::protocol::GenRequest;
+use crate::coordinator::protocol::{GenRequest, PolicyChoice};
 
 /// Compatibility key of a request (requests with equal keys may share a
-/// batch).
-#[derive(Clone, Debug, PartialEq)]
+/// batch).  `Eq + Hash` so per-class queues can be indexed directly.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct GroupKey {
     pub sampler: SamplerKind,
     pub steps: usize,
     pub levels: Vec<usize>,
     /// Δ compared bit-exactly (it parametrises the schedule).
     pub delta_bits: u64,
+    /// Requests under different policy choices integrate with different
+    /// level probabilities, so they must never share a batch.
+    pub policy: PolicyChoice,
+}
+
+impl GroupKey {
+    /// Human label for metrics / logs, e.g. `mlem s200 L[1,3,5] d0 default`.
+    pub fn label(&self) -> String {
+        format!(
+            "{} s{} L{:?} d{} {}",
+            self.sampler.as_str(),
+            self.steps,
+            self.levels,
+            f64::from_bits(self.delta_bits),
+            match self.policy {
+                PolicyChoice::Default => "default",
+                PolicyChoice::Theory => "theory",
+            }
+        )
+    }
 }
 
 pub fn group_key(r: &GenRequest) -> GroupKey {
@@ -30,6 +68,7 @@ pub fn group_key(r: &GenRequest) -> GroupKey {
         steps: r.steps,
         levels: r.levels.clone(),
         delta_bits: r.delta.to_bits(),
+        policy: r.policy,
     }
 }
 
@@ -42,9 +81,38 @@ pub struct WorkItem<T> {
     pub payload: T,
 }
 
-/// Bounded FIFO of work items with compatibility-grouped batch popping.
+/// One compatibility class: its own FIFO plus O(1) bookkeeping (the key
+/// is computed once when the class is created — never per `ready` poll).
+struct ClassQueue<T> {
+    key: GroupKey,
+    items: VecDeque<WorkItem<T>>,
+    /// Σ `req.n` over `items` (so readiness checks never walk the queue).
+    images: usize,
+    /// Leased to a batch runner (same-class batches stay serialized).
+    leased: bool,
+}
+
+/// Queue-depth snapshot of one class (for the `metrics` request).
+pub struct ClassDepth {
+    pub label: String,
+    pub requests: usize,
+    pub images: usize,
+    pub leased: bool,
+}
+
+/// Bounded multi-queue of work items: one FIFO per compatibility class,
+/// popped batch-wise under a fairness cursor.
 pub struct Batcher<T> {
-    queue: VecDeque<WorkItem<T>>,
+    /// Class slots; `None` slots are parked in `free` for reuse, so a
+    /// long-lived server churning many distinct classes stays bounded by
+    /// its peak concurrent class count, not its lifetime total.
+    classes: Vec<Option<ClassQueue<T>>>,
+    index: HashMap<GroupKey, usize>,
+    free: Vec<usize>,
+    /// Fairness cursor: pops scan slots round-robin from here.
+    cursor: usize,
+    /// Total queued items across classes.
+    len: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub depth: usize,
@@ -52,74 +120,209 @@ pub struct Batcher<T> {
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration, depth: usize) -> Batcher<T> {
-        Batcher { queue: VecDeque::new(), max_batch, max_wait, depth }
+        Batcher {
+            classes: Vec::new(),
+            index: HashMap::new(),
+            free: Vec::new(),
+            cursor: 0,
+            len: 0,
+            max_batch,
+            max_wait,
+            depth,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
     }
 
-    /// Enqueue; `Err(item)` when the queue is full (backpressure).
+    /// Enqueue; `Err(item)` when the queue is full (backpressure).  The
+    /// compatibility key is computed here, once, and lives on the class.
     pub fn push(&mut self, req: GenRequest, payload: T) -> Result<(), WorkItem<T>> {
         let item = WorkItem { req, enqueued: Instant::now(), payload };
-        if self.queue.len() >= self.depth {
+        if self.len >= self.depth {
             return Err(item);
         }
-        self.queue.push_back(item);
+        let key = group_key(&item.req);
+        let slot = match self.index.get(&key) {
+            Some(&i) => i,
+            None => {
+                let i = self.free.pop().unwrap_or_else(|| {
+                    self.classes.push(None);
+                    self.classes.len() - 1
+                });
+                self.classes[i] = Some(ClassQueue {
+                    key: key.clone(),
+                    items: VecDeque::new(),
+                    images: 0,
+                    leased: false,
+                });
+                self.index.insert(key, i);
+                i
+            }
+        };
+        let c = self.classes[slot].as_mut().expect("occupied class slot");
+        c.images += item.req.n;
+        c.items.push_back(item);
+        self.len += 1;
         Ok(())
     }
 
-    /// Whether a batch should be cut *now*: the head has waited past
-    /// `max_wait`, or a full batch of compatible work is available.
+    /// Whether a batch should be cut *now*: some unleased class has a
+    /// full batch of images queued, or its head has waited past
+    /// `max_wait`.  O(classes), no allocation.
     pub fn ready(&self, now: Instant) -> bool {
-        let Some(head) = self.queue.front() else { return false };
-        if now.duration_since(head.enqueued) >= self.max_wait {
-            return true;
-        }
-        self.compatible_image_count() >= self.max_batch
+        self.classes
+            .iter()
+            .flatten()
+            .any(|c| !c.leased && !c.items.is_empty() && self.class_ready(c, now))
     }
 
-    /// Images available in the head request's compatibility class.
-    fn compatible_image_count(&self) -> usize {
-        let Some(head) = self.queue.front() else { return 0 };
-        let key = group_key(&head.req);
-        let mut total = 0;
-        for item in &self.queue {
-            if group_key(&item.req) == key {
-                total += item.req.n;
-                if total >= self.max_batch {
-                    break;
-                }
+    /// Work a runner could pop (non-empty, unleased class) — the drain
+    /// loop's exit condition; items stuck under a lease don't count.
+    pub fn has_unleased_items(&self) -> bool {
+        self.classes.iter().flatten().any(|c| !c.leased && !c.items.is_empty())
+    }
+
+    fn class_ready(&self, c: &ClassQueue<T>, now: Instant) -> bool {
+        c.images >= self.max_batch
+            || c.items
+                .front()
+                .is_some_and(|h| now.duration_since(h.enqueued) >= self.max_wait)
+    }
+
+    /// Next slot to pop from: scan round-robin from the cursor, skipping
+    /// leased/empty classes, preferring cut-ready ones; with `force`,
+    /// fall back to any non-empty unleased class (drain paths).
+    fn pick(&mut self, now: Instant, force: bool) -> Option<usize> {
+        let n = self.classes.len();
+        if n == 0 {
+            return None;
+        }
+        let mut fallback = None;
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            let Some(c) = &self.classes[i] else { continue };
+            if c.leased || c.items.is_empty() {
+                continue;
+            }
+            if self.class_ready(c, now) {
+                self.cursor = (i + 1) % n;
+                return Some(i);
+            }
+            if force && fallback.is_none() {
+                fallback = Some(i);
             }
         }
-        total
+        if let Some(i) = fallback {
+            self.cursor = (i + 1) % n;
+            return Some(i);
+        }
+        None
     }
 
-    /// Pop the next batch: the head request plus queued requests with the
-    /// same key, FIFO, while the image total stays ≤ `max_batch` (a
-    /// single over-sized request still forms its own batch — the engine
-    /// chunks it over buckets).  Returns `None` on an empty queue.
-    pub fn pop_batch(&mut self) -> Option<Vec<WorkItem<T>>> {
-        let head = self.queue.pop_front()?;
-        let key = group_key(&head.req);
+    /// Cut one batch off class `slot`: the head request plus queued
+    /// same-class requests, FIFO, while the image total stays ≤
+    /// `max_batch` (a single over-sized request still forms its own
+    /// batch — the engine chunks it over buckets).  O(batch).
+    fn cut(&mut self, slot: usize) -> Vec<WorkItem<T>> {
+        let max_batch = self.max_batch;
+        let c = self.classes[slot].as_mut().expect("occupied class slot");
+        let head = c.items.pop_front().expect("non-empty class");
         let mut total = head.req.n;
         let mut batch = vec![head];
-        let mut i = 0;
-        while i < self.queue.len() {
-            let item = &self.queue[i];
-            if group_key(&item.req) == key && total + item.req.n <= self.max_batch {
-                total += item.req.n;
-                // remove(i) preserves relative order of the rest
-                batch.push(self.queue.remove(i).unwrap());
-            } else {
-                i += 1;
+        while let Some(next) = c.items.front() {
+            if total + next.req.n > max_batch {
+                break;
             }
+            total += next.req.n;
+            batch.push(c.items.pop_front().expect("front just observed"));
         }
+        c.images -= total;
+        self.len -= batch.len();
+        batch
+    }
+
+    /// Drop a class slot back to the free-list once it is empty and
+    /// unleased (new arrivals for the key will re-create it).
+    fn retire_if_empty(&mut self, slot: usize) {
+        let retire =
+            matches!(&self.classes[slot], Some(c) if c.items.is_empty() && !c.leased);
+        if retire {
+            let c = self.classes[slot].take().expect("occupied class slot");
+            self.index.remove(&c.key);
+            self.free.push(slot);
+        }
+    }
+
+    /// Pop the next batch without leasing (single-consumer callers and
+    /// tests).  Prefers cut-ready classes, else any non-empty class.
+    pub fn pop_batch(&mut self) -> Option<Vec<WorkItem<T>>> {
+        let slot = self.pick(Instant::now(), true)?;
+        let batch = self.cut(slot);
+        self.retire_if_empty(slot);
         Some(batch)
+    }
+
+    /// Pop one batch **and lease its class**: until [`Batcher::release`]
+    /// is called with the returned key, no other `pop_class` call will
+    /// touch this class — same-class batches stay serialized while
+    /// different classes run concurrently.  With `force` false only
+    /// cut-ready classes are considered (steady state); `force` pops any
+    /// unleased work (stop-drain).
+    pub fn pop_class(&mut self, now: Instant, force: bool) -> Option<(GroupKey, Vec<WorkItem<T>>)> {
+        let slot = self.pick(now, force)?;
+        let key = self.classes[slot].as_ref().expect("occupied class slot").key.clone();
+        let batch = self.cut(slot);
+        self.classes[slot].as_mut().expect("occupied class slot").leased = true;
+        Some((key, batch))
+    }
+
+    /// Return a class lease taken by [`Batcher::pop_class`].
+    pub fn release(&mut self, key: &GroupKey) {
+        if let Some(&slot) = self.index.get(key) {
+            if let Some(c) = self.classes[slot].as_mut() {
+                c.leased = false;
+            }
+            self.retire_if_empty(slot);
+        }
+    }
+
+    /// Remove and return every queued item, leases included — only
+    /// meaningful once all runners are gone (final shutdown drain, so no
+    /// request is ever left unanswered behind a dead runner's lease).
+    pub fn drain_all(&mut self) -> Vec<WorkItem<T>> {
+        let mut out = Vec::new();
+        for slot in self.classes.iter_mut() {
+            if let Some(c) = slot.as_mut() {
+                out.extend(c.items.drain(..));
+            }
+            *slot = None;
+        }
+        self.index.clear();
+        self.free = (0..self.classes.len()).collect();
+        self.cursor = 0;
+        self.len = 0;
+        out
+    }
+
+    /// Per-class queue depths for the metrics snapshot.
+    pub fn depths(&self) -> Vec<ClassDepth> {
+        self.classes
+            .iter()
+            .flatten()
+            .filter(|c| !c.items.is_empty() || c.leased)
+            .map(|c| ClassDepth {
+                label: c.key.label(),
+                requests: c.items.len(),
+                images: c.images,
+                leased: c.leased,
+            })
+            .collect()
     }
 }
 
@@ -136,6 +339,7 @@ mod tests {
             seed: 0,
             levels: vec![1, 3, 5],
             delta: 0.0,
+            policy: PolicyChoice::Default,
             return_images: false,
         }
     }
@@ -161,7 +365,7 @@ mod tests {
         let batch = b.pop_batch().unwrap();
         let ids: Vec<u32> = batch.iter().map(|w| w.payload).collect();
         assert_eq!(ids, vec![0, 2]);
-        // queue order of the rest preserved
+        // fairness cursor: the next class in arrival order pops next
         let batch2 = b.pop_batch().unwrap();
         assert_eq!(batch2[0].payload, 1);
     }
@@ -200,7 +404,7 @@ mod tests {
     }
 
     #[test]
-    fn delta_is_part_of_the_key() {
+    fn delta_and_policy_are_part_of_the_key() {
         let mut a = req(1, 10, SamplerKind::Mlem);
         let mut c = req(1, 10, SamplerKind::Mlem);
         a.delta = 0.5;
@@ -208,6 +412,8 @@ mod tests {
         assert_ne!(group_key(&a), group_key(&c));
         c.delta = 0.5;
         assert_eq!(group_key(&a), group_key(&c));
+        c.policy = PolicyChoice::Theory;
+        assert_ne!(group_key(&a), group_key(&c), "policy choice splits the class");
     }
 
     #[test]
@@ -262,5 +468,104 @@ mod tests {
                 Err(format!("order violated: {order:?}"))
             }
         });
+    }
+
+    #[test]
+    fn fairness_cursor_rotates_across_classes() {
+        // Two deep classes: consecutive pops must alternate instead of
+        // draining one class while the other starves.
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::ZERO, 100);
+        for i in 0..4 {
+            b.push(req(1, 10, SamplerKind::Mlem), i * 2).unwrap();
+            b.push(req(1, 20, SamplerKind::Mlem), i * 2 + 1).unwrap();
+        }
+        let mut steps_seen = Vec::new();
+        while let Some(batch) = b.pop_batch() {
+            steps_seen.push(batch[0].req.steps);
+        }
+        assert_eq!(steps_seen, vec![10, 20, 10, 20, 10, 20, 10, 20]);
+    }
+
+    #[test]
+    fn lease_serializes_a_class_and_release_reopens_it() {
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::ZERO, 100);
+        for i in 0..3 {
+            b.push(req(1, 10, SamplerKind::Mlem), i).unwrap();
+        }
+        b.push(req(1, 20, SamplerKind::Mlem), 9).unwrap();
+        let now = Instant::now();
+        let (key_a, batch_a) = b.pop_class(now, false).expect("first class pops");
+        assert_eq!(batch_a[0].payload, 0);
+        // same class is leased: the next pop must come from the other one
+        let (key_b, batch_b) = b.pop_class(now, false).expect("second class pops");
+        assert_ne!(key_a, key_b);
+        assert_eq!(batch_b[0].payload, 9);
+        // both leased, items remain only in class A -> nothing poppable
+        assert!(b.pop_class(now, true).is_none());
+        assert!(!b.has_unleased_items() && !b.is_empty());
+        assert!(!b.ready(now), "leased classes must not look ready");
+        b.release(&key_a);
+        assert!(b.ready(now));
+        let (key_a2, batch_a2) = b.pop_class(now, false).expect("released class pops again");
+        assert_eq!(key_a2, key_a);
+        assert_eq!(batch_a2[0].payload, 1, "FIFO preserved across the lease");
+        // releasing an emptied class retires its slot; keys still work
+        b.release(&key_b);
+        b.release(&key_a2);
+        let (key_a3, batch_a3) = b.pop_class(now, true).expect("remaining item pops");
+        assert_eq!(batch_a3[0].payload, 2);
+        b.release(&key_a3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_all_answers_everything_including_leased() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::ZERO, 100);
+        for i in 0..5 {
+            b.push(req(1, 10, SamplerKind::Mlem), i).unwrap();
+        }
+        b.push(req(1, 20, SamplerKind::Mlem), 10).unwrap();
+        let (_key, batch) = b.pop_class(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 2);
+        // lease never released (dead-runner scenario): drain still
+        // surfaces every remaining item exactly once
+        let rest = b.drain_all();
+        let mut ids: Vec<u32> = rest.iter().map(|w| w.payload).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3, 4, 10]);
+        assert!(b.is_empty());
+        // the batcher is reusable afterwards
+        b.push(req(1, 10, SamplerKind::Mlem), 7).unwrap();
+        assert_eq!(b.pop_batch().unwrap()[0].payload, 7);
+    }
+
+    #[test]
+    fn class_slots_are_reused_not_leaked() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::ZERO, 10_000);
+        // 200 distinct one-shot classes (unique deltas), fully drained
+        // each time: slot storage must stay bounded by peak concurrency.
+        for round in 0..200u32 {
+            let mut r = req(1, 10, SamplerKind::Mlem);
+            r.delta = round as f64 * 0.125;
+            b.push(r, round).unwrap();
+            assert_eq!(b.pop_batch().unwrap()[0].payload, round);
+        }
+        assert!(b.classes.len() <= 2, "slots leaked: {}", b.classes.len());
+        assert!(b.index.is_empty());
+    }
+
+    #[test]
+    fn depths_snapshot_reports_classes() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::ZERO, 100);
+        b.push(req(2, 10, SamplerKind::Mlem), 0).unwrap();
+        b.push(req(1, 10, SamplerKind::Mlem), 1).unwrap();
+        b.push(req(4, 20, SamplerKind::Em), 2).unwrap();
+        let d = b.depths();
+        assert_eq!(d.len(), 2);
+        let mlem = d.iter().find(|c| c.label.starts_with("mlem")).unwrap();
+        assert_eq!((mlem.requests, mlem.images, mlem.leased), (2, 3, false));
+        let (key, _) = b.pop_class(Instant::now(), true).unwrap();
+        assert!(b.depths().iter().any(|c| c.leased), "leased class visible");
+        b.release(&key);
     }
 }

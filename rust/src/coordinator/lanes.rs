@@ -1,0 +1,292 @@
+//! The multi-lane batch-runner pool: the piece between the [`Batcher`]
+//! and the [`Scheduler`] that keeps several independent batches in
+//! flight at once.
+//!
+//! The historical coordinator ran **one** `batch-worker` thread that
+//! popped a batch and blocked inside `Scheduler::execute` until the
+//! whole multi-step integration finished, so the executor's
+//! cross-request grouping loop only ever saw the concurrency a single
+//! batch's shard routing produced.  [`LanePool`] spawns `batch_workers`
+//! runner threads (config knob, 0 = auto `min(levels, 4)`) that
+//! concurrently pop batches from **different** compatibility classes —
+//! the batcher's class lease keeps same-class batches strictly
+//! serialized (FIFO per class), while distinct classes overlap and feed
+//! the executor simultaneous same-`(level, bucket, t)` jobs to fuse.
+//!
+//! Reproducibility contract: a request's response is a pure function of
+//! its own seed and its batch's membership.  Lane count cannot change
+//! membership of a batch that has formed, and same-class serialization
+//! means the class FIFO partitions identically whenever arrival order
+//! does — so `batch_workers ∈ {1, 2, 4}` produce bit-identical
+//! responses for the same arrivals (pinned by
+//! `tests/coordinator_lanes.rs`).
+//!
+//! Shutdown contract: after [`LanePool::stop`] + [`LanePool::join`],
+//! **every** request that was ever accepted has been answered — popped
+//! batches run to completion (result), still-queued work is drained and
+//! executed by the exiting runners, and anything stranded under a dead
+//! runner's lease (a panicking batch) is answered with an error by the
+//! final drain.  A generation panic is contained to its batch: the
+//! members get an error response, the lease is released, and the runner
+//! keeps serving.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::protocol::{GenRequest, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+/// Per-request response channel the server (or a test) blocks on.
+pub type RespTx = Sender<Response>;
+
+struct Shared {
+    batcher: Mutex<Batcher<RespTx>>,
+    wake: Condvar,
+    stop: AtomicBool,
+    /// False while a paused pool holds its runners back (tests pre-load
+    /// the queue for deterministic batch formation, then `start`).
+    started: AtomicBool,
+}
+
+/// A pool of batch-runner lanes over one scheduler.
+pub struct LanePool {
+    shared: Arc<Shared>,
+    metrics: Metrics,
+    runners: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl LanePool {
+    /// Spawn `cfg.effective_batch_workers()` runners, serving immediately.
+    pub fn new(scheduler: Arc<Scheduler>, cfg: &ServeConfig) -> LanePool {
+        LanePool::with_start(scheduler, cfg, true)
+    }
+
+    /// Spawn the runners parked: nothing pops until [`LanePool::start`].
+    /// Lets callers enqueue a whole request storm first, making batch
+    /// formation (and therefore per-request bits) independent of runner
+    /// timing — the parity tests' determinism lever.
+    pub fn new_paused(scheduler: Arc<Scheduler>, cfg: &ServeConfig) -> LanePool {
+        LanePool::with_start(scheduler, cfg, false)
+    }
+
+    fn with_start(scheduler: Arc<Scheduler>, cfg: &ServeConfig, started: bool) -> LanePool {
+        let metrics = scheduler.metrics().clone();
+        let workers = cfg.effective_batch_workers();
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(
+                cfg.max_batch,
+                Duration::from_millis(cfg.max_wait_ms),
+                cfg.queue_depth,
+            )),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            started: AtomicBool::new(started),
+        });
+        metrics.batch_runners.set(workers as f64);
+        let mut runners = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let shared = shared.clone();
+            let scheduler = scheduler.clone();
+            let metrics = metrics.clone();
+            runners.push(
+                std::thread::Builder::new()
+                    .name(format!("batch-runner-{i}"))
+                    .spawn(move || batch_runner(shared, scheduler, metrics))
+                    .expect("spawning batch runner"),
+            );
+        }
+        LanePool { shared, metrics, runners: Mutex::new(runners), workers }
+    }
+
+    /// Release a paused pool's runners.
+    pub fn start(&self) {
+        self.shared.started.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+    }
+
+    /// Number of runner lanes spawned.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn stopped(&self) -> bool {
+        self.shared.stop.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue one request; the returned channel yields exactly one
+    /// [`Response`] — a result, a backpressure/stop error immediately,
+    /// or a shutdown-drain error at the latest.
+    pub fn submit(&self, req: GenRequest) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        // The stop check must happen under the batcher lock: `join`'s
+        // final drain also holds it, so a push that observes stop=false
+        // here is ordered before the drain and will be answered by it —
+        // a lock-free check would leave a window where a request lands
+        // after the one-shot drain and hangs forever.
+        let enqueue = {
+            let mut q = self.shared.batcher.lock().unwrap();
+            if self.stopped() {
+                drop(q);
+                self.metrics.rejected.inc();
+                let _ = tx.send(Response::Error("server shutting down".into()));
+                return rx;
+            }
+            q.push(req, tx)
+        };
+        match enqueue {
+            Err(item) => {
+                self.metrics.rejected.inc();
+                let _ = item.payload.send(Response::Error("server overloaded (queue full)".into()));
+            }
+            Ok(()) => self.shared.wake.notify_all(),
+        }
+        rx
+    }
+
+    /// Submit and wait (tests / benches convenience).
+    pub fn generate(&self, req: GenRequest) -> Response {
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| Response::Error("worker dropped request".into()))
+    }
+
+    /// Per-class queue depths + totals for the `metrics` request.
+    pub fn batcher_snapshot(&self) -> Json {
+        let q = self.shared.batcher.lock().unwrap();
+        let classes = q.depths();
+        Json::obj()
+            .with("queued_requests", Json::num(q.len() as f64))
+            .with("classes", Json::num(classes.len() as f64))
+            .with(
+                "per_class",
+                Json::Arr(
+                    classes
+                        .iter()
+                        .map(|c| {
+                            Json::obj()
+                                .with("class", Json::str(c.label.clone()))
+                                .with("requests", Json::num(c.requests as f64))
+                                .with("images", Json::num(c.images as f64))
+                                .with("leased", Json::Bool(c.leased))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Ask the runners to stop (idempotent).  Queued work is drained:
+    /// runners keep popping (ignoring batch-cut readiness) until no
+    /// unleased work remains, then exit.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // A paused pool must still be able to drain its queue.
+        self.shared.started.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+    }
+
+    /// Join every runner, then answer anything left in the queue (items
+    /// stranded under a dead runner's lease, or enqueued in the stop
+    /// race) with an error — no accepted request is ever left hanging.
+    pub fn join(&self) {
+        let handles: Vec<JoinHandle<()>> = self.runners.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let leftovers = self.shared.batcher.lock().unwrap().drain_all();
+        for item in leftovers {
+            self.metrics.rejected.inc();
+            let _ = item.payload.send(Response::Error("server shutting down".into()));
+        }
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        self.stop();
+        self.join();
+    }
+}
+
+/// One runner lane: pop a leased batch of one class, run it, fan the
+/// responses out, release the lease, repeat.
+fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics) {
+    loop {
+        // Wait until a batch is ready (or we are stopping and draining).
+        let (key, batch) = {
+            let mut q = shared.batcher.lock().unwrap();
+            loop {
+                let stop = shared.stop.load(Ordering::SeqCst);
+                if stop && !q.has_unleased_items() {
+                    // Nothing this runner could ever pop again: items
+                    // under another runner's live lease are that
+                    // runner's to finish (it force-pops them after its
+                    // release), and a dead runner's stranded lease is
+                    // answered by `LanePool::join`'s final drain.
+                    return;
+                }
+                if shared.started.load(Ordering::SeqCst) {
+                    // Steady state pops only batch-cut-ready classes;
+                    // stop-drain force-pops whatever is left.
+                    if let Some(cut) = q.pop_class(Instant::now(), stop) {
+                        break cut;
+                    }
+                }
+                let (guard, _) =
+                    shared.wake.wait_timeout(q, Duration::from_millis(2)).unwrap();
+                q = guard;
+            }
+        };
+
+        metrics.inflight_batches.inc();
+        metrics.runner_busy.inc();
+        let reqs: Vec<GenRequest> = batch.iter().map(|w| w.req.clone()).collect();
+        let queue_times: Vec<Duration> = batch.iter().map(|w| w.enqueued.elapsed()).collect();
+        // A panic inside one batch (an engine `expect`, a poisoned
+        // internal lock) must cost exactly that batch, not the lane:
+        // catch it, answer the members, and keep serving.
+        let result = catch_unwind(AssertUnwindSafe(|| scheduler.execute(&reqs)));
+        match result {
+            Ok(Ok(responses)) => {
+                for ((item, mut resp), qd) in batch.into_iter().zip(responses).zip(queue_times) {
+                    resp.stats.queue_ms = qd.as_secs_f64() * 1e3;
+                    metrics.queue_latency.record(qd);
+                    metrics.completed.inc();
+                    let _ = item.payload.send(Response::Gen(resp));
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("generation failed: {e:#}");
+                for item in batch {
+                    metrics.rejected.inc();
+                    let _ = item.payload.send(Response::Error(msg.clone()));
+                }
+            }
+            Err(_) => {
+                let msg = "generation panicked (batch aborted)".to_string();
+                for item in batch {
+                    metrics.rejected.inc();
+                    let _ = item.payload.send(Response::Error(msg.clone()));
+                }
+            }
+        }
+        metrics.runner_busy.dec();
+        metrics.inflight_batches.dec();
+
+        {
+            let mut q = shared.batcher.lock().unwrap();
+            q.release(&key);
+        }
+        // The released class may be poppable again (or newly ready for
+        // a parked lane): wake everyone.
+        shared.wake.notify_all();
+    }
+}

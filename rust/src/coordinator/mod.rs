@@ -2,17 +2,22 @@
 //!
 //! Shape follows the vLLM-style router: a TCP JSON-lines front end, a
 //! bounded request queue with backpressure, a **dynamic batcher** that
-//! groups compatible generation requests (so the §4 Bernoulli-sharing
-//! trick applies across the whole batch), a **scheduler** that runs the
-//! chosen sampler against the PJRT executor, and per-request RNG streams
-//! so every request's output is a pure function of its seed.
+//! groups compatible generation requests into per-class FIFOs (so the
+//! §4 Bernoulli-sharing trick applies across the whole batch), a
+//! **multi-lane runner pool** that keeps batches of different classes
+//! concurrently in flight (feeding the executor's cross-request
+//! grouping), a **scheduler** that runs the chosen sampler against the
+//! PJRT executor, and per-request RNG streams so every request's output
+//! is a pure function of its seed and its batch's membership — the lane
+//! count never changes a bit.
 //!
 //! | file | role |
 //! |---|---|
-//! | [`protocol`] | wire types: request/response JSON |
-//! | [`batcher`]  | queueing + compatibility grouping |
+//! | [`protocol`] | wire types: request/response JSON (incl. `"policy":"theory"`) |
+//! | [`batcher`]  | per-compatibility-class queues, fairness cursor, class leases |
+//! | [`lanes`]    | the `batch_workers` runner lanes over the shared batcher |
 //! | [`scheduler`] | sampler dispatch, noise assembly, calibration probes |
-//! | [`server`] | TCP front end + worker threads |
+//! | [`server`] | TCP front end |
 //!
 //! The scheduler also hosts the online γ-calibrator
 //! ([`crate::calibrate`]): a sampled fraction of live batches is probed
@@ -32,10 +37,12 @@
 //! the policy at a new compute budget before snapshotting.
 
 pub mod batcher;
+pub mod lanes;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 
-pub use protocol::{GenRequest, GenResponse, Request, Response};
+pub use lanes::LanePool;
+pub use protocol::{GenRequest, GenResponse, PolicyChoice, Request, Response};
 pub use scheduler::Scheduler;
 pub use server::Server;

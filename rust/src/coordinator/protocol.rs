@@ -5,12 +5,22 @@
 //! ```json
 //! {"cmd":"generate","n":4,"sampler":"mlem","steps":200,"seed":7,
 //!  "levels":[1,3,5],"delta":0.0,"return_images":true}
+//! {"cmd":"generate","n":4,"sampler":"mlem","policy":"theory","delta":-1.0}
 //! {"cmd":"metrics"}
 //! {"cmd":"calibration"}
 //! {"cmd":"calibration","set_budget":2.5}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
+//!
+//! `"policy":"theory"` asks the scheduler to integrate with the online
+//! calibrator's Theorem-1 `FixedTheory` policy at the request's Δ — the
+//! client gets the measured (γ̂, T̂_k) operating point without knowing
+//! any of the constants.  It requires the `mlem` sampler on the server's
+//! configured ladder and errors until a γ̂ fit has been installed (check
+//! `{"cmd":"calibration"}`).  `"policy":"default"` (the default) keeps
+//! the server's standing behaviour: the autopilot policy when live, else
+//! the inverse-cost baseline.
 //!
 //! `calibration` is the online-γ admin request: it returns the
 //! calibrator's snapshot (γ̂ with uncertainty, per-level cost/error
@@ -27,6 +37,28 @@ use anyhow::{anyhow, Result};
 use crate::config::SamplerKind;
 use crate::util::json::Json;
 
+/// Which level-probability policy a request integrates with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PolicyChoice {
+    /// The server's standing behaviour: the calibrated autopilot policy
+    /// when one is live for the ladder, else the inverse-cost baseline.
+    #[default]
+    Default,
+    /// The calibrator's derived Theorem-1 policy at the request's Δ
+    /// (errors until a γ̂ fit exists; `mlem` sampler only).
+    Theory,
+}
+
+impl PolicyChoice {
+    pub fn parse(s: &str) -> Result<PolicyChoice> {
+        match s {
+            "default" => Ok(PolicyChoice::Default),
+            "theory" => Ok(PolicyChoice::Theory),
+            _ => Err(anyhow!("unknown policy '{s}' (default|theory)")),
+        }
+    }
+}
+
 /// A generation request (after validation / defaulting).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GenRequest {
@@ -41,6 +73,9 @@ pub struct GenRequest {
     pub levels: Vec<usize>,
     /// β-shift applied to the level policy (the paper's Δ sweep).
     pub delta: f64,
+    /// Which policy the levels integrate under (part of the batcher's
+    /// compatibility key).
+    pub policy: PolicyChoice,
     /// Include raw image payloads in the response.
     pub return_images: bool,
 }
@@ -138,6 +173,13 @@ impl Request {
                     }
                     None => defaults.mlem_levels.clone(),
                 };
+                let policy = match j.str_of("policy") {
+                    Some(s) => PolicyChoice::parse(s)?,
+                    None => PolicyChoice::Default,
+                };
+                if policy == PolicyChoice::Theory && sampler != SamplerKind::Mlem {
+                    return Err(anyhow!("policy \"theory\" requires the mlem sampler"));
+                }
                 Ok(Request::Generate(GenRequest {
                     n,
                     sampler,
@@ -145,6 +187,7 @@ impl Request {
                     seed: j.f64_of("seed").map(|s| s as u64).unwrap_or(0),
                     levels,
                     delta: j.f64_of("delta").unwrap_or(0.0),
+                    policy,
                     return_images: j.get("return_images").and_then(Json::as_bool).unwrap_or(false),
                 }))
             }
@@ -212,7 +255,37 @@ mod tests {
         assert_eq!(g.steps, defaults().default_steps);
         assert_eq!(g.sampler, defaults().default_sampler);
         assert_eq!(g.levels, defaults().mlem_levels);
+        assert_eq!(g.policy, PolicyChoice::Default);
         assert!(!g.return_images);
+    }
+
+    #[test]
+    fn parse_policy_choice() {
+        let r = Request::parse(
+            r#"{"cmd":"generate","n":1,"sampler":"mlem","policy":"theory","delta":-1.5}"#,
+            &defaults(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.policy, PolicyChoice::Theory);
+        let d = Request::parse(
+            r#"{"cmd":"generate","n":1,"policy":"default"}"#,
+            &defaults(),
+        )
+        .unwrap();
+        let Request::Generate(g) = d else { panic!() };
+        assert_eq!(g.policy, PolicyChoice::Default);
+        // theory is a level-probability concept: non-mlem samplers reject
+        assert!(Request::parse(
+            r#"{"cmd":"generate","n":1,"sampler":"em","policy":"theory"}"#,
+            &defaults()
+        )
+        .is_err());
+        assert!(Request::parse(
+            r#"{"cmd":"generate","n":1,"policy":"nope"}"#,
+            &defaults()
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,6 +7,16 @@
 //! request; the Bernoulli level draws are shared across the batch (§4)
 //! and keyed by the combined batch seed.
 //!
+//! Concurrency: `execute` takes `&self` and is safe (and intended) to
+//! run from several batch-runner lanes at once — all scratch comes from
+//! the thread-safe global pools, denoiser eps traffic goes through
+//! parked per-call executor-handle clones (concurrent lanes' same-t
+//! jobs are what the executor's grouping loop fuses), and the only
+//! cross-batch state, the calibrator, takes its own lock per probe.
+//! Calibration probes additionally serialize behind a try-lock: when
+//! one lane is already probing, other lanes *skip* their probe rather
+//! than queue behind it, so probing can never convoy the lanes.
+//!
 //! Calibration: every `calib_sample_every`-th batch is probed after its
 //! run — each serving-ladder level is timed on the batch state diffused
 //! to a random schedule time, and the adjacent-level deltas are measured
@@ -17,13 +27,14 @@
 //! to; per-request reproducibility holds between refits, exactly as it
 //! holds per server configuration).
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::calibrate::{probe_family, CalibConfig, Calibrator, CostSource};
 use crate::config::{SamplerKind, ServeConfig};
-use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats};
+use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats, PolicyChoice};
 use crate::levels::Policy;
 use crate::metrics::Metrics;
 use crate::parallel;
@@ -49,6 +60,12 @@ pub struct Scheduler {
     /// Online γ-calibrator over the configured `mlem_levels` ladder;
     /// `None` when disabled or the ladder is too short to calibrate.
     calibrator: Option<Calibrator>,
+    /// Probe admission under concurrent lanes: held (try-lock) for the
+    /// duration of one probe; a busy gate means some other lane is
+    /// probing right now and this batch simply skips — probes are a
+    /// sampled measurement, so dropping one is free, while queueing
+    /// would serialize the lanes behind ladder evaluations.
+    probe_gate: Mutex<()>,
 }
 
 impl Scheduler {
@@ -96,7 +113,15 @@ impl Scheduler {
                 },
             )
         });
-        Ok(Scheduler { handle, denoisers, costs, cfg, metrics, calibrator })
+        Ok(Scheduler {
+            handle,
+            denoisers,
+            costs,
+            cfg,
+            metrics,
+            calibrator,
+            probe_gate: Mutex::new(()),
+        })
     }
 
     pub fn handle(&self) -> &ExecutorHandle {
@@ -134,19 +159,62 @@ impl Scheduler {
         Policy::FixedInvCost { scale, costs }.with_delta(delta)
     }
 
-    /// The (policy, level subset) a request actually runs with: requests
-    /// on the configured ladder get the autopilot's calibrated
-    /// `FixedTheory` policy once one exists (possibly a shortened
-    /// ladder); everything else keeps the baseline inverse-cost policy.
-    fn plan_for(&self, levels: &[usize], delta: f64) -> (Policy, Vec<usize>) {
-        if let Some(cal) = &self.calibrator {
-            if levels == self.cfg.mlem_levels.as_slice() {
-                if let Some((policy, kept)) = cal.active_policy() {
-                    return (policy.with_delta(delta), self.cfg.mlem_levels[..kept].to_vec());
+    /// The (policy, level subset) a request actually runs with.
+    ///
+    /// `PolicyChoice::Default`: requests on the configured ladder get
+    /// the autopilot's calibrated `FixedTheory` policy once one exists
+    /// (possibly a shortened ladder); everything else keeps the baseline
+    /// inverse-cost policy.
+    ///
+    /// `PolicyChoice::Theory`: the calibrator's derived Theorem-1
+    /// operating point at the request's Δ — served even in observe-only
+    /// (`calib_autopilot: false`) deployments, since the client asked
+    /// for it explicitly.  Errors until a γ̂ fit has been installed, and
+    /// only the configured ladder is calibrated, so other level subsets
+    /// are rejected rather than silently served with the baseline.
+    fn plan_for(
+        &self,
+        levels: &[usize],
+        delta: f64,
+        choice: PolicyChoice,
+    ) -> Result<(Policy, Vec<usize>)> {
+        match choice {
+            PolicyChoice::Theory => {
+                let cal = self.calibrator.as_ref().ok_or_else(|| {
+                    anyhow!(
+                        "policy \"theory\" requires online calibration \
+                         (calib_sample_every > 0 and a >=3-level ladder)"
+                    )
+                })?;
+                if levels != self.cfg.mlem_levels.as_slice() {
+                    return Err(anyhow!(
+                        "policy \"theory\" is calibrated for the configured ladder {:?}, \
+                         not {levels:?}",
+                        self.cfg.mlem_levels
+                    ));
                 }
+                let d = cal.derived().ok_or_else(|| {
+                    anyhow!(
+                        "policy \"theory\" is not calibrated yet (no gamma fit installed); \
+                         check {{\"cmd\":\"calibration\"}} and retry after more traffic"
+                    )
+                })?;
+                Ok((d.policy.with_delta(delta), self.cfg.mlem_levels[..d.kept].to_vec()))
+            }
+            PolicyChoice::Default => {
+                if let Some(cal) = &self.calibrator {
+                    if levels == self.cfg.mlem_levels.as_slice() {
+                        if let Some((policy, kept)) = cal.active_policy() {
+                            return Ok((
+                                policy.with_delta(delta),
+                                self.cfg.mlem_levels[..kept].to_vec(),
+                            ));
+                        }
+                    }
+                }
+                Ok((self.policy_for(levels, delta), levels.to_vec()))
             }
         }
-        (self.policy_for(levels, delta), levels.to_vec())
     }
 
     /// Admin entry point for the `calibration` request: optionally set
@@ -220,25 +288,43 @@ impl Scheduler {
     }
 
     /// Execute one compatible batch; returns one response per request,
-    /// in order.  All requests must share (sampler, steps, levels, Δ).
+    /// in order.  All requests must share (sampler, steps, levels, Δ,
+    /// policy) — the batcher's compatibility key.
     pub fn execute(&self, reqs: &[GenRequest]) -> Result<Vec<GenResponse>> {
         let Some(first) = reqs.first() else { return Ok(Vec::new()) };
         self.check_levels(&first.levels)?;
+        // Resolve the serving plan before any scratch is borrowed (the
+        // error paths stay allocation-free); non-ML-EM samplers have no
+        // level probabilities for a theory policy to speak to.
+        let plan = match first.sampler {
+            SamplerKind::Mlem => Some(self.plan_for(&first.levels, first.delta, first.policy)?),
+            _ if first.policy == PolicyChoice::Theory => {
+                return Err(anyhow!("policy \"theory\" requires the mlem sampler"));
+            }
+            _ => None,
+        };
         let t0 = Instant::now();
         let dim = self.dim();
         let steps = first.steps;
         let grid = TimeGrid::new(schedule::T_MAX, schedule::T_MIN, steps);
 
-        // Per-request reproducible noise, concatenated into a batch path.
+        // Per-request reproducible noise, concatenated into a batch
+        // path.  The state buffer is pooled per runner: concurrent lanes
+        // each borrow their own buffer from the global free-list and
+        // return it below, so steady state allocates no state-width
+        // scratch regardless of the lane count.
         let n_total: usize = reqs.iter().map(|r| r.n).sum();
-        let mut x = Vec::with_capacity(n_total * dim);
+        let pool = parallel::global_f32();
+        let mut x = pool.take_vec(n_total * dim);
         let mut parts = Vec::with_capacity(reqs.len());
         let mut batch_seed = 0xF1E1u64;
+        let mut off = 0usize;
         for r in reqs {
             let mut rng = Rng::new(r.seed ^ 0x9E3779B97F4A7C15);
-            for _ in 0..r.n * dim {
-                x.push(rng.normal_f32());
+            for v in x[off..off + r.n * dim].iter_mut() {
+                *v = rng.normal_f32();
             }
+            off += r.n * dim;
             parts.push(BrownianPath::sample(&mut rng, steps, r.n * dim, grid.span()));
             batch_seed = batch_seed
                 .rotate_left(13)
@@ -253,7 +339,7 @@ impl Scheduler {
         match first.sampler {
             SamplerKind::Mlem => {
                 let base = LinearPartDrift { dim };
-                let (policy, eff_levels) = self.plan_for(&first.levels, first.delta);
+                let (policy, eff_levels) = plan.expect("mlem plan resolved above");
                 let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = eff_levels
                     .iter()
                     .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })
@@ -332,14 +418,20 @@ impl Scheduler {
         // probe) and after `wall_ms` is stamped, so probe work is not
         // attributed to serving in the stats.  The probed batch's
         // clients do still wait for it (responses are dispatched by the
-        // batch worker once `execute` returns): two ladder evals per
+        // batch runner once `execute` returns): two ladder evals per
         // probed batch, ~1% of a multi-step sampling run, amortised
-        // across the `calib_sample_every` cadence.
+        // across the `calib_sample_every` cadence.  Under concurrent
+        // lanes the probe gate admits one prober at a time; a busy gate
+        // skips this batch entirely (it isn't even counted toward the
+        // cadence), so probing never queues lanes behind ladder evals.
         if let Some(cal) = &self.calibrator {
-            if cal.should_probe() {
-                self.run_probe(cal, &x);
+            if let Ok(_probing) = self.probe_gate.try_lock() {
+                if cal.should_probe() {
+                    self.run_probe(cal, &x);
+                }
             }
         }
+        pool.put(x);
         Ok(out)
     }
 

@@ -3,41 +3,34 @@
 //! Threads:
 //!  * acceptor — owns the listener, spawns one handler per connection;
 //!  * handlers — parse requests, enqueue work, block on the response;
-//!  * batch worker — waits on the shared [`Batcher`], cuts batches, runs
-//!    them on the [`Scheduler`] (which talks to the PJRT executor
-//!    thread), and fans responses back out.
+//!  * batch runners — the [`LanePool`]: `batch_workers` lanes pop
+//!    batches of *different* compatibility classes off the shared
+//!    [`crate::coordinator::batcher::Batcher`] concurrently and run them
+//!    on the [`Scheduler`] (which talks to the PJRT executor thread) —
+//!    several in-flight integrations feed the executor's cross-request
+//!    grouping loop at once.
 //!
 //! Python never appears anywhere on this path.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::lanes::LanePool;
 use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::scheduler::Scheduler;
 use crate::metrics::Metrics;
-
-type RespTx = Sender<Response>;
-
-struct Shared {
-    batcher: Mutex<Batcher<(RespTx, Instant)>>,
-    wake: Condvar,
-    stop: AtomicBool,
-}
 
 /// The serving coordinator.
 pub struct Server {
     cfg: ServeConfig,
     scheduler: Arc<Scheduler>,
     metrics: Metrics,
-    shared: Arc<Shared>,
+    lanes: Arc<LanePool>,
 }
 
 impl Server {
@@ -46,16 +39,10 @@ impl Server {
         // knob before any request can create it at an arbitrary size.
         cfg.apply_threads();
         let metrics = scheduler.metrics().clone();
-        let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(
-                cfg.max_batch,
-                Duration::from_millis(cfg.max_wait_ms),
-                cfg.queue_depth,
-            )),
-            wake: Condvar::new(),
-            stop: AtomicBool::new(false),
-        });
-        Server { cfg, scheduler: Arc::new(scheduler), metrics, shared }
+        let scheduler = Arc::new(scheduler);
+        let lanes = Arc::new(LanePool::new(scheduler.clone(), &cfg));
+        eprintln!("[server] {} batch-runner lane(s)", lanes.workers());
+        Server { cfg, scheduler, metrics, lanes }
     }
 
     /// Bind, serve until a `shutdown` request arrives, then drain.
@@ -68,27 +55,17 @@ impl Server {
         on_ready(listener.local_addr()?);
         eprintln!("[server] listening on {}", listener.local_addr()?);
 
-        // Batch worker.
-        let worker = {
-            let shared = self.shared.clone();
-            let scheduler = self.scheduler.clone();
-            let metrics = self.metrics.clone();
-            std::thread::Builder::new().name("batch-worker".into()).spawn(move || {
-                batch_worker(shared, scheduler, metrics)
-            })?
-        };
-
         // Accept loop (non-blocking poll so we can observe `stop`).
         let mut handlers = Vec::new();
-        while !self.shared.stop.load(Ordering::SeqCst) {
+        while !self.lanes.stopped() {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let shared = self.shared.clone();
+                    let lanes = self.lanes.clone();
                     let scheduler = self.scheduler.clone();
                     let metrics = self.metrics.clone();
                     let cfg = self.cfg.clone();
                     handlers.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, shared, scheduler, metrics, cfg) {
+                        if let Err(e) = handle_conn(stream, lanes, scheduler, metrics, cfg) {
                             eprintln!("[server] connection error: {e:#}");
                         }
                     }));
@@ -99,9 +76,11 @@ impl Server {
                 Err(e) => return Err(e.into()),
             }
         }
-        // Drain: wake the worker so it exits, join everything.
-        self.shared.wake.notify_all();
-        let _ = worker.join();
+        // Drain: runners finish in-flight batches, execute what is still
+        // queued, and the final drain error-answers anything stranded —
+        // every accepted request gets a response before the join ends.
+        self.lanes.stop();
+        self.lanes.join();
         for h in handlers {
             let _ = h.join();
         }
@@ -111,60 +90,13 @@ impl Server {
 
     /// Ask the server to stop (same effect as a `shutdown` request).
     pub fn stop(&self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        self.shared.wake.notify_all();
-    }
-}
-
-fn batch_worker(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics) {
-    loop {
-        // Wait until a batch is ready or we are stopping.
-        let batch = {
-            let mut q = shared.batcher.lock().unwrap();
-            loop {
-                if shared.stop.load(Ordering::SeqCst) && q.is_empty() {
-                    return;
-                }
-                if q.ready(Instant::now()) || (shared.stop.load(Ordering::SeqCst) && !q.is_empty()) {
-                    break q.pop_batch();
-                }
-                // Sleep until head timeout (or a notify).
-                let (guard, _) = shared
-                    .wake
-                    .wait_timeout(q, Duration::from_millis(2))
-                    .unwrap();
-                q = guard;
-            }
-        };
-        let Some(batch) = batch else { continue };
-        metrics.batches.get(); // touch (batches counted in scheduler)
-
-        let reqs: Vec<_> = batch.iter().map(|w| w.req.clone()).collect();
-        let queue_times: Vec<Duration> =
-            batch.iter().map(|w| w.enqueued.elapsed()).collect();
-        match scheduler.execute(&reqs) {
-            Ok(responses) => {
-                for ((item, mut resp), qd) in batch.into_iter().zip(responses).zip(queue_times) {
-                    resp.stats.queue_ms = qd.as_secs_f64() * 1e3;
-                    metrics.queue_latency.record(qd);
-                    metrics.completed.inc();
-                    let _ = item.payload.0.send(Response::Gen(resp));
-                }
-            }
-            Err(e) => {
-                let msg = format!("generation failed: {e:#}");
-                for item in batch {
-                    metrics.rejected.inc();
-                    let _ = item.payload.0.send(Response::Error(msg.clone()));
-                }
-            }
-        }
+        self.lanes.stop();
     }
 }
 
 fn handle_conn(
     stream: TcpStream,
-    shared: Arc<Shared>,
+    lanes: Arc<LanePool>,
     scheduler: Arc<Scheduler>,
     metrics: Metrics,
     cfg: ServeConfig,
@@ -185,35 +117,27 @@ fn handle_conn(
                 Response::Error(e.to_string())
             }
             Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => Response::Metrics(metrics.snapshot()),
+            Ok(Request::Metrics) => {
+                // The global snapshot plus the live per-class queue
+                // depths (which only the lane pool's batcher knows).
+                Response::Metrics(
+                    metrics.snapshot().with("batcher", lanes.batcher_snapshot()),
+                )
+            }
             Ok(Request::Calibration { set_budget }) => {
                 Response::Calibration(scheduler.calibration(set_budget))
             }
             Ok(Request::Shutdown) => {
-                shared.stop.store(true, Ordering::SeqCst);
-                shared.wake.notify_all();
+                lanes.stop();
                 let line = Response::ShuttingDown.to_json().to_string();
                 writeln!(writer, "{line}")?;
                 break;
             }
             Ok(Request::Generate(req)) => {
-                let (tx, rx) = channel();
-                let enqueue = {
-                    let mut q = shared.batcher.lock().unwrap();
-                    q.push(req, (tx, t0))
-                };
-                match enqueue {
-                    Err(_) => {
-                        metrics.rejected.inc();
-                        Response::Error("server overloaded (queue full)".into())
-                    }
-                    Ok(()) => {
-                        shared.wake.notify_all();
-                        match rx.recv() {
-                            Ok(r) => r,
-                            Err(_) => Response::Error("worker dropped request".into()),
-                        }
-                    }
+                let rx = lanes.submit(req);
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => Response::Error("worker dropped request".into()),
                 }
             }
         };
@@ -223,7 +147,6 @@ fn handle_conn(
         }
         let out = response.to_json().to_string();
         writeln!(writer, "{out}")?;
-        let _ = scheduler.dim(); // keep scheduler alive in this scope
     }
     Ok(())
 }

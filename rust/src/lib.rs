@@ -38,7 +38,10 @@
 //!    allocating per call.
 //! 3. [`sde::mlem::mlem_sample`] fuses its accumulate and state-update
 //!    loops per shard: the weighted level deltas, the Brownian increment
-//!    and the Euler step stream through each cache line once per step.
+//!    and the Euler step stream through each cache line once per step,
+//!    in fixed 8-lane f32 chunks ([`sde::mlem::kernels`]) that LLVM
+//!    auto-vectorises — bit-identical to the scalar loops by
+//!    construction.
 //! 4. [`runtime`]'s executor ships request payloads in buffers from its
 //!    own dedicated payload pool (so `ExecStats.pool_hits/misses` stay
 //!    attributable to the request path even when samplers churn the
@@ -49,6 +52,12 @@
 //!    (cross-request micro-batching; `exec_linger_us`/`exec_max_group`
 //!    knobs, bit-identical to singleton dispatch, measured by
 //!    `bench_exec_batching` into `BENCH_exec_batching.json`).
+//! 5. [`coordinator`]'s multi-lane runner pool keeps that grouping loop
+//!    *fed*: `batch_workers` lanes pop batches of different
+//!    compatibility classes off per-class queues concurrently
+//!    (same-class batches stay serialized, so per-request bits are
+//!    lane-count-independent), measured by `bench_coordinator` into
+//!    `BENCH_coordinator.json`.
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
@@ -68,7 +77,7 @@
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
 //! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
 //! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching |
-//! | [`coordinator`] | serving layer: server, batcher, scheduler, state |
+//! | [`coordinator`] | serving layer: server, per-class batcher, multi-lane runner pool, scheduler |
 //! | [`benchgate`] | CI bench-regression gate over the `BENCH_*.json` artifacts |
 
 // Kernel-style indexed loops are the idiom throughout this crate: they

@@ -3,9 +3,11 @@
 //! ```text
 //! mlem serve      [--artifacts DIR] [--addr HOST:PORT] [--max-batch N]
 //!                 [--threads T]  # sampler worker pool size (0 = auto) ...
+//!                 [--batch-workers K]  # coordinator runner lanes (0 = auto: min(levels, 4))
 //!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
 //! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
-//!                 [--levels 1,3,5] [--delta D] [--out images.pgm]
+//!                 [--levels 1,3,5] [--delta D] [--policy default|theory]
+//!                 [--out images.pgm]
 //! mlem gamma-fit  [--artifacts DIR]      # Fig-2 style γ estimate
 //! mlem costs      [--artifacts DIR]      # measured per-level eval costs
 //! ```
@@ -13,7 +15,7 @@
 use anyhow::{anyhow, Result};
 
 use mlem::config::{SamplerKind, ServeConfig};
-use mlem::coordinator::protocol::GenRequest;
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
 use mlem::runtime::{spawn_executor_with, Manifest};
@@ -49,6 +51,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0),
         levels: args.usize_list("levels", &cfg.mlem_levels),
         delta: args.f64_or("delta", 0.0),
+        policy: PolicyChoice::parse(&args.str_or("policy", "default"))?,
         return_images: true,
     };
     let resp = scheduler.generate(&req)?;

@@ -6,7 +6,7 @@
 //! recording on the request path is one atomic increment: the hot loop
 //! never allocates or locks.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::util::json::Json;
@@ -27,6 +27,28 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down occupancy counter (in-flight batches, busy runners): a
+/// relaxed atomic level, incremented on entry and decremented on exit.
+/// Signed so a racy snapshot between an inc and a dec can never wrap.
+#[derive(Default)]
+pub struct Level {
+    v: AtomicI64,
+}
+
+impl Level {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.v.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -170,6 +192,13 @@ pub struct MetricsInner {
     /// Running mean jobs per multi-job group (`grouped_jobs /
     /// exec_groups`), updated by the executor after every group.
     pub group_occupancy: Gauge,
+    /// Batches currently inside `Scheduler::execute` across all batch
+    /// runners (the multi-lane coordinator's live occupancy).
+    pub inflight_batches: Level,
+    /// Batch-runner lanes currently executing (vs parked on the queue).
+    pub runner_busy: Level,
+    /// Configured batch-runner lane count (set once at pool start).
+    pub batch_runners: Gauge,
     /// Latest fitted HTMC exponent γ̂ (0 until the calibrator's first
     /// fit; see `calibrate`).
     pub gamma_hat: Gauge,
@@ -236,6 +265,9 @@ impl Metrics {
             .with("exec_groups", Json::num(self.exec_groups.get() as f64))
             .with("grouped_jobs", Json::num(self.grouped_jobs.get() as f64))
             .with("group_occupancy", Json::num(self.group_occupancy.get()))
+            .with("inflight_batches", Json::num(self.inflight_batches.get() as f64))
+            .with("runner_busy", Json::num(self.runner_busy.get() as f64))
+            .with("batch_runners", Json::num(self.batch_runners.get()))
             .with("gamma_hat", Json::num(self.gamma_hat.get()))
             .with("recalibrations", Json::num(self.recalibrations.get() as f64))
             .with("calib_probes", Json::num(self.calib_probes.get() as f64))
@@ -309,6 +341,26 @@ mod tests {
         assert_eq!(parsed.f64_of("exec_groups"), Some(0.0));
         assert_eq!(parsed.f64_of("grouped_jobs"), Some(0.0));
         assert_eq!(parsed.f64_of("group_occupancy"), Some(0.0));
+        // multi-lane coordinator gauges
+        assert_eq!(parsed.f64_of("inflight_batches"), Some(0.0));
+        assert_eq!(parsed.f64_of("runner_busy"), Some(0.0));
+        assert_eq!(parsed.f64_of("batch_runners"), Some(0.0));
+    }
+
+    #[test]
+    fn level_counts_up_and_down() {
+        let l = Level::default();
+        assert_eq!(l.get(), 0);
+        l.inc();
+        l.inc();
+        assert_eq!(l.get(), 2);
+        l.dec();
+        assert_eq!(l.get(), 1);
+        let m = Metrics::new();
+        m.inflight_batches.inc();
+        assert_eq!(m.snapshot().f64_of("inflight_batches"), Some(1.0));
+        m.inflight_batches.dec();
+        assert_eq!(m.snapshot().f64_of("inflight_batches"), Some(0.0));
     }
 
     #[test]

@@ -11,6 +11,16 @@
 //! boundaries equal the engine's own greedy bucket walk, and every row
 //! is computed by the identical per-row math, so results are
 //! bit-identical to the single-job path.
+//!
+//! Multi-lane pass: **every** executor call now borrows a parked handle
+//! clone ([`NeuralDenoiser::with_handle`]), not just the sharded path.
+//! An [`ExecutorHandle`]'s reusable response channel serialises
+//! concurrent callers of that one handle, so when several coordinator
+//! batch runners share the denoiser family, per-call clones are what
+//! lets their same-(level, t) jobs sit in the executor's queue
+//! *simultaneously* — the precondition for the grouping loop to fuse
+//! them into one device dispatch.  Which handle carries a request
+//! cannot change a bit of its result.
 
 use std::sync::Mutex;
 
@@ -92,6 +102,21 @@ impl NeuralDenoiser {
             .collect())
     }
 
+    /// Run `f` on a parked executor-handle clone (grown on first use,
+    /// re-parked after).  Keeps concurrent callers — coordinator lanes
+    /// sharing this denoiser — off each other's response channels.
+    fn with_handle<R>(&self, f: impl FnOnce(&ExecutorHandle) -> R) -> R {
+        let h = self
+            .shard_handles
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| self.handle.clone());
+        let r = f(&h);
+        self.shard_handles.lock().unwrap().push(h);
+        r
+    }
+
     /// Concurrent bucket-sized sub-requests through parked handle
     /// clones; each shard writes its own `out` rows.  Only called for
     /// multi-bucket batches with worker threads available.
@@ -132,12 +157,16 @@ impl Denoiser for NeuralDenoiser {
             self.eps_sharded(x, t, out);
             return;
         }
-        let r = self.handle.eps(self.level, x, t).expect("executor eps failed");
+        let r = self
+            .with_handle(|h| h.eps(self.level, x, t))
+            .expect("executor eps failed");
         out.copy_from_slice(&r);
     }
 
     fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
-        let (e, j) = self.handle.eps_jvp(self.level, x, t, v).expect("executor jvp failed");
+        let (e, j) = self
+            .with_handle(|h| h.eps_jvp(self.level, x, t, v))
+            .expect("executor jvp failed");
         out_eps.copy_from_slice(&e);
         out_jv.copy_from_slice(&j);
     }

@@ -56,6 +56,104 @@ impl<F: Fn(usize, f64) -> f64 + Sync> LevelPolicy for F {
 /// Numerical floor on probabilities (caps the 1/p coefficient).
 pub const PROB_FLOOR: f64 = 1e-6;
 
+/// Fixed-width f32 kernels for the fused accumulate/update hot loops
+/// (the ROADMAP "SIMD combine" item).
+///
+/// Each kernel walks its slices in [`kernels::LANES`]-wide chunks with a
+/// per-lane inner loop over fixed-size array views — the shape LLVM
+/// reliably auto-vectorises to full-width SIMD on stable Rust (no
+/// `std::simd` offline) — plus a scalar tail.  Every element still
+/// receives exactly the operations of the historical scalar loop, and
+/// elements are independent, so chunking is **bit-identical** to the
+/// scalar reference by construction; `tests/parity_parallel.rs` pins
+/// that bitwise, scalar-vs-chunked, across lengths straddling the lane
+/// width.
+pub mod kernels {
+    /// Chunk width: 8 f32 lanes = one AVX2 register, two NEON registers.
+    pub const LANES: usize = 8;
+
+    /// `total[j] += w * f[j]` — the lowest level's weighted drift.
+    #[inline]
+    pub fn acc_level(total: &mut [f32], f: &[f32], w: f32) {
+        let n = total.len();
+        debug_assert_eq!(f.len(), n);
+        let main = n - n % LANES;
+        for (tc, fc) in total[..main]
+            .chunks_exact_mut(LANES)
+            .zip(f[..main].chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                tc[l] += w * fc[l];
+            }
+        }
+        for j in main..n {
+            total[j] += w * f[j];
+        }
+    }
+
+    /// `total[j] += w * (fk[j] - fkm[j])` — a weighted level delta.
+    #[inline]
+    pub fn acc_delta(total: &mut [f32], fk: &[f32], fkm: &[f32], w: f32) {
+        let n = total.len();
+        debug_assert_eq!(fk.len(), n);
+        debug_assert_eq!(fkm.len(), n);
+        let main = n - n % LANES;
+        for ((tc, fc), gc) in total[..main]
+            .chunks_exact_mut(LANES)
+            .zip(fk[..main].chunks_exact(LANES))
+            .zip(fkm[..main].chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                tc[l] += w * (fc[l] - gc[l]);
+            }
+        }
+        for j in main..n {
+            total[j] += w * (fk[j] - fkm[j]);
+        }
+    }
+
+    /// `x[j] += eta * total[j]` — the ODE-mode Euler state update.
+    #[inline]
+    pub fn euler_step(x: &mut [f32], total: &[f32], eta: f32) {
+        let n = x.len();
+        debug_assert_eq!(total.len(), n);
+        let main = n - n % LANES;
+        for (xc, tc) in x[..main]
+            .chunks_exact_mut(LANES)
+            .zip(total[..main].chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                xc[l] += eta * tc[l];
+            }
+        }
+        for j in main..n {
+            x[j] += eta * total[j];
+        }
+    }
+
+    /// `x[j] += eta * total[j] + gt * dw[j]` — the SDE-mode update with
+    /// the Brownian increment streamed through the same pass.
+    #[inline]
+    pub fn euler_step_noise(x: &mut [f32], total: &[f32], dw: &[f32], eta: f32, gt: f32) {
+        let n = x.len();
+        debug_assert_eq!(total.len(), n);
+        debug_assert_eq!(dw.len(), n);
+        let main = n - n % LANES;
+        for ((xc, tc), wc) in x[..main]
+            .chunks_exact_mut(LANES)
+            .zip(total[..main].chunks_exact(LANES))
+            .zip(dw[..main].chunks_exact(LANES))
+        {
+            for l in 0..LANES {
+                xc[l] += eta * tc[l] + gt * wc[l];
+            }
+        }
+        for j in main..n {
+            x[j] += eta * total[j] + gt * dw[j];
+        }
+    }
+}
+
 /// A multilevel drift family `f^1..f^K` plus an optional always-on base.
 pub struct MlemFamily<'a> {
     /// Analytically known part evaluated every step (cost ~ 0); `None`
@@ -124,9 +222,10 @@ impl<'a> StepCtx<'a> {
     /// every fired level's weighted delta is added to `total`, then the
     /// state update streams `total`, `dw` and `x` through each cache
     /// line exactly once.  `total` arrives pre-filled with the base part
-    /// and `x`/`total` are this shard's chunks; per-element operations
-    /// and their order match the historical serial loops exactly, so the
-    /// result is bit-identical for any shard count.
+    /// and `x`/`total` are this shard's chunks.  The loops run through
+    /// the fixed-width [`kernels`], whose per-element operations match
+    /// the historical scalar loops exactly, so the result is
+    /// bit-identical for any shard count and for chunked-vs-scalar.
     fn fused_rows(&self, shard: Shard, total: &mut [f32], x: &mut [f32]) {
         let dim = self.dim;
         let lo = shard.start * dim;
@@ -142,14 +241,10 @@ impl<'a> StepCtx<'a> {
                 BernoulliMode::Shared => {
                     let w = (1.0 / self.probs[k]) as f32;
                     if k == 0 {
-                        for j in 0..n {
-                            total[j] += w * fk[j];
-                        }
+                        kernels::acc_level(total, fk, w);
                     } else {
                         let fkm = &self.cache[k - 1][lo..lo + n];
-                        for j in 0..n {
-                            total[j] += w * (fk[j] - fkm[j]);
-                        }
+                        kernels::acc_delta(total, fk, fkm, w);
                     }
                 }
                 BernoulliMode::PerSample => {
@@ -160,28 +255,24 @@ impl<'a> StepCtx<'a> {
                         }
                         let off = r * dim;
                         if k == 0 {
-                            for j in off..off + dim {
-                                total[j] += w * fk[j];
-                            }
+                            kernels::acc_level(&mut total[off..off + dim], &fk[off..off + dim], w);
                         } else {
                             let fkm = &self.cache[k - 1][lo..lo + n];
-                            for j in off..off + dim {
-                                total[j] += w * (fk[j] - fkm[j]);
-                            }
+                            kernels::acc_delta(
+                                &mut total[off..off + dim],
+                                &fk[off..off + dim],
+                                &fkm[off..off + dim],
+                                w,
+                            );
                         }
                     }
                 }
             }
         }
         if self.gt != 0.0 {
-            let dw = &self.dw[lo..lo + n];
-            for j in 0..n {
-                x[j] += self.eta * total[j] + self.gt * dw[j];
-            }
+            kernels::euler_step_noise(x, total, &self.dw[lo..lo + n], self.eta, self.gt);
         } else {
-            for j in 0..n {
-                x[j] += self.eta * total[j];
-            }
+            kernels::euler_step(x, total, self.eta);
         }
     }
 }
@@ -197,7 +288,8 @@ impl<'a> StepCtx<'a> {
 /// drifts shard their batch across the persistent `PALLAS_THREADS`-sized
 /// worker pool (parked threads woken per step — no per-call spawns, so
 /// even small batches shard), and the accumulate/update loops are fused
-/// per shard.  Bernoulli draws stay on one serial RNG stream, so
+/// per shard and vectorised in fixed 8-lane f32 chunks (see
+/// [`kernels`]).  Bernoulli draws stay on one serial RNG stream, so
 /// trajectories and [`SampleReport`] accounting are **bit-identical for
 /// every thread count** (property-tested in `tests/parity_parallel.rs`).
 #[allow(clippy::too_many_arguments)]

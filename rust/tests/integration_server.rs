@@ -8,12 +8,23 @@ use std::net::TcpStream;
 use std::sync::mpsc::channel;
 use std::time::Duration;
 
+use mlem::benchkit::{synth_artifact_dir, SynthLevel};
 use mlem::calibrate::ProbeSample;
 use mlem::config::ServeConfig;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
 use mlem::runtime::{spawn_executor, Manifest};
 use mlem::util::json::Json;
+
+/// Coordinator lane count for this suite: the `MLEM_BATCH_WORKERS` env
+/// knob when set (CI runs the suite under a {1, 4} matrix), else
+/// `default`.  Every test here must pass at any lane count.
+fn batch_workers_env(default: usize) -> usize {
+    std::env::var("MLEM_BATCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn artifacts() -> Option<std::path::PathBuf> {
     let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -52,6 +63,7 @@ fn serve_end_to_end() {
         max_wait_ms: 10,
         cost_reps: 0, // FLOP costs: fast startup
         default_steps: 40,
+        batch_workers: batch_workers_env(2),
         ..Default::default()
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
@@ -182,6 +194,96 @@ fn synthetic_artifacts() -> std::path::PathBuf {
     dir
 }
 
+/// Shutdown under load: stop the server with k runner lanes mid-batch
+/// and a queue full of waiting work.  Every request that was accepted
+/// must be answered — a result (in-flight and drained batches run to
+/// completion) or an error (anything stranded) — and the server thread
+/// must join; a hang here is the bug this test exists to catch.  Runs
+/// on the synthetic-artifact interpreter so generation is real work.
+#[test]
+fn shutdown_under_load_answers_every_request() {
+    let dir = synth_artifact_dir(
+        "server-shutdown-load",
+        4, // dim 16
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 256 },
+            SynthLevel { kind: "eps", scale: 0.4, work: 256 },
+        ],
+    )
+    .expect("synthetic artifacts");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 4,
+        max_wait_ms: 5,
+        cost_reps: 0,
+        mlem_levels: vec![1, 2],
+        calib_sample_every: 0,
+        batch_workers: batch_workers_env(4),
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
+    let server = std::sync::Arc::new(Server::new(cfg, scheduler));
+
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+
+    // 12 clients, each one slow-ish generate: with 4-image batches the
+    // storm is several batches deep, so the shutdown lands with batches
+    // both mid-flight and still queued.
+    let clients: Vec<_> = (0..12u64)
+        .map(|i| {
+            let addr = addr;
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                writeln!(
+                    writer,
+                    r#"{{"cmd":"generate","n":1,"sampler":"mlem","steps":200,"seed":{i}}}"#
+                )
+                .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).expect("a response line before shutdown completes");
+                assert!(!line.trim().is_empty(), "client {i} got EOF instead of an answer");
+                Json::parse(&line).expect("valid json response")
+            })
+        })
+        .collect();
+
+    // Let the first batches start, then pull the plug mid-storm.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut c = Client::connect(addr);
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+
+    let mut ok = 0usize;
+    let mut errs = 0usize;
+    for (i, j) in clients.into_iter().enumerate() {
+        let resp = j.join().unwrap_or_else(|_| panic!("client {i} panicked"));
+        match resp.get("ok") {
+            Some(&Json::Bool(true)) => ok += 1,
+            Some(&Json::Bool(false)) => errs += 1,
+            other => panic!("client {i}: malformed response {other:?}"),
+        }
+    }
+    assert_eq!(ok + errs, 12, "every accepted request answered (ok {ok} / err {errs})");
+    eprintln!("shutdown under load: {ok} results, {errs} errors, 0 hangs");
+    server_thread.join().expect("server thread joins after shutdown under load");
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The calibration admin request end to end — TCP in, TCP out — with an
 /// injected fit (the shim backend can't run real generation traffic, so
 /// the probes are fed to the calibrator directly; the artifact-gated
@@ -198,6 +300,7 @@ fn calibration_admin_end_to_end() {
         calib_sample_every: 1,
         calib_refit_every: 2,
         calib_budget: 500.0,
+        batch_workers: batch_workers_env(2),
         ..Default::default()
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();

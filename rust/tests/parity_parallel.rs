@@ -302,6 +302,74 @@ fn grouped_eps_bit_identical_to_singleton_dispatch() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The fused accumulate/update loops now run through the fixed-width
+/// `sde::mlem::kernels` (8-lane f32 chunks + scalar tail).  Chunking
+/// must be invisible: every kernel must match its plain scalar loop
+/// **bitwise** on random data, at lengths straddling the lane width
+/// (tails of every residue class included).  No env mutation, so no
+/// ENV_LOCK needed.
+#[test]
+fn fused_kernels_bitwise_match_scalar_references() {
+    use mlem::sde::mlem::kernels;
+    pt::check("kernel_scalar_parity", 60, |gen| {
+        // 1..70 crosses 0..=8 tails and multi-chunk bodies alike.
+        let n = gen.usize_range(1, 70);
+        let total0: Vec<f32> = gen.vec_normal_f32(n, 2.0);
+        let fk: Vec<f32> = gen.vec_normal_f32(n, 1.5);
+        let fkm: Vec<f32> = gen.vec_normal_f32(n, 1.5);
+        let dw: Vec<f32> = gen.vec_normal_f32(n, 0.3);
+        let w = gen.f64_range(-3.0, 3.0) as f32;
+        let eta = gen.f64_range(0.001, 0.5) as f32;
+        let gt = gen.f64_range(-1.5, 1.5) as f32;
+
+        let bitwise = |label: &str, a: &[f32], b: &[f32]| -> Result<(), String> {
+            for (i, (p, q)) in a.iter().zip(b).enumerate() {
+                if p.to_bits() != q.to_bits() {
+                    return Err(format!("{label}: [{i}] {p} vs {q} (n={n})"));
+                }
+            }
+            Ok(())
+        };
+
+        // acc_level vs scalar
+        let mut chunked = total0.clone();
+        kernels::acc_level(&mut chunked, &fk, w);
+        let mut scalar = total0.clone();
+        for j in 0..n {
+            scalar[j] += w * fk[j];
+        }
+        bitwise("acc_level", &chunked, &scalar)?;
+
+        // acc_delta vs scalar
+        let mut chunked = total0.clone();
+        kernels::acc_delta(&mut chunked, &fk, &fkm, w);
+        let mut scalar = total0.clone();
+        for j in 0..n {
+            scalar[j] += w * (fk[j] - fkm[j]);
+        }
+        bitwise("acc_delta", &chunked, &scalar)?;
+
+        // euler_step vs scalar (state update in ODE mode)
+        let mut chunked = fk.clone();
+        kernels::euler_step(&mut chunked, &total0, eta);
+        let mut scalar = fk.clone();
+        for j in 0..n {
+            scalar[j] += eta * total0[j];
+        }
+        bitwise("euler_step", &chunked, &scalar)?;
+
+        // euler_step_noise vs scalar (SDE mode)
+        let mut chunked = fk.clone();
+        kernels::euler_step_noise(&mut chunked, &total0, &dw, eta, gt);
+        let mut scalar = fk.clone();
+        for j in 0..n {
+            scalar[j] += eta * total0[j] + gt * dw[j];
+        }
+        bitwise("euler_step_noise", &chunked, &scalar)?;
+        Ok(())
+    });
+}
+
 #[test]
 fn hotpath_bench_artifact_is_produced_and_consistent() {
     let _guard = ENV_LOCK.lock().unwrap();

@@ -48,18 +48,22 @@ fn main() -> anyhow::Result<()> {
         4,
         1,
         &[workload.bucket],
-        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work }],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work, fault: "" }],
     )?;
     let manifest = Manifest::load(&dir)?;
     let (serial, serial_join) = spawn_executor_with(
         manifest.clone(),
         None,
-        ExecOptions { linger_us: 0, max_group: 1 },
+        ExecOptions { linger_us: 0, max_group: 1, ..ExecOptions::default() },
     )?;
     let (grouped, grouped_join) = spawn_executor_with(
         manifest,
         None,
-        ExecOptions { linger_us: workload.linger_us, max_group: workload.max_group },
+        ExecOptions {
+            linger_us: workload.linger_us,
+            max_group: workload.max_group,
+            ..ExecOptions::default()
+        },
     )?;
     serial.warmup(workload.bucket)?;
     grouped.warmup(workload.bucket)?;

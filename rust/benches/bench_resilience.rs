@@ -1,0 +1,231 @@
+//! Serving-path resilience bench: the chaos headline the CI bench-gate
+//! tracks (`answered_rate` in `BENCH_resilience.json`).
+//!
+//! Two storms, both on the offline shim's synthetic interpreter (no
+//! `make artifacts` needed):
+//!
+//! * **Kill storm** — a supervised executor whose only eps executable
+//!   panics on every 7th execute (`panic_after=7`, deterministic — no
+//!   wall-clock randomness).  Six concurrent clients drive the
+//!   exec-batching payload grid; the supervisor respawns the executor
+//!   and replays the stranded calls, and every answered output is
+//!   compared bitwise against a fault-free twin run over the same grid
+//!   (replayed work must be indistinguishable from never-failed work).
+//! * **Overload storm** — a healthy lane pool whose EWMA batch-time
+//!   estimate is warmed by unconstrained traffic, then hit with a burst
+//!   of deadline-carrying requests several waves deeper than the lanes
+//!   can clear in time.  Requests land in exactly one bucket: completed,
+//!   shed at admission (typed `overloaded`), expired in queue (typed
+//!   `deadline_exceeded`), or errored — and the p99 queue wait of the
+//!   accepted requests is reported against the deadline.
+//!
+//! Schema lives in `benchkit::resilience_json` (shared with
+//! `tests/chaos_resilience.rs`, which emits a compressed version of the
+//! same artifact so it exists after `cargo test` alone).
+//!
+//! `cargo bench --bench bench_resilience`
+
+use std::sync::Arc;
+
+use mlem::benchkit::{
+    exec_batching_storm, percentile, resilience_json, resilience_storm, synth_artifact_dir,
+    write_bench_json, ResilienceTally, ShedSummary, SynthLevel,
+};
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
+use mlem::coordinator::{LanePool, Scheduler};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor_with, spawn_supervised, ExecOptions, Manifest};
+use mlem::util::bench::Table;
+
+/// Kill-storm shape: 6 clients × 8 requests against a bucket-8
+/// artifact whose eps executable panics on every 7th execute.
+const CLIENTS: usize = 6;
+const REQS: usize = 8;
+const FAULT: &str = "panic_after=7";
+
+/// Overload-storm shape: enough single-image requests to be many waves
+/// deep on 2 lanes, each carrying the same tight deadline.
+const BURST: usize = 48;
+const DEADLINE_MS: u64 = 25;
+
+fn exec_opts() -> ExecOptions {
+    // Short liveness poll so death is noticed fast; grouping on (the
+    // supervisor must replay group members too).
+    ExecOptions { linger_us: 0, max_group: 4, poll_interval_us: 500 }
+}
+
+/// Part A: storm a supervised executor through deterministic panics and
+/// certify the answers against a fault-free twin.
+fn kill_storm() -> anyhow::Result<(ResilienceTally, bool, f64, f64)> {
+    let chaos_dir = synth_artifact_dir(
+        "bench-resilience-kill",
+        4, // dim 16
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 256, fault: FAULT }],
+    )?;
+    let metrics = Metrics::new();
+    let retry = mlem::runtime::SupervisorOptions { retry_budget: 8, retry_backoff_us: 50 };
+    let handle =
+        spawn_supervised(Manifest::load(&chaos_dir)?, Some(metrics.clone()), exec_opts(), retry)?;
+    let tally = resilience_storm(&handle, CLIENTS, REQS, 1, 1, 0.5);
+    handle.stop();
+    let restarts = metrics.restarts.get() as f64;
+    let retries = metrics.retries.get() as f64;
+
+    // The fault-free twin: same payload grid (a pure function of the
+    // (client, request) indices), no faults, plain executor.
+    let clean_dir = synth_artifact_dir(
+        "bench-resilience-clean",
+        4,
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 256, fault: "" }],
+    )?;
+    let (clean, join) = spawn_executor_with(Manifest::load(&clean_dir)?, None, exec_opts())?;
+    clean.warmup(8)?;
+    let (reference, _) = exec_batching_storm(&clean, CLIENTS, REQS, 1, 1, 0.5);
+    clean.stop();
+    let _ = join.join();
+
+    let bit_identical = tally.outputs.len() == reference.len()
+        && tally.outputs.iter().zip(&reference).all(|(got, want)| match got {
+            Some(v) => v.iter().zip(want.iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            None => true, // unanswered requests have nothing to compare
+        });
+
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    std::fs::remove_dir_all(&clean_dir).ok();
+    Ok((tally, bit_identical, restarts, retries))
+}
+
+fn burst_req(seed: u64, deadline_ms: Option<u64>) -> GenRequest {
+    GenRequest {
+        n: 1,
+        sampler: SamplerKind::Mlem,
+        steps: 40,
+        seed,
+        levels: vec![1, 2],
+        delta: 0.0,
+        policy: PolicyChoice::Default,
+        return_images: false,
+        deadline_ms,
+        priority: 0,
+    }
+}
+
+/// Part B: overload a healthy lane pool with deadline-carrying traffic
+/// and bucket every answer.
+fn overload_storm() -> anyhow::Result<ShedSummary> {
+    let dir = synth_artifact_dir(
+        "bench-resilience-overload",
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 512, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 512, fault: "" },
+        ],
+    )?;
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        max_batch: 2,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: 2,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (handle, join) = spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    handle.warmup(4)?;
+    let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics)?);
+    let pool = LanePool::new(scheduler, &cfg);
+
+    // Warm the EWMA batch-time estimate: admission control is inert
+    // until a batch has actually been measured.
+    for i in 0..4 {
+        match pool.generate(burst_req(i, None)) {
+            Response::Gen(_) => {}
+            other => anyhow::bail!("warmup request failed: {other:?}"),
+        }
+    }
+
+    // The deadline burst: submit everything before reading any answer,
+    // so the queue really is many waves deep at admission time.
+    let rxs: Vec<_> = (0..BURST as u64)
+        .map(|i| pool.submit(burst_req(100 + i, Some(DEADLINE_MS))))
+        .collect();
+    let mut summary = ShedSummary {
+        issued: BURST,
+        completed: 0,
+        shed: 0,
+        deadline_missed: 0,
+        errored: 0,
+        deadline_ms: DEADLINE_MS,
+        p99_accepted_queue_ms: 0.0,
+    };
+    let mut accepted_queue_ms = Vec::new();
+    for rx in rxs {
+        match rx.recv()? {
+            Response::Gen(g) => {
+                summary.completed += 1;
+                accepted_queue_ms.push(g.stats.queue_ms);
+            }
+            Response::Overloaded { .. } => summary.shed += 1,
+            Response::DeadlineExceeded { .. } => summary.deadline_missed += 1,
+            _ => summary.errored += 1,
+        }
+    }
+    summary.p99_accepted_queue_ms = percentile(&accepted_queue_ms, 0.99);
+
+    pool.stop();
+    pool.join();
+    handle.stop();
+    let _ = join.join();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(summary)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (kill, bit_identical, restarts, retries) = kill_storm()?;
+    let shed = overload_storm()?;
+
+    let mut t = Table::new("serving-path resilience", &["storm", "issued", "answered", "detail"]);
+    t.row(&[
+        "kill (panic_after=7)".into(),
+        format!("{}", kill.issued),
+        format!("{}", kill.ok),
+        format!(
+            "{restarts:.0} restarts, {retries:.0} retries, p99 {:.1} ms, parity {}",
+            percentile(&kill.ok_latencies_ms, 0.99),
+            if bit_identical { "bitwise" } else { "DIVERGED" }
+        ),
+    ]);
+    t.row(&[
+        format!("overload (deadline {DEADLINE_MS} ms)"),
+        format!("{}", shed.issued),
+        format!("{}", shed.answered()),
+        format!(
+            "{} completed, {} shed, {} expired, {} errored, accepted p99 wait {:.1} ms",
+            shed.completed, shed.shed, shed.deadline_missed, shed.errored,
+            shed.p99_accepted_queue_ms
+        ),
+    ]);
+    t.emit();
+
+    let j = resilience_json(&kill, bit_identical, restarts, retries, &shed);
+    let path = write_bench_json("resilience", &j).expect("writing BENCH_resilience.json");
+    println!("[json] {}", path.display());
+    println!(
+        "headline: answered_rate {} (every chaos-storm request answered exactly once)",
+        j.f64_of("answered_rate").unwrap_or(f64::NAN)
+    );
+
+    assert!(bit_identical, "replayed kill-storm outputs diverged from the fault-free twin");
+    assert!(restarts >= 1.0, "the kill storm must force at least one supervised respawn");
+    Ok(())
+}

@@ -134,6 +134,8 @@ fn main() -> anyhow::Result<()> {
         delta: 0.0,
         policy: PolicyChoice::Default,
         return_images: false,
+        deadline_ms: None,
+        priority: 0,
     };
     let r = bench("batcher push+pop", 10, Duration::from_millis(200), || {
         let mut b: Batcher<u32> = Batcher::new(16, Duration::ZERO, 1024);

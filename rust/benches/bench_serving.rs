@@ -45,6 +45,8 @@ fn main() -> anyhow::Result<()> {
                 delta: 0.0,
                 policy: PolicyChoice::Default,
                 return_images: false,
+                deadline_ms: None,
+                priority: 0,
             };
             // warm
             scheduler.generate(&req)?;
@@ -84,6 +86,8 @@ fn main() -> anyhow::Result<()> {
                 delta: 0.0,
                 policy: PolicyChoice::Default,
                 return_images: false,
+                deadline_ms: None,
+                priority: 0,
             })
             .collect();
         scheduler.execute(&reqs)?; // warm

@@ -69,6 +69,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.0,
         label: "coordinator multi-lane images/s speedup @ 4 lanes",
     },
+    TrackedMetric {
+        file: "BENCH_resilience.json",
+        path: &["answered_rate"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "chaos-storm answered rate (kill + overload)",
+    },
 ];
 
 /// Outcome per tracked metric.

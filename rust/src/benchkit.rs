@@ -680,6 +680,11 @@ pub struct SynthLevel {
     /// Recurrence iterations per element — the compute knob that makes
     /// one execute dominate channel/dispatch overhead.
     pub work: usize,
+    /// Chaos-injection modifier appended to the level's eps spec line:
+    /// `""` (healthy), `"fail_after=N"` (execute refuses from call N),
+    /// `"panic_after=N"` (executor thread dies at call N), or
+    /// `"flaky=P"` (seeded per-call coin; see `MLEM_FAULT_SEED`).
+    pub fault: &'static str,
 }
 
 /// Header the offline shim recognises (kept in sync with
@@ -705,8 +710,9 @@ pub fn synth_artifact_dir(
     std::fs::create_dir_all(&dir)?;
     let dim = img * img * channels;
     let max_bucket = buckets.iter().copied().max().unwrap_or(1);
-    let spec_line = |kind: &str, scale: f64, work: usize| {
-        format!("{SYNTH_MAGIC} kind={kind} scale={scale} work={work}\n")
+    let spec_line = |kind: &str, scale: f64, work: usize, fault: &str| {
+        let fault = if fault.is_empty() { String::new() } else { format!(" {fault}") };
+        format!("{SYNTH_MAGIC} kind={kind} scale={scale} work={work}{fault}\n")
     };
     let bucket_obj = |files: &[(usize, String)]| {
         let mut o = Json::obj();
@@ -723,11 +729,14 @@ pub fn synth_artifact_dir(
         let mut pallas_files = Vec::new();
         for &b in buckets {
             let eps_name = format!("l{k}_b{b}.hlo.txt");
-            std::fs::write(dir.join(&eps_name), spec_line(l.kind, l.scale, l.work))?;
+            // Fault modifiers apply to the eps executable only: that is
+            // what resilience storms drive, and a healthy jvp/combine
+            // keeps the fault localised to the path under test.
+            std::fs::write(dir.join(&eps_name), spec_line(l.kind, l.scale, l.work, l.fault))?;
             eps_files.push((b, eps_name.clone()));
             if l.kind == "eps" {
                 let jvp_name = format!("l{k}jvp_b{b}.hlo.txt");
-                std::fs::write(dir.join(&jvp_name), spec_line("eps_jvp", l.scale, l.work))?;
+                std::fs::write(dir.join(&jvp_name), spec_line("eps_jvp", l.scale, l.work, ""))?;
                 jvp_files.push((b, jvp_name));
                 // Pallas flavour: identical spec, so parity is exact.
                 pallas_files.push((b, eps_name.clone()));
@@ -744,7 +753,7 @@ pub fn synth_artifact_dir(
                 .with("eps_pallas", bucket_obj(&pallas_files)),
         );
     }
-    std::fs::write(dir.join("combine.hlo.txt"), spec_line("combine", 1.0, 1))?;
+    std::fs::write(dir.join("combine.hlo.txt"), spec_line("combine", 1.0, 1, ""))?;
     let manifest = Json::obj()
         .with("img", Json::num(img as f64))
         .with("channels", Json::num(channels as f64))
@@ -945,6 +954,186 @@ pub fn exec_batching_json(
 }
 
 // ---------------------------------------------------------------------------
+// Resilience workload (bench_resilience + tests/chaos_resilience.rs)
+
+/// Outcome tally of a fault-tolerant executor storm — the resilience
+/// counterpart of [`exec_batching_storm`], which panics on any error
+/// (chaos runs inject errors on purpose).  Outcomes are recorded in
+/// deterministic (client, request) order — `Some(rows)` on success,
+/// `None` on a typed refusal — so a chaos run can be compared bitwise
+/// against its fault-free twin.
+pub struct ResilienceTally {
+    pub issued: usize,
+    pub ok: usize,
+    pub failed: usize,
+    /// Per-request wall latency (ms), successful requests only.
+    pub ok_latencies_ms: Vec<f64>,
+    pub outputs: Vec<Option<Vec<f32>>>,
+    pub secs: f64,
+}
+
+impl ResilienceTally {
+    /// Fraction of issued requests that completed successfully.
+    pub fn ok_rate(&self) -> f64 {
+        if self.issued == 0 {
+            1.0
+        } else {
+            self.ok as f64 / self.issued as f64
+        }
+    }
+}
+
+/// Drive the deterministic exec-batching request grid, tolerating
+/// per-request errors: same payloads as [`exec_batching_storm`],
+/// outcomes tallied instead of unwrapped.
+pub fn resilience_storm(
+    handle: &crate::runtime::ExecutorHandle,
+    handles: usize,
+    reqs_per_handle: usize,
+    rows: usize,
+    level: usize,
+    t: f64,
+) -> ResilienceTally {
+    let dim = handle.manifest().dim;
+    let t0 = std::time::Instant::now();
+    let mut per_client: Vec<Vec<(Option<Vec<f32>>, f64)>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for h in 0..handles {
+            let ch = handle.clone();
+            joins.push(s.spawn(move || {
+                let mut mine = Vec::with_capacity(reqs_per_handle);
+                for r in 0..reqs_per_handle {
+                    let x = exec_batching_payload(h, r, rows, dim);
+                    let rt0 = std::time::Instant::now();
+                    let out = ch.eps(level, &x, t).ok();
+                    mine.push((out, rt0.elapsed().as_secs_f64() * 1e3));
+                }
+                mine
+            }));
+        }
+        for j in joins {
+            per_client.push(j.join().expect("resilience client panicked"));
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let issued = handles * reqs_per_handle;
+    let mut tally = ResilienceTally {
+        issued,
+        ok: 0,
+        failed: 0,
+        ok_latencies_ms: Vec::new(),
+        outputs: Vec::with_capacity(issued),
+        secs,
+    };
+    for (out, ms) in per_client.into_iter().flatten() {
+        match out {
+            Some(v) => {
+                tally.ok += 1;
+                tally.ok_latencies_ms.push(ms);
+                tally.outputs.push(Some(v));
+            }
+            None => {
+                tally.failed += 1;
+                tally.outputs.push(None);
+            }
+        }
+    }
+    tally
+}
+
+/// q-th percentile (0..=1) of `vals` by nearest rank; NaN when empty.
+pub fn percentile(vals: &[f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = vals.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((v.len() as f64 * q).ceil() as usize).clamp(1, v.len()) - 1;
+    v[idx]
+}
+
+/// Summary of the overload/deadline storm against the lane pool (every
+/// issued request lands in exactly one bucket — conservation).
+pub struct ShedSummary {
+    pub issued: usize,
+    /// Successful generations.
+    pub completed: usize,
+    /// Shed at admission (typed `overloaded`).
+    pub shed: usize,
+    /// Expired in queue (typed `deadline_exceeded`).
+    pub deadline_missed: usize,
+    /// Any other error response.
+    pub errored: usize,
+    /// The deadline every storm request carried.
+    pub deadline_ms: u64,
+    /// p99 of the *queue wait* of completed requests (ms) — the part of
+    /// latency the deadline machinery bounds.
+    pub p99_accepted_queue_ms: f64,
+}
+
+impl ShedSummary {
+    pub fn answered(&self) -> usize {
+        self.completed + self.shed + self.deadline_missed + self.errored
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.issued as f64
+        }
+    }
+}
+
+/// Assemble the `BENCH_resilience.json` payload (single source of the
+/// schema; the headline `answered_rate` is what the CI bench-gate
+/// tracks — 1.0 means every chaos-storm request was answered, the kill
+/// storm's retries included).
+pub fn resilience_json(
+    kill: &ResilienceTally,
+    kill_bit_identical: bool,
+    restarts: f64,
+    retries: f64,
+    shed: &ShedSummary,
+) -> Json {
+    let answered = kill.ok + shed.answered();
+    let issued = kill.issued + shed.issued;
+    let answered_rate =
+        if issued == 0 { 1.0 } else { answered as f64 / issued as f64 };
+    Json::obj()
+        .with("answered_rate", Json::num(answered_rate))
+        .with(
+            "kill_storm",
+            Json::obj()
+                .with("issued", Json::num(kill.issued as f64))
+                .with("ok", Json::num(kill.ok as f64))
+                .with("failed", Json::num(kill.failed as f64))
+                .with("ok_rate", Json::num(kill.ok_rate()))
+                .with("bit_identical_to_fault_free", Json::Bool(kill_bit_identical))
+                .with("executor_restarts", Json::num(restarts))
+                .with("call_retries", Json::num(retries))
+                .with("p99_ok_ms", Json::num(percentile(&kill.ok_latencies_ms, 0.99))),
+        )
+        .with(
+            "overload_storm",
+            Json::obj()
+                .with("issued", Json::num(shed.issued as f64))
+                .with("completed", Json::num(shed.completed as f64))
+                .with("shed", Json::num(shed.shed as f64))
+                .with("deadline_missed", Json::num(shed.deadline_missed as f64))
+                .with("errored", Json::num(shed.errored as f64))
+                .with("shed_rate", Json::num(shed.shed_rate()))
+                .with("deadline_ms", Json::num(shed.deadline_ms as f64))
+                .with("p99_accepted_queue_ms", Json::num(shed.p99_accepted_queue_ms))
+                .with(
+                    "p99_queue_bounded_by_deadline",
+                    Json::Bool(shed.p99_accepted_queue_ms <= shed.deadline_ms as f64),
+                ),
+        )
+}
+
+// ---------------------------------------------------------------------------
 // Multi-lane coordinator workload (bench_coordinator +
 // tests/coordinator_lanes.rs)
 
@@ -985,7 +1174,7 @@ pub struct CoordWorkload {
 /// Build the synthetic artifact directory for a coordinator workload.
 pub fn coord_artifact_dir(tag: &str, w: &CoordWorkload) -> Result<std::path::PathBuf> {
     let levels: Vec<SynthLevel> = (0..w.levels)
-        .map(|i| SynthLevel { kind: "eps", scale: 0.5 - 0.07 * i as f64, work: w.work })
+        .map(|i| SynthLevel { kind: "eps", scale: 0.5 - 0.07 * i as f64, work: w.work, fault: "" })
         .collect();
     synth_artifact_dir(tag, w.img, w.channels, &[w.bucket], &levels)
 }
@@ -1027,6 +1216,8 @@ pub fn coord_requests(w: &CoordWorkload) -> Vec<GenRequest> {
                 delta: 3.0 + 0.25 * c as f64,
                 policy: PolicyChoice::Default,
                 return_images: true,
+                deadline_ms: None,
+                priority: 0,
             });
         }
     }

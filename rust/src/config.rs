@@ -106,6 +106,22 @@ pub struct ServeConfig {
     /// pool fixes its size at first use — so it both shapes shard
     /// counts and sizes the pool, in either direction.
     pub threads: usize,
+    /// Run the executor under the supervisor (respawn + replay on
+    /// transport death); false = historical fail-fast executor.
+    pub supervisor: bool,
+    /// Supervisor: maximum respawn-and-replay attempts per request
+    /// before the transport error is surfaced.
+    pub retry_budget: usize,
+    /// Supervisor: base backoff (µs) before a replay; attempt k sleeps
+    /// `base << k`, capped at 100 ms.
+    pub retry_backoff_us: u64,
+    /// Admission control: shed a deadline-bearing request when its
+    /// estimated completion time exceeds `deadline_ms × shed_headroom`.
+    /// >1 sheds later (optimistic), <1 sheds earlier (conservative).
+    pub shed_headroom: f64,
+    /// Liveness-poll period (µs) while a caller waits on the executor —
+    /// the bound on stop/join latency after executor death.
+    pub exec_poll_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -129,6 +145,11 @@ impl Default for ServeConfig {
             exec_max_group: 16,
             batch_workers: 0,
             threads: 0,
+            supervisor: true,
+            retry_budget: 5,
+            retry_backoff_us: 500,
+            shed_headroom: 1.0,
+            exec_poll_us: 50_000,
         }
     }
 }
@@ -189,6 +210,23 @@ impl ServeConfig {
                         v.as_usize().ok_or_else(|| anyhow!("batch_workers: int"))?
                 }
                 "threads" => self.threads = v.as_usize().ok_or_else(|| anyhow!("threads: int"))?,
+                "supervisor" => {
+                    self.supervisor = v.as_bool().ok_or_else(|| anyhow!("supervisor: bool"))?
+                }
+                "retry_budget" => {
+                    self.retry_budget = v.as_usize().ok_or_else(|| anyhow!("retry_budget: int"))?
+                }
+                "retry_backoff_us" => {
+                    self.retry_backoff_us =
+                        v.as_usize().ok_or_else(|| anyhow!("retry_backoff_us: int"))? as u64
+                }
+                "shed_headroom" => {
+                    self.shed_headroom = v.as_f64().ok_or_else(|| anyhow!("shed_headroom: num"))?
+                }
+                "exec_poll_us" => {
+                    self.exec_poll_us =
+                        v.as_usize().ok_or_else(|| anyhow!("exec_poll_us: int"))? as u64
+                }
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
         }
@@ -230,6 +268,17 @@ impl ServeConfig {
         cfg.exec_max_group = args.usize_or("exec-max-group", cfg.exec_max_group);
         cfg.batch_workers = args.usize_or("batch-workers", cfg.batch_workers);
         cfg.threads = args.usize_or("threads", cfg.threads);
+        if let Some(v) = args.get("supervisor") {
+            cfg.supervisor = match v {
+                "1" | "true" | "on" => true,
+                "0" | "false" | "off" => false,
+                other => return Err(anyhow!("--supervisor expects on|off, got '{other}'")),
+            };
+        }
+        cfg.retry_budget = args.usize_or("retry-budget", cfg.retry_budget);
+        cfg.retry_backoff_us = args.u64_or("retry-backoff-us", cfg.retry_backoff_us);
+        cfg.shed_headroom = args.f64_or("shed-headroom", cfg.shed_headroom);
+        cfg.exec_poll_us = args.u64_or("exec-poll-us", cfg.exec_poll_us);
         cfg.validate()?;
         Ok(cfg)
     }
@@ -252,6 +301,15 @@ impl ServeConfig {
         crate::runtime::ExecOptions {
             linger_us: self.exec_linger_us,
             max_group: self.exec_max_group.max(1),
+            poll_interval_us: self.exec_poll_us.max(1),
+        }
+    }
+
+    /// The supervision knobs as the runtime consumes them.
+    pub fn supervisor_options(&self) -> crate::runtime::SupervisorOptions {
+        crate::runtime::SupervisorOptions {
+            retry_budget: self.retry_budget,
+            retry_backoff_us: self.retry_backoff_us,
         }
     }
 
@@ -317,6 +375,35 @@ impl ServeConfig {
         sorted.dedup();
         if sorted != self.mlem_levels {
             return Err(anyhow!("mlem_levels must be strictly increasing"));
+        }
+        // Liveness poll: 0 would spin a caller thread; >1s would make
+        // stop/join latency worse than the historical hard-coded 50 ms.
+        if self.exec_poll_us == 0 || self.exec_poll_us > 1_000_000 {
+            return Err(anyhow!(
+                "exec_poll_us: {} outside the sane range [1, 1000000]",
+                self.exec_poll_us
+            ));
+        }
+        // A huge retry budget would hide a permanently dead device
+        // behind minutes of respawn loops.
+        if self.retry_budget > 100 {
+            return Err(anyhow!(
+                "retry_budget: {} exceeds the sanity cap (100)",
+                self.retry_budget
+            ));
+        }
+        if self.retry_backoff_us > 1_000_000 {
+            return Err(anyhow!(
+                "retry_backoff_us: {} exceeds the sanity cap (1s)",
+                self.retry_backoff_us
+            ));
+        }
+        if !self.shed_headroom.is_finite() || self.shed_headroom <= 0.0 || self.shed_headroom > 100.0
+        {
+            return Err(anyhow!(
+                "shed_headroom: {} outside the sane range (0, 100]",
+                self.shed_headroom
+            ));
         }
         Ok(())
     }
@@ -436,6 +523,51 @@ mod tests {
         cfg.mlem_levels = vec![2];
         assert_eq!(cfg.effective_batch_workers(), 1);
         assert!(ServeConfig::from_args(&args("serve --batch-workers 1000")).is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_apply() {
+        let d = ServeConfig::default();
+        assert!(d.supervisor, "supervision on by default");
+        assert_eq!(d.retry_budget, 5);
+        assert_eq!(d.retry_backoff_us, 500);
+        assert!((d.shed_headroom - 1.0).abs() < 1e-12);
+        assert_eq!(d.exec_poll_us, 50_000, "historical 50 ms poll by default");
+        assert_eq!(d.exec_options().poll_interval_us, d.exec_poll_us);
+        assert_eq!(d.supervisor_options().retry_budget, d.retry_budget);
+        assert_eq!(d.supervisor_options().retry_backoff_us, d.retry_backoff_us);
+        let cli = ServeConfig::from_args(&args(
+            "serve --supervisor off --retry-budget 2 --retry-backoff-us 100 \
+             --shed-headroom 1.5 --exec-poll-us 200",
+        ))
+        .unwrap();
+        assert!(!cli.supervisor);
+        assert_eq!(cli.retry_budget, 2);
+        assert_eq!(cli.retry_backoff_us, 100);
+        assert!((cli.shed_headroom - 1.5).abs() < 1e-12);
+        assert_eq!(cli.exec_poll_us, 200);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"supervisor":false,"retry_budget":3,"retry_backoff_us":250,
+                    "shed_headroom":0.8,"exec_poll_us":1000}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(!cfg.supervisor);
+        assert_eq!(cfg.retry_budget, 3);
+        assert_eq!(cfg.retry_backoff_us, 250);
+        assert!((cfg.shed_headroom - 0.8).abs() < 1e-12);
+        assert_eq!(cfg.exec_poll_us, 1000);
+        cfg.validate().unwrap();
+        assert!(ServeConfig::from_args(&args("serve --supervisor maybe")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --exec-poll-us 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --exec-poll-us 2000000")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --retry-budget 1000")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --retry-backoff-us 2000000")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --shed-headroom 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --shed-headroom 1000")).is_err());
     }
 
     #[test]

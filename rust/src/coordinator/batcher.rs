@@ -81,6 +81,21 @@ pub struct WorkItem<T> {
     pub payload: T,
 }
 
+impl<T> WorkItem<T> {
+    /// How long this item has been queued, as seen at `now`.
+    pub fn waited(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.enqueued)
+    }
+}
+
+/// Whether an item's optional deadline has elapsed at `now`.  Expired
+/// items are answered with a typed error at pop time — never executed.
+fn is_expired<T>(item: &WorkItem<T>, now: Instant) -> bool {
+    item.req
+        .deadline_ms
+        .is_some_and(|d| item.waited(now) >= Duration::from_millis(d))
+}
+
 /// One compatibility class: its own FIFO plus O(1) bookkeeping (the key
 /// is computed once when the class is created — never per `ready` poll).
 struct ClassQueue<T> {
@@ -190,35 +205,52 @@ impl<T> Batcher<T> {
 
     fn class_ready(&self, c: &ClassQueue<T>, now: Instant) -> bool {
         c.images >= self.max_batch
-            || c.items
-                .front()
-                .is_some_and(|h| now.duration_since(h.enqueued) >= self.max_wait)
+            || c.items.front().is_some_and(|h| {
+                now.duration_since(h.enqueued) >= self.max_wait || is_expired(h, now)
+            })
     }
 
     /// Next slot to pop from: scan round-robin from the cursor, skipping
     /// leased/empty classes, preferring cut-ready ones; with `force`,
-    /// fall back to any non-empty unleased class (drain paths).
+    /// fall back to any non-empty unleased class (drain paths).  Among
+    /// the cut-ready (resp. fallback) candidates the highest head-item
+    /// priority wins; ties go to the class closest past the cursor, so
+    /// equal-priority traffic keeps the historical round-robin rotation.
     fn pick(&mut self, now: Instant, force: bool) -> Option<usize> {
         let n = self.classes.len();
         if n == 0 {
             return None;
         }
-        let mut fallback = None;
+        // (head priority, offset past the cursor) of the best candidate.
+        let mut best: Option<(i32, usize)> = None;
+        let mut fallback: Option<(i32, usize)> = None;
         for off in 0..n {
             let i = (self.cursor + off) % n;
             let Some(c) = &self.classes[i] else { continue };
             if c.leased || c.items.is_empty() {
                 continue;
             }
+            let prio = c.items.front().map(|h| h.req.priority).unwrap_or(0);
             if self.class_ready(c, now) {
-                self.cursor = (i + 1) % n;
-                return Some(i);
-            }
-            if force && fallback.is_none() {
-                fallback = Some(i);
+                let better = match best {
+                    None => true,
+                    Some((bp, _)) => prio > bp,
+                };
+                if better {
+                    best = Some((prio, off));
+                }
+            } else if force {
+                let better = match fallback {
+                    None => true,
+                    Some((fp, _)) => prio > fp,
+                };
+                if better {
+                    fallback = Some((prio, off));
+                }
             }
         }
-        if let Some(i) = fallback {
+        if let Some((_, off)) = best.or(fallback) {
+            let i = (self.cursor + off) % n;
             self.cursor = (i + 1) % n;
             return Some(i);
         }
@@ -268,18 +300,56 @@ impl<T> Batcher<T> {
         Some(batch)
     }
 
+    /// Remove every deadline-expired entry from class `slot` so the
+    /// caller can answer them (`deadline_exceeded`) without executing
+    /// them.  O(class len), and only runs when a batch is being cut off
+    /// that class anyway.
+    fn take_expired(&mut self, slot: usize, now: Instant) -> Vec<WorkItem<T>> {
+        let c = self.classes[slot].as_mut().expect("occupied class slot");
+        if !c.items.iter().any(|item| is_expired(item, now)) {
+            return Vec::new();
+        }
+        let mut live = VecDeque::with_capacity(c.items.len());
+        let mut expired = Vec::new();
+        for item in c.items.drain(..) {
+            if is_expired(&item, now) {
+                c.images -= item.req.n;
+                expired.push(item);
+            } else {
+                live.push_back(item);
+            }
+        }
+        c.items = live;
+        self.len -= expired.len();
+        expired
+    }
+
     /// Pop one batch **and lease its class**: until [`Batcher::release`]
     /// is called with the returned key, no other `pop_class` call will
     /// touch this class — same-class batches stay serialized while
     /// different classes run concurrently.  With `force` false only
     /// cut-ready classes are considered (steady state); `force` pops any
     /// unleased work (stop-drain).
-    pub fn pop_class(&mut self, now: Instant, force: bool) -> Option<(GroupKey, Vec<WorkItem<T>>)> {
+    ///
+    /// The second vec holds the class's deadline-expired entries,
+    /// partitioned out at pop time: the caller must answer them with a
+    /// typed `deadline_exceeded` error and must never execute them.  The
+    /// live batch may be empty when everything at the head had expired —
+    /// the class is leased either way, so the caller's answer/release
+    /// path stays uniform.
+    pub fn pop_class(
+        &mut self,
+        now: Instant,
+        force: bool,
+    ) -> Option<(GroupKey, Vec<WorkItem<T>>, Vec<WorkItem<T>>)> {
         let slot = self.pick(now, force)?;
         let key = self.classes[slot].as_ref().expect("occupied class slot").key.clone();
-        let batch = self.cut(slot);
-        self.classes[slot].as_mut().expect("occupied class slot").leased = true;
-        Some((key, batch))
+        let expired = self.take_expired(slot, now);
+        let c = self.classes[slot].as_mut().expect("occupied class slot");
+        let drained = c.items.is_empty();
+        c.leased = true;
+        let batch = if drained { Vec::new() } else { self.cut(slot) };
+        Some((key, batch, expired))
     }
 
     /// Return a class lease taken by [`Batcher::pop_class`].
@@ -341,6 +411,8 @@ mod tests {
             delta: 0.0,
             policy: PolicyChoice::Default,
             return_images: false,
+            deadline_ms: None,
+            priority: 0,
         }
     }
 
@@ -494,10 +566,10 @@ mod tests {
         }
         b.push(req(1, 20, SamplerKind::Mlem), 9).unwrap();
         let now = Instant::now();
-        let (key_a, batch_a) = b.pop_class(now, false).expect("first class pops");
+        let (key_a, batch_a, _) = b.pop_class(now, false).expect("first class pops");
         assert_eq!(batch_a[0].payload, 0);
         // same class is leased: the next pop must come from the other one
-        let (key_b, batch_b) = b.pop_class(now, false).expect("second class pops");
+        let (key_b, batch_b, _) = b.pop_class(now, false).expect("second class pops");
         assert_ne!(key_a, key_b);
         assert_eq!(batch_b[0].payload, 9);
         // both leased, items remain only in class A -> nothing poppable
@@ -506,13 +578,13 @@ mod tests {
         assert!(!b.ready(now), "leased classes must not look ready");
         b.release(&key_a);
         assert!(b.ready(now));
-        let (key_a2, batch_a2) = b.pop_class(now, false).expect("released class pops again");
+        let (key_a2, batch_a2, _) = b.pop_class(now, false).expect("released class pops again");
         assert_eq!(key_a2, key_a);
         assert_eq!(batch_a2[0].payload, 1, "FIFO preserved across the lease");
         // releasing an emptied class retires its slot; keys still work
         b.release(&key_b);
         b.release(&key_a2);
-        let (key_a3, batch_a3) = b.pop_class(now, true).expect("remaining item pops");
+        let (key_a3, batch_a3, _) = b.pop_class(now, true).expect("remaining item pops");
         assert_eq!(batch_a3[0].payload, 2);
         b.release(&key_a3);
         assert!(b.is_empty());
@@ -525,7 +597,7 @@ mod tests {
             b.push(req(1, 10, SamplerKind::Mlem), i).unwrap();
         }
         b.push(req(1, 20, SamplerKind::Mlem), 10).unwrap();
-        let (_key, batch) = b.pop_class(Instant::now(), true).unwrap();
+        let (_key, batch, _) = b.pop_class(Instant::now(), true).unwrap();
         assert_eq!(batch.len(), 2);
         // lease never released (dead-runner scenario): drain still
         // surfaces every remaining item exactly once
@@ -564,8 +636,62 @@ mod tests {
         assert_eq!(d.len(), 2);
         let mlem = d.iter().find(|c| c.label.starts_with("mlem")).unwrap();
         assert_eq!((mlem.requests, mlem.images, mlem.leased), (2, 3, false));
-        let (key, _) = b.pop_class(Instant::now(), true).unwrap();
+        let (key, _, _) = b.pop_class(Instant::now(), true).unwrap();
         assert!(b.depths().iter().any(|c| c.leased), "leased class visible");
         b.release(&key);
+    }
+
+    #[test]
+    fn expired_entries_partition_at_pop_and_are_never_in_the_live_batch() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(500), 100);
+        let mut dead = req(1, 10, SamplerKind::Mlem);
+        dead.deadline_ms = Some(1);
+        b.push(req(1, 10, SamplerKind::Mlem), 0).unwrap();
+        b.push(dead.clone(), 1).unwrap();
+        b.push(req(1, 10, SamplerKind::Mlem), 2).unwrap();
+        let later = Instant::now() + Duration::from_millis(50);
+        // an expired head makes the class cut-ready even before max_wait
+        assert!(b.ready(later));
+        let (key, live, expired) = b.pop_class(later, false).expect("class pops");
+        let live_ids: Vec<u32> = live.iter().map(|w| w.payload).collect();
+        let expired_ids: Vec<u32> = expired.iter().map(|w| w.payload).collect();
+        assert_eq!(live_ids, vec![0, 2], "live batch keeps FIFO minus expired");
+        assert_eq!(expired_ids, vec![1]);
+        b.release(&key);
+        assert!(b.is_empty(), "conservation: live + expired account for every push");
+    }
+
+    #[test]
+    fn fully_expired_class_pops_an_empty_live_batch() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(500), 100);
+        let mut dead = req(2, 10, SamplerKind::Mlem);
+        dead.deadline_ms = Some(1);
+        b.push(dead.clone(), 0).unwrap();
+        b.push(dead, 1).unwrap();
+        let later = Instant::now() + Duration::from_millis(50);
+        let (key, live, expired) = b.pop_class(later, false).expect("expired class pops");
+        assert!(live.is_empty());
+        assert_eq!(expired.len(), 2);
+        // the lease/release path stays uniform even with no live work
+        b.release(&key);
+        assert!(b.is_empty());
+        assert!(b.pop_class(later, true).is_none());
+    }
+
+    #[test]
+    fn priority_wins_among_ready_classes_and_ties_keep_rotation() {
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::ZERO, 100);
+        let mut hi = req(1, 30, SamplerKind::Mlem);
+        hi.priority = 7;
+        b.push(req(1, 10, SamplerKind::Mlem), 0).unwrap();
+        b.push(req(1, 20, SamplerKind::Mlem), 1).unwrap();
+        b.push(hi, 2).unwrap();
+        // all three classes are cut-ready (max_batch = 1): the highest
+        // head priority pops first even though it arrived last
+        let first = b.pop_batch().unwrap();
+        assert_eq!(first[0].payload, 2);
+        // remaining equal-priority classes keep the round-robin order
+        assert_eq!(b.pop_batch().unwrap()[0].payload, 0);
+        assert_eq!(b.pop_batch().unwrap()[0].payload, 1);
     }
 }

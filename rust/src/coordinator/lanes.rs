@@ -29,11 +29,22 @@
 //! final drain.  A generation panic is contained to its batch: the
 //! members get an error response, the lease is released, and the runner
 //! keeps serving.
+//!
+//! Resilience contract (PR 6): requests may carry a `deadline_ms` —
+//! expired entries are partitioned out of every cut at pop time and
+//! answered with a typed `deadline_exceeded` error, never executed —
+//! and admission control sheds a deadline-bearing request up front
+//! (typed `overloaded` + `retry_after_ms` hint) when predicted queue
+//! wait (queue depth per lane × EWMA batch wall time, scaled by the
+//! `shed_headroom` knob) already exceeds its deadline.  A lane panic
+//! no longer poisons the pool: batcher guards are recovered, which is
+//! sound because panics can only occur outside the lock's critical
+//! sections, leaving the queue invariants intact.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,6 +58,10 @@ use crate::util::json::Json;
 /// Per-request response channel the server (or a test) blocks on.
 pub type RespTx = Sender<Response>;
 
+/// EWMA smoothing factor for the batch wall-time estimate the admission
+/// controller divides deadlines by (~last 5 batches dominate).
+const EWMA_ALPHA: f64 = 0.2;
+
 struct Shared {
     batcher: Mutex<Batcher<RespTx>>,
     wake: Condvar,
@@ -54,6 +69,20 @@ struct Shared {
     /// False while a paused pool holds its runners back (tests pre-load
     /// the queue for deterministic batch formation, then `start`).
     started: AtomicBool,
+    /// EWMA of batch wall time (ms), fed by the runners and read by
+    /// admission control.  0.0 until the first batch completes — no
+    /// request is shed before the pool has ever measured itself.
+    ewma_batch_ms: Mutex<f64>,
+}
+
+/// Lock the batcher, recovering the guard if a panicking runner
+/// poisoned the mutex: every critical section leaves the queue's
+/// push/pop invariants intact (panics happen in `Scheduler::execute`,
+/// *outside* the lock), so the data is valid and cascading the poison
+/// into every surviving lane — and the accept path — would turn one bad
+/// batch into a dead server.
+fn lock_batcher(shared: &Shared) -> MutexGuard<'_, Batcher<RespTx>> {
+    shared.batcher.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// A pool of batch-runner lanes over one scheduler.
@@ -62,6 +91,9 @@ pub struct LanePool {
     metrics: Metrics,
     runners: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
+    /// Multiplier on the deadline before admission control sheds
+    /// (`shed_headroom` config knob; >1 sheds later, <1 earlier).
+    shed_headroom: f64,
 }
 
 impl LanePool {
@@ -90,6 +122,7 @@ impl LanePool {
             wake: Condvar::new(),
             stop: AtomicBool::new(false),
             started: AtomicBool::new(started),
+            ewma_batch_ms: Mutex::new(0.0),
         });
         metrics.batch_runners.set(workers as f64);
         let mut runners = Vec::with_capacity(workers);
@@ -104,7 +137,13 @@ impl LanePool {
                     .expect("spawning batch runner"),
             );
         }
-        LanePool { shared, metrics, runners: Mutex::new(runners), workers }
+        LanePool {
+            shared,
+            metrics,
+            runners: Mutex::new(runners),
+            workers,
+            shed_headroom: cfg.shed_headroom,
+        }
     }
 
     /// Release a paused pool's runners.
@@ -122,9 +161,21 @@ impl LanePool {
         self.shared.stop.load(Ordering::SeqCst)
     }
 
+    /// Predicted wait (ms) for a newly admitted request: how many
+    /// batch "waves" are ahead of it across the lanes, times the EWMA
+    /// batch wall time.  0.0 until the first batch has been measured.
+    fn estimated_wait_ms(&self, queued: usize) -> f64 {
+        let ewma =
+            *self.shared.ewma_batch_ms.lock().unwrap_or_else(|p| p.into_inner());
+        let waves = (queued / self.workers.max(1) + 1) as f64;
+        waves * ewma
+    }
+
     /// Enqueue one request; the returned channel yields exactly one
-    /// [`Response`] — a result, a backpressure/stop error immediately,
-    /// or a shutdown-drain error at the latest.
+    /// [`Response`] — a result, a typed admission refusal
+    /// (`overloaded` with a `retry_after_ms` hint when the predicted
+    /// wait already blows the request's deadline), a backpressure/stop
+    /// error immediately, or a shutdown-drain error at the latest.
     pub fn submit(&self, req: GenRequest) -> Receiver<Response> {
         let (tx, rx) = channel();
         // The stop check must happen under the batcher lock: `join`'s
@@ -133,12 +184,27 @@ impl LanePool {
         // a lock-free check would leave a window where a request lands
         // after the one-shot drain and hangs forever.
         let enqueue = {
-            let mut q = self.shared.batcher.lock().unwrap();
+            let mut q = lock_batcher(&self.shared);
             if self.stopped() {
                 drop(q);
                 self.metrics.rejected.inc();
                 let _ = tx.send(Response::Error("server shutting down".into()));
                 return rx;
+            }
+            // Admission control: shed a deadline-bearing request now if
+            // it would predictably expire in the queue — cheaper for
+            // both sides than accepting work we already know we'll
+            // answer with `deadline_exceeded` after it queued.
+            if let Some(deadline) = req.deadline_ms {
+                let est_ms = self.estimated_wait_ms(q.len());
+                if est_ms > deadline as f64 * self.shed_headroom {
+                    drop(q);
+                    self.metrics.sheds.inc();
+                    self.metrics.rejected.inc();
+                    let retry_after_ms = (est_ms - deadline as f64).max(1.0).ceil() as u64;
+                    let _ = tx.send(Response::Overloaded { retry_after_ms });
+                    return rx;
+                }
             }
             q.push(req, tx)
         };
@@ -161,7 +227,7 @@ impl LanePool {
 
     /// Per-class queue depths + totals for the `metrics` request.
     pub fn batcher_snapshot(&self) -> Json {
-        let q = self.shared.batcher.lock().unwrap();
+        let q = lock_batcher(&self.shared);
         let classes = q.depths();
         Json::obj()
             .with("queued_requests", Json::num(q.len() as f64))
@@ -201,7 +267,7 @@ impl LanePool {
         for h in handles {
             let _ = h.join();
         }
-        let leftovers = self.shared.batcher.lock().unwrap().drain_all();
+        let leftovers = lock_batcher(&self.shared).drain_all();
         for item in leftovers {
             self.metrics.rejected.inc();
             let _ = item.payload.send(Response::Error("server shutting down".into()));
@@ -221,8 +287,8 @@ impl Drop for LanePool {
 fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics) {
     loop {
         // Wait until a batch is ready (or we are stopping and draining).
-        let (key, batch) = {
-            let mut q = shared.batcher.lock().unwrap();
+        let (key, batch, expired) = {
+            let mut q = lock_batcher(&shared);
             loop {
                 let stop = shared.stop.load(Ordering::SeqCst);
                 if stop && !q.has_unleased_items() {
@@ -240,11 +306,33 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                         break cut;
                     }
                 }
-                let (guard, _) =
-                    shared.wake.wait_timeout(q, Duration::from_millis(2)).unwrap();
-                q = guard;
+                // A runner that panicked inside `wait_timeout`'s relock
+                // poisons the mutex for everyone parked here; the queue
+                // state is still valid (see `lock_batcher`), so recover
+                // the guard instead of unwinding every surviving lane.
+                q = match shared.wake.wait_timeout(q, Duration::from_millis(2)) {
+                    Ok((guard, _)) => guard,
+                    Err(poisoned) => poisoned.into_inner().0,
+                };
             }
         };
+
+        // Deadline-expired entries were partitioned out at pop time:
+        // answer them with the typed error, never execute them.
+        for item in expired {
+            let waited_ms = item.enqueued.elapsed().as_millis() as u64;
+            let deadline_ms = item.req.deadline_ms.unwrap_or(0);
+            metrics.deadline_misses.inc();
+            metrics.rejected.inc();
+            let _ = item.payload.send(Response::DeadlineExceeded { waited_ms, deadline_ms });
+        }
+        if batch.is_empty() {
+            // Everything queued in this class had expired; return the
+            // lease and go look for live work.
+            lock_batcher(&shared).release(&key);
+            shared.wake.notify_all();
+            continue;
+        }
 
         metrics.inflight_batches.inc();
         metrics.runner_busy.inc();
@@ -253,7 +341,18 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
         // A panic inside one batch (an engine `expect`, a poisoned
         // internal lock) must cost exactly that batch, not the lane:
         // catch it, answer the members, and keep serving.
+        let started = Instant::now();
         let result = catch_unwind(AssertUnwindSafe(|| scheduler.execute(&reqs)));
+        let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut ewma =
+                shared.ewma_batch_ms.lock().unwrap_or_else(|p| p.into_inner());
+            *ewma = if *ewma == 0.0 {
+                wall_ms
+            } else {
+                (1.0 - EWMA_ALPHA) * *ewma + EWMA_ALPHA * wall_ms
+            };
+        }
         match result {
             Ok(Ok(responses)) => {
                 for ((item, mut resp), qd) in batch.into_iter().zip(responses).zip(queue_times) {
@@ -266,6 +365,7 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
             Ok(Err(e)) => {
                 let msg = format!("generation failed: {e:#}");
                 for item in batch {
+                    metrics.errors_internal.inc();
                     metrics.rejected.inc();
                     let _ = item.payload.send(Response::Error(msg.clone()));
                 }
@@ -273,6 +373,7 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
             Err(_) => {
                 let msg = "generation panicked (batch aborted)".to_string();
                 for item in batch {
+                    metrics.errors_internal.inc();
                     metrics.rejected.inc();
                     let _ = item.payload.send(Response::Error(msg.clone()));
                 }
@@ -282,11 +383,92 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
         metrics.inflight_batches.dec();
 
         {
-            let mut q = shared.batcher.lock().unwrap();
+            let mut q = lock_batcher(&shared);
             q.release(&key);
         }
         // The released class may be poppable again (or newly ready for
         // a parked lane): wake everyone.
         shared.wake.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerKind;
+    use crate::coordinator::protocol::PolicyChoice;
+
+    fn test_req() -> GenRequest {
+        GenRequest {
+            n: 1,
+            sampler: SamplerKind::Mlem,
+            steps: 10,
+            seed: 0,
+            levels: vec![1, 3, 5],
+            delta: 0.0,
+            policy: PolicyChoice::Default,
+            return_images: false,
+            deadline_ms: None,
+            priority: 0,
+        }
+    }
+
+    /// Regression: a runner panicking while holding the batcher lock
+    /// used to take down every other lane (and the accept path) via
+    /// `Mutex` poisoning — `lock_batcher` and the `wait_timeout` arm
+    /// must recover the guard instead.
+    #[test]
+    fn poisoned_batcher_lock_is_recovered_not_propagated() {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(8, Duration::ZERO, 16)),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            started: AtomicBool::new(true),
+            ewma_batch_ms: Mutex::new(0.0),
+        });
+        let poisoner = shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.batcher.lock().unwrap();
+            panic!("synthetic panic while holding the batcher lock");
+        })
+        .join();
+        assert!(shared.batcher.lock().is_err(), "mutex must be poisoned by the panic");
+
+        // The accept/pop paths keep working on the recovered guard.
+        let (tx, _rx) = channel();
+        lock_batcher(&shared).push(test_req(), tx).expect("push on recovered guard");
+        assert_eq!(lock_batcher(&shared).len(), 1);
+
+        // The runner's condvar wait also survives the poisoned relock.
+        let q = lock_batcher(&shared);
+        let q = match shared.wake.wait_timeout(q, Duration::from_millis(1)) {
+            Ok((guard, _)) => guard,
+            Err(poisoned) => poisoned.into_inner().0,
+        };
+        assert_eq!(q.len(), 1, "queue state intact across the poisoned wait");
+    }
+
+    /// The EWMA admission estimate stays 0 (nothing sheds) until a
+    /// batch has been measured, then scales with queue depth per lane.
+    #[test]
+    fn estimated_wait_scales_with_queue_depth_and_measured_batches() {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(8, Duration::ZERO, 16)),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            started: AtomicBool::new(true),
+            ewma_batch_ms: Mutex::new(0.0),
+        });
+        let pool = LanePool {
+            shared: shared.clone(),
+            metrics: Metrics::new(),
+            runners: Mutex::new(Vec::new()),
+            workers: 2,
+            shed_headroom: 1.0,
+        };
+        assert_eq!(pool.estimated_wait_ms(100), 0.0, "unmeasured pool never sheds");
+        *shared.ewma_batch_ms.lock().unwrap() = 10.0;
+        assert_eq!(pool.estimated_wait_ms(0), 10.0, "empty queue still waits one wave");
+        assert_eq!(pool.estimated_wait_ms(4), 30.0, "4 queued / 2 lanes = 2 extra waves");
     }
 }

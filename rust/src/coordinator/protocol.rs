@@ -78,6 +78,16 @@ pub struct GenRequest {
     pub policy: PolicyChoice,
     /// Include raw image payloads in the response.
     pub return_images: bool,
+    /// Optional completion deadline (ms from admission).  Expired
+    /// entries are answered `deadline_exceeded` at pop time — never
+    /// executed — and the server sheds at admission (`overloaded` +
+    /// `retry_after_ms`) when the estimated completion time already
+    /// exceeds it.
+    pub deadline_ms: Option<u64>,
+    /// Scheduling priority (default 0; higher pops first).  Biases the
+    /// batcher's fairness cursor among cut-ready classes; ties keep the
+    /// round-robin rotation.
+    pub priority: i32,
 }
 
 /// Parsed client request.
@@ -121,12 +131,23 @@ pub enum Response {
     Calibration(Json),
     Pong,
     Error(String),
+    /// Typed deadline miss: the entry expired in queue and was answered
+    /// at pop time without ever executing.
+    DeadlineExceeded { waited_ms: u64, deadline_ms: u64 },
+    /// Typed admission shed: the queue's estimated drain time already
+    /// exceeds the request's deadline; retry after `retry_after_ms`.
+    Overloaded { retry_after_ms: u64 },
     ShuttingDown,
 }
 
 /// Limits enforced at parse time (backpressure against abusive inputs).
 pub const MAX_N: usize = 1024;
 pub const MAX_STEPS: usize = 20_000;
+/// Deadlines above a day are a client bug, not a preference.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000;
+/// Priorities outside ±1000 are a client bug (the bias is ordinal, not
+/// a weight — magnitude buys nothing).
+pub const MAX_PRIORITY: i32 = 1000;
 
 impl Request {
     /// Parse and validate one JSON line.
@@ -180,6 +201,28 @@ impl Request {
                 if policy == PolicyChoice::Theory && sampler != SamplerKind::Mlem {
                     return Err(anyhow!("policy \"theory\" requires the mlem sampler"));
                 }
+                let deadline_ms = match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => {
+                        let d = v.as_f64().ok_or_else(|| anyhow!("deadline_ms must be a number"))?;
+                        if !d.is_finite() || d < 1.0 || d > MAX_DEADLINE_MS as f64 {
+                            return Err(anyhow!("deadline_ms must be in 1..={MAX_DEADLINE_MS}"));
+                        }
+                        Some(d as u64)
+                    }
+                };
+                let priority = match j.get("priority") {
+                    None => 0,
+                    Some(v) => {
+                        let p = v.as_f64().ok_or_else(|| anyhow!("priority must be a number"))?;
+                        if !p.is_finite() || p.abs() > MAX_PRIORITY as f64 {
+                            return Err(anyhow!(
+                                "priority must be in -{MAX_PRIORITY}..={MAX_PRIORITY}"
+                            ));
+                        }
+                        p as i32
+                    }
+                };
                 Ok(Request::Generate(GenRequest {
                     n,
                     sampler,
@@ -189,6 +232,8 @@ impl Request {
                     delta: j.f64_of("delta").unwrap_or(0.0),
                     policy,
                     return_images: j.get("return_images").and_then(Json::as_bool).unwrap_or(false),
+                    deadline_ms,
+                    priority,
                 }))
             }
             other => Err(anyhow!("unknown cmd '{other}'")),
@@ -207,6 +252,15 @@ impl Response {
             Response::Error(msg) => Json::obj()
                 .with("ok", Json::Bool(false))
                 .with("error", Json::str(msg.clone())),
+            Response::DeadlineExceeded { waited_ms, deadline_ms } => Json::obj()
+                .with("ok", Json::Bool(false))
+                .with("error", Json::str("deadline_exceeded"))
+                .with("waited_ms", Json::num(*waited_ms as f64))
+                .with("deadline_ms", Json::num(*deadline_ms as f64)),
+            Response::Overloaded { retry_after_ms } => Json::obj()
+                .with("ok", Json::Bool(false))
+                .with("error", Json::str("overloaded"))
+                .with("retry_after_ms", Json::num(*retry_after_ms as f64)),
             Response::Metrics(m) => Json::obj().with("ok", Json::Bool(true)).with("metrics", m.clone()),
             Response::Calibration(c) => {
                 Json::obj().with("ok", Json::Bool(true)).with("calibration", c.clone())
@@ -257,6 +311,30 @@ mod tests {
         assert_eq!(g.levels, defaults().mlem_levels);
         assert_eq!(g.policy, PolicyChoice::Default);
         assert!(!g.return_images);
+        assert_eq!(g.deadline_ms, None, "no deadline unless requested");
+        assert_eq!(g.priority, 0, "neutral priority by default");
+    }
+
+    #[test]
+    fn parse_deadline_and_priority() {
+        let r = Request::parse(
+            r#"{"cmd":"generate","n":1,"deadline_ms":250,"priority":7}"#,
+            &defaults(),
+        )
+        .unwrap();
+        let Request::Generate(g) = r else { panic!() };
+        assert_eq!(g.deadline_ms, Some(250));
+        assert_eq!(g.priority, 7);
+        let neg = Request::parse(r#"{"cmd":"generate","n":1,"priority":-3}"#, &defaults()).unwrap();
+        let Request::Generate(g) = neg else { panic!() };
+        assert_eq!(g.priority, -3, "background priority is allowed");
+        let d = defaults();
+        assert!(Request::parse(r#"{"cmd":"generate","deadline_ms":0}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","deadline_ms":-5}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","deadline_ms":99999999999}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","deadline_ms":"soon"}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","priority":5000}"#, &d).is_err());
+        assert!(Request::parse(r#"{"cmd":"generate","priority":"high"}"#, &d).is_err());
     }
 
     #[test]
@@ -363,5 +441,20 @@ mod tests {
         assert_eq!(parsed.get("images").unwrap().as_arr().unwrap().len(), 2);
         let err = Response::Error("bad".into()).to_json().to_string();
         assert!(err.contains("\"ok\":false"));
+    }
+
+    #[test]
+    fn typed_errors_serialize_with_taxonomy_fields() {
+        let dl = Response::DeadlineExceeded { waited_ms: 320, deadline_ms: 250 };
+        let parsed = Json::parse(&dl.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(parsed.str_of("error"), Some("deadline_exceeded"));
+        assert_eq!(parsed.f64_of("waited_ms"), Some(320.0));
+        assert_eq!(parsed.f64_of("deadline_ms"), Some(250.0));
+        let ov = Response::Overloaded { retry_after_ms: 40 };
+        let parsed = Json::parse(&ov.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(parsed.str_of("error"), Some("overloaded"));
+        assert_eq!(parsed.f64_of("retry_after_ms"), Some(40.0));
     }
 }

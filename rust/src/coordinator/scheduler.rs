@@ -141,6 +141,11 @@ impl Scheduler {
     }
 
     fn check_levels(&self, levels: &[usize]) -> Result<()> {
+        // An empty subset would panic later (`levels.last()` on the hot
+        // path); refuse it as a typed request error instead.
+        if levels.is_empty() {
+            return Err(anyhow!("levels must not be empty"));
+        }
         for &l in levels {
             if l == 0 || l > self.denoisers.len() {
                 return Err(anyhow!("level {l} out of range 1..={}", self.denoisers.len()));
@@ -332,14 +337,17 @@ impl Scheduler {
         }
         let path = BrownianPath::concat(&parts);
 
-        // Run the requested sampler.
-        let top = *first.levels.last().unwrap();
+        // Run the requested sampler.  `check_levels` refused empty
+        // subsets above, so `last()` cannot fail — but an error beats a
+        // lane panic if that invariant ever drifts.
+        let top = *first.levels.last().ok_or_else(|| anyhow!("levels must not be empty"))?;
         let mut nfe = vec![0u64; self.denoisers.len()];
         let mut cost_units = 0.0f64;
         match first.sampler {
             SamplerKind::Mlem => {
                 let base = LinearPartDrift { dim };
-                let (policy, eff_levels) = plan.expect("mlem plan resolved above");
+                let (policy, eff_levels) =
+                    plan.ok_or_else(|| anyhow!("internal: mlem plan missing"))?;
                 let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = eff_levels
                     .iter()
                     .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })

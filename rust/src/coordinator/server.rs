@@ -113,6 +113,7 @@ fn handle_conn(
         metrics.requests.inc();
         let response = match Request::parse(&line, &cfg) {
             Err(e) => {
+                metrics.errors_bad_request.inc();
                 metrics.rejected.inc();
                 Response::Error(e.to_string())
             }
@@ -137,7 +138,14 @@ fn handle_conn(
                 let rx = lanes.submit(req);
                 match rx.recv() {
                     Ok(r) => r,
-                    Err(_) => Response::Error("worker dropped request".into()),
+                    Err(_) => {
+                        // Every accepted request is supposed to be
+                        // answered exactly once (lane pool contract);
+                        // a dropped channel is a server-side bug class,
+                        // so count it in the internal-error taxonomy.
+                        metrics.errors_internal.inc();
+                        Response::Error("worker dropped request".into())
+                    }
                 }
             }
         };

@@ -18,7 +18,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, Manifest};
+use mlem::runtime::{spawn_executor_with, spawn_supervised, Manifest};
 use mlem::util::cli::Args;
 use mlem::util::stats;
 
@@ -30,7 +30,16 @@ fn build_scheduler(cfg: &ServeConfig) -> Result<Scheduler> {
     let metrics = Metrics::new();
     // The --exec-linger-us / --exec-max-group knobs bind here: the
     // executor thread is spawned with the config's aggregation options.
-    let (handle, _join) = spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    // With `--supervisor on` (the default) the executor runs under the
+    // self-healing supervisor: a dead executor thread is respawned from
+    // the manifest and in-flight calls are retried within the
+    // `--retry-budget`; `off` keeps the historical fail-fast behaviour.
+    let handle = if cfg.supervisor {
+        let retry = cfg.supervisor_options();
+        spawn_supervised(manifest, Some(metrics.clone()), cfg.exec_options(), retry)?
+    } else {
+        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?.0
+    };
     Scheduler::new(handle, cfg.clone(), metrics)
 }
 
@@ -53,6 +62,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
         delta: args.f64_or("delta", 0.0),
         policy: PolicyChoice::parse(&args.str_or("policy", "default"))?,
         return_images: true,
+        deadline_ms: None,
+        priority: 0,
     };
     let resp = scheduler.generate(&req)?;
     println!(

@@ -206,6 +206,21 @@ pub struct MetricsInner {
     pub recalibrations: Counter,
     /// Live batches probed by the calibrator.
     pub calib_probes: Counter,
+    /// Executor generations respawned by the supervisor.
+    pub restarts: Counter,
+    /// Request attempts replayed after executor transport death.
+    pub retries: Counter,
+    /// Requests shed at admission (typed `overloaded` answer).
+    pub sheds: Counter,
+    /// Requests answered `deadline_exceeded` at pop time (never
+    /// executed).
+    pub deadline_misses: Counter,
+    /// Error taxonomy: failures the server itself caused (executor
+    /// death past the retry budget, lane panic, dropped worker).
+    pub errors_internal: Counter,
+    /// Error taxonomy: failures the client caused (parse errors,
+    /// out-of-range parameters).
+    pub errors_bad_request: Counter,
 }
 
 impl std::ops::Deref for Metrics {
@@ -271,6 +286,12 @@ impl Metrics {
             .with("gamma_hat", Json::num(self.gamma_hat.get()))
             .with("recalibrations", Json::num(self.recalibrations.get() as f64))
             .with("calib_probes", Json::num(self.calib_probes.get() as f64))
+            .with("restarts", Json::num(self.restarts.get() as f64))
+            .with("retries", Json::num(self.retries.get() as f64))
+            .with("sheds", Json::num(self.sheds.get() as f64))
+            .with("deadline_misses", Json::num(self.deadline_misses.get() as f64))
+            .with("errors_internal", Json::num(self.errors_internal.get() as f64))
+            .with("errors_bad_request", Json::num(self.errors_bad_request.get() as f64))
             .with("worker_pool", worker_pool)
             .with("request_latency", self.request_latency.snapshot())
             .with("execute_latency", self.execute_latency.snapshot())
@@ -345,6 +366,13 @@ mod tests {
         assert_eq!(parsed.f64_of("inflight_batches"), Some(0.0));
         assert_eq!(parsed.f64_of("runner_busy"), Some(0.0));
         assert_eq!(parsed.f64_of("batch_runners"), Some(0.0));
+        // resilience counters + error taxonomy
+        assert_eq!(parsed.f64_of("restarts"), Some(0.0));
+        assert_eq!(parsed.f64_of("retries"), Some(0.0));
+        assert_eq!(parsed.f64_of("sheds"), Some(0.0));
+        assert_eq!(parsed.f64_of("deadline_misses"), Some(0.0));
+        assert_eq!(parsed.f64_of("errors_internal"), Some(0.0));
+        assert_eq!(parsed.f64_of("errors_bad_request"), Some(0.0));
     }
 
     #[test]

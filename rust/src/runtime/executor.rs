@@ -32,7 +32,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -67,11 +67,59 @@ pub struct ExecOptions {
     /// Maximum jobs fused into one grouped execute; 1 disables grouping
     /// (every job takes the historical singleton path).
     pub max_group: usize,
+    /// Liveness-poll period (µs) while a caller waits for a response:
+    /// the bound on how late executor death is noticed, and therefore on
+    /// stop/join latency (the serve config's `exec_poll_us`).
+    pub poll_interval_us: u64,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { linger_us: 0, max_group: 16 }
+        ExecOptions { linger_us: 0, max_group: 16, poll_interval_us: 50_000 }
+    }
+}
+
+/// Typed transport-death error: the executor thread (or its job
+/// channel) is gone.  The supervisor replays exactly this class —
+/// engine-level errors (bad shapes, synthetic faults, "engine
+/// unavailable" refusals) pass through untouched, so a deterministic
+/// failure can never turn into a retry loop.
+#[derive(Debug)]
+pub struct ExecutorGone(pub &'static str);
+
+impl std::fmt::Display for ExecutorGone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl std::error::Error for ExecutorGone {}
+
+/// True iff `e`'s root cause is [`ExecutorGone`] (survives `context`
+/// wrapping) — the class the supervisor may replay.
+pub fn is_executor_gone(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<ExecutorGone>().is_some()
+}
+
+fn gone(why: &'static str) -> anyhow::Error {
+    anyhow::Error::new(ExecutorGone(why))
+}
+
+/// Supervision knobs (the serve config's `retry_budget` /
+/// `retry_backoff_us`).
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorOptions {
+    /// Maximum respawn-and-replay attempts per request before the
+    /// transport error is surfaced to the caller.
+    pub retry_budget: usize,
+    /// Base backoff (µs) before attempt k sleeps `base << k`, capped at
+    /// 100 ms.
+    pub retry_backoff_us: u64,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions { retry_budget: 5, retry_backoff_us: 500 }
     }
 }
 
@@ -223,29 +271,47 @@ fn key_of(job: &Job, dim: usize, tables: &[LevelBuckets]) -> Option<GroupKey> {
 /// against a runaway producer; normal traffic never approaches it).
 const DRAIN_CAP: usize = 4096;
 
+/// The per-generation executor wiring: which thread's channel requests
+/// go to, and that thread's liveness flag.  Shared (behind one
+/// `RwLock`) by **all** clones of a handle, so a supervisor respawn —
+/// a generation bump — is visible to every clone at its next call,
+/// including clones parked inside `NeuralDenoiser` shard routing.
+struct Wiring {
+    tx: Sender<Job>,
+    /// Cleared by [`AliveGuard`] when this generation's thread exits
+    /// for any reason (Stop, channel close, panic).  Because the handle
+    /// keeps a `Sender` for its reusable response channel, `recv` alone
+    /// would never observe executor death — this flag is what turns an
+    /// in-flight request into an error instead of a hang.
+    alive: Arc<AtomicBool>,
+    /// Bumped on every supervisor respawn; callers record the value they
+    /// observed so exactly one racer heals per dead generation.
+    generation: u64,
+}
+
 /// Cloneable, thread-safe handle to the executor thread.  Each clone
 /// owns its response channel; concurrent calls through one clone are
 /// serialised (clone per thread for parallelism — concurrent clones'
 /// jobs on the same (level, bucket, t) are exactly what the aggregation
 /// loop fuses into one dispatch).
 pub struct ExecutorHandle {
-    tx: Sender<Job>,
+    wiring: Arc<RwLock<Wiring>>,
     manifest: Manifest,
-    /// Cleared by [`AliveGuard`] when the executor thread exits for any
-    /// reason (Stop, channel close, panic).  Because the handle keeps a
-    /// `Sender` for its reusable response channel, `recv` alone would
-    /// never observe executor death — this flag is what turns an
-    /// in-flight request into an error instead of a hang.
-    alive: Arc<AtomicBool>,
+    /// Liveness-poll period while waiting for a response.
+    poll: Duration,
+    /// Present on handles from [`spawn_supervised`]: transport-death
+    /// errors are healed (respawn + replay) instead of surfaced.
+    supervisor: Option<Arc<Supervisor>>,
     resp: Mutex<(Sender<Resp>, Receiver<Resp>)>,
 }
 
 impl Clone for ExecutorHandle {
     fn clone(&self) -> ExecutorHandle {
         ExecutorHandle {
-            tx: self.tx.clone(),
+            wiring: self.wiring.clone(),
             manifest: self.manifest.clone(),
-            alive: self.alive.clone(),
+            poll: self.poll,
+            supervisor: self.supervisor.clone(),
             resp: Mutex::new(channel()),
         }
     }
@@ -271,15 +337,15 @@ pub fn spawn_executor(
     spawn_executor_with(manifest, metrics, ExecOptions::default())
 }
 
-/// [`spawn_executor`] with explicit aggregation knobs (the serve
-/// config's `exec_linger_us` / `exec_max_group`).
-pub fn spawn_executor_with(
+/// Spawn one executor thread generation: the raw (channel, liveness,
+/// join) triple both the unsupervised spawn paths and the supervisor's
+/// respawn share.
+fn spawn_exec_thread(
     manifest: Manifest,
     metrics: Option<Metrics>,
     opts: ExecOptions,
-) -> Result<(ExecutorHandle, JoinHandle<()>)> {
+) -> Result<(Sender<Job>, Arc<AtomicBool>, JoinHandle<()>)> {
     let (tx, rx) = channel::<Job>();
-    let handle_manifest = manifest.clone();
     let alive = Arc::new(AtomicBool::new(true));
     let alive_flag = alive.clone();
     let join = std::thread::Builder::new()
@@ -305,10 +371,118 @@ pub fn spawn_executor_with(
             };
             serve_loop(engine, rx, metrics, opts);
         })?;
+    Ok((tx, alive, join))
+}
+
+/// [`spawn_executor`] with explicit aggregation knobs (the serve
+/// config's `exec_linger_us` / `exec_max_group`).  Fail-fast: executor
+/// death surfaces as a typed [`ExecutorGone`] error to callers — wrap
+/// with [`spawn_supervised`] for respawn + replay.
+pub fn spawn_executor_with(
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+    opts: ExecOptions,
+) -> Result<(ExecutorHandle, JoinHandle<()>)> {
+    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics, opts)?;
     Ok((
-        ExecutorHandle { tx, manifest: handle_manifest, alive, resp: Mutex::new(channel()) },
+        ExecutorHandle {
+            wiring: Arc::new(RwLock::new(Wiring { tx, alive, generation: 0 })),
+            manifest,
+            poll: Duration::from_micros(opts.poll_interval_us.max(1)),
+            supervisor: None,
+            resp: Mutex::new(channel()),
+        },
         join,
     ))
+}
+
+/// The supervision tree's root: owns the manifest + knobs needed to
+/// respawn a dead executor generation, and the join handles of every
+/// generation spawned so far (dead ones are reaped at the next
+/// respawn).  Shared by all clones of the supervised handle.
+struct Supervisor {
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+    exec_opts: ExecOptions,
+    retry: SupervisorOptions,
+    /// Set by [`ExecutorHandle::stop`]: an intentional shutdown must
+    /// never be "healed" back into existence.
+    stopping: AtomicBool,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Supervisor {
+    fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::SeqCst)
+    }
+
+    /// Respawn the executor if generation `observed` is still the dead
+    /// current one.  The join-handle mutex serialises healers: the first
+    /// caller respawns; racers blocked behind it observe the bumped
+    /// generation (or a live flag) and return without spawning a second
+    /// thread.
+    fn heal(&self, wiring: &Arc<RwLock<Wiring>>, observed: u64) -> Result<()> {
+        if self.stopping() {
+            return Err(gone("executor stopped"));
+        }
+        let mut joins = self.joins.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let w = wiring.read().unwrap_or_else(|p| p.into_inner());
+            if w.generation > observed || w.alive.load(Ordering::SeqCst) {
+                return Ok(()); // a racing caller already healed this death
+            }
+        }
+        // Reap the dead generation (its thread has exited or is
+        // unwinding; join returns promptly) before spawning the next.
+        for j in joins.drain(..) {
+            let _ = j.join();
+        }
+        let (tx, alive, join) =
+            spawn_exec_thread(self.manifest.clone(), self.metrics.clone(), self.exec_opts)?;
+        joins.push(join);
+        let mut w = wiring.write().unwrap_or_else(|p| p.into_inner());
+        w.tx = tx;
+        w.alive = alive;
+        w.generation += 1;
+        if let Some(m) = &self.metrics {
+            m.restarts.inc();
+        }
+        eprintln!("[supervisor] executor respawned (generation {})", w.generation);
+        Ok(())
+    }
+}
+
+/// Spawn a **supervised** executor: like [`spawn_executor_with`], but
+/// transport death (thread panic, channel loss) is detected at the next
+/// call, the executor is respawned from the manifest, and the failed
+/// request is replayed — with capped exponential backoff, up to
+/// `retry.retry_budget` attempts.  Replays are bit-identical to
+/// first-try results: each attempt rebuilds its payload from the
+/// caller's slice and the engine's math is a pure function of the
+/// inputs.  No join handle is returned; generations are reaped at
+/// respawn and the last thread exits when every handle clone drops.
+pub fn spawn_supervised(
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+    opts: ExecOptions,
+    retry: SupervisorOptions,
+) -> Result<ExecutorHandle> {
+    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics.clone(), opts)?;
+    let supervisor = Arc::new(Supervisor {
+        manifest: manifest.clone(),
+        metrics,
+        exec_opts: opts,
+        retry,
+        stopping: AtomicBool::new(false),
+        joins: Mutex::new(vec![join]),
+    });
+    Ok(ExecutorHandle {
+        wiring: Arc::new(RwLock::new(Wiring { tx, alive, generation: 0 })),
+        manifest,
+        poll: Duration::from_micros(opts.poll_interval_us.max(1)),
+        supervisor: Some(supervisor),
+        resp: Mutex::new(channel()),
+    })
 }
 
 /// The executor's event loop: aggregation over the job channel.
@@ -604,30 +778,78 @@ impl ExecutorHandle {
     }
 
     /// Send one job and wait for its answer on this handle's reusable
-    /// response channel.  Waiting polls the liveness flag: if the
-    /// executor thread exits (Stop race, engine panic) with this request
-    /// in flight, the call errors instead of hanging — the handle's own
-    /// `Sender` keeps the response channel connected, so disconnect can
-    /// never signal death here.
+    /// response channel.  Waiting polls the liveness flag every
+    /// `poll_interval_us`: if the executor thread exits (Stop race,
+    /// engine panic) with this request in flight, the call errors
+    /// instead of hanging — the handle's own `Sender` keeps the response
+    /// channel connected, so disconnect can never signal death here.
+    ///
+    /// Transport death always surfaces as a typed [`ExecutorGone`]; a
+    /// failed attempt provably left **no** response behind (the dead
+    /// thread's sends all happen before its liveness flag clears, and
+    /// the flag check re-drains the channel), so a supervisor replay can
+    /// never pair a request with a stale answer.
     fn call(&self, make: impl FnOnce(Sender<Resp>) -> Job) -> Result<Resp> {
+        let (tx, alive) = {
+            let w = self.wiring.read().unwrap_or_else(|p| p.into_inner());
+            (w.tx.clone(), w.alive.clone())
+        };
         let slot = self.resp.lock().map_err(|_| anyhow!("executor handle poisoned"))?;
-        self.tx.send(make(slot.0.clone())).map_err(|_| anyhow!("executor thread gone"))?;
+        tx.send(make(slot.0.clone())).map_err(|_| gone("executor thread gone"))?;
         loop {
-            match slot.1.recv_timeout(Duration::from_millis(50)) {
+            match slot.1.recv_timeout(self.poll) {
                 Ok(r) => return Ok(r),
                 Err(RecvTimeoutError::Timeout) => {
-                    if !self.alive.load(Ordering::SeqCst) {
+                    if !alive.load(Ordering::SeqCst) {
                         // One last look: the answer may have been sent
                         // just before the thread exited.
                         if let Ok(r) = slot.1.try_recv() {
                             return Ok(r);
                         }
-                        return Err(anyhow!("executor thread exited with the request in flight"));
+                        return Err(gone("executor thread exited with the request in flight"));
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
-                    return Err(anyhow!("executor dropped response"));
+                    return Err(gone("executor dropped response"));
                 }
+            }
+        }
+    }
+
+    /// Run one request attempt, healing transport death when this handle
+    /// is supervised: on [`ExecutorGone`] the supervisor respawns the
+    /// executor (exactly once per dead generation, however many clones
+    /// race) and `f` is re-invoked — rebuilding the job, payload copies
+    /// included, from the caller's original arguments, which is what
+    /// makes a replay bit-identical to a first try.  Engine-level errors
+    /// return immediately; attempts stop at the retry budget.
+    fn retrying<T>(&self, f: impl Fn(&ExecutorHandle) -> Result<T>) -> Result<T> {
+        let Some(sup) = &self.supervisor else {
+            return f(self);
+        };
+        let mut attempt = 0u32;
+        loop {
+            let observed = self.wiring.read().unwrap_or_else(|p| p.into_inner()).generation;
+            match f(self) {
+                Ok(v) => return Ok(v),
+                Err(e) if is_executor_gone(&e) && !sup.stopping() => {
+                    if attempt as usize >= sup.retry.retry_budget {
+                        return Err(e.context(format!(
+                            "retry budget ({}) exhausted",
+                            sup.retry.retry_budget
+                        )));
+                    }
+                    if let Some(m) = &sup.metrics {
+                        m.retries.inc();
+                    }
+                    let backoff_us = (sup.retry.retry_backoff_us << attempt.min(20)).min(100_000);
+                    if backoff_us > 0 {
+                        std::thread::sleep(Duration::from_micros(backoff_us));
+                    }
+                    sup.heal(&self.wiring, observed)?;
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
             }
         }
     }
@@ -641,24 +863,30 @@ impl ExecutorHandle {
 
     /// Evaluate a level's eps network on a flattened `[n, dim]` batch.
     pub fn eps(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
-        let x = pooled_copy(x);
-        self.call_vec(|resp| Job::Eps { level, x, t, pallas: false, resp })
+        self.retrying(|h| {
+            let x = pooled_copy(x);
+            h.call_vec(|resp| Job::Eps { level, x, t, pallas: false, resp })
+        })
     }
 
     /// Same through the Pallas-flavour parity artifact.
     pub fn eps_pallas(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
-        let x = pooled_copy(x);
-        self.call_vec(|resp| Job::Eps { level, x, t, pallas: true, resp })
+        self.retrying(|h| {
+            let x = pooled_copy(x);
+            h.call_vec(|resp| Job::Eps { level, x, t, pallas: true, resp })
+        })
     }
 
     /// Evaluate (eps, ∂eps·v).
     pub fn eps_jvp(&self, level: usize, x: &[f32], t: f64, v: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let x = pooled_copy(x);
-        let v = pooled_copy(v);
-        match self.call(|resp| Job::EpsJvp { level, x, t, v, resp })? {
-            Resp::Pair(r) => r,
-            _ => Err(anyhow!("executor protocol mismatch")),
-        }
+        self.retrying(|h| {
+            let x = pooled_copy(x);
+            let v = pooled_copy(v);
+            match h.call(|resp| Job::EpsJvp { level, x, t, v, resp })? {
+                Resp::Pair(r) => r,
+                _ => Err(anyhow!("executor protocol mismatch")),
+            }
+        })
     }
 
     /// Fused ML-EM combine step (see `engine::Engine::combine`).
@@ -673,41 +901,49 @@ impl ExecutorHandle {
         sigma: f64,
         pallas: bool,
     ) -> Result<Vec<f32>> {
-        let y = pooled_copy(y);
-        let deltas = pooled_copy(deltas);
-        let coeffs = pooled_copy(coeffs);
-        let z = pooled_copy(z);
-        self.call_vec(|resp| Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp })
+        self.retrying(|h| {
+            let y = pooled_copy(y);
+            let deltas = pooled_copy(deltas);
+            let coeffs = pooled_copy(coeffs);
+            let z = pooled_copy(z);
+            h.call_vec(|resp| Job::Combine { y, deltas, coeffs, z, eta, sigma, pallas, resp })
+        })
     }
 
     /// Measure per-level cost in seconds/image (see engine).
     pub fn measure_costs(&self, reps: usize) -> Result<Vec<f64>> {
-        match self.call(|resp| Job::MeasureCosts { reps, resp })? {
+        self.retrying(|h| match h.call(|resp| Job::MeasureCosts { reps, resp })? {
             Resp::Costs(r) => r,
             _ => Err(anyhow!("executor protocol mismatch")),
-        }
+        })
     }
 
     /// Pre-compile all levels at a bucket size.
     pub fn warmup(&self, bucket: usize) -> Result<()> {
-        match self.call(|resp| Job::Warmup { bucket, resp })? {
+        self.retrying(|h| match h.call(|resp| Job::Warmup { bucket, resp })? {
             Resp::Unit(r) => r,
             _ => Err(anyhow!("executor protocol mismatch")),
-        }
+        })
     }
 
     /// Execute-call, buffer-reuse, and grouping counters (see
     /// [`ExecStats`]).
     pub fn exec_stats(&self) -> Result<ExecStats> {
-        match self.call(|resp| Job::ExecStats { resp })? {
+        self.retrying(|h| match h.call(|resp| Job::ExecStats { resp })? {
             Resp::Stats(r) => r,
             _ => Err(anyhow!("executor protocol mismatch")),
-        }
+        })
     }
 
-    /// Ask the executor thread to exit.
+    /// Ask the executor thread to exit.  On a supervised handle this
+    /// also latches the stopping flag first, so no concurrent caller
+    /// respawns the executor after (or while) it shuts down.
     pub fn stop(&self) {
-        let _ = self.tx.send(Job::Stop);
+        if let Some(sup) = &self.supervisor {
+            sup.stopping.store(true, Ordering::SeqCst);
+        }
+        let w = self.wiring.read().unwrap_or_else(|p| p.into_inner());
+        let _ = w.tx.send(Job::Stop);
     }
 }
 
@@ -740,5 +976,27 @@ mod tests {
         let o = ExecOptions::default();
         assert_eq!(o.linger_us, 0, "no added latency by default");
         assert!(o.max_group > 1, "drain-only grouping on by default");
+        assert_eq!(o.poll_interval_us, 50_000, "historical 50 ms liveness poll by default");
+    }
+
+    #[test]
+    fn executor_gone_survives_context_wrapping() {
+        let e = gone("executor thread gone");
+        assert!(is_executor_gone(&e));
+        let wrapped = e.context("retry budget (5) exhausted");
+        assert!(is_executor_gone(&wrapped), "downcast must see through context layers");
+        assert!(!is_executor_gone(&anyhow!("engine unavailable")));
+        assert!(!is_executor_gone(&anyhow!("grouped eps failed: bad shapes")));
+    }
+
+    #[test]
+    fn supervisor_options_default_to_bounded_retries() {
+        let s = SupervisorOptions::default();
+        assert!(s.retry_budget >= 1, "at least one replay attempt");
+        assert!(s.retry_budget <= 100, "budget is a bound, not a loop");
+        // Worst-case backoff stays capped regardless of the attempt
+        // index (the shift saturates into the 100 ms ceiling).
+        let worst = (s.retry_backoff_us << 20u32).min(100_000);
+        assert!(worst <= 100_000);
     }
 }

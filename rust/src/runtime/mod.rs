@@ -23,6 +23,9 @@ pub(crate) mod xla_pjrt;
 #[cfg(not(feature = "xla"))]
 pub(crate) mod xla_shim;
 
-pub use executor::{spawn_executor, spawn_executor_with, ExecOptions, ExecStats, ExecutorHandle};
+pub use executor::{
+    is_executor_gone, spawn_executor, spawn_executor_with, spawn_supervised, ExecOptions,
+    ExecStats, ExecutorGone, ExecutorHandle, SupervisorOptions,
+};
 pub use manifest::Manifest;
 pub use neural::NeuralDenoiser;

@@ -105,15 +105,23 @@ impl NeuralDenoiser {
     /// Run `f` on a parked executor-handle clone (grown on first use,
     /// re-parked after).  Keeps concurrent callers — coordinator lanes
     /// sharing this denoiser — off each other's response channels.
+    ///
+    /// Parked clones survive a supervisor respawn: every clone shares
+    /// the executor's rewirable plumbing, so after the supervisor bumps
+    /// the generation a parked handle transparently talks to the new
+    /// executor thread — the pool is never invalidated.  The park-list
+    /// locks recover from poisoning (a panicking lane died between
+    /// critical sections; the `Vec` itself is always consistent), so one
+    /// bad batch can't wedge every other lane's denoiser calls.
     fn with_handle<R>(&self, f: impl FnOnce(&ExecutorHandle) -> R) -> R {
         let h = self
             .shard_handles
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .pop()
             .unwrap_or_else(|| self.handle.clone());
         let r = f(&h);
-        self.shard_handles.lock().unwrap().push(h);
+        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).push(h);
         r
     }
 
@@ -125,7 +133,7 @@ impl NeuralDenoiser {
         let n_chunks = x.chunks(chunk).len();
         // Borrow one parked clone per shard (grow the pool on first use).
         let mut handles: Vec<ExecutorHandle> = {
-            let mut parked = self.shard_handles.lock().unwrap();
+            let mut parked = self.shard_handles.lock().unwrap_or_else(|p| p.into_inner());
             while parked.len() < n_chunks {
                 parked.push(self.handle.clone());
             }
@@ -142,7 +150,7 @@ impl NeuralDenoiser {
             let r = h.eps(level, xc, t).expect("executor eps failed");
             oc.copy_from_slice(&r);
         });
-        self.shard_handles.lock().unwrap().append(&mut handles);
+        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).append(&mut handles);
     }
 }
 

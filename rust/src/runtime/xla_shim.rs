@@ -28,8 +28,18 @@
 //! (y, deltas, coeffs, z, eta, sigma) → fused ML-EM update; `fail`
 //! (execute returns an error — engine-death-by-error tests); `panic`
 //! (execute panics — executor-thread-death tests).
+//!
+//! Intermittent fault modifiers (the chaos harness) compose with any
+//! kind: `fail_after=N` / `panic_after=N` trigger once the executable's
+//! per-instance call counter reaches N (a respawned executor compiles a
+//! fresh executable, so the counter — and the fault — resets with it);
+//! `flaky=p` fails individual calls by a seeded per-call coin.  All
+//! three are driven by counters + `MLEM_FAULT_SEED`, never wall-clock
+//! randomness, so chaos runs replay bit-identically.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{anyhow, Result};
 
@@ -49,6 +59,15 @@ pub struct SynthSpec {
     /// Iterations of the recurrence per element: the compute knob that
     /// makes one execute dominate channel/dispatch overhead in benches.
     work: usize,
+    /// 0 = off; otherwise execute errors once the per-executable call
+    /// ordinal (1-based) reaches this value.
+    fail_after: u64,
+    /// 0 = off; otherwise execute panics (killing the executor thread)
+    /// once the call ordinal reaches this value.
+    panic_after: u64,
+    /// 0 = off; otherwise each call fails independently with this
+    /// probability, decided by a seeded per-call coin.
+    flaky: f32,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +83,9 @@ fn parse_spec(line: &str) -> Result<SynthSpec> {
     let mut kind = None;
     let mut scale = 0.5f32;
     let mut work = 1usize;
+    let mut fail_after = 0u64;
+    let mut panic_after = 0u64;
+    let mut flaky = 0.0f32;
     for tok in line[SYNTH_MAGIC.len()..].split_whitespace() {
         let (k, v) = tok
             .split_once('=')
@@ -81,6 +103,20 @@ fn parse_spec(line: &str) -> Result<SynthSpec> {
             }
             "scale" => scale = v.parse().map_err(|_| anyhow!("synthetic-hlo: bad scale '{v}'"))?,
             "work" => work = v.parse().map_err(|_| anyhow!("synthetic-hlo: bad work '{v}'"))?,
+            "fail_after" => {
+                fail_after =
+                    v.parse().map_err(|_| anyhow!("synthetic-hlo: bad fail_after '{v}'"))?
+            }
+            "panic_after" => {
+                panic_after =
+                    v.parse().map_err(|_| anyhow!("synthetic-hlo: bad panic_after '{v}'"))?
+            }
+            "flaky" => {
+                flaky = v.parse().map_err(|_| anyhow!("synthetic-hlo: bad flaky '{v}'"))?;
+                if !(0.0..1.0).contains(&flaky) {
+                    return Err(anyhow!("synthetic-hlo: flaky must be in [0, 1), got '{v}'"));
+                }
+            }
             other => return Err(anyhow!("synthetic-hlo: unknown key '{other}'")),
         }
     }
@@ -88,7 +124,31 @@ fn parse_spec(line: &str) -> Result<SynthSpec> {
         kind: kind.ok_or_else(|| anyhow!("synthetic-hlo: missing kind"))?,
         scale,
         work,
+        fail_after,
+        panic_after,
+        flaky,
     })
+}
+
+/// Chaos seed shared by every flaky executable in the process; read
+/// once from `MLEM_FAULT_SEED` (default 0) so a chaos run replays
+/// exactly by re-exporting the same value.
+fn fault_seed() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    *SEED.get_or_init(|| {
+        std::env::var("MLEM_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+    })
+}
+
+/// Deterministic per-call coin in `[0, 1)`: a splitmix64 hash of
+/// (seed, call ordinal).  Pure, so two executables with the same spec
+/// fail on the same call ordinals.
+fn fault_coin(seed: u64, call: u64) -> f32 {
+    let mut z = seed ^ call.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 40) as f32 / (1u64 << 24) as f32
 }
 
 /// The synthetic per-element recurrence and its exact derivative.
@@ -126,7 +186,7 @@ impl PjRtClient {
 
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         match comp.0.spec {
-            Some(spec) => Ok(PjRtLoadedExecutable { spec }),
+            Some(spec) => Ok(PjRtLoadedExecutable { spec, calls: AtomicU64::new(0) }),
             None => Err(unavailable()),
         }
     }
@@ -157,6 +217,10 @@ impl XlaComputation {
 
 pub struct PjRtLoadedExecutable {
     spec: SynthSpec,
+    /// Per-instance call ordinal driving the intermittent fault
+    /// modifiers; resets when the executable is recompiled (i.e. when a
+    /// supervisor respawns the executor).
+    calls: AtomicU64,
 }
 
 impl PjRtLoadedExecutable {
@@ -164,6 +228,22 @@ impl PjRtLoadedExecutable {
         &self,
         args: &[T],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.spec.panic_after > 0 && call >= self.spec.panic_after {
+            panic!(
+                "synthetic panic_after={} artifact: executor thread death",
+                self.spec.panic_after
+            );
+        }
+        if self.spec.fail_after > 0 && call >= self.spec.fail_after {
+            return Err(anyhow!(
+                "synthetic fail_after={} artifact: execute refused at call {call}",
+                self.spec.fail_after
+            ));
+        }
+        if self.spec.flaky > 0.0 && fault_coin(fault_seed(), call) < self.spec.flaky {
+            return Err(anyhow!("synthetic flaky artifact: call {call} dropped"));
+        }
         let arg = |i: usize| -> Result<&Literal> {
             args.get(i)
                 .map(|l| l.borrow())
@@ -323,13 +403,29 @@ mod tests {
         PjRtClient::cpu().unwrap().compile(&XlaComputation::from_proto(&proto)).unwrap()
     }
 
+    fn spec(kind: SynthKind, scale: f32, work: usize) -> SynthSpec {
+        SynthSpec { kind, scale, work, fail_after: 0, panic_after: 0, flaky: 0.0 }
+    }
+
     #[test]
     fn spec_parses_and_rejects() {
         let s = parse_spec("// synthetic-hlo v1 kind=eps scale=0.75 work=3").unwrap();
-        assert_eq!(s, SynthSpec { kind: SynthKind::Eps, scale: 0.75, work: 3 });
+        assert_eq!(s, spec(SynthKind::Eps, 0.75, 3));
         assert!(parse_spec("// synthetic-hlo v1 scale=1.0").is_err(), "kind required");
         assert!(parse_spec("// synthetic-hlo v1 kind=nope").is_err());
         assert!(parse_spec("// synthetic-hlo v1 kind=eps gain=2").is_err());
+    }
+
+    #[test]
+    fn fault_modifiers_parse_and_reject() {
+        let s = parse_spec("// synthetic-hlo v1 kind=eps fail_after=4 panic_after=9 flaky=0.25")
+            .unwrap();
+        assert_eq!(s.fail_after, 4);
+        assert_eq!(s.panic_after, 9);
+        assert_eq!(s.flaky, 0.25);
+        assert!(parse_spec("// synthetic-hlo v1 kind=eps flaky=1.0").is_err(), "flaky < 1");
+        assert!(parse_spec("// synthetic-hlo v1 kind=eps flaky=-0.1").is_err());
+        assert!(parse_spec("// synthetic-hlo v1 kind=eps fail_after=x").is_err());
     }
 
     #[test]
@@ -371,7 +467,7 @@ mod tests {
     #[test]
     fn jvp_matches_finite_difference_and_eps() {
         let e = exe("// synthetic-hlo v1 kind=eps_jvp scale=0.8 work=2");
-        let spec = SynthSpec { kind: SynthKind::EpsJvp, scale: 0.8, work: 2 };
+        let spec = spec(SynthKind::EpsJvp, 0.8, 2);
         let (x, t, v) = (0.3f32, 0.6f32, 1.7f32);
         let out = e
             .execute(&[Literal::vec1(&[x]), Literal::vec1(&[t]), Literal::vec1(&[v])])
@@ -394,5 +490,54 @@ mod tests {
         let e = exe("// synthetic-hlo v1 kind=fail");
         let err = e.execute(&[Literal::vec1(&[0.0]), Literal::vec1(&[0.5])]).unwrap_err();
         assert!(err.to_string().contains("synthetic failure"), "{err}");
+    }
+
+    #[test]
+    fn fail_after_triggers_at_the_nth_call() {
+        let e = exe("// synthetic-hlo v1 kind=eps fail_after=3");
+        let run = || e.execute(&[Literal::vec1(&[0.1]), Literal::vec1(&[0.5])]);
+        assert!(run().is_ok(), "call 1 healthy");
+        assert!(run().is_ok(), "call 2 healthy");
+        let err = run().unwrap_err();
+        assert!(err.to_string().contains("fail_after=3"), "{err}");
+        assert!(run().is_err(), "stays failed past the threshold");
+        // A fresh executable (what a respawned executor compiles) starts
+        // over from call 1.
+        let fresh = exe("// synthetic-hlo v1 kind=eps fail_after=3");
+        assert!(fresh.execute(&[Literal::vec1(&[0.1]), Literal::vec1(&[0.5])]).is_ok());
+    }
+
+    #[test]
+    fn flaky_coin_is_deterministic_per_call_ordinal() {
+        // Two executables with the same spec must fail on exactly the
+        // same call ordinals (replayability of chaos runs).
+        let pattern = |e: &PjRtLoadedExecutable| -> Vec<bool> {
+            (0..64)
+                .map(|_| e.execute(&[Literal::vec1(&[0.1]), Literal::vec1(&[0.5])]).is_ok())
+                .collect()
+        };
+        let a = pattern(&exe("// synthetic-hlo v1 kind=eps flaky=0.3"));
+        let b = pattern(&exe("// synthetic-hlo v1 kind=eps flaky=0.3"));
+        assert_eq!(a, b, "same spec, same seed, same fault pattern");
+        assert!(a.iter().any(|ok| !ok), "p=0.3 over 64 calls should drop at least one");
+        assert!(a.iter().any(|ok| *ok), "p=0.3 over 64 calls should pass at least one");
+        let errs = exe("// synthetic-hlo v1 kind=eps flaky=0.3");
+        for (call, ok) in a.iter().enumerate() {
+            let r = errs.execute(&[Literal::vec1(&[0.1]), Literal::vec1(&[0.5])]);
+            if !ok {
+                let err = r.unwrap_err();
+                assert!(err.to_string().contains("flaky"), "call {}: {err}", call + 1);
+            } else {
+                r.unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn fault_coin_is_uniformish() {
+        let n = 10_000u64;
+        let mean: f32 = (1..=n).map(|c| fault_coin(7, c)).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.02, "coin mean {mean} far from 0.5");
+        assert!((0..16).all(|c| (0.0..1.0).contains(&fault_coin(3, c))));
     }
 }

@@ -1,0 +1,536 @@
+//! Chaos-injection certificates for the self-healing serving path:
+//!
+//! * **Kill storm** (supervised executor): deterministic `panic_after`
+//!   faults kill the executor mid-storm; the supervisor respawns it and
+//!   replays the stranded calls.  Every request is answered exactly
+//!   once, every answered output is bitwise identical to a fault-free
+//!   twin run over the same payload grid, and a `NeuralDenoiser`
+//!   family created *before* the first fault keeps serving afterwards
+//!   (parked handle clones survive generation bumps).
+//! * **Flaky storm**: seeded per-call `flaky=p` engine errors (driven
+//!   by `MLEM_FAULT_SEED` — CI runs a seed matrix) surface as typed
+//!   errors, never hangs, and never corrupt surviving outputs.
+//! * **Deadline/shed storms** (lane pool, `batch_workers ∈ {1, 4}`):
+//!   expired entries are answered `deadline_exceeded` and never
+//!   executed; once the EWMA batch-time estimate is warm, hopeless
+//!   requests are shed at admission as `overloaded`; every submitted
+//!   request is answered exactly once.
+//! * **Executor-death storm** (no supervisor): the pool drains with
+//!   typed errors instead of hanging.
+//!
+//! Also emits a compressed `BENCH_resilience.json` through the shared
+//! `benchkit::resilience_json` schema so the artifact exists after
+//! `cargo test` alone (the full sweep lives in `bench_resilience`).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mlem::benchkit::{
+    exec_batching_payload, exec_batching_storm, percentile, resilience_json, resilience_storm,
+    synth_artifact_dir, write_bench_json, ResilienceTally, ShedSummary, SynthLevel,
+};
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::batcher::Batcher;
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
+use mlem::coordinator::{LanePool, Scheduler};
+use mlem::metrics::Metrics;
+use mlem::runtime::{
+    spawn_executor_with, spawn_supervised, ExecOptions, Manifest, NeuralDenoiser,
+    SupervisorOptions,
+};
+use mlem::sde::drift::Denoiser;
+use mlem::util::proptest_lite as pt;
+
+/// Chaos tests drive multi-thread storms and deliberate executor
+/// deaths — serialise them inside this test process.
+static STORM_LOCK: Mutex<()> = Mutex::new(());
+
+fn storm_guard() -> std::sync::MutexGuard<'static, ()> {
+    STORM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fast liveness polling so executor death is noticed promptly;
+/// grouping on, so replay covers grouped jobs too.
+fn exec_opts() -> ExecOptions {
+    ExecOptions { linger_us: 0, max_group: 4, poll_interval_us: 500 }
+}
+
+fn chaos_req(seed: u64, deadline_ms: Option<u64>) -> GenRequest {
+    GenRequest {
+        n: 1,
+        sampler: SamplerKind::Mlem,
+        steps: 30,
+        seed,
+        levels: vec![1, 2],
+        delta: 0.0,
+        policy: PolicyChoice::Default,
+        return_images: false,
+        deadline_ms,
+        priority: 0,
+    }
+}
+
+struct KillReport {
+    tally: ResilienceTally,
+    bit_identical: bool,
+    restarts: u64,
+    retries: u64,
+}
+
+/// Storm a supervised executor over a faulty artifact, then replay the
+/// same payload grid against a fault-free twin for bit parity.
+fn run_kill_storm(tag: &str, fault: &'static str, clients: usize, reqs: usize) -> KillReport {
+    let chaos_dir = synth_artifact_dir(
+        &format!("{tag}-chaos"),
+        4, // dim 16
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault }],
+    )
+    .expect("chaos artifacts");
+    let metrics = Metrics::new();
+    let retry = SupervisorOptions { retry_budget: 8, retry_backoff_us: 50 };
+    let handle = spawn_supervised(
+        Manifest::load(&chaos_dir).expect("chaos manifest"),
+        Some(metrics.clone()),
+        exec_opts(),
+        retry,
+    )
+    .expect("supervised spawn");
+    // Created before any fault fires: this family's parked handle
+    // clones must keep serving across every respawn below.
+    let family = NeuralDenoiser::family_with(&handle, 0, false).expect("denoiser family");
+
+    let tally = resilience_storm(&handle, clients, reqs, 1, 1, 0.5);
+
+    // The pre-fault denoiser family still serves (its calls route
+    // through the supervisor's rewired transport, retries included).
+    let x = exec_batching_payload(7, 7, 1, 16);
+    let mut out = vec![0.0f32; 16];
+    family[0].eps(&x, 0.5, &mut out);
+    assert!(out.iter().all(|v| v.is_finite()), "post-restart denoiser output must be finite");
+    handle.stop();
+
+    let clean_dir = synth_artifact_dir(
+        &format!("{tag}-clean"),
+        4,
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" }],
+    )
+    .expect("clean artifacts");
+    let (clean, join) = spawn_executor_with(
+        Manifest::load(&clean_dir).expect("clean manifest"),
+        None,
+        exec_opts(),
+    )
+    .expect("clean spawn");
+    clean.warmup(8).expect("warmup");
+    let (reference, _) = exec_batching_storm(&clean, clients, reqs, 1, 1, 0.5);
+    clean.stop();
+    let _ = join.join();
+
+    let bit_identical = tally.outputs.len() == reference.len()
+        && tally.outputs.iter().zip(&reference).all(|(got, want)| match got {
+            Some(v) => {
+                v.len() == want.len()
+                    && v.iter().zip(want.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            None => true, // unanswered requests have nothing to compare
+        });
+
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    std::fs::remove_dir_all(&clean_dir).ok();
+    KillReport {
+        tally,
+        bit_identical,
+        restarts: metrics.restarts.get(),
+        retries: metrics.retries.get(),
+    }
+}
+
+#[test]
+fn supervised_kill_storm_replays_bit_identically_and_answers_exactly_once() {
+    let _storm = storm_guard();
+    let r = run_kill_storm("kill-storm", "panic_after=5", 4, 6);
+    assert_eq!(
+        r.tally.ok + r.tally.failed,
+        r.tally.issued,
+        "every request answered exactly once"
+    );
+    assert_eq!(r.tally.outputs.len(), r.tally.issued);
+    assert!(r.restarts >= 1, "panic_after=5 under 24 calls must kill the executor at least once");
+    assert!(r.retries >= 1, "a respawn strands at least one in-flight call");
+    // The retry budget bounds the healing work: every restart is
+    // triggered by some attempt, and attempts are capped per request.
+    assert!(
+        r.restarts <= (r.tally.issued * 9) as u64,
+        "restarts ({}) exceed the retry-budget ceiling",
+        r.restarts
+    );
+    assert!(
+        r.tally.ok_rate() >= 0.75,
+        "retries must recover most of the storm (ok {}/{})",
+        r.tally.ok,
+        r.tally.issued
+    );
+    assert!(r.bit_identical, "replayed outputs must match the fault-free twin bitwise");
+}
+
+#[test]
+fn flaky_storm_surfaces_typed_errors_and_keeps_surviving_outputs_bitwise() {
+    let _storm = storm_guard();
+    let dir = synth_artifact_dir(
+        "flaky-storm",
+        4,
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "flaky=0.3" }],
+    )
+    .expect("flaky artifacts");
+    let (handle, join) =
+        spawn_executor_with(Manifest::load(&dir).expect("manifest"), None, exec_opts())
+            .expect("spawn");
+    let tally = resilience_storm(&handle, 4, 8, 1, 1, 0.5);
+    handle.stop();
+    let _ = join.join();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(tally.ok + tally.failed, tally.issued, "conservation under flaky faults");
+    assert!(tally.failed > 0, "flaky=0.3 over 32 calls must drop some (any MLEM_FAULT_SEED)");
+    assert!(tally.ok > 0, "flaky=0.3 over 32 calls must pass some (any MLEM_FAULT_SEED)");
+
+    // Survivors are bitwise correct: the fault coin drops whole calls,
+    // it never corrupts the ones that pass.
+    let clean_dir = synth_artifact_dir(
+        "flaky-clean",
+        4,
+        1,
+        &[8],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" }],
+    )
+    .expect("clean artifacts");
+    let (clean, cjoin) =
+        spawn_executor_with(Manifest::load(&clean_dir).expect("manifest"), None, exec_opts())
+            .expect("spawn");
+    clean.warmup(8).expect("warmup");
+    let (reference, _) = exec_batching_storm(&clean, 4, 8, 1, 1, 0.5);
+    clean.stop();
+    let _ = cjoin.join();
+    std::fs::remove_dir_all(&clean_dir).ok();
+    for (i, (got, want)) in tally.outputs.iter().zip(&reference).enumerate() {
+        if let Some(v) = got {
+            assert!(
+                v.iter().zip(want.iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "surviving request {i} diverged from the fault-free twin"
+            );
+        }
+    }
+}
+
+/// Build the lane-pool serving stack over a healthy 2-level artifact.
+fn lane_stack(
+    tag: &str,
+    lanes: usize,
+) -> (std::path::PathBuf, ServeConfig, mlem::runtime::ExecutorHandle, Metrics) {
+    let dir = synth_artifact_dir(
+        tag,
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 2000, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 2000, fault: "" },
+        ],
+    )
+    .expect("lane artifacts");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        max_batch: 2,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: lanes,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
+    let metrics = Metrics::new();
+    let (handle, _join) =
+        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).expect("spawn");
+    handle.warmup(4).expect("warmup");
+    (dir, cfg, handle, metrics)
+}
+
+/// Receive exactly one response, then prove the channel is spent.
+fn recv_exactly_once(rx: &std::sync::mpsc::Receiver<Response>) -> Response {
+    let resp = rx.recv().expect("exactly one response per request");
+    assert!(rx.recv().is_err(), "a request must never be answered twice");
+    resp
+}
+
+#[test]
+fn deadline_and_shed_storm_answers_every_request_exactly_once_at_any_lane_count() {
+    let _storm = storm_guard();
+    for lanes in [1usize, 4] {
+        let (dir, cfg, handle, metrics) = lane_stack("deadline-shed", lanes);
+        let scheduler =
+            Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
+        let pool = LanePool::new_paused(scheduler, &cfg);
+
+        // Phase 1 (paused queue): already-expired entries mixed with
+        // healthy ones in the same class.  The EWMA is still cold, so
+        // admission control must not shed anything yet.
+        let expired_rxs: Vec<_> = (0..6u64).map(|i| pool.submit(chaos_req(i, Some(1)))).collect();
+        let healthy_rxs: Vec<_> =
+            (0..6u64).map(|i| pool.submit(chaos_req(100 + i, None))).collect();
+        std::thread::sleep(Duration::from_millis(20));
+        pool.start();
+        for (i, rx) in expired_rxs.iter().enumerate() {
+            match recv_exactly_once(rx) {
+                Response::DeadlineExceeded { waited_ms, deadline_ms } => {
+                    assert_eq!(deadline_ms, 1);
+                    assert!(waited_ms >= 1, "request {i}: waited {waited_ms}ms");
+                }
+                other => panic!("expired request {i}: expected deadline_exceeded, got {other:?}"),
+            }
+        }
+        for (i, rx) in healthy_rxs.iter().enumerate() {
+            match recv_exactly_once(rx) {
+                Response::Gen(_) => {}
+                other => panic!("healthy request {i} failed: {other:?}"),
+            }
+        }
+        assert_eq!(metrics.deadline_misses.get(), 6, "expired entries answered at pop time");
+        assert_eq!(metrics.completed.get(), 6, "expired entries were never executed");
+
+        // Phase 2 (EWMA warm, queue idle): a 1 ms deadline can never be
+        // met — admission sheds it with a computed retry hint.
+        let shed_rxs: Vec<_> =
+            (0..8u64).map(|i| pool.submit(chaos_req(200 + i, Some(1)))).collect();
+        for (i, rx) in shed_rxs.iter().enumerate() {
+            match recv_exactly_once(rx) {
+                Response::Overloaded { retry_after_ms } => {
+                    assert!(retry_after_ms >= 1, "request {i}: retry_after must be positive");
+                }
+                other => panic!("hopeless request {i}: expected overloaded, got {other:?}"),
+            }
+        }
+        assert_eq!(metrics.sheds.get(), 8, "every hopeless request shed at admission");
+        assert_eq!(metrics.completed.get(), 6, "shed requests never execute");
+        assert_eq!(metrics.rejected.get(), 14, "rejected = expired + shed");
+        assert_eq!(metrics.errors_internal.get(), 0, "no internal errors in this storm");
+
+        pool.stop();
+        pool.join();
+        handle.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn unsupervised_executor_death_drains_the_pool_with_errors_not_hangs() {
+    let _storm = storm_guard();
+    for lanes in [1usize, 4] {
+        let dir = synth_artifact_dir(
+            "death-storm",
+            4,
+            1,
+            &[4],
+            &[
+                SynthLevel { kind: "eps", scale: 0.5, work: 16, fault: "" },
+                SynthLevel { kind: "eps", scale: 0.4, work: 16, fault: "panic_after=3" },
+            ],
+        )
+        .expect("death artifacts");
+        let cfg = ServeConfig {
+            artifacts: dir.to_string_lossy().into_owned(),
+            max_batch: 2,
+            max_wait_ms: 1,
+            mlem_levels: vec![1, 2],
+            cost_reps: 0,
+            calib_sample_every: 0,
+            batch_workers: lanes,
+            ..Default::default()
+        };
+        let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
+        let metrics = Metrics::new();
+        let (handle, _join) =
+            spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())
+                .expect("spawn");
+        let scheduler =
+            Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
+        let pool = LanePool::new_paused(scheduler, &cfg);
+
+        // Δ ≫ 0 forces every level each step, so the third level-2
+        // execute kills the (unsupervised) executor mid-storm.
+        let rxs: Vec<_> = (0..10u64)
+            .map(|i| {
+                let mut r = chaos_req(i, None);
+                r.delta = 5.0;
+                pool.submit(r)
+            })
+            .collect();
+        pool.start();
+        let mut errors = 0usize;
+        for rx in &rxs {
+            match recv_exactly_once(rx) {
+                Response::Gen(_) => {}
+                Response::Error(_) => errors += 1,
+                other => panic!("unexpected response: {other:?}"),
+            }
+        }
+        assert!(errors >= 1, "executor death must surface as typed errors");
+        assert!(
+            metrics.errors_internal.get() >= 1,
+            "executor death must land in the error taxonomy"
+        );
+        // The pool itself survives and shuts down cleanly — a hang in
+        // either join is the bug this test exists to catch.
+        pool.stop();
+        pool.join();
+        handle.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Satellite: the caller-side liveness poll is config-derived
+/// (`exec_poll_us`), not the historical hard-coded 50 ms — with a
+/// 500 µs poll, executor death mid-call is noticed in well under the
+/// old bound.
+#[test]
+fn executor_death_is_noticed_within_the_configured_poll_bound() {
+    let _storm = storm_guard();
+    let dir = synth_artifact_dir(
+        "poll-bound",
+        4,
+        1,
+        &[8],
+        &[SynthLevel { kind: "panic", scale: 1.0, work: 1, fault: "" }],
+    )
+    .expect("panic artifacts");
+    let (handle, _join) = spawn_executor_with(
+        Manifest::load(&dir).expect("manifest"),
+        None,
+        ExecOptions { linger_us: 0, max_group: 1, poll_interval_us: 500 },
+    )
+    .expect("spawn");
+    let t0 = Instant::now();
+    let r = handle.eps(1, &exec_batching_payload(1, 0, 1, 16), 0.5);
+    let waited = t0.elapsed();
+    assert!(r.is_err(), "death mid-call must error, not hang");
+    assert!(
+        waited < Duration::from_millis(500),
+        "500 µs poll: death noticed in {waited:?}, expected well under the old 50 ms regime"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_expired_entries_partition_exactly_at_pop() {
+    pt::check("expiry-partition", 150, |g| {
+        let max_batch = g.usize_range(1, 5);
+        let n = g.usize_range(1, 24);
+        let mut b: Batcher<u32> = Batcher::new(max_batch, Duration::ZERO, 4096);
+        for i in 0..n {
+            let deadline = if g.bool() { Some(g.usize_range(1, 40) as u64) } else { None };
+            let mut r = chaos_req(i as u64, deadline);
+            // two classes, so the partition crosses class boundaries
+            r.steps = if g.bool() { 10 } else { 20 };
+            b.push(r, i as u32).map_err(|_| "push refused".to_string())?;
+        }
+        let now = Instant::now() + Duration::from_millis(g.usize_range(0, 60) as u64);
+        let (mut live, mut expired) = (0usize, 0usize);
+        while let Some((key, batch, exp)) = b.pop_class(now, true) {
+            for item in &exp {
+                let d = item.req.deadline_ms.ok_or("expired item without a deadline")?;
+                if item.waited(now) < Duration::from_millis(d) {
+                    return Err(format!("item with deadline {d}ms expired early"));
+                }
+            }
+            for item in &batch {
+                if let Some(d) = item.req.deadline_ms {
+                    if item.waited(now) >= Duration::from_millis(d) {
+                        return Err("an expired item reached a live batch".to_string());
+                    }
+                }
+            }
+            live += batch.len();
+            expired += exp.len();
+            b.release(&key);
+        }
+        if live + expired != n {
+            return Err(format!("conservation broken: {live} live + {expired} expired != {n}"));
+        }
+        Ok(())
+    });
+}
+
+/// Compressed run of the `bench_resilience` measurement: certifies the
+/// shared schema plumbing and guarantees `BENCH_resilience.json` exists
+/// after `cargo test` alone.
+#[test]
+fn resilience_bench_artifact_is_produced_and_answers_everything() {
+    let _storm = storm_guard();
+    let kill = run_kill_storm("bench-kill", "panic_after=5", 4, 5);
+
+    // Miniature overload phase: a generous-deadline wave completes, a
+    // hopeless 1 ms wave is shed once the EWMA is warm.
+    let (dir, cfg, handle, metrics) = lane_stack("bench-shed", 2);
+    let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap());
+    let pool = LanePool::new(scheduler, &cfg);
+    for i in 0..2u64 {
+        match pool.generate(chaos_req(i, None)) {
+            Response::Gen(_) => {}
+            other => panic!("EWMA warmup failed: {other:?}"),
+        }
+    }
+    let generous: Vec<_> =
+        (0..4u64).map(|i| pool.submit(chaos_req(50 + i, Some(10_000)))).collect();
+    let hopeless: Vec<_> =
+        (0..6u64).map(|i| pool.submit(chaos_req(80 + i, Some(1)))).collect();
+    let mut shed = ShedSummary {
+        issued: generous.len() + hopeless.len(),
+        completed: 0,
+        shed: 0,
+        deadline_missed: 0,
+        errored: 0,
+        deadline_ms: 1,
+        p99_accepted_queue_ms: 0.0,
+    };
+    let mut accepted_queue_ms = Vec::new();
+    for rx in generous.iter().chain(&hopeless) {
+        match recv_exactly_once(rx) {
+            Response::Gen(g) => {
+                shed.completed += 1;
+                accepted_queue_ms.push(g.stats.queue_ms);
+            }
+            Response::Overloaded { .. } => shed.shed += 1,
+            Response::DeadlineExceeded { .. } => shed.deadline_missed += 1,
+            _ => shed.errored += 1,
+        }
+    }
+    if !accepted_queue_ms.is_empty() {
+        shed.p99_accepted_queue_ms = percentile(&accepted_queue_ms, 0.99);
+    }
+    pool.stop();
+    pool.join();
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(shed.answered(), shed.issued, "overload storm conservation");
+    assert!(shed.shed >= 1, "a warm EWMA must shed 1 ms deadlines");
+    assert!(shed.completed >= 1, "generous deadlines must complete");
+
+    let j = resilience_json(
+        &kill.tally,
+        kill.bit_identical,
+        kill.restarts as f64,
+        kill.retries as f64,
+        &shed,
+    );
+    let rate = j.f64_of("answered_rate").expect("answered_rate in schema");
+    assert!(rate >= 0.9, "chaos answered_rate {rate} below the gate floor's tolerance");
+    let path = write_bench_json("resilience", &j).expect("write BENCH_resilience.json");
+    assert!(path.exists());
+}

@@ -51,6 +51,8 @@ fn req(
         delta,
         policy: PolicyChoice::Default,
         return_images: true,
+        deadline_ms: None,
+        priority: 0,
     }
 }
 
@@ -137,8 +139,8 @@ fn storm_artifacts(tag: &str) -> std::path::PathBuf {
         1,
         &[4],
         &[
-            SynthLevel { kind: "eps", scale: 0.5, work: 24 },
-            SynthLevel { kind: "eps", scale: 0.4, work: 24 },
+            SynthLevel { kind: "eps", scale: 0.5, work: 24, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 24, fault: "" },
         ],
     )
     .expect("synthetic artifacts")
@@ -186,9 +188,9 @@ fn theory_policy_served_after_fit_rejected_before() {
         1,
         &[4],
         &[
-            SynthLevel { kind: "eps", scale: 0.5, work: 16 },
-            SynthLevel { kind: "eps", scale: 0.4, work: 16 },
-            SynthLevel { kind: "eps", scale: 0.3, work: 16 },
+            SynthLevel { kind: "eps", scale: 0.5, work: 16, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 16, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.3, work: 16, fault: "" },
         ],
     )
     .unwrap();

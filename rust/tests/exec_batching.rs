@@ -32,6 +32,12 @@ fn storm_guard() -> std::sync::MutexGuard<'static, ()> {
     STORM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Grouping knobs under test; everything else (liveness polling) stays
+/// at the executor defaults.
+fn opts(linger_us: u64, max_group: usize) -> ExecOptions {
+    ExecOptions { linger_us, max_group, ..ExecOptions::default() }
+}
+
 /// Levels of the shared test artifact family:
 /// 1 = slow eps (the busy-execute hold), 2 = fast eps, 3 = fail,
 /// 4 = panic.
@@ -47,10 +53,10 @@ fn test_manifest(tag: &str) -> (std::path::PathBuf, Manifest) {
         1,
         &[8],
         &[
-            SynthLevel { kind: "eps", scale: 0.45, work: 150_000 },
-            SynthLevel { kind: "eps", scale: 0.6, work: 8 },
-            SynthLevel { kind: "fail", scale: 1.0, work: 1 },
-            SynthLevel { kind: "panic", scale: 1.0, work: 1 },
+            SynthLevel { kind: "eps", scale: 0.45, work: 150_000, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.6, work: 8, fault: "" },
+            SynthLevel { kind: "fail", scale: 1.0, work: 1, fault: "" },
+            SynthLevel { kind: "panic", scale: 1.0, work: 1, fault: "" },
         ],
     )
     .expect("writing synthetic artifacts");
@@ -83,18 +89,9 @@ fn concurrent_storm_groups_and_matches_serial_bitwise() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("storm");
     let metrics = Metrics::new();
-    let (serial, _js) = spawn_executor_with(
-        manifest.clone(),
-        None,
-        ExecOptions { linger_us: 0, max_group: 1 },
-    )
-    .unwrap();
-    let (grouped, _jg) = spawn_executor_with(
-        manifest,
-        Some(metrics.clone()),
-        ExecOptions { linger_us: 500, max_group: 8 },
-    )
-    .unwrap();
+    let (serial, _js) = spawn_executor_with(manifest.clone(), None, opts(0, 1)).unwrap();
+    let (grouped, _jg) =
+        spawn_executor_with(manifest, Some(metrics.clone()), opts(500, 8)).unwrap();
     serial.warmup(8).unwrap();
     grouped.warmup(8).unwrap();
 
@@ -136,8 +133,7 @@ fn concurrent_storm_groups_and_matches_serial_bitwise() {
 fn jobs_queued_behind_a_busy_execute_group_deterministically() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("hold");
-    let (handle, _join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -174,8 +170,7 @@ fn jobs_queued_behind_a_busy_execute_group_deterministically() {
 fn grouped_jvp_matches_singleton_dispatch() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("jvp");
-    let (handle, _join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -221,8 +216,7 @@ fn grouped_jvp_matches_singleton_dispatch() {
 fn engine_error_mid_group_errors_every_member_without_hanging() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("fail-group");
-    let (handle, _join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -259,8 +253,7 @@ fn engine_error_mid_group_errors_every_member_without_hanging() {
 fn executor_death_mid_group_errors_not_hangs() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("panic-group");
-    let (handle, _join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
 
     // Two grouped jobs are in flight when the engine panics mid-execute:
@@ -289,8 +282,7 @@ fn executor_death_mid_group_errors_not_hangs() {
 fn jobs_sent_after_stop_are_refused_not_hung() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("stop");
-    let (handle, join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
 
     let (ra, rb) = with_busy_executor(&handle, || {
@@ -336,22 +328,13 @@ fn exec_batching_bench_artifact_is_produced_and_shows_the_win() {
         4,
         1,
         &[workload.bucket],
-        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work }],
+        &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work, fault: "" }],
     )
     .unwrap();
     let manifest = Manifest::load(&dir).unwrap();
-    let (serial, _js) = spawn_executor_with(
-        manifest.clone(),
-        None,
-        ExecOptions { linger_us: 0, max_group: 1 },
-    )
-    .unwrap();
-    let (grouped, _jg) = spawn_executor_with(
-        manifest,
-        None,
-        ExecOptions { linger_us: workload.linger_us, max_group: workload.max_group },
-    )
-    .unwrap();
+    let (serial, _js) = spawn_executor_with(manifest.clone(), None, opts(0, 1)).unwrap();
+    let (grouped, _jg) =
+        spawn_executor_with(manifest, None, opts(workload.linger_us, workload.max_group)).unwrap();
     serial.warmup(workload.bucket).unwrap();
     grouped.warmup(workload.bucket).unwrap();
 
@@ -385,8 +368,7 @@ fn exec_batching_bench_artifact_is_produced_and_shows_the_win() {
 fn neural_shard_routing_is_bit_identical_to_single_job_dispatch() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("shard-routing");
-    let (handle, _join) =
-        spawn_executor_with(manifest, None, ExecOptions { linger_us: 0, max_group: 8 }).unwrap();
+    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
     handle.warmup(8).unwrap();
 
     // cost_reps 0: FLOP costs, no measurement traffic.

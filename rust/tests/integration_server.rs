@@ -208,8 +208,8 @@ fn shutdown_under_load_answers_every_request() {
         1,
         &[4],
         &[
-            SynthLevel { kind: "eps", scale: 0.5, work: 256 },
-            SynthLevel { kind: "eps", scale: 0.4, work: 256 },
+            SynthLevel { kind: "eps", scale: 0.5, work: 256, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 256, fault: "" },
         ],
     )
     .expect("synthetic artifacts");

@@ -264,7 +264,7 @@ fn grouped_eps_bit_identical_to_singleton_dispatch() {
         4, // dim 16
         1,
         &[1, 8],
-        &[SynthLevel { kind: "eps", scale: 0.55, work: 64 }],
+        &[SynthLevel { kind: "eps", scale: 0.55, work: 64, fault: "" }],
     )
     .expect("synthetic artifacts");
     let manifest = Manifest::load(&dir).unwrap();
@@ -273,7 +273,7 @@ fn grouped_eps_bit_identical_to_singleton_dispatch() {
         let (handle, join) = spawn_executor_with(
             manifest.clone(),
             None,
-            ExecOptions { linger_us: 300, max_group },
+            ExecOptions { linger_us: 300, max_group, ..ExecOptions::default() },
         )
         .unwrap();
         handle.warmup(8).unwrap();

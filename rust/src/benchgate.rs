@@ -76,6 +76,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.0,
         label: "chaos-storm answered rate (kill + overload)",
     },
+    TrackedMetric {
+        file: "BENCH_trace_overhead.json",
+        path: &["sampled_overhead_ratio"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "flight-recorder sampled tracing overhead ratio",
+    },
 ];
 
 /// Outcome per tracked metric.

@@ -1229,8 +1229,9 @@ pub fn coord_requests(w: &CoordWorkload) -> Vec<GenRequest> {
 pub struct CoordPoint {
     pub lanes: usize,
     pub images_per_s: f64,
-    /// Executor `group_occupancy` gauge after the storm (mean jobs per
-    /// multi-job group; 0 when no group ever formed).
+    /// Mean jobs per multi-job group over the storm, derived from the
+    /// executor's grouped-jobs / groups counters (0 when no group ever
+    /// formed).
     pub occupancy: f64,
     /// Total PJRT executes the storm cost.
     pub exec_calls: u64,
@@ -1304,7 +1305,11 @@ pub fn coord_lanes_point(
     let point = CoordPoint {
         lanes,
         images_per_s: images_total / best_secs,
-        occupancy: metrics.group_occupancy.get(),
+        occupancy: if stats.exec_groups > 0 {
+            stats.grouped_jobs as f64 / stats.exec_groups as f64
+        } else {
+            0.0
+        },
         exec_calls: stats.exec_calls,
     };
     handle.stop();

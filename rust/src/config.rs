@@ -122,6 +122,13 @@ pub struct ServeConfig {
     /// Liveness-poll period (µs) while a caller waits on the executor —
     /// the bound on stop/join latency after executor death.
     pub exec_poll_us: u64,
+    /// Flight recorder head sampling: trace 1 request in N end to end
+    /// (0 = tracing off, 1 = every request).  See `crate::trace`.
+    pub trace_sample_n: usize,
+    /// Dump the flight recorder's spans as Chrome trace-event JSON to
+    /// this path when the server shuts down (loads in Perfetto /
+    /// `chrome://tracing`); empty = no dump.
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -150,6 +157,8 @@ impl Default for ServeConfig {
             retry_backoff_us: 500,
             shed_headroom: 1.0,
             exec_poll_us: 50_000,
+            trace_sample_n: 16,
+            trace_out: None,
         }
     }
 }
@@ -227,6 +236,14 @@ impl ServeConfig {
                     self.exec_poll_us =
                         v.as_usize().ok_or_else(|| anyhow!("exec_poll_us: int"))? as u64
                 }
+                "trace_sample_n" => {
+                    self.trace_sample_n =
+                        v.as_usize().ok_or_else(|| anyhow!("trace_sample_n: int"))?
+                }
+                "trace_out" => {
+                    self.trace_out =
+                        Some(v.as_str().ok_or_else(|| anyhow!("trace_out: string"))?.into())
+                }
                 other => return Err(anyhow!("unknown config key '{other}'")),
             }
         }
@@ -279,6 +296,10 @@ impl ServeConfig {
         cfg.retry_backoff_us = args.u64_or("retry-backoff-us", cfg.retry_backoff_us);
         cfg.shed_headroom = args.f64_or("shed-headroom", cfg.shed_headroom);
         cfg.exec_poll_us = args.u64_or("exec-poll-us", cfg.exec_poll_us);
+        cfg.trace_sample_n = args.usize_or("trace-sample-n", cfg.trace_sample_n);
+        if let Some(path) = args.get("trace-out") {
+            cfg.trace_out = Some(path.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -568,6 +589,23 @@ mod tests {
         assert!(ServeConfig::from_args(&args("serve --retry-backoff-us 2000000")).is_err());
         assert!(ServeConfig::from_args(&args("serve --shed-headroom 0")).is_err());
         assert!(ServeConfig::from_args(&args("serve --shed-headroom 1000")).is_err());
+    }
+
+    #[test]
+    fn trace_knobs_apply() {
+        let d = ServeConfig::default();
+        assert_eq!(d.trace_sample_n, 16, "1-in-16 head sampling by default");
+        assert_eq!(d.trace_out, None);
+        let cli = ServeConfig::from_args(&args("serve --trace-sample-n 1 --trace-out trace.json"))
+            .unwrap();
+        assert_eq!(cli.trace_sample_n, 1);
+        assert_eq!(cli.trace_out.as_deref(), Some("trace.json"));
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"trace_sample_n": 0, "trace_out": "/tmp/t.json"}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.trace_sample_n, 0, "0 = tracing off, still valid");
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/t.json"));
+        cfg.validate().unwrap();
     }
 
     #[test]

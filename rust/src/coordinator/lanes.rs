@@ -53,17 +53,26 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::protocol::{GenRequest, Response};
 use crate::coordinator::scheduler::Scheduler;
 use crate::metrics::Metrics;
+use crate::trace::{self, Attr, Stage, TraceTag};
 use crate::util::json::Json;
 
 /// Per-request response channel the server (or a test) blocks on.
 pub type RespTx = Sender<Response>;
+
+/// The batcher payload a queued request carries: its response channel
+/// plus its flight-recorder tag (zero when unsampled), so a sampled
+/// request stays traceable across the queue/lane/executor handoffs.
+pub struct Submission {
+    pub tx: RespTx,
+    pub trace: TraceTag,
+}
 
 /// EWMA smoothing factor for the batch wall-time estimate the admission
 /// controller divides deadlines by (~last 5 batches dominate).
 const EWMA_ALPHA: f64 = 0.2;
 
 struct Shared {
-    batcher: Mutex<Batcher<RespTx>>,
+    batcher: Mutex<Batcher<Submission>>,
     wake: Condvar,
     stop: AtomicBool,
     /// False while a paused pool holds its runners back (tests pre-load
@@ -81,7 +90,7 @@ struct Shared {
 /// *outside* the lock), so the data is valid and cascading the poison
 /// into every surviving lane — and the accept path — would turn one bad
 /// batch into a dead server.
-fn lock_batcher(shared: &Shared) -> MutexGuard<'_, Batcher<RespTx>> {
+fn lock_batcher(shared: &Shared) -> MutexGuard<'_, Batcher<Submission>> {
     shared.batcher.lock().unwrap_or_else(|p| p.into_inner())
 }
 
@@ -177,7 +186,16 @@ impl LanePool {
     /// wait already blows the request's deadline), a backpressure/stop
     /// error immediately, or a shutdown-drain error at the latest.
     pub fn submit(&self, req: GenRequest) -> Receiver<Response> {
+        self.submit_traced(req, trace::recorder().admit())
+    }
+
+    /// [`LanePool::submit`] with an explicit flight-recorder tag — the
+    /// server path mints the tag at accept time so the admission span
+    /// parents under the request's root span.
+    pub fn submit_traced(&self, req: GenRequest, tag: TraceTag) -> Receiver<Response> {
         let (tx, rx) = channel();
+        let rec = trace::recorder();
+        let adm_start = if tag.sampled() { rec.now_us() } else { 0 };
         // The stop check must happen under the batcher lock: `join`'s
         // final drain also holds it, so a push that observes stop=false
         // here is ordered before the drain and will be answered by it —
@@ -201,19 +219,28 @@ impl LanePool {
                     drop(q);
                     self.metrics.sheds.inc();
                     self.metrics.rejected.inc();
+                    if tag.sampled() {
+                        rec.record(tag, Stage::Shed, adm_start, Attr::default());
+                    }
                     let retry_after_ms = (est_ms - deadline as f64).max(1.0).ceil() as u64;
                     let _ = tx.send(Response::Overloaded { retry_after_ms });
                     return rx;
                 }
             }
-            q.push(req, tx)
+            q.push(req, Submission { tx, trace: tag })
         };
         match enqueue {
             Err(item) => {
                 self.metrics.rejected.inc();
-                let _ = item.payload.send(Response::Error("server overloaded (queue full)".into()));
+                let _ =
+                    item.payload.tx.send(Response::Error("server overloaded (queue full)".into()));
             }
-            Ok(()) => self.shared.wake.notify_all(),
+            Ok(()) => {
+                if tag.sampled() {
+                    rec.record(tag, Stage::Admission, adm_start, Attr::default());
+                }
+                self.shared.wake.notify_all()
+            }
         }
         rx
     }
@@ -270,7 +297,7 @@ impl LanePool {
         let leftovers = lock_batcher(&self.shared).drain_all();
         for item in leftovers {
             self.metrics.rejected.inc();
-            let _ = item.payload.send(Response::Error("server shutting down".into()));
+            let _ = item.payload.tx.send(Response::Error("server shutting down".into()));
         }
     }
 }
@@ -324,7 +351,20 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
             let deadline_ms = item.req.deadline_ms.unwrap_or(0);
             metrics.deadline_misses.inc();
             metrics.rejected.inc();
-            let _ = item.payload.send(Response::DeadlineExceeded { waited_ms, deadline_ms });
+            if item.payload.trace.sampled() {
+                let rec = trace::recorder();
+                let now = rec.now_us();
+                let start = now.saturating_sub(item.enqueued.elapsed().as_micros() as u64);
+                rec.record_span(
+                    rec.span_id(),
+                    item.payload.trace,
+                    Stage::DeadlineMiss,
+                    start,
+                    now,
+                    Attr::default(),
+                );
+            }
+            let _ = item.payload.tx.send(Response::DeadlineExceeded { waited_ms, deadline_ms });
         }
         if batch.is_empty() {
             // Everything queued in this class had expired; return the
@@ -338,12 +378,53 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
         metrics.runner_busy.inc();
         let reqs: Vec<GenRequest> = batch.iter().map(|w| w.req.clone()).collect();
         let queue_times: Vec<Duration> = batch.iter().map(|w| w.enqueued.elapsed()).collect();
+        // Flight recorder: close a queue span per sampled member (its
+        // wait is over the moment it was popped into this batch), then
+        // run the whole batch under a lane span parented to the first
+        // sampled member — a shared batch has one execution timeline, so
+        // one trace carries it and the others keep their queue spans.
+        let rec = trace::recorder();
+        for item in &batch {
+            if item.payload.trace.sampled() {
+                let now = rec.now_us();
+                let start = now.saturating_sub(item.enqueued.elapsed().as_micros() as u64);
+                rec.record_span(
+                    rec.span_id(),
+                    item.payload.trace,
+                    Stage::Queue,
+                    start,
+                    now,
+                    Attr::default(),
+                );
+            }
+        }
+        let batch_tag =
+            batch.iter().map(|w| w.payload.trace).find(|t| t.sampled()).unwrap_or_default();
+        let lane_span = if batch_tag.sampled() { rec.span_id() } else { 0 };
+        let lane_start = if batch_tag.sampled() { rec.now_us() } else { 0 };
+        if batch_tag.sampled() {
+            // Downstream layers (scheduler, denoisers, executor handles)
+            // read the lane thread's current tag; children parent under
+            // the lane span.
+            trace::set_current(batch_tag.under(lane_span));
+        }
         // A panic inside one batch (an engine `expect`, a poisoned
         // internal lock) must cost exactly that batch, not the lane:
         // catch it, answer the members, and keep serving.
         let started = Instant::now();
         let result = catch_unwind(AssertUnwindSafe(|| scheduler.execute(&reqs)));
         let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+        if batch_tag.sampled() {
+            rec.record_span(
+                lane_span,
+                batch_tag,
+                Stage::Lane,
+                lane_start,
+                rec.now_us(),
+                Attr::default(),
+            );
+        }
+        trace::clear_current();
         {
             let mut ewma =
                 shared.ewma_batch_ms.lock().unwrap_or_else(|p| p.into_inner());
@@ -358,8 +439,11 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                 for ((item, mut resp), qd) in batch.into_iter().zip(responses).zip(queue_times) {
                     resp.stats.queue_ms = qd.as_secs_f64() * 1e3;
                     metrics.queue_latency.record(qd);
+                    if let Some(&top) = item.req.levels.last() {
+                        metrics.record_level_queue(top, qd);
+                    }
                     metrics.completed.inc();
-                    let _ = item.payload.send(Response::Gen(resp));
+                    let _ = item.payload.tx.send(Response::Gen(resp));
                 }
             }
             Ok(Err(e)) => {
@@ -367,7 +451,7 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                 for item in batch {
                     metrics.errors_internal.inc();
                     metrics.rejected.inc();
-                    let _ = item.payload.send(Response::Error(msg.clone()));
+                    let _ = item.payload.tx.send(Response::Error(msg.clone()));
                 }
             }
             Err(_) => {
@@ -375,7 +459,7 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                 for item in batch {
                     metrics.errors_internal.inc();
                     metrics.rejected.inc();
-                    let _ = item.payload.send(Response::Error(msg.clone()));
+                    let _ = item.payload.tx.send(Response::Error(msg.clone()));
                 }
             }
         }
@@ -436,7 +520,9 @@ mod tests {
 
         // The accept/pop paths keep working on the recovered guard.
         let (tx, _rx) = channel();
-        lock_batcher(&shared).push(test_req(), tx).expect("push on recovered guard");
+        lock_batcher(&shared)
+            .push(test_req(), Submission { tx, trace: TraceTag::default() })
+            .expect("push on recovered guard");
         assert_eq!(lock_batcher(&shared).len(), 1);
 
         // The runner's condvar wait also survives the poisoned relock.

@@ -9,6 +9,8 @@
 //! {"cmd":"metrics"}
 //! {"cmd":"calibration"}
 //! {"cmd":"calibration","set_budget":2.5}
+//! {"cmd":"trace"}
+//! {"cmd":"trace","limit":200}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
@@ -28,6 +30,11 @@
 //! present, first re-derives the policy at that compute budget.
 //! `set_budget: 0` reverts to the auto budget (match the baseline
 //! policy's spend); negative or non-finite values are rejected.
+//!
+//! `trace` is the flight-recorder admin request: it returns the most
+//! recent sampled spans (newest last), optionally capped by `limit`,
+//! with their trace/parent ids and `(level, bucket, t)` attribution —
+//! see `crate::trace`.
 //!
 //! Responses are single JSON objects with `"ok"` plus either payload
 //! fields or `"error"`.
@@ -97,6 +104,9 @@ pub enum Request {
     Metrics,
     /// Calibration snapshot; optionally sets the autopilot budget first.
     Calibration { set_budget: Option<f64> },
+    /// Flight-recorder snapshot: recent sampled spans, newest last,
+    /// optionally capped at `limit` spans.
+    Trace { limit: Option<usize> },
     Ping,
     Shutdown,
 }
@@ -129,6 +139,8 @@ pub enum Response {
     Metrics(Json),
     /// Calibrator snapshot (`{"enabled":false}` when calibration is off).
     Calibration(Json),
+    /// Flight-recorder span snapshot (see `crate::trace::Recorder::spans_json`).
+    Trace(Json),
     Pong,
     Error(String),
     /// Typed deadline miss: the entry expired in queue and was answered
@@ -170,6 +182,19 @@ impl Request {
                     }
                 };
                 Ok(Request::Calibration { set_budget })
+            }
+            "trace" => {
+                let limit = match j.get("limit") {
+                    None => None,
+                    Some(v) => {
+                        let l = v.as_usize().ok_or_else(|| anyhow!("limit must be an integer"))?;
+                        if l == 0 {
+                            return Err(anyhow!("limit must be >= 1"));
+                        }
+                        Some(l)
+                    }
+                };
+                Ok(Request::Trace { limit })
             }
             "generate" => {
                 let n = j.usize_of("n").unwrap_or(1);
@@ -265,6 +290,7 @@ impl Response {
             Response::Calibration(c) => {
                 Json::obj().with("ok", Json::Bool(true)).with("calibration", c.clone())
             }
+            Response::Trace(t) => Json::obj().with("ok", Json::Bool(true)).with("trace", t.clone()),
             Response::Gen(g) => {
                 let stats = Json::obj()
                     .with("wall_ms", Json::num(g.stats.wall_ms))
@@ -406,6 +432,31 @@ mod tests {
         assert!(
             Request::parse(r#"{"cmd":"calibration","set_budget":"2.5"}"#, &defaults()).is_err()
         );
+    }
+
+    #[test]
+    fn parse_trace_request() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"trace"}"#, &defaults()).unwrap(),
+            Request::Trace { limit: None }
+        );
+        let r = Request::parse(r#"{"cmd":"trace","limit":200}"#, &defaults()).unwrap();
+        assert_eq!(r, Request::Trace { limit: Some(200) });
+        assert!(Request::parse(r#"{"cmd":"trace","limit":0}"#, &defaults()).is_err());
+        assert!(Request::parse(r#"{"cmd":"trace","limit":"all"}"#, &defaults()).is_err());
+    }
+
+    #[test]
+    fn trace_response_serializes() {
+        let snap = Json::obj()
+            .with("sample_n", Json::num(16.0))
+            .with("span_count", Json::num(0.0))
+            .with("spans", Json::Arr(Vec::new()));
+        let line = Response::Trace(snap).to_json().to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(parsed.get_path(&["trace", "sample_n"]), Some(&Json::Num(16.0)));
+        assert!(parsed.get_path(&["trace", "spans"]).unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

@@ -44,8 +44,35 @@ use crate::sde::drift::{DiffusionDrift, LinearPartDrift, ScorePartDrift};
 use crate::sde::em::{em_sample, TimeGrid};
 use crate::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily};
 use crate::sde::{schedule, BrownianPath};
+use crate::trace::{self, Attr, Stage};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Records the batch's Sampler span on drop — panic unwinds included,
+/// so a chaos-path engine panic cannot orphan the executor spans that
+/// already parented under the pre-allocated id (the lane catches the
+/// panic and keeps serving; the trace must stay a connected tree).
+struct SamplerSpan {
+    rec: &'static trace::Recorder,
+    tag: trace::TraceTag,
+    span: u64,
+    start: u64,
+    level: u32,
+}
+
+impl Drop for SamplerSpan {
+    fn drop(&mut self) {
+        self.rec.record_span(
+            self.span,
+            self.tag,
+            Stage::Sampler,
+            self.start,
+            self.rec.now_us(),
+            Attr { level: self.level, ..Attr::default() },
+        );
+        trace::set_current(self.tag);
+    }
+}
 
 /// Owns the denoiser family + measured costs; stateless per call except
 /// for the streaming calibrator.
@@ -343,6 +370,20 @@ impl Scheduler {
         let top = *first.levels.last().ok_or_else(|| anyhow!("levels must not be empty"))?;
         let mut nfe = vec![0u64; self.denoisers.len()];
         let mut cost_units = 0.0f64;
+        // Flight recorder: the lane set this thread's tag before calling
+        // `execute`; wrap the sampler run in a Sampler span and re-parent
+        // the tag under it so the executor's Execute spans nest there.
+        let tag = trace::current();
+        let sampler_span = if tag.sampled() {
+            let rec = trace::recorder();
+            let span = rec.span_id();
+            let guard =
+                SamplerSpan { rec, tag, span, start: rec.now_us(), level: top as u32 };
+            trace::set_current(tag.under(span));
+            Some(guard)
+        } else {
+            None
+        };
         match first.sampler {
             SamplerKind::Mlem => {
                 let base = LinearPartDrift { dim };
@@ -389,6 +430,8 @@ impl Scheduler {
                 cost_units = steps as f64 * n_total as f64 * self.costs[top - 1];
             }
         }
+
+        drop(sampler_span);
 
         // Metrics + split results per request.
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;

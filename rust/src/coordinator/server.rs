@@ -24,6 +24,10 @@ use crate::coordinator::lanes::LanePool;
 use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::scheduler::Scheduler;
 use crate::metrics::Metrics;
+use crate::trace::{self, Attr, Stage};
+
+/// Spans returned by `{"cmd":"trace"}` when the client sends no `limit`.
+const DEFAULT_TRACE_LIMIT: usize = 512;
 
 /// The serving coordinator.
 pub struct Server {
@@ -38,6 +42,9 @@ impl Server {
         // Fix the sampler worker pool under the operator's `threads`
         // knob before any request can create it at an arbitrary size.
         cfg.apply_threads();
+        // Bind the flight recorder's head-sampling rate before the first
+        // request can be admitted.
+        trace::recorder().set_sample_n(cfg.trace_sample_n as u64);
         let metrics = scheduler.metrics().clone();
         let scheduler = Arc::new(scheduler);
         let lanes = Arc::new(LanePool::new(scheduler.clone(), &cfg));
@@ -84,6 +91,14 @@ impl Server {
         for h in handlers {
             let _ = h.join();
         }
+        // Flight-recorder dump: after the drain every span has been
+        // written, so the Chrome trace on disk is complete.
+        if let Some(path) = &self.cfg.trace_out {
+            match trace::recorder().write_chrome(std::path::Path::new(path)) {
+                Ok(()) => eprintln!("[server] wrote trace to {path}"),
+                Err(e) => eprintln!("[server] trace dump failed: {e:#}"),
+            }
+        }
         eprintln!("[server] stopped");
         Ok(())
     }
@@ -111,7 +126,19 @@ fn handle_conn(
         }
         let t0 = Instant::now();
         metrics.requests.inc();
-        let response = match Request::parse(&line, &cfg) {
+        // Flight recorder: head-sample at accept, open the root span,
+        // and hand downstream layers a tag parented under it.
+        let rec = trace::recorder();
+        let tag = rec.admit();
+        let (root_span, req_start) =
+            if tag.sampled() { (rec.span_id(), rec.now_us()) } else { (0, 0) };
+        let rooted = tag.under(root_span);
+        let parse_start = if tag.sampled() { rec.now_us() } else { 0 };
+        let parsed = Request::parse(&line, &cfg);
+        if tag.sampled() {
+            rec.record(rooted, Stage::Parse, parse_start, Attr::default());
+        }
+        let response = match parsed {
             Err(e) => {
                 metrics.errors_bad_request.inc();
                 metrics.rejected.inc();
@@ -128,14 +155,30 @@ fn handle_conn(
             Ok(Request::Calibration { set_budget }) => {
                 Response::Calibration(scheduler.calibration(set_budget))
             }
+            Ok(Request::Trace { limit }) => {
+                Response::Trace(rec.spans_json(limit.unwrap_or(DEFAULT_TRACE_LIMIT)))
+            }
             Ok(Request::Shutdown) => {
                 lanes.stop();
                 let line = Response::ShuttingDown.to_json().to_string();
                 writeln!(writer, "{line}")?;
+                if tag.sampled() {
+                    // Close the root here: this arm breaks past the
+                    // shared respond path, and an unrecorded root would
+                    // orphan the parse span above.
+                    rec.record_span(
+                        root_span,
+                        tag,
+                        Stage::Request,
+                        req_start,
+                        rec.now_us(),
+                        Attr::default(),
+                    );
+                }
                 break;
             }
             Ok(Request::Generate(req)) => {
-                let rx = lanes.submit(req);
+                let rx = lanes.submit_traced(req, rooted);
                 match rx.recv() {
                     Ok(r) => r,
                     Err(_) => {
@@ -154,7 +197,19 @@ fn handle_conn(
             let _ = g;
         }
         let out = response.to_json().to_string();
+        let respond_start = if tag.sampled() { rec.now_us() } else { 0 };
         writeln!(writer, "{out}")?;
+        if tag.sampled() {
+            rec.record(rooted, Stage::Respond, respond_start, Attr::default());
+            rec.record_span(
+                root_span,
+                tag,
+                Stage::Request,
+                req_start,
+                rec.now_us(),
+                Attr::default(),
+            );
+        }
     }
     Ok(())
 }

@@ -78,6 +78,7 @@
 //! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
 //! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching |
 //! | [`coordinator`] | serving layer: server, per-class batcher, multi-lane runner pool, scheduler |
+//! | [`trace`] | flight recorder: sampled end-to-end span tracing (per-thread rings, per-(level, t) attribution, Chrome-trace export) |
 //! | [`benchgate`] | CI bench-regression gate over the `BENCH_*.json` artifacts |
 
 // Kernel-style indexed loops are the idiom throughout this crate: they
@@ -110,3 +111,4 @@ pub mod metrics;
 pub mod parallel;
 pub mod runtime;
 pub mod sde;
+pub mod trace;

@@ -5,6 +5,8 @@
 //!                 [--threads T]  # sampler worker pool size (0 = auto) ...
 //!                 [--batch-workers K]  # coordinator runner lanes (0 = auto: min(levels, 4))
 //!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
+//!                 [--trace-sample-n N]  # flight recorder: trace 1-in-N requests (0 off, 1 all)
+//!                 [--trace-out PATH]  # dump Chrome trace-event JSON on shutdown
 //! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
 //!                 [--levels 1,3,5] [--delta D] [--policy default|theory]
 //!                 [--out images.pgm]

@@ -129,19 +129,28 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (upper edge of the bucket containing it).
+    /// Approximate quantile, linearly interpolated inside the bucket
+    /// that contains it.  (The historical answer was the bucket's upper
+    /// edge, which biased every quantile high by up to one bucket width
+    /// — ~5% — and could exceed a recorded 1ns value outright.)
     pub fn quantile_ns(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
+        let target = (q * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return bucket_upper(i);
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
             }
+            if seen + n >= target {
+                let lower = if i == 0 { 1.0 } else { bucket_upper(i - 1) };
+                let frac = (target - seen) as f64 / n as f64;
+                return lower + frac * (bucket_upper(i) - lower);
+            }
+            seen += n;
         }
         bucket_upper(HIST_BUCKETS - 1)
     }
@@ -162,8 +171,10 @@ pub struct Metrics {
     inner: Arc<MetricsInner>,
 }
 
-#[derive(Default)]
 pub struct MetricsInner {
+    /// Process start time (the snapshot's `uptime_s`; a reset tells a
+    /// dashboard the server restarted).
+    pub start: std::time::Instant,
     /// Requests accepted by the router.
     pub requests: Counter,
     /// Requests completed successfully.
@@ -176,6 +187,10 @@ pub struct MetricsInner {
     pub images: Counter,
     /// Network function evaluations, per level (index 0 = f^1).
     pub nfe_per_level: [Counter; 8],
+    /// NFE recordings whose level fell outside the fixed per-level
+    /// array — previously dropped silently; the ladder integration
+    /// tests assert this stays 0.
+    pub nfe_overflow: Counter,
     /// Estimated FLOPs spent in network evaluations.
     pub flops: Counter,
     /// End-to-end request latency.
@@ -184,14 +199,21 @@ pub struct MetricsInner {
     pub execute_latency: Histogram,
     /// Time requests wait in the batcher queue.
     pub queue_latency: Histogram,
+    /// Per-ladder-level device execute time (index 0 = f^1; the
+    /// snapshot's `per_level` section — where a request's compute
+    /// actually went, the paper's economics made visible).
+    pub level_execute: [Histogram; 8],
+    /// Per-ladder-level queue wait, attributed to the request's top
+    /// level (the level that defines its cost class).
+    pub level_queue: [Histogram; 8],
     /// Multi-job executor groups dispatched as one device execute (the
     /// cross-request micro-batching evidence; see `runtime::executor`).
     pub exec_groups: Counter,
-    /// Jobs that rode in multi-job executor groups.
+    /// Jobs that rode in multi-job executor groups.  Mean group
+    /// occupancy is derived at snapshot time as `grouped_jobs /
+    /// exec_groups` — the historical executor-written gauge misreported
+    /// under concurrent executor generations.
     pub grouped_jobs: Counter,
-    /// Running mean jobs per multi-job group (`grouped_jobs /
-    /// exec_groups`), updated by the executor after every group.
-    pub group_occupancy: Gauge,
     /// Batches currently inside `Scheduler::execute` across all batch
     /// runners (the multi-lane coordinator's live occupancy).
     pub inflight_batches: Level,
@@ -223,6 +245,43 @@ pub struct MetricsInner {
     pub errors_bad_request: Counter,
 }
 
+/// Manual because `Instant` has no `Default`: every metric starts at
+/// zero and the clock starts now.
+impl Default for MetricsInner {
+    fn default() -> Self {
+        MetricsInner {
+            start: std::time::Instant::now(),
+            requests: Counter::default(),
+            completed: Counter::default(),
+            rejected: Counter::default(),
+            batches: Counter::default(),
+            images: Counter::default(),
+            nfe_per_level: Default::default(),
+            nfe_overflow: Counter::default(),
+            flops: Counter::default(),
+            request_latency: Histogram::default(),
+            execute_latency: Histogram::default(),
+            queue_latency: Histogram::default(),
+            level_execute: Default::default(),
+            level_queue: Default::default(),
+            exec_groups: Counter::default(),
+            grouped_jobs: Counter::default(),
+            inflight_batches: Level::default(),
+            runner_busy: Level::default(),
+            batch_runners: Gauge::default(),
+            gamma_hat: Gauge::default(),
+            recalibrations: Counter::default(),
+            calib_probes: Counter::default(),
+            restarts: Counter::default(),
+            retries: Counter::default(),
+            sheds: Counter::default(),
+            deadline_misses: Counter::default(),
+            errors_internal: Counter::default(),
+            errors_bad_request: Counter::default(),
+        }
+    }
+}
+
 impl std::ops::Deref for Metrics {
     type Target = MetricsInner;
     fn deref(&self) -> &MetricsInner {
@@ -238,8 +297,27 @@ impl Metrics {
     pub fn record_nfe(&self, level: usize, count: u64, flops_per_eval: u64) {
         if level >= 1 && level <= self.nfe_per_level.len() {
             self.nfe_per_level[level - 1].add(count);
+        } else {
+            // FLOPs are still accounted below; the overflow counter
+            // makes the dropped per-level attribution visible.
+            self.nfe_overflow.inc();
         }
         self.flops.add(count * flops_per_eval);
+    }
+
+    /// Record a device execute under its ladder level (the `per_level`
+    /// snapshot section); out-of-range levels are ignored.
+    pub fn record_level_execute(&self, level: usize, d: std::time::Duration) {
+        if level >= 1 && level <= self.level_execute.len() {
+            self.level_execute[level - 1].record(d);
+        }
+    }
+
+    /// Record a request's queue wait under its top ladder level.
+    pub fn record_level_queue(&self, level: usize, d: std::time::Duration) {
+        if level >= 1 && level <= self.level_queue.len() {
+            self.level_queue[level - 1].record(d);
+        }
     }
 
     /// Total network evaluations across levels.
@@ -261,6 +339,34 @@ impl Metrics {
                 .map(|c| Json::num(c.get() as f64))
                 .collect(),
         );
+        let groups = self.exec_groups.get();
+        let occupancy =
+            if groups == 0 { 0.0 } else { self.grouped_jobs.get() as f64 / groups as f64 };
+        let per_level = Json::Arr(
+            (0..self.nfe_per_level.len())
+                .filter(|&i| {
+                    self.nfe_per_level[i].get() > 0
+                        || self.level_execute[i].count() > 0
+                        || self.level_queue[i].count() > 0
+                })
+                .map(|i| {
+                    Json::obj()
+                        .with("level", Json::num((i + 1) as f64))
+                        .with("nfe", Json::num(self.nfe_per_level[i].get() as f64))
+                        .with("execute", self.level_execute[i].snapshot())
+                        .with("queue", self.level_queue[i].snapshot())
+                })
+                .collect(),
+        );
+        let build = Json::obj()
+            .with("version", Json::str(env!("CARGO_PKG_VERSION")))
+            .with(
+                "git_sha",
+                match std::env::var("MLEM_GIT_SHA") {
+                    Ok(sha) if !sha.is_empty() => Json::str(sha),
+                    _ => Json::Null,
+                },
+            );
         let wp = crate::parallel::pool_stats();
         let worker_pool = Json::obj()
             .with("workers", Json::num(wp.workers as f64))
@@ -270,16 +376,20 @@ impl Metrics {
             .with("barrier_waits", Json::num(wp.barrier_waits as f64))
             .with("barrier_wait_ns", Json::num(wp.barrier_wait_ns as f64));
         Json::obj()
+            .with("uptime_s", Json::num(self.start.elapsed().as_secs_f64()))
+            .with("build", build)
             .with("requests", Json::num(self.requests.get() as f64))
             .with("completed", Json::num(self.completed.get() as f64))
             .with("rejected", Json::num(self.rejected.get() as f64))
             .with("batches", Json::num(self.batches.get() as f64))
             .with("images", Json::num(self.images.get() as f64))
             .with("nfe_per_level", nfe)
+            .with("nfe_overflow", Json::num(self.nfe_overflow.get() as f64))
             .with("flops", Json::num(self.flops.get() as f64))
-            .with("exec_groups", Json::num(self.exec_groups.get() as f64))
+            .with("per_level", per_level)
+            .with("exec_groups", Json::num(groups as f64))
             .with("grouped_jobs", Json::num(self.grouped_jobs.get() as f64))
-            .with("group_occupancy", Json::num(self.group_occupancy.get()))
+            .with("group_occupancy", Json::num(occupancy))
             .with("inflight_batches", Json::num(self.inflight_batches.get() as f64))
             .with("runner_busy", Json::num(self.runner_busy.get() as f64))
             .with("batch_runners", Json::num(self.batch_runners.get()))
@@ -340,9 +450,43 @@ mod tests {
         m.record_nfe(3, 2, 1_000);
         assert_eq!(m.total_nfe(), 12);
         assert_eq!(m.flops.get(), 10 * 100 + 2 * 1_000);
-        // out-of-range level: flops still counted, nfe dropped
+        assert_eq!(m.nfe_overflow.get(), 0);
+        // out-of-range level: flops still counted, per-level attribution
+        // lands in the overflow counter instead of vanishing
         m.record_nfe(99, 1, 7);
         assert_eq!(m.total_nfe(), 12);
+        assert_eq!(m.flops.get(), 10 * 100 + 2 * 1_000 + 7);
+        assert_eq!(m.nfe_overflow.get(), 1);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket_on_dense_ramp() {
+        // 10k values ramping 100µs..200µs in 10ns steps: the true p50 is
+        // 150µs.  One log bucket near 150µs is ~5% (~7.5µs) wide, so the
+        // historical upper-edge answer could be off by that much;
+        // interpolation must land well inside one bucket width.
+        let h = Histogram::default();
+        for i in 0..10_000u64 {
+            h.record_ns(100_000 + i * 10);
+        }
+        let p50 = h.quantile_ns(0.50);
+        assert!(
+            (p50 - 150_000.0).abs() < 2_000.0,
+            "p50 {p50} should be within 2µs of the true 150µs median"
+        );
+        // the p0-ish quantile can never exceed the smallest recorded value
+        // by more than a bucket width either
+        let p01 = h.quantile_ns(0.001);
+        assert!(p01 < 106_000.0, "p0.1 {p01}");
+    }
+
+    #[test]
+    fn group_occupancy_is_derived_from_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().f64_of("group_occupancy"), Some(0.0));
+        m.exec_groups.add(4);
+        m.grouped_jobs.add(10);
+        assert_eq!(m.snapshot().f64_of("group_occupancy"), Some(2.5));
     }
 
     #[test]
@@ -354,6 +498,21 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.f64_of("requests"), Some(1.0));
         assert_eq!(parsed.f64_of("gamma_hat"), Some(0.0));
+        // restart/deploy correlation: uptime + build section
+        assert!(parsed.f64_of("uptime_s").unwrap() >= 0.0);
+        let build = parsed.get("build").expect("build section");
+        assert_eq!(build.str_of("version"), Some(env!("CARGO_PKG_VERSION")));
+        // per-level attribution sections
+        assert_eq!(parsed.f64_of("nfe_overflow"), Some(0.0));
+        assert!(parsed.get("per_level").and_then(Json::as_arr).is_some());
+        m.record_nfe(2, 3, 10);
+        m.record_level_execute(2, std::time::Duration::from_micros(50));
+        let again = crate::util::json::Json::parse(&m.snapshot().to_string()).unwrap();
+        let levels = again.get("per_level").and_then(Json::as_arr).unwrap();
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0].f64_of("level"), Some(2.0));
+        assert_eq!(levels[0].f64_of("nfe"), Some(3.0));
+        assert_eq!(levels[0].get("execute").unwrap().f64_of("count"), Some(1.0));
         // worker-pool counters ride along (zeros until first dispatch)
         let wp = parsed.get("worker_pool").expect("worker_pool section");
         assert!(wp.f64_of("spawns_avoided").is_some());

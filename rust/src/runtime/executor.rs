@@ -42,6 +42,7 @@ use super::engine::Engine;
 use super::manifest::Manifest;
 use crate::metrics::Metrics;
 use crate::parallel::ScratchPool;
+use crate::trace::{self, Attr, Stage, TraceTag};
 
 /// Executor-owned payload pool: request payload buffers only, nothing
 /// else, so its hit/miss counters measure exactly the request path.
@@ -154,8 +155,8 @@ enum Resp {
 }
 
 enum Job {
-    Eps { level: usize, x: Vec<f32>, t: f64, pallas: bool, resp: Sender<Resp> },
-    EpsJvp { level: usize, x: Vec<f32>, t: f64, v: Vec<f32>, resp: Sender<Resp> },
+    Eps { level: usize, x: Vec<f32>, t: f64, pallas: bool, trace: TraceTag, resp: Sender<Resp> },
+    EpsJvp { level: usize, x: Vec<f32>, t: f64, v: Vec<f32>, trace: TraceTag, resp: Sender<Resp> },
     Combine {
         y: Vec<f32>,
         deltas: Vec<f32>,
@@ -344,6 +345,7 @@ fn spawn_exec_thread(
     manifest: Manifest,
     metrics: Option<Metrics>,
     opts: ExecOptions,
+    generation: u64,
 ) -> Result<(Sender<Job>, Arc<AtomicBool>, JoinHandle<()>)> {
     let (tx, rx) = channel::<Job>();
     let alive = Arc::new(AtomicBool::new(true));
@@ -369,7 +371,7 @@ fn spawn_exec_thread(
                     return;
                 }
             };
-            serve_loop(engine, rx, metrics, opts);
+            serve_loop(engine, rx, metrics, opts, generation);
         })?;
     Ok((tx, alive, join))
 }
@@ -383,7 +385,7 @@ pub fn spawn_executor_with(
     metrics: Option<Metrics>,
     opts: ExecOptions,
 ) -> Result<(ExecutorHandle, JoinHandle<()>)> {
-    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics, opts)?;
+    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics, opts, 0)?;
     Ok((
         ExecutorHandle {
             wiring: Arc::new(RwLock::new(Wiring { tx, alive, generation: 0 })),
@@ -426,26 +428,46 @@ impl Supervisor {
             return Err(gone("executor stopped"));
         }
         let mut joins = self.joins.lock().unwrap_or_else(|p| p.into_inner());
-        {
+        let next_gen = {
             let w = wiring.read().unwrap_or_else(|p| p.into_inner());
             if w.generation > observed || w.alive.load(Ordering::SeqCst) {
                 return Ok(()); // a racing caller already healed this death
             }
-        }
+            w.generation + 1
+        };
         // Reap the dead generation (its thread has exited or is
         // unwinding; join returns promptly) before spawning the next.
         for j in joins.drain(..) {
             let _ = j.join();
         }
-        let (tx, alive, join) =
-            spawn_exec_thread(self.manifest.clone(), self.metrics.clone(), self.exec_opts)?;
+        let (tx, alive, join) = spawn_exec_thread(
+            self.manifest.clone(),
+            self.metrics.clone(),
+            self.exec_opts,
+            next_gen,
+        )?;
         joins.push(join);
         let mut w = wiring.write().unwrap_or_else(|p| p.into_inner());
         w.tx = tx;
         w.alive = alive;
-        w.generation += 1;
+        w.generation = next_gen;
         if let Some(m) = &self.metrics {
             m.restarts.inc();
+        }
+        // Chaos tag: the respawn lands in the affected request's trace,
+        // so a retried request's timeline shows both generations.
+        let tag = trace::current();
+        if tag.sampled() {
+            let rec = trace::recorder();
+            let now = rec.now_us();
+            rec.record_span(
+                rec.span_id(),
+                tag,
+                Stage::Restart,
+                now,
+                now,
+                Attr { generation: next_gen + 1, ..Attr::default() },
+            );
         }
         eprintln!("[supervisor] executor respawned (generation {})", w.generation);
         Ok(())
@@ -467,7 +489,7 @@ pub fn spawn_supervised(
     opts: ExecOptions,
     retry: SupervisorOptions,
 ) -> Result<ExecutorHandle> {
-    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics.clone(), opts)?;
+    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics.clone(), opts, 0)?;
     let supervisor = Arc::new(Supervisor {
         manifest: manifest.clone(),
         metrics,
@@ -486,7 +508,15 @@ pub fn spawn_supervised(
 }
 
 /// The executor's event loop: aggregation over the job channel.
-fn serve_loop(mut engine: Engine, rx: Receiver<Job>, metrics: Option<Metrics>, opts: ExecOptions) {
+/// `generation` stamps this thread's Execute spans so a supervisor
+/// respawn is visible in a traced request's timeline.
+fn serve_loop(
+    mut engine: Engine,
+    rx: Receiver<Job>,
+    metrics: Option<Metrics>,
+    opts: ExecOptions,
+    generation: u64,
+) {
     let dim = engine.manifest().dim;
     let tables = bucket_tables(engine.manifest());
     let max_group = opts.max_group.max(1);
@@ -507,10 +537,11 @@ fn serve_loop(mut engine: Engine, rx: Receiver<Job>, metrics: Option<Metrics>, o
             break 'serve;
         }
 
-        // Try to grow a group around an aggregatable head job.
-        let head_key = if max_group > 1 { key_of(&job, dim, &tables) } else { None };
+        // The head job's key is computed even when grouping is off: the
+        // trace spans borrow its bucket for their cost attribution.
+        let head_key = key_of(&job, dim, &tables);
         let mut group: Vec<Job> = vec![job];
-        if let Some(key) = head_key {
+        if let (true, Some(key)) = (max_group > 1, head_key) {
             // Opportunistic drain: everything already queued is a
             // grouping candidate at zero latency cost.
             while pending.len() < DRAIN_CAP {
@@ -593,17 +624,21 @@ fn serve_loop(mut engine: Engine, rx: Receiver<Job>, metrics: Option<Metrics>, o
             exec_groups += 1;
             grouped_jobs += n;
             if let Some(m) = &metrics {
+                // Mean occupancy is derived at snapshot time from these
+                // two counters; the historical per-group gauge write
+                // misreported under concurrent executor generations.
                 m.exec_groups.inc();
                 m.grouped_jobs.add(n);
-                m.group_occupancy.set(grouped_jobs as f64 / exec_groups as f64);
             }
-            run_group(&mut engine, group, &metrics);
+            run_group(&mut engine, group, &metrics, head_key, generation);
         } else {
             run_single(
                 &mut engine,
                 group.pop().expect("singleton group"),
                 &metrics,
                 (exec_groups, grouped_jobs),
+                head_key,
+                generation,
             );
         }
     }
@@ -631,7 +666,13 @@ enum GroupKind {
 /// mid-group, **every** member receives the error — a dead engine must
 /// never turn into a hang for the jobs that happened to share its last
 /// dispatch.
-fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
+fn run_group(
+    engine: &mut Engine,
+    group: Vec<Job>,
+    metrics: &Option<Metrics>,
+    key: Option<GroupKey>,
+    generation: u64,
+) {
     let pool = payload_pool();
     // All jobs in a group share kind/level/t/pallas by construction.
     let kind = match group.first() {
@@ -641,21 +682,30 @@ fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
         Some(Job::EpsJvp { level, t, .. }) => GroupKind::Jvp { level: *level, t: *t },
         _ => unreachable!("only eps/jvp jobs are grouped"),
     };
+    let bucket = key.map_or(0, |k| k.bucket);
     match kind {
         GroupKind::Eps { level, t, pallas } => {
             let mut xs = Vec::with_capacity(group.len());
             let mut resps = Vec::with_capacity(group.len());
+            let mut tags = Vec::with_capacity(group.len());
             for job in group {
-                if let Job::Eps { x, resp, .. } = job {
+                if let Job::Eps { x, trace, resp, .. } = job {
                     xs.push(x);
+                    tags.push(trace);
                     resps.push(resp);
                 }
             }
             let parts: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            let traced = tags.iter().any(TraceTag::sampled);
+            let rec = trace::recorder();
+            let start_us = if traced { rec.now_us() } else { 0 };
             let t0 = Instant::now();
             let r = engine.eps_group(level, &parts, t, pallas);
+            let dt = t0.elapsed();
+            let exec_end_us = if traced { rec.now_us() } else { 0 };
             if let Some(m) = metrics {
-                m.execute_latency.record(t0.elapsed());
+                m.execute_latency.record(dt);
+                m.record_level_execute(level, dt);
             }
             match r {
                 Ok(outs) => {
@@ -670,6 +720,36 @@ fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
                     }
                 }
             }
+            if traced {
+                let end_us = rec.now_us();
+                let attr = Attr {
+                    level: level as u32,
+                    bucket: bucket as u32,
+                    t_bits: t.to_bits(),
+                    generation: generation + 1,
+                };
+                let gen_only = Attr { generation: generation + 1, ..Attr::default() };
+                for tag in tags.iter().filter(|tag| tag.sampled()) {
+                    let g = rec.span_id();
+                    rec.record_span(g, *tag, Stage::ExecGroup, start_us, end_us, gen_only);
+                    rec.record_span(
+                        rec.span_id(),
+                        tag.under(g),
+                        Stage::Execute,
+                        start_us,
+                        exec_end_us,
+                        attr,
+                    );
+                    rec.record_span(
+                        rec.span_id(),
+                        tag.under(g),
+                        Stage::Scatter,
+                        exec_end_us,
+                        end_us,
+                        gen_only,
+                    );
+                }
+            }
             for x in xs {
                 pool.put(x);
             }
@@ -677,14 +757,19 @@ fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
         GroupKind::Jvp { level, t } => {
             let mut xvs = Vec::with_capacity(group.len());
             let mut resps = Vec::with_capacity(group.len());
+            let mut tags = Vec::with_capacity(group.len());
             for job in group {
-                if let Job::EpsJvp { x, v, resp, .. } = job {
+                if let Job::EpsJvp { x, v, trace, resp, .. } = job {
                     xvs.push((x, v));
+                    tags.push(trace);
                     resps.push(resp);
                 }
             }
             let parts: Vec<(&[f32], &[f32])> =
                 xvs.iter().map(|(x, v)| (x.as_slice(), v.as_slice())).collect();
+            let traced = tags.iter().any(TraceTag::sampled);
+            let rec = trace::recorder();
+            let start_us = if traced { rec.now_us() } else { 0 };
             let r = engine.eps_jvp_group(level, &parts, t);
             match r {
                 Ok(outs) => {
@@ -697,6 +782,18 @@ fn run_group(engine: &mut Engine, group: Vec<Job>, metrics: &Option<Metrics>) {
                     for resp in &resps {
                         let _ = resp.send(Resp::Pair(Err(anyhow!("grouped jvp failed: {msg}"))));
                     }
+                }
+            }
+            if traced {
+                let end_us = rec.now_us();
+                let attr = Attr {
+                    level: level as u32,
+                    bucket: bucket as u32,
+                    t_bits: t.to_bits(),
+                    generation: generation + 1,
+                };
+                for tag in tags.iter().filter(|tag| tag.sampled()) {
+                    rec.record_span(rec.span_id(), *tag, Stage::Execute, start_us, end_us, attr);
                 }
             }
             for (x, v) in xvs {
@@ -713,20 +810,55 @@ fn run_single(
     job: Job,
     metrics: &Option<Metrics>,
     group_counters: (u64, u64),
+    key: Option<GroupKey>,
+    generation: u64,
 ) {
     let pool = payload_pool();
+    let bucket = key.map_or(0, |k| k.bucket);
     match job {
-        Job::Eps { level, x, t, pallas, resp } => {
+        Job::Eps { level, x, t, pallas, trace, resp } => {
+            let rec = trace::recorder();
+            let start_us = if trace.sampled() { rec.now_us() } else { 0 };
             let t0 = Instant::now();
             let r = engine.eps(level, &x, t, pallas);
+            let dt = t0.elapsed();
             if let Some(m) = metrics {
-                m.execute_latency.record(t0.elapsed());
+                m.execute_latency.record(dt);
+                m.record_level_execute(level, dt);
+            }
+            if trace.sampled() {
+                rec.record(
+                    trace,
+                    Stage::Execute,
+                    start_us,
+                    Attr {
+                        level: level as u32,
+                        bucket: bucket as u32,
+                        t_bits: t.to_bits(),
+                        generation: generation + 1,
+                    },
+                );
             }
             pool.put(x);
             let _ = resp.send(Resp::Vec(r));
         }
-        Job::EpsJvp { level, x, t, v, resp } => {
+        Job::EpsJvp { level, x, t, v, trace, resp } => {
+            let rec = trace::recorder();
+            let start_us = if trace.sampled() { rec.now_us() } else { 0 };
             let r = engine.eps_jvp(level, &x, t, &v);
+            if trace.sampled() {
+                rec.record(
+                    trace,
+                    Stage::Execute,
+                    start_us,
+                    Attr {
+                        level: level as u32,
+                        bucket: bucket as u32,
+                        t_bits: t.to_bits(),
+                        generation: generation + 1,
+                    },
+                );
+            }
             pool.put(x);
             pool.put(v);
             let _ = resp.send(Resp::Pair(r));
@@ -842,6 +974,21 @@ impl ExecutorHandle {
                     if let Some(m) = &sup.metrics {
                         m.retries.inc();
                     }
+                    // Chaos tag: mark the replay in the affected trace
+                    // (attr decodes to the generation that died).
+                    let tag = trace::current();
+                    if tag.sampled() {
+                        let rec = trace::recorder();
+                        let now = rec.now_us();
+                        rec.record_span(
+                            rec.span_id(),
+                            tag,
+                            Stage::Replay,
+                            now,
+                            now,
+                            Attr { generation: observed + 1, ..Attr::default() },
+                        );
+                    }
                     let backoff_us = (sup.retry.retry_backoff_us << attempt.min(20)).min(100_000);
                     if backoff_us > 0 {
                         std::thread::sleep(Duration::from_micros(backoff_us));
@@ -862,10 +1009,13 @@ impl ExecutorHandle {
     }
 
     /// Evaluate a level's eps network on a flattened `[n, dim]` batch.
+    /// The calling thread's active trace tag (set by the lane / shard
+    /// plumbing) rides along so sampled requests trace end to end.
     pub fn eps(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
         self.retrying(|h| {
             let x = pooled_copy(x);
-            h.call_vec(|resp| Job::Eps { level, x, t, pallas: false, resp })
+            let trace = trace::current();
+            h.call_vec(|resp| Job::Eps { level, x, t, pallas: false, trace, resp })
         })
     }
 
@@ -873,7 +1023,8 @@ impl ExecutorHandle {
     pub fn eps_pallas(&self, level: usize, x: &[f32], t: f64) -> Result<Vec<f32>> {
         self.retrying(|h| {
             let x = pooled_copy(x);
-            h.call_vec(|resp| Job::Eps { level, x, t, pallas: true, resp })
+            let trace = trace::current();
+            h.call_vec(|resp| Job::Eps { level, x, t, pallas: true, trace, resp })
         })
     }
 
@@ -882,7 +1033,8 @@ impl ExecutorHandle {
         self.retrying(|h| {
             let x = pooled_copy(x);
             let v = pooled_copy(v);
-            match h.call(|resp| Job::EpsJvp { level, x, t, v, resp })? {
+            let trace = trace::current();
+            match h.call(|resp| Job::EpsJvp { level, x, t, v, trace, resp })? {
                 Resp::Pair(r) => r,
                 _ => Err(anyhow!("executor protocol mismatch")),
             }

@@ -146,10 +146,20 @@ impl NeuralDenoiser {
             .map(|((xc, oc), h)| (xc, oc, h))
             .collect();
         let level = self.level;
-        crate::parallel::run_shards(tasks, |_, (xc, oc, h)| {
+        // Worker-pool threads don't inherit the lane's thread-local
+        // trace tag; re-set it inside each shard so a sampled request's
+        // sub-requests still carry its trace to the executor.
+        let tag = crate::trace::current();
+        crate::parallel::run_shards(tasks, move |_, (xc, oc, h)| {
+            crate::trace::set_current(tag);
             let r = h.eps(level, xc, t).expect("executor eps failed");
+            crate::trace::clear_current();
             oc.copy_from_slice(&r);
         });
+        // The calling thread ran shard 0 itself, so the clear above also
+        // hit this thread — restore the lane's tag for the rest of the
+        // request.
+        crate::trace::set_current(tag);
         self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).append(&mut handles);
     }
 }

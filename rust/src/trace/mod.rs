@@ -1,0 +1,607 @@
+//! Flight recorder: sampled end-to-end span tracing for the serving
+//! path.
+//!
+//! Every stage a request crosses — parse, admission, class queue, lane,
+//! scheduler sampler loop, executor group, device execute, scatter,
+//! respond — can record a [`Stage`]-tagged span carrying the request's
+//! trace id, its parent span id, and (on executor spans) the
+//! `(level, bucket, t_bits)` attribution the paper's economics care
+//! about, plus the executor generation so a supervisor respawn is
+//! visible in the timeline.  Chaos events (restart, replay, shed,
+//! deadline miss) record spans against the affected trace too, so a
+//! retried request's timeline shows both executor generations.
+//!
+//! Hot-path discipline: spans land in fixed-capacity **per-thread ring
+//! buffers** (overwrite-oldest).  A recording thread takes no lock and
+//! performs no allocation after its first span (ring registration is
+//! once per thread); each slot is a seqlock of plain atomics, so
+//! snapshot readers on other threads can only ever skip a torn slot,
+//! never block a writer.  Sampling is head-based per request
+//! ([`Recorder::admit`], the `trace_sample_n` knob: 0 = off, 1 = every
+//! request, n = 1-in-n) — an unsampled request's tag is zero and every
+//! recording site checks [`TraceTag::sampled`] first, so the disabled
+//! cost is one branch.
+//!
+//! Exposure: `{"cmd":"trace"}` snapshots recent spans as JSON
+//! ([`Recorder::spans_json`]); `--trace-out <path>` dumps **Chrome
+//! trace-event format** ([`Recorder::chrome_json`], loads directly in
+//! Perfetto / `chrome://tracing`) at server shutdown; and the
+//! `per_level` metrics section (see `metrics.rs`) aggregates the same
+//! attribution into per-level latency histograms.
+//!
+//! The pipeline shares one process-wide recorder ([`recorder`]);
+//! threads that sit *between* explicit plumbing points (samplers,
+//! worker-pool shards, executor handles) pick the active request's tag
+//! off a thread-local ([`set_current`] / [`current`]) set by the lane
+//! around `Scheduler::execute` and by the shard closures in
+//! `runtime/neural.rs`.
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Spans per thread ring; the oldest span is overwritten when full.
+pub const RING_CAP: usize = 2048;
+
+/// Words per encoded span: trace, span, parent, stage, start_us,
+/// dur_us, (level << 32 | bucket), t_bits, generation.
+const WORDS: usize = 9;
+
+/// Pipeline stage a span measures (its Chrome-trace event name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Whole request on the server handler (root span).
+    Request = 1,
+    /// Wire line → typed request.
+    Parse = 2,
+    /// Admission check + class-queue push.
+    Admission = 3,
+    /// Enqueue → pop from the class queue.
+    Queue = 4,
+    /// Lane runner owning the batch (scheduler call included).
+    Lane = 5,
+    /// Scheduler sampler dispatch for the batch.
+    Sampler = 6,
+    /// Executor aggregation-group handling (pack + execute + scatter).
+    ExecGroup = 7,
+    /// Device execute call.
+    Execute = 8,
+    /// Result slices scattered back to response channels.
+    Scatter = 9,
+    /// Response serialization + write.
+    Respond = 10,
+    /// Supervisor replay of a stranded call (chaos tag).
+    Replay = 11,
+    /// Supervisor respawn of a dead executor (chaos tag).
+    Restart = 12,
+    /// Admission-control shed (chaos tag).
+    Shed = 13,
+    /// Deadline expiry at pop (chaos tag).
+    DeadlineMiss = 14,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Request => "request",
+            Stage::Parse => "parse",
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Lane => "lane",
+            Stage::Sampler => "sampler",
+            Stage::ExecGroup => "exec_group",
+            Stage::Execute => "execute",
+            Stage::Scatter => "scatter",
+            Stage::Respond => "respond",
+            Stage::Replay => "replay",
+            Stage::Restart => "restart",
+            Stage::Shed => "shed",
+            Stage::DeadlineMiss => "deadline_miss",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<Stage> {
+        Some(match v {
+            1 => Stage::Request,
+            2 => Stage::Parse,
+            3 => Stage::Admission,
+            4 => Stage::Queue,
+            5 => Stage::Lane,
+            6 => Stage::Sampler,
+            7 => Stage::ExecGroup,
+            8 => Stage::Execute,
+            9 => Stage::Scatter,
+            10 => Stage::Respond,
+            11 => Stage::Replay,
+            12 => Stage::Restart,
+            13 => Stage::Shed,
+            14 => Stage::DeadlineMiss,
+            _ => return None,
+        })
+    }
+}
+
+/// The per-request trace handle threaded through the pipeline: the
+/// trace id (0 = unsampled, record nothing) and the span to parent new
+/// spans under (0 = root).  Deliberately two words and `Copy` so it
+/// rides in queue payloads and executor jobs for free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceTag {
+    pub trace: u64,
+    pub parent: u64,
+}
+
+impl TraceTag {
+    pub fn sampled(&self) -> bool {
+        self.trace != 0
+    }
+
+    /// The same trace, reparented under `span`.
+    pub fn under(&self, span: u64) -> TraceTag {
+        TraceTag { trace: self.trace, parent: span }
+    }
+}
+
+/// Optional span attribution: the executor's cost coordinates plus the
+/// executor generation (all zero where not applicable).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Attr {
+    /// 1-based ladder level; 0 = n/a.
+    pub level: u32,
+    /// Padded execution bucket; 0 = n/a.
+    pub bucket: u32,
+    /// Bit pattern of the schedule time; 0 = n/a.
+    pub t_bits: u64,
+    /// Executor generation (1-based in spans: generation g records
+    /// g + 1 so 0 stays "n/a").
+    pub generation: u64,
+}
+
+impl Attr {
+    pub fn level(level: usize, bucket: usize, t_bits: u64) -> Attr {
+        Attr { level: level as u32, bucket: bucket as u32, t_bits, generation: 0 }
+    }
+}
+
+/// One decoded span, as returned by [`Recorder::snapshot`].
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub stage: Stage,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub attr: Attr,
+    /// Ordinal of the recording thread's ring (the Chrome-trace tid).
+    pub tid: u64,
+}
+
+/// One seqlock slot: `seq` is even when the words are consistent, odd
+/// while the owning thread is mid-write.  Exactly one thread ever
+/// writes a ring, so the writer needs no CAS — readers detect torn
+/// slots by re-checking `seq` and simply skip them.
+struct Slot {
+    seq: AtomicU64,
+    w: [AtomicU64; WORDS],
+}
+
+struct Ring {
+    /// Total spans ever pushed (write cursor = head % RING_CAP).  Only
+    /// the owning thread advances it.
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        let slots = (0..RING_CAP)
+            .map(|_| Slot { seq: AtomicU64::new(0), w: Default::default() })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring { head: AtomicU64::new(0), slots }
+    }
+
+    /// Owner-thread-only push: no lock, no allocation.
+    fn push(&self, words: &[u64; WORDS]) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % RING_CAP as u64) as usize];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(seq + 1, Ordering::Release); // odd: write in progress
+        for (dst, src) in slot.w.iter().zip(words) {
+            dst.store(*src, Ordering::Relaxed);
+        }
+        slot.seq.store(seq + 2, Ordering::Release); // even: committed
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Cross-thread snapshot: committed slots only, torn slots skipped.
+    fn read(&self, tid: u64, out: &mut Vec<SpanRecord>) {
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue; // never written, or a write is in progress
+            }
+            let mut w = [0u64; WORDS];
+            for (dst, src) in w.iter_mut().zip(&slot.w) {
+                *dst = src.load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // torn: overwritten while reading
+            }
+            let Some(stage) = Stage::from_u64(w[3]) else { continue };
+            out.push(SpanRecord {
+                trace: w[0],
+                span: w[1],
+                parent: w[2],
+                stage,
+                start_us: w[4],
+                dur_us: w[5],
+                attr: Attr {
+                    level: (w[6] >> 32) as u32,
+                    bucket: (w[6] & 0xffff_ffff) as u32,
+                    t_bits: w[7],
+                    generation: w[8],
+                },
+                tid,
+            });
+        }
+    }
+}
+
+/// Process-unique recorder ids (the thread-local ring registry is keyed
+/// by them, so independent recorders in tests never share a ring).
+static NEXT_RECORDER_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// This thread's rings, one per recorder it has recorded into
+    /// (usually exactly one entry — the scan is a cache-line read).
+    static TL_RINGS: RefCell<Vec<(u64, Arc<Ring>)>> = const { RefCell::new(Vec::new()) };
+    /// The active request's tag for threads between explicit plumbing
+    /// points (samplers, shard closures, executor handle calls).
+    static TL_CURRENT: Cell<TraceTag> = const { Cell::new(TraceTag { trace: 0, parent: 0 }) };
+}
+
+/// Set the calling thread's active trace tag (see [`current`]).
+pub fn set_current(tag: TraceTag) {
+    TL_CURRENT.with(|c| c.set(tag));
+}
+
+/// The calling thread's active trace tag (zero when none).
+pub fn current() -> TraceTag {
+    TL_CURRENT.with(|c| c.get())
+}
+
+/// Clear the calling thread's active trace tag.
+pub fn clear_current() {
+    set_current(TraceTag::default());
+}
+
+/// The span recorder: sampling decision, span-id allocation, and the
+/// registry of every thread's ring.
+pub struct Recorder {
+    id: u64,
+    epoch: Instant,
+    sample_n: AtomicU64,
+    admitted: AtomicU64,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    /// Locked only at thread registration and snapshot — never on the
+    /// record path.
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+impl Recorder {
+    /// `sample_n`: 0 = tracing off, 1 = every request, n = 1-in-n.
+    pub fn new(sample_n: u64) -> Recorder {
+        Recorder {
+            id: NEXT_RECORDER_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            sample_n: AtomicU64::new(sample_n),
+            admitted: AtomicU64::new(0),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.sample_n.load(Ordering::Relaxed)
+    }
+
+    pub fn set_sample_n(&self, n: u64) {
+        self.sample_n.store(n, Ordering::Relaxed);
+    }
+
+    /// Microseconds since this recorder's epoch (the span clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Head-based sampling decision for a new request: a fresh sampled
+    /// tag, or the zero tag (record nothing downstream).
+    pub fn admit(&self) -> TraceTag {
+        let n = self.sample_n.load(Ordering::Relaxed);
+        if n == 0 || (n > 1 && self.admitted.fetch_add(1, Ordering::Relaxed) % n != 0) {
+            return TraceTag::default();
+        }
+        TraceTag { trace: self.next_trace.fetch_add(1, Ordering::Relaxed), parent: 0 }
+    }
+
+    /// Allocate a span id up front (so children can parent under a span
+    /// that is recorded later, when its duration is known).
+    pub fn span_id(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record a completed span ending now; returns its span id.
+    pub fn record(&self, tag: TraceTag, stage: Stage, start_us: u64, attr: Attr) -> u64 {
+        let id = self.span_id();
+        self.record_span(id, tag, stage, start_us, self.now_us(), attr);
+        id
+    }
+
+    /// Record a completed span with a pre-allocated id and explicit end.
+    pub fn record_span(
+        &self,
+        span: u64,
+        tag: TraceTag,
+        stage: Stage,
+        start_us: u64,
+        end_us: u64,
+        attr: Attr,
+    ) {
+        if !tag.sampled() {
+            return;
+        }
+        let words = [
+            tag.trace,
+            span,
+            tag.parent,
+            stage as u64,
+            start_us,
+            end_us.saturating_sub(start_us),
+            ((attr.level as u64) << 32) | attr.bucket as u64,
+            attr.t_bits,
+            attr.generation,
+        ];
+        self.with_ring(|ring| ring.push(&words));
+    }
+
+    /// Run `f` on this thread's ring for this recorder, registering it
+    /// on first use (the only allocation a recording thread ever does).
+    fn with_ring(&self, f: impl FnOnce(&Ring)) {
+        TL_RINGS.with(|cell| {
+            let mut rings = cell.borrow_mut();
+            if let Some((_, ring)) = rings.iter().find(|(id, _)| *id == self.id) {
+                f(ring);
+                return;
+            }
+            let ring = Arc::new(Ring::new());
+            self.rings.lock().unwrap_or_else(|p| p.into_inner()).push(ring.clone());
+            f(&ring);
+            rings.push((self.id, ring));
+        });
+    }
+
+    /// Decode every ring's committed spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let rings: Vec<Arc<Ring>> =
+            self.rings.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        let mut out = Vec::new();
+        for (tid, ring) in rings.iter().enumerate() {
+            ring.read(tid as u64, &mut out);
+        }
+        out.sort_by_key(|s| (s.start_us, s.span));
+        out
+    }
+
+    /// The `{"cmd":"trace"}` admin payload: the most recent `limit`
+    /// spans (by start time) plus the sampling setting.
+    pub fn spans_json(&self, limit: usize) -> Json {
+        let spans = self.snapshot();
+        let skip = spans.len().saturating_sub(limit);
+        Json::obj()
+            .with("sample_n", Json::num(self.sample_n() as f64))
+            .with("span_count", Json::num(spans.len() as f64))
+            .with("spans", Json::Arr(spans[skip..].iter().map(span_json).collect()))
+    }
+
+    /// Chrome trace-event format (the `{"traceEvents":[…]}` envelope;
+    /// loads directly in Perfetto / `chrome://tracing`).
+    pub fn chrome_json(&self) -> Json {
+        let events = self
+            .snapshot()
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .with("name", Json::str(s.stage.name()))
+                    .with("cat", Json::str("mlem"))
+                    .with("ph", Json::str("X"))
+                    .with("ts", Json::num(s.start_us as f64))
+                    .with("dur", Json::num(s.dur_us as f64))
+                    .with("pid", Json::num(1.0))
+                    .with("tid", Json::num(s.tid as f64))
+                    .with("args", span_json(s))
+            })
+            .collect();
+        Json::obj().with("traceEvents", Json::Arr(events))
+    }
+
+    /// Dump [`Recorder::chrome_json`] to `path`.
+    pub fn write_chrome(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_json().to_string())
+    }
+}
+
+/// One span as a JSON object.  Ids are plain numbers (sequential, far
+/// below 2^53); `t_bits` is a hex string — an f64 bit pattern does not
+/// survive a round-trip through a JSON number — with the decoded time
+/// alongside as `t`.
+fn span_json(s: &SpanRecord) -> Json {
+    let mut j = Json::obj()
+        .with("trace", Json::num(s.trace as f64))
+        .with("span", Json::num(s.span as f64))
+        .with("parent", Json::num(s.parent as f64))
+        .with("stage", Json::str(s.stage.name()))
+        .with("start_us", Json::num(s.start_us as f64))
+        .with("dur_us", Json::num(s.dur_us as f64))
+        .with("tid", Json::num(s.tid as f64));
+    if s.attr.level != 0 {
+        j = j
+            .with("level", Json::num(s.attr.level as f64))
+            .with("bucket", Json::num(s.attr.bucket as f64))
+            .with("t_bits", Json::str(format!("{:016x}", s.attr.t_bits)))
+            .with("t", Json::num(f64::from_bits(s.attr.t_bits)));
+    }
+    if s.attr.generation != 0 {
+        j = j.with("generation", Json::num((s.attr.generation - 1) as f64));
+    }
+    j
+}
+
+static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-wide recorder the serving pipeline records into.
+/// Sampling starts at the config default (1-in-16); `Server::new`
+/// rebinds it from `trace_sample_n`.
+pub fn recorder() -> &'static Recorder {
+    GLOBAL.get_or_init(|| Recorder::new(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_one_in_n_and_zero_disables() {
+        let r = Recorder::new(4);
+        let sampled = (0..100).filter(|_| r.admit().sampled()).count();
+        assert_eq!(sampled, 25, "1-in-4 head sampling");
+        r.set_sample_n(0);
+        assert!(!(0..50).any(|_| r.admit().sampled()), "0 disables tracing");
+        r.set_sample_n(1);
+        assert!((0..10).all(|_| r.admit().sampled()), "1 samples everything");
+    }
+
+    #[test]
+    fn unsampled_tags_record_nothing() {
+        let r = Recorder::new(0);
+        let tag = r.admit();
+        assert!(!tag.sampled());
+        r.record(tag, Stage::Execute, 0, Attr::default());
+        assert!(r.snapshot().is_empty(), "zero tag must not land in any ring");
+    }
+
+    #[test]
+    fn spans_decode_with_attribution_and_parents() {
+        let r = Recorder::new(1);
+        let tag = r.admit();
+        let root = r.span_id();
+        let t0 = r.now_us();
+        let child =
+            r.record(tag.under(root), Stage::Execute, t0, Attr::level(2, 8, 0.5f64.to_bits()));
+        r.record_span(root, tag, Stage::Request, t0, r.now_us(), Attr::default());
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 2);
+        let exec = spans.iter().find(|s| s.stage == Stage::Execute).unwrap();
+        assert_eq!(exec.parent, root);
+        assert_eq!(exec.span, child);
+        assert_eq!(exec.attr.level, 2);
+        assert_eq!(exec.attr.bucket, 8);
+        assert_eq!(f64::from_bits(exec.attr.t_bits), 0.5);
+        let req = spans.iter().find(|s| s.stage == Stage::Request).unwrap();
+        assert_eq!(req.parent, 0, "root span has no parent");
+        assert_eq!(req.trace, exec.trace, "one connected trace");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_at_capacity() {
+        let r = Recorder::new(1);
+        let tag = r.admit();
+        for i in 0..(RING_CAP + 10) as u64 {
+            r.record_span(r.span_id(), tag, Stage::Queue, i, i + 1, Attr::default());
+        }
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), RING_CAP, "fixed capacity, overwrite-oldest");
+        let min_start = spans.iter().map(|s| s.start_us).min().unwrap();
+        assert_eq!(min_start, 10, "the 10 oldest spans were overwritten");
+    }
+
+    #[test]
+    fn cross_thread_spans_share_the_snapshot() {
+        let r = std::sync::Arc::new(Recorder::new(1));
+        let tag = r.admit();
+        r.record(tag, Stage::Lane, 0, Attr::default());
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    r.record(tag, Stage::Execute, 1, Attr::level(1, 4, 0));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 4, "one span per thread plus the lane span");
+        let tids: std::collections::HashSet<u64> = spans.iter().map(|s| s.tid).collect();
+        assert_eq!(tids.len(), 4, "each thread records into its own ring");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let r = Recorder::new(1);
+        let tag = r.admit();
+        let root = r.span_id();
+        r.record(tag.under(root), Stage::Execute, 5, Attr::level(3, 16, 0.25f64.to_bits()));
+        r.record_span(root, tag, Stage::Request, 0, 50, Attr::default());
+        let text = r.chrome_json().to_string();
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.str_of("ph"), Some("X"));
+            assert!(e.f64_of("ts").is_some() && e.f64_of("dur").is_some());
+            assert!(e.str_of("name").is_some());
+        }
+        let exec = events.iter().find(|e| e.str_of("name") == Some("execute")).unwrap();
+        let args = exec.get("args").unwrap();
+        assert_eq!(args.f64_of("level"), Some(3.0));
+        assert_eq!(args.str_of("t_bits"), Some("3fd0000000000000"));
+        assert_eq!(args.f64_of("t"), Some(0.25));
+    }
+
+    #[test]
+    fn spans_json_trims_to_the_most_recent_limit() {
+        let r = Recorder::new(1);
+        let tag = r.admit();
+        for i in 0..10u64 {
+            r.record_span(r.span_id(), tag, Stage::Queue, i, i + 1, Attr::default());
+        }
+        let j = r.spans_json(4);
+        assert_eq!(j.f64_of("span_count"), Some(10.0));
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].f64_of("start_us"), Some(6.0), "kept the newest spans");
+        Json::parse(&j.to_string()).expect("trace snapshot must be valid JSON");
+    }
+
+    #[test]
+    fn current_tag_is_thread_local_and_clearable() {
+        clear_current();
+        assert!(!current().sampled());
+        set_current(TraceTag { trace: 7, parent: 3 });
+        assert_eq!(current(), TraceTag { trace: 7, parent: 3 });
+        let other = std::thread::spawn(|| current().sampled()).join().unwrap();
+        assert!(!other, "another thread sees its own (empty) tag");
+        clear_current();
+        assert!(!current().sampled());
+    }
+}

@@ -39,6 +39,8 @@ use mlem::runtime::{
     SupervisorOptions,
 };
 use mlem::sde::drift::Denoiser;
+use mlem::trace::{self, Stage};
+use mlem::util::json::Json;
 use mlem::util::proptest_lite as pt;
 
 /// Chaos tests drive multi-thread storms and deliberate executor
@@ -464,6 +466,122 @@ fn prop_expired_entries_partition_exactly_at_pop() {
         }
         Ok(())
     });
+}
+
+/// Satellite: the flight recorder survives chaos.  A supervised
+/// executor is killed mid-storm with full-rate tracing on; afterwards
+/// the recorded spans must show **both** executor generations on the
+/// execute spans plus a replay span (a retried request's timeline
+/// shows the generation that died and the one that answered), the
+/// Chrome export must parse, and every span's parent must resolve —
+/// panics and respawns cannot orphan a subtree.
+#[test]
+fn traced_kill_storm_spans_both_executor_generations_and_stays_a_tree() {
+    let _storm = storm_guard();
+    let rec = trace::recorder();
+    let prev_n = rec.sample_n();
+    rec.set_sample_n(1);
+
+    let dir = synth_artifact_dir(
+        "trace-kill",
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 64, fault: "panic_after=5" },
+        ],
+    )
+    .expect("trace artifacts");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        max_batch: 2,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: 2,
+        ..Default::default()
+    };
+    let metrics = Metrics::new();
+    let retry = SupervisorOptions { retry_budget: 16, retry_backoff_us: 50 };
+    let handle = spawn_supervised(
+        Manifest::load(&cfg.artifacts).expect("manifest"),
+        Some(metrics.clone()),
+        cfg.exec_options(),
+        retry,
+    )
+    .expect("supervised spawn");
+    let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
+    let pool = LanePool::new(scheduler, &cfg);
+
+    // Δ ≫ 0 forces a level-2 eval every step, so `panic_after=5` kills
+    // the executor mid-storm (several times); the supervisor respawns
+    // it and the stranded calls replay.
+    let rxs: Vec<_> = (0..6u64)
+        .map(|i| {
+            let mut r = chaos_req(i, None);
+            r.delta = 5.0;
+            pool.submit(r)
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in &rxs {
+        match recv_exactly_once(rx) {
+            Response::Gen(_) => ok += 1,
+            Response::Error(_) => {}
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    pool.stop();
+    pool.join();
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+    rec.set_sample_n(prev_n);
+
+    assert!(ok >= 1, "the supervised storm must recover at least one request");
+    assert!(metrics.restarts.get() >= 1, "panic_after=5 must kill the executor at least once");
+    assert!(metrics.retries.get() >= 1, "a respawn strands at least one in-flight call");
+
+    let spans = rec.snapshot();
+    let gens: std::collections::HashSet<u64> = spans
+        .iter()
+        .filter(|s| s.stage == Stage::Execute && s.attr.generation != 0)
+        .map(|s| s.attr.generation)
+        .collect();
+    assert!(
+        gens.len() >= 2,
+        "execute spans must carry both executor generations, saw {gens:?}"
+    );
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Replay),
+        "a replayed call must leave a replay span in its trace"
+    );
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Execute && s.attr.level == 2),
+        "the forced level-2 work must appear in the execute attribution"
+    );
+
+    // Connectedness: every non-root span's parent exists in its trace —
+    // panics, respawns and replays cannot orphan a subtree.
+    let ids: std::collections::HashSet<(u64, u64)> =
+        spans.iter().map(|s| (s.trace, s.span)).collect();
+    for s in &spans {
+        assert!(
+            s.parent == 0 || ids.contains(&(s.trace, s.parent)),
+            "span {} (stage {:?}, trace {}) has a dangling parent {}",
+            s.span,
+            s.stage,
+            s.trace,
+            s.parent
+        );
+    }
+
+    // The Chrome export of the chaos run parses.
+    let text = rec.chrome_json().to_string();
+    let parsed = Json::parse(&text).expect("chrome trace dump must be valid JSON");
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "the traced storm must have exported events");
 }
 
 /// Compressed run of the `bench_resilience` measurement: certifies the

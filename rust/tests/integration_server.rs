@@ -6,6 +6,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
+use std::sync::Mutex;
 use std::time::Duration;
 
 use mlem::benchkit::{synth_artifact_dir, SynthLevel};
@@ -15,6 +16,15 @@ use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
 use mlem::runtime::{spawn_executor, Manifest};
 use mlem::util::json::Json;
+
+/// `Server::new` binds the process-wide flight recorder's sampling rate
+/// from its config — serialise the server tests so one test's knob
+/// can't race another's traffic.
+static SERVE_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Coordinator lane count for this suite: the `MLEM_BATCH_WORKERS` env
 /// knob when set (CI runs the suite under a {1, 4} matrix), else
@@ -52,6 +62,7 @@ impl Client {
 
 #[test]
 fn serve_end_to_end() {
+    let _serve = serve_guard();
     let Some(dir) = artifacts() else {
         eprintln!("skipping: run `make artifacts` first");
         return;
@@ -141,6 +152,13 @@ fn serve_end_to_end() {
     assert!(images >= 12.0, "images counted: {images}");
     let nfe = m.get_path(&["metrics", "nfe_per_level"]).unwrap().as_arr().unwrap();
     assert!(nfe[0].as_f64().unwrap() > 0.0, "level 1 must have evals");
+    // The {1,3,5} ladder fits the per-level window: nothing may have
+    // been dropped from the accounting silently.
+    assert_eq!(
+        m.get_path(&["metrics", "nfe_overflow"]).and_then(Json::as_f64),
+        Some(0.0),
+        "no NFE may overflow the per-level window on the default ladder"
+    );
 
     // calibration admin request answers on the live ladder
     let cal = c.call(r#"{"cmd":"calibration"}"#);
@@ -202,6 +220,7 @@ fn synthetic_artifacts() -> std::path::PathBuf {
 /// on the synthetic-artifact interpreter so generation is real work.
 #[test]
 fn shutdown_under_load_answers_every_request() {
+    let _serve = serve_guard();
     let dir = synth_artifact_dir(
         "server-shutdown-load",
         4, // dim 16
@@ -284,12 +303,130 @@ fn shutdown_under_load_answers_every_request() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The flight recorder end to end — TCP in, TCP out, on the synthetic
+/// interpreter: full-rate tracing on, real generation traffic through
+/// the whole pipeline, then the `{"cmd":"trace"}` admin snapshot must
+/// show attributed executor spans, and the `--trace-out` dump written
+/// at shutdown must be valid Chrome trace-event JSON.
+#[test]
+fn trace_admin_and_chrome_dump_end_to_end() {
+    let _serve = serve_guard();
+    let dir = synth_artifact_dir(
+        "server-trace",
+        4, // dim 16
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 64, fault: "" },
+        ],
+    )
+    .expect("synthetic artifacts");
+    let trace_path = dir.join("trace.json");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 4,
+        max_wait_ms: 5,
+        cost_reps: 0,
+        mlem_levels: vec![1, 2],
+        calib_sample_every: 0,
+        batch_workers: batch_workers_env(2),
+        trace_sample_n: 1, // trace every request
+        trace_out: Some(trace_path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
+    let server = std::sync::Arc::new(Server::new(cfg, scheduler));
+
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+    let mut c = Client::connect(addr);
+
+    // Real traffic; Δ ≫ 0 forces level-2 evals, so both levels appear
+    // in the execute attribution.
+    for seed in 0..3 {
+        let resp = c.call(&format!(
+            r#"{{"cmd":"generate","n":1,"sampler":"mlem","steps":20,"seed":{seed},"levels":[1,2],"delta":5.0}}"#
+        ));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    }
+
+    // The admin snapshot: a connected span set over the whole path.
+    let t = c.call(r#"{"cmd":"trace"}"#);
+    assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t}");
+    let snap = t.get("trace").unwrap();
+    assert_eq!(snap.f64_of("sample_n"), Some(1.0));
+    let spans = snap.get("spans").unwrap().as_arr().unwrap();
+    assert!(!spans.is_empty(), "full-rate tracing must have recorded spans");
+    let stage_of = |s: &Json| s.str_of("stage").unwrap_or("").to_string();
+    for need in ["request", "parse", "admission", "queue", "lane", "sampler", "execute", "respond"]
+    {
+        assert!(
+            spans.iter().any(|s| stage_of(s) == need),
+            "stage '{need}' missing from the trace snapshot"
+        );
+    }
+    let exec2 = spans
+        .iter()
+        .find(|s| stage_of(s) == "execute" && s.f64_of("level") == Some(2.0))
+        .expect("a level-2 execute span (delta forces level-2 evals)");
+    assert!(exec2.f64_of("bucket").is_some(), "execute spans carry the bucket");
+    let t_bits = exec2.str_of("t_bits").expect("execute spans carry t_bits");
+    assert_eq!(t_bits.len(), 16, "t_bits is a 16-hex-digit f64 bit pattern");
+    let t_val = exec2.f64_of("t").expect("decoded t alongside t_bits");
+    assert!(t_val.is_finite());
+
+    // limit caps the snapshot; 0 is rejected at parse time.
+    let t2 = c.call(r#"{"cmd":"trace","limit":2}"#);
+    assert_eq!(t2.get_path(&["trace", "spans"]).unwrap().as_arr().unwrap().len(), 2);
+    let bad = c.call(r#"{"cmd":"trace","limit":0}"#);
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+    // per_level metrics: the same attribution, aggregated.
+    let m = c.call(r#"{"cmd":"metrics"}"#);
+    let per_level = m.get_path(&["metrics", "per_level"]).unwrap().as_arr().unwrap();
+    assert!(
+        per_level.iter().any(|l| l.f64_of("level") == Some(2.0)
+            && l.get_path(&["execute", "count"]).and_then(Json::as_f64).unwrap_or(0.0) > 0.0),
+        "per_level must aggregate level-2 execute latencies"
+    );
+
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    server_thread.join().unwrap();
+    handle.stop();
+
+    // The shutdown dump is valid Chrome trace-event JSON.
+    let text = std::fs::read_to_string(&trace_path).expect("trace_out written at shutdown");
+    let chrome = Json::parse(&text).expect("chrome dump must be valid JSON");
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+    for e in events {
+        assert_eq!(e.str_of("ph"), Some("X"));
+        assert!(e.f64_of("ts").is_some() && e.f64_of("dur").is_some());
+    }
+    assert!(
+        events.iter().any(|e| e.str_of("name") == Some("execute")),
+        "the dump must contain executor spans"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The calibration admin request end to end — TCP in, TCP out — with an
 /// injected fit (the shim backend can't run real generation traffic, so
 /// the probes are fed to the calibrator directly; the artifact-gated
 /// test above covers the live-traffic probe path when artifacts exist).
 #[test]
 fn calibration_admin_end_to_end() {
+    let _serve = serve_guard();
     let dir = synthetic_artifacts();
     let cfg = ServeConfig {
         artifacts: dir.to_string_lossy().into_owned(),

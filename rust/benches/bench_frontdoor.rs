@@ -1,0 +1,271 @@
+//! Front-door storm bench: the many-connection headline the CI
+//! bench-gate tracks (`pipelined_speedup_at_8` in `BENCH_frontdoor.json`).
+//!
+//! One real TCP server on the offline shim's synthetic interpreter (no
+//! `make artifacts` needed), stormed across a grid of
+//! {1, 8, 64} connections × {pipelined, sequential} submission with a
+//! fixed total request count.  Every connection carries its own
+//! compatibility class (distinct `delta`), the realistic worst case for
+//! a sequential client: a singleton batch per round trip, each paying
+//! the batcher's cut wait, while the pipelined client fills whole
+//! batches from one socket.  p50/p99 per-request latency (write → read)
+//! and requests/s are reported per cell; the headline is
+//! `rps(pipelined@8) / rps(sequential@8)`.
+//!
+//! A second section reports shed rate vs offered load: deadline-carrying
+//! pipelined bursts against the warmed admission controller, one burst
+//! per offered-load point.
+//!
+//! `cargo bench --bench bench_frontdoor`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mlem::benchkit::{percentile, synth_artifact_dir, write_bench_json, SynthLevel};
+use mlem::config::ServeConfig;
+use mlem::coordinator::{Scheduler, Server};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor_with, Manifest};
+use mlem::util::bench::Table;
+use mlem::util::json::Json;
+
+/// Grid: every cell submits the same `TOTAL` requests.
+const TOTAL: usize = 192;
+const CONNS: [usize; 3] = [1, 8, 64];
+
+/// Offered loads (burst sizes) for the shed-rate curve, all with the
+/// same tight deadline against a warmed EWMA.
+const SHED_LOADS: [usize; 3] = [8, 32, 128];
+const SHED_DEADLINE_MS: u64 = 2;
+
+fn req_line(conn: usize, i: usize, delta: f64, deadline_ms: Option<u64>) -> String {
+    let seed = (conn * 1000 + i) as u64;
+    let dl = deadline_ms.map(|d| format!(r#","deadline_ms":{d}"#)).unwrap_or_default();
+    format!(
+        r#"{{"cmd":"generate","n":1,"sampler":"mlem","steps":30,"seed":{seed},"levels":[1,2],"delta":{delta}{dl}}}"#
+    )
+}
+
+/// Storm one grid cell: `conns` connections × `TOTAL / conns` requests.
+/// Pipelined writes every line before reading any response; sequential
+/// is one request in flight per connection.  Returns per-request
+/// latencies (ms, write→read) and the storm's wall time (s).
+fn storm(addr: SocketAddr, conns: usize, pipelined: bool) -> (Vec<f64>, f64) {
+    let per_conn = TOTAL / conns;
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..conns)
+        .map(|c| {
+            std::thread::spawn(move || -> Vec<f64> {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                // One compatibility class per connection.
+                let delta = 0.1 * (c + 1) as f64;
+                let mut lat = vec![0f64; per_conn];
+                let mut read_one = |line: &mut String| {
+                    line.clear();
+                    reader.read_line(line).expect("response line");
+                    assert!(
+                        line.contains(r#""ok":true"#),
+                        "storm request failed: {line}"
+                    );
+                };
+                let mut line = String::new();
+                if pipelined {
+                    let mut writes = Vec::with_capacity(per_conn);
+                    for i in 0..per_conn {
+                        writes.push(Instant::now());
+                        writeln!(writer, "{}", req_line(c, i, delta, None)).unwrap();
+                    }
+                    for (i, w) in writes.iter().enumerate() {
+                        read_one(&mut line);
+                        lat[i] = w.elapsed().as_secs_f64() * 1e3;
+                    }
+                } else {
+                    for (i, slot) in lat.iter_mut().enumerate() {
+                        let w = Instant::now();
+                        writeln!(writer, "{}", req_line(c, i, delta, None)).unwrap();
+                        read_one(&mut line);
+                        *slot = w.elapsed().as_secs_f64() * 1e3;
+                    }
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lats = Vec::with_capacity(TOTAL);
+    for j in joins {
+        lats.extend(j.join().expect("storm client"));
+    }
+    (lats, t0.elapsed().as_secs_f64())
+}
+
+/// One shed point: a pipelined deadline burst of `load` requests on a
+/// single connection; bucket every typed answer.
+fn shed_point(addr: SocketAddr, load: usize) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for i in 0..load {
+        writeln!(writer, "{}", req_line(99, i, 0.0, Some(SHED_DEADLINE_MS))).unwrap();
+    }
+    let (mut completed, mut shed, mut missed, mut errored) = (0usize, 0usize, 0usize, 0usize);
+    for _ in 0..load {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("burst response");
+        let j = Json::parse(&line).expect("typed response");
+        match (j.get("ok"), j.str_of("error")) {
+            (Some(&Json::Bool(true)), _) => completed += 1,
+            (_, Some("overloaded")) => shed += 1,
+            (_, Some("deadline_exceeded")) => missed += 1,
+            _ => errored += 1,
+        }
+    }
+    Json::obj()
+        .with("offered", Json::num(load as f64))
+        .with("completed", Json::num(completed as f64))
+        .with("shed", Json::num(shed as f64))
+        .with("deadline_missed", Json::num(missed as f64))
+        .with("errored", Json::num(errored as f64))
+        .with("shed_rate", Json::num(shed as f64 / load as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = synth_artifact_dir(
+        "bench-frontdoor",
+        4, // dim 16
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 128, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 128, fault: "" },
+        ],
+    )?;
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 8,
+        // Visible cut wait: a singleton-class sequential round trip pays
+        // this per request; a pipelined window fills batches instead.
+        max_wait_ms: 5,
+        cost_reps: 0,
+        mlem_levels: vec![1, 2],
+        calib_sample_every: 0,
+        batch_workers: 2,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let (exec, exec_join) =
+        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    exec.warmup(4)?;
+    let scheduler = Scheduler::new(exec.clone(), cfg.clone(), metrics)?;
+    let server = Arc::new(Server::new(cfg, scheduler));
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+
+    // Warm the interpreter and the admission EWMA before timing.
+    {
+        let (_lat, _wall) = storm(addr, 1, true);
+    }
+
+    let mut t = Table::new(
+        "front-door storm (192 requests, per-connection classes)",
+        &["conns", "mode", "wall ms", "req/s", "p50 ms", "p99 ms"],
+    );
+    let mut grid = Vec::new();
+    let mut rps_at = |conns: usize, pipelined: bool, t: &mut Table, grid: &mut Vec<Json>| {
+        let (lats, wall) = storm(addr, conns, pipelined);
+        let rps = TOTAL as f64 / wall;
+        let (p50, p99) = (percentile(&lats, 0.50), percentile(&lats, 0.99));
+        let mode = if pipelined { "pipelined" } else { "sequential" };
+        t.row(&[
+            format!("{conns}"),
+            mode.into(),
+            format!("{:.1}", wall * 1e3),
+            format!("{rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+        ]);
+        grid.push(
+            Json::obj()
+                .with("conns", Json::num(conns as f64))
+                .with("mode", Json::str(mode))
+                .with("wall_ms", Json::num(wall * 1e3))
+                .with("rps", Json::num(rps))
+                .with("p50_ms", Json::num(p50))
+                .with("p99_ms", Json::num(p99)),
+        );
+        rps
+    };
+    let mut speedup_at_8 = f64::NAN;
+    for conns in CONNS {
+        let rps_seq = rps_at(conns, false, &mut t, &mut grid);
+        let rps_pipe = rps_at(conns, true, &mut t, &mut grid);
+        if conns == 8 {
+            speedup_at_8 = rps_pipe / rps_seq;
+        }
+    }
+    t.emit();
+
+    // Shed rate vs offered load (EWMA warmed by the grid above).
+    let mut s = Table::new(
+        "shed rate vs offered load (deadline 2 ms, pipelined burst)",
+        &["offered", "completed", "shed", "expired", "shed rate"],
+    );
+    let mut shed_points = Vec::new();
+    for load in SHED_LOADS {
+        let p = shed_point(addr, load);
+        s.row(&[
+            format!("{load}"),
+            format!("{:.0}", p.f64_of("completed").unwrap_or(0.0)),
+            format!("{:.0}", p.f64_of("shed").unwrap_or(0.0)),
+            format!("{:.0}", p.f64_of("deadline_missed").unwrap_or(0.0)),
+            format!("{:.2}", p.f64_of("shed_rate").unwrap_or(0.0)),
+        ]);
+        shed_points.push(p);
+    }
+    s.emit();
+
+    // Shutdown over the wire, like a real client.
+    {
+        let stream = TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, r#"{{"cmd":"shutdown"}}"#)?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        assert!(line.contains(r#""shutdown":true"#), "shutdown ack: {line}");
+    }
+    server_thread.join().expect("server thread joins");
+    exec.stop();
+    let _ = exec_join.join();
+
+    let j = Json::obj()
+        .with("total_requests", Json::num(TOTAL as f64))
+        .with("grid", Json::Arr(grid))
+        .with("pipelined_speedup_at_8", Json::num(speedup_at_8))
+        .with("shed_deadline_ms", Json::num(SHED_DEADLINE_MS as f64))
+        .with("shed_curve", Json::Arr(shed_points));
+    let path = write_bench_json("frontdoor", &j).expect("writing BENCH_frontdoor.json");
+    println!("[json] {}", path.display());
+    println!("headline: pipelined_speedup_at_8 {speedup_at_8:.2}");
+
+    assert!(
+        speedup_at_8.is_finite() && speedup_at_8 > 0.0,
+        "speedup must be a positive finite ratio"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -83,6 +83,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.0,
         label: "flight-recorder sampled tracing overhead ratio",
     },
+    TrackedMetric {
+        file: "BENCH_frontdoor.json",
+        path: &["pipelined_speedup_at_8"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "front-door pipelined req/s speedup @ 8 connections",
+    },
 ];
 
 /// Outcome per tracked metric.

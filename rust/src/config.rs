@@ -122,6 +122,16 @@ pub struct ServeConfig {
     /// Liveness-poll period (µs) while a caller waits on the executor —
     /// the bound on stop/join latency after executor death.
     pub exec_poll_us: u64,
+    /// Per-connection pipelining window: how many requests one
+    /// connection may have in flight (written but not yet answered) at
+    /// once.  The reader thread parses and submits ahead while the
+    /// writer streams responses back in request order; 1 reproduces the
+    /// historical one-at-a-time handler.
+    pub conn_inflight: usize,
+    /// Maximum concurrent connections.  At the cap the acceptor answers
+    /// the new connection with one typed `overloaded` line and closes it
+    /// instead of spawning a handler.
+    pub max_conns: usize,
     /// Flight recorder head sampling: trace 1 request in N end to end
     /// (0 = tracing off, 1 = every request).  See `crate::trace`.
     pub trace_sample_n: usize,
@@ -157,6 +167,8 @@ impl Default for ServeConfig {
             retry_backoff_us: 500,
             shed_headroom: 1.0,
             exec_poll_us: 50_000,
+            conn_inflight: 8,
+            max_conns: 256,
             trace_sample_n: 16,
             trace_out: None,
         }
@@ -236,6 +248,13 @@ impl ServeConfig {
                     self.exec_poll_us =
                         v.as_usize().ok_or_else(|| anyhow!("exec_poll_us: int"))? as u64
                 }
+                "conn_inflight" => {
+                    self.conn_inflight =
+                        v.as_usize().ok_or_else(|| anyhow!("conn_inflight: int"))?
+                }
+                "max_conns" => {
+                    self.max_conns = v.as_usize().ok_or_else(|| anyhow!("max_conns: int"))?
+                }
                 "trace_sample_n" => {
                     self.trace_sample_n =
                         v.as_usize().ok_or_else(|| anyhow!("trace_sample_n: int"))?
@@ -296,6 +315,8 @@ impl ServeConfig {
         cfg.retry_backoff_us = args.u64_or("retry-backoff-us", cfg.retry_backoff_us);
         cfg.shed_headroom = args.f64_or("shed-headroom", cfg.shed_headroom);
         cfg.exec_poll_us = args.u64_or("exec-poll-us", cfg.exec_poll_us);
+        cfg.conn_inflight = args.usize_or("conn-inflight", cfg.conn_inflight);
+        cfg.max_conns = args.usize_or("max-conns", cfg.max_conns);
         cfg.trace_sample_n = args.usize_or("trace-sample-n", cfg.trace_sample_n);
         if let Some(path) = args.get("trace-out") {
             cfg.trace_out = Some(path.to_string());
@@ -424,6 +445,22 @@ impl ServeConfig {
             return Err(anyhow!(
                 "shed_headroom: {} outside the sane range (0, 100]",
                 self.shed_headroom
+            ));
+        }
+        // 0 in-flight would deadlock every connection; a huge window is
+        // a memory cap typo (each slot can hold a full image payload).
+        if self.conn_inflight == 0 || self.conn_inflight > 1024 {
+            return Err(anyhow!(
+                "conn_inflight: {} outside the sane range [1, 1024]",
+                self.conn_inflight
+            ));
+        }
+        // Each connection costs two OS threads; past a few thousand the
+        // box is dying to a typo, not serving traffic.
+        if self.max_conns == 0 || self.max_conns > 16_384 {
+            return Err(anyhow!(
+                "max_conns: {} outside the sane range [1, 16384]",
+                self.max_conns
             ));
         }
         Ok(())
@@ -589,6 +626,26 @@ mod tests {
         assert!(ServeConfig::from_args(&args("serve --retry-backoff-us 2000000")).is_err());
         assert!(ServeConfig::from_args(&args("serve --shed-headroom 0")).is_err());
         assert!(ServeConfig::from_args(&args("serve --shed-headroom 1000")).is_err());
+    }
+
+    #[test]
+    fn frontdoor_knobs_apply() {
+        let d = ServeConfig::default();
+        assert_eq!(d.conn_inflight, 8, "pipelining on by default");
+        assert_eq!(d.max_conns, 256);
+        let cli = ServeConfig::from_args(&args("serve --conn-inflight 1 --max-conns 32")).unwrap();
+        assert_eq!(cli.conn_inflight, 1, "1 = historical one-at-a-time handler");
+        assert_eq!(cli.max_conns, 32);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"conn_inflight": 16, "max_conns": 1024}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.conn_inflight, 16);
+        assert_eq!(cfg.max_conns, 1024);
+        cfg.validate().unwrap();
+        assert!(ServeConfig::from_args(&args("serve --conn-inflight 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --conn-inflight 99999")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --max-conns 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --max-conns 99999")).is_err());
     }
 
     #[test]

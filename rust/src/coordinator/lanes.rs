@@ -30,6 +30,15 @@
 //! members get an error response, the lease is released, and the runner
 //! keeps serving.
 //!
+//! Front-door interaction (PR 8): the server's pipelined connections
+//! enqueue every line as it is read (`submit_traced` returns the
+//! response channel without blocking), so one client writing N generate
+//! lines back-to-back fills the batcher exactly like N concurrent
+//! clients — the per-class cuts and the executor's cross-request
+//! grouping see the whole window at once.  Reproducibility is
+//! unaffected: batch membership still depends only on arrival order,
+//! never on which connection carried the request.
+//!
 //! Resilience contract (PR 6): requests may carry a `deadline_ms` —
 //! expired entries are partitioned out of every cut at pop time and
 //! answered with a typed `deadline_exceeded` error, never executed —

@@ -42,7 +42,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::config::SamplerKind;
-use crate::util::json::Json;
+use crate::util::json::{scan_fields, write_json_num, Json, Scan};
 
 /// Which level-probability policy a request integrates with.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -161,9 +161,153 @@ pub const MAX_DEADLINE_MS: u64 = 86_400_000;
 /// a weight — magnitude buys nothing).
 pub const MAX_PRIORITY: i32 = 1000;
 
+/// The generate-path fields the lazy scanner extracts (order fixed; the
+/// indices below are compile-time constants into the scan result).
+const SCAN_KEYS: [&str; 11] = [
+    "cmd",
+    "n",
+    "seed",
+    "steps",
+    "levels",
+    "delta",
+    "deadline_ms",
+    "priority",
+    "policy",
+    "return_images",
+    "sampler",
+];
+
 impl Request {
     /// Parse and validate one JSON line.
+    ///
+    /// The hot generate path goes through the zero-tree lazy scanner
+    /// ([`scan_fields`]): one pass over the bytes, no `Json` nodes, no
+    /// allocation for absent fields.  Admin requests and anything the
+    /// scanner finds ambiguous (escapes, duplicate keys, type oddities,
+    /// malformed input) fall back to the tree parser, which stays the
+    /// semantic oracle — `parse` and [`Request::parse_tree`] agree on
+    /// every input (pinned by a property test).
     pub fn parse(line: &str, defaults: &crate::config::ServeConfig) -> Result<Request> {
+        let trimmed = line.trim();
+        match Self::parse_scan(trimmed, defaults) {
+            Some(result) => result,
+            None => Self::parse_tree(trimmed, defaults),
+        }
+    }
+
+    /// Lazy-scan fast path.  Returns `None` to defer to the tree parser;
+    /// `Some(..)` results are byte-for-byte what the tree path produces.
+    /// Every silent-default quirk of the tree path (non-number `n` →
+    /// default, non-array `levels` → default, …) is preserved by bailing
+    /// to the tree on any tracked-field type mismatch instead of
+    /// reimplementing the quirk.
+    fn parse_scan(line: &str, defaults: &crate::config::ServeConfig) -> Option<Result<Request>> {
+        let mut got = scan_fields(line, &SCAN_KEYS)?;
+        match got[0].take() {
+            Some(Scan::Str("generate")) => {}
+            _ => return None, // admin cmds + cmd oddities: tree path
+        }
+        // Validation order mirrors parse_tree exactly so error
+        // precedence on multi-fault requests cannot diverge.
+        let n = match got[1].take() {
+            None => 1,
+            Some(Scan::Num(x)) => x as usize,
+            Some(_) => return None,
+        };
+        if n == 0 || n > MAX_N {
+            return Some(Err(anyhow!("n must be in 1..={MAX_N}")));
+        }
+        let steps = match got[3].take() {
+            None => defaults.default_steps,
+            Some(Scan::Num(x)) => x as usize,
+            Some(_) => return None,
+        };
+        if steps == 0 || steps > MAX_STEPS {
+            return Some(Err(anyhow!("steps must be in 1..={MAX_STEPS}")));
+        }
+        let sampler = match got[10].take() {
+            None => defaults.default_sampler,
+            Some(Scan::Str(s)) => match SamplerKind::parse(s) {
+                Ok(k) => k,
+                Err(e) => return Some(Err(e)),
+            },
+            Some(_) => return None,
+        };
+        let levels = match got[4].take() {
+            None => defaults.mlem_levels.clone(),
+            Some(Scan::Arr(xs)) => {
+                let v: Vec<usize> = xs.iter().map(|&x| x as usize).collect();
+                if v.is_empty() || v.windows(2).any(|w| w[0] >= w[1]) {
+                    return Some(Err(anyhow!("levels must be strictly increasing")));
+                }
+                v
+            }
+            Some(_) => return None,
+        };
+        let policy = match got[8].take() {
+            None => PolicyChoice::Default,
+            Some(Scan::Str(s)) => match PolicyChoice::parse(s) {
+                Ok(p) => p,
+                Err(e) => return Some(Err(e)),
+            },
+            Some(_) => return None,
+        };
+        if policy == PolicyChoice::Theory && sampler != SamplerKind::Mlem {
+            return Some(Err(anyhow!("policy \"theory\" requires the mlem sampler")));
+        }
+        let deadline_ms = match got[6].take() {
+            None => None,
+            Some(Scan::Num(d)) => {
+                if !d.is_finite() || d < 1.0 || d > MAX_DEADLINE_MS as f64 {
+                    return Some(Err(anyhow!("deadline_ms must be in 1..={MAX_DEADLINE_MS}")));
+                }
+                Some(d as u64)
+            }
+            Some(_) => return None, // tree emits "must be a number"
+        };
+        let priority = match got[7].take() {
+            None => 0,
+            Some(Scan::Num(p)) => {
+                if !p.is_finite() || p.abs() > MAX_PRIORITY as f64 {
+                    return Some(Err(anyhow!(
+                        "priority must be in -{MAX_PRIORITY}..={MAX_PRIORITY}"
+                    )));
+                }
+                p as i32
+            }
+            Some(_) => return None, // tree emits "must be a number"
+        };
+        let seed = match got[2].take() {
+            None => 0,
+            Some(Scan::Num(x)) => x as u64,
+            Some(_) => return None,
+        };
+        let delta = match got[5].take() {
+            None => 0.0,
+            Some(Scan::Num(x)) => x,
+            Some(_) => return None,
+        };
+        let return_images = match got[9].take() {
+            None => false,
+            Some(Scan::Bool(b)) => b,
+            Some(_) => return None,
+        };
+        Some(Ok(Request::Generate(GenRequest {
+            n,
+            sampler,
+            steps,
+            seed,
+            levels,
+            delta,
+            policy,
+            return_images,
+            deadline_ms,
+            priority,
+        })))
+    }
+
+    /// Full tree parse (admin requests + the lazy scanner's fallback).
+    fn parse_tree(line: &str, defaults: &crate::config::ServeConfig) -> Result<Request> {
         let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
         let cmd = j.str_of("cmd").ok_or_else(|| anyhow!("missing 'cmd'"))?;
         match cmd {
@@ -292,19 +436,7 @@ impl Response {
             }
             Response::Trace(t) => Json::obj().with("ok", Json::Bool(true)).with("trace", t.clone()),
             Response::Gen(g) => {
-                let stats = Json::obj()
-                    .with("wall_ms", Json::num(g.stats.wall_ms))
-                    .with("queue_ms", Json::num(g.stats.queue_ms))
-                    .with("batch_size", Json::num(g.stats.batch_size as f64))
-                    .with(
-                        "nfe",
-                        Json::Arr(g.stats.nfe.iter().map(|&n| Json::num(n as f64)).collect()),
-                    )
-                    .with("cost_units", Json::num(g.stats.cost_units));
-                let mut o = Json::obj()
-                    .with("ok", Json::Bool(true))
-                    .with("dim", Json::num(g.dim as f64))
-                    .with("stats", stats);
+                let mut o = gen_head(g);
                 if let Some(imgs) = &g.images {
                     o = o.with(
                         "images",
@@ -315,12 +447,60 @@ impl Response {
             }
         }
     }
+
+    /// Serialize one response line straight into `w` (no trailing
+    /// newline), byte-identical to `to_json().to_string()` — but `Gen`
+    /// image payloads stream as numbers into the writer instead of
+    /// first becoming a per-element `Json` node tree.
+    pub fn to_json_writer<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        match self {
+            Response::Gen(g) => {
+                let head = gen_head(g).to_string();
+                match &g.images {
+                    None => w.write_all(head.as_bytes()),
+                    Some(imgs) => {
+                        // `head` is a non-empty object: peel its closing
+                        // '}' and splice the streamed images in its place.
+                        w.write_all(&head.as_bytes()[..head.len() - 1])?;
+                        w.write_all(b",\"images\":[")?;
+                        for (i, &v) in imgs.iter().enumerate() {
+                            if i > 0 {
+                                w.write_all(b",")?;
+                            }
+                            write_json_num(w, v as f64)?;
+                        }
+                        w.write_all(b"]}")
+                    }
+                }
+            }
+            _ => w.write_all(self.to_json().to_string().as_bytes()),
+        }
+    }
+}
+
+/// The `Gen` response without its `images` payload — shared by the tree
+/// serializer and the streaming writer so the two can never drift.
+fn gen_head(g: &GenResponse) -> Json {
+    let stats = Json::obj()
+        .with("wall_ms", Json::num(g.stats.wall_ms))
+        .with("queue_ms", Json::num(g.stats.queue_ms))
+        .with("batch_size", Json::num(g.stats.batch_size as f64))
+        .with(
+            "nfe",
+            Json::Arr(g.stats.nfe.iter().map(|&n| Json::num(n as f64)).collect()),
+        )
+        .with("cost_units", Json::num(g.stats.cost_units));
+    Json::obj()
+        .with("ok", Json::Bool(true))
+        .with("dim", Json::num(g.dim as f64))
+        .with("stats", stats)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ServeConfig;
+    use crate::util::proptest_lite as pt;
 
     fn defaults() -> ServeConfig {
         ServeConfig::default()
@@ -492,6 +672,202 @@ mod tests {
         assert_eq!(parsed.get("images").unwrap().as_arr().unwrap().len(), 2);
         let err = Response::Error("bad".into()).to_json().to_string();
         assert!(err.contains("\"ok\":false"));
+    }
+
+    /// One random request line: every tracked field independently
+    /// absent / valid / edge-valued / wrong-typed, plus unknown keys
+    /// with nested junk, duplicates, odd whitespace, and occasional
+    /// truncation — the input space over which scan and tree must agree.
+    fn random_request_line(g: &mut pt::Gen) -> String {
+        fn num(g: &mut pt::Gen) -> String {
+            match g.usize_range(0, 6) {
+                0 => format!("{}", g.usize_range(0, 3000)),
+                1 => format!("-{}", g.usize_range(0, 50)),
+                2 => format!("{:.3}", g.f64_range(-4.0, 4.0)),
+                3 => "1e999".into(), // parses to +inf
+                4 => "0".into(),
+                _ => format!("{}", g.usize_range(1, 8)),
+            }
+        }
+        let mut fields: Vec<String> = Vec::new();
+        match g.usize_range(0, 12) {
+            0 => {}
+            1 => fields.push(r#""cmd":"ping""#.into()),
+            2 => fields.push(r#""cmd":42"#.into()),
+            3 => fields.push(r#""cmd":"metrics""#.into()),
+            _ => fields.push(r#""cmd":"generate""#.into()),
+        }
+        for key in ["n", "steps", "seed", "delta", "deadline_ms", "priority"] {
+            match g.usize_range(0, 8) {
+                0..=3 => {
+                    let v = num(g);
+                    fields.push(format!("\"{key}\":{v}"));
+                }
+                4 => fields.push(format!("\"{key}\":\"oops\"")),
+                5 => fields.push(format!("\"{key}\":null")),
+                _ => {}
+            }
+        }
+        match g.usize_range(0, 8) {
+            0..=2 => {
+                let k = g.usize_range(1, 5);
+                let mut parts: Vec<String> = Vec::new();
+                let mut v = g.usize_range(0, 3);
+                for _ in 0..k {
+                    parts.push(v.to_string());
+                    v += g.usize_range(0, 3); // sometimes non-increasing
+                }
+                fields.push(format!("\"levels\":[{}]", parts.join(",")));
+            }
+            3 => fields.push("\"levels\":[1,\"x\",3]".into()),
+            4 => fields.push("\"levels\":[]".into()),
+            5 => fields.push("\"levels\":7".into()),
+            _ => {}
+        }
+        match g.usize_range(0, 8) {
+            0 | 1 => fields.push("\"sampler\":\"mlem\"".into()),
+            2 => fields.push("\"sampler\":\"em\"".into()),
+            3 => fields.push("\"sampler\":\"ddim\"".into()),
+            4 => fields.push("\"sampler\":\"bogus\"".into()),
+            5 => fields.push("\"sampler\":3".into()),
+            _ => {}
+        }
+        match g.usize_range(0, 8) {
+            0 | 1 => fields.push("\"policy\":\"default\"".into()),
+            2 => fields.push("\"policy\":\"theory\"".into()),
+            3 => fields.push("\"policy\":\"nope\"".into()),
+            4 => fields.push("\"policy\":false".into()),
+            _ => {}
+        }
+        match g.usize_range(0, 6) {
+            0 | 1 => {
+                let b = g.bool();
+                fields.push(format!("\"return_images\":{b}"));
+            }
+            2 => fields.push("\"return_images\":\"yes\"".into()),
+            _ => {}
+        }
+        match g.usize_range(0, 6) {
+            0 => fields.push("\"extra\":{\"deep\":[1,{\"x\":null}],\"s\":\"v\"}".into()),
+            1 => fields.push("\"note\":\"with \\\"escape\\\"\"".into()),
+            2 => fields.push("\"weird\":[true,[],{}]".into()),
+            _ => {}
+        }
+        // Duplicate a tracked key occasionally (the tree keeps the first
+        // occurrence; the scanner must defer rather than take the last).
+        if g.usize_range(0, 10) == 0 {
+            fields.push("\"n\":2".into());
+            fields.push("\"n\":3".into());
+        }
+        let sep = if g.bool() { "," } else { " , " };
+        let mut line = format!("{{{}}}", fields.join(sep));
+        if g.usize_range(0, 12) == 0 {
+            let cut = g.usize_range(1, 4).min(line.len());
+            line.truncate(line.len() - cut); // malformed tail
+        }
+        if g.bool() {
+            line = format!("  {line} ");
+        }
+        line
+    }
+
+    #[test]
+    fn scan_parse_equals_tree_parse_on_arbitrary_requests() {
+        let d = defaults();
+        pt::check("scan_eq_tree", 500, |g| {
+            let line = random_request_line(g);
+            let scan = Request::parse(&line, &d);
+            let tree = Request::parse_tree(&line, &d);
+            let a = match &scan {
+                Ok(r) => format!("OK:{r:?}"),
+                Err(e) => format!("ERR:{e}"),
+            };
+            let b = match &tree {
+                Ok(r) => format!("OK:{r:?}"),
+                Err(e) => format!("ERR:{e}"),
+            };
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("on {line:?}\n  scan: {a}\n  tree: {b}"))
+            }
+        });
+    }
+
+    #[test]
+    fn scan_path_matches_tree_on_canonical_requests() {
+        // The exact hot-path shapes clients send, pinned deterministically
+        // (the property test explores; this is the shortlist a regression
+        // should name).
+        let d = defaults();
+        for line in [
+            r#"{"cmd":"generate"}"#,
+            r#"{"cmd":"generate","n":4,"seed":9}"#,
+            r#"{"cmd":"generate","n":2,"sampler":"em","steps":50,"levels":[2,4],"delta":-1.5,"return_images":true}"#,
+            r#"{"cmd":"generate","n":1,"deadline_ms":250,"priority":7}"#,
+            r#"{"cmd":"generate","n":1,"sampler":"mlem","policy":"theory","delta":-1.5}"#,
+            r#"{"cmd":"generate","n":0}"#,
+            r#"{"cmd":"generate","levels":[3,1]}"#,
+            r#"{"cmd":"generate","n":1,"priority":5000}"#,
+        ] {
+            let scan = Request::parse(line, &d);
+            let tree = Request::parse_tree(line, &d);
+            match (&scan, &tree) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "on {line}"),
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "on {line}"),
+                other => panic!("scan/tree divergence on {line}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn to_json_writer_is_byte_identical_to_tree_serialization() {
+        let mut g = GenResponse { dim: 3, ..Default::default() };
+        g.stats.nfe = vec![4, 1];
+        g.stats.wall_ms = 1.25;
+        g.stats.cost_units = 0.375;
+        g.images = Some(vec![0.5, -2.0, 1.0e-7, 0.1, -3.25e4]);
+        let headless = GenResponse { images: None, ..g.clone() };
+        for resp in [
+            Response::Gen(g),
+            Response::Gen(headless),
+            Response::Pong,
+            Response::ShuttingDown,
+            Response::Error("bad".into()),
+            Response::Overloaded { retry_after_ms: 9 },
+            Response::DeadlineExceeded { waited_ms: 320, deadline_ms: 250 },
+            Response::Metrics(Json::obj().with("requests", Json::num(3.0))),
+        ] {
+            let mut buf = Vec::new();
+            resp.to_json_writer(&mut buf).unwrap();
+            assert_eq!(
+                String::from_utf8(buf).unwrap(),
+                resp.to_json().to_string(),
+                "streamed bytes diverged for {resp:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gen_writer_streams_arbitrary_floats_identically() {
+        pt::check("gen_writer_parity", 120, |g| {
+            let n = g.usize_range(0, 48);
+            let imgs = g.vec_normal_f32(n, 2.0);
+            let resp = Response::Gen(GenResponse {
+                images: Some(imgs),
+                dim: n,
+                ..Default::default()
+            });
+            let mut buf = Vec::new();
+            resp.to_json_writer(&mut buf).map_err(|e| e.to_string())?;
+            let streamed = String::from_utf8(buf).map_err(|e| e.to_string())?;
+            let tree = resp.to_json().to_string();
+            if streamed == tree {
+                Ok(())
+            } else {
+                Err(format!("streamed {streamed} != tree {tree}"))
+            }
+        });
     }
 
     #[test]

@@ -1,8 +1,20 @@
-//! TCP front end: newline-delimited JSON requests over plain sockets.
+//! TCP front end: newline-delimited JSON requests over plain sockets,
+//! pipelined per connection.
 //!
 //! Threads:
-//!  * acceptor — owns the listener, spawns one handler per connection;
-//!  * handlers — parse requests, enqueue work, block on the response;
+//!  * acceptor — owns the listener, reaps finished handler threads every
+//!    poll, and refuses connections past `max_conns` with a typed
+//!    `overloaded` line instead of queueing them invisibly;
+//!  * readers — one per connection: parse lines as they arrive (lazy
+//!    field scan first, tree parse on fallback — see
+//!    [`crate::coordinator::protocol`]) and push response slots into the
+//!    connection's bounded in-flight window (`conn_inflight`), so a
+//!    client can write N generate lines back-to-back and the
+//!    lanes/executor grouping machinery sees them all at once;
+//!  * writers — one per connection: resolve slots **in request order**
+//!    and stream each response straight into the socket's write buffer
+//!    ([`Response::to_json_writer`] — `images` never becomes a
+//!    per-element `Json` node tree);
 //!  * batch runners — the [`LanePool`]: `batch_workers` lanes pop
 //!    batches of *different* compatibility classes off the shared
 //!    [`crate::coordinator::batcher::Batcher`] concurrently and run them
@@ -10,11 +22,26 @@
 //!    several in-flight integrations feed the executor's cross-request
 //!    grouping loop at once.
 //!
+//! Ordering contract: the in-flight window never reorders — slots enter
+//! the writer's queue in read order and the writer blocks on each slot's
+//! result before touching the next, so pipelined responses come back in
+//! request order, bit-identical to sequential submission (pinned by
+//! `tests/frontdoor.rs`).
+//!
+//! Shutdown contract: accepted sockets carry a read timeout, so a
+//! reader parked on an idle persistent connection observes `stop()`
+//! within one poll interval and exits — `Server::run` can always join
+//! its handlers.  (The historical handler blocked in `reader.lines()`
+//! forever, hanging shutdown on any idle connection.)
+//!
 //! Python never appears anywhere on this path.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -24,10 +51,18 @@ use crate::coordinator::lanes::LanePool;
 use crate::coordinator::protocol::{Request, Response};
 use crate::coordinator::scheduler::Scheduler;
 use crate::metrics::Metrics;
-use crate::trace::{self, Attr, Stage};
+use crate::trace::{self, Attr, Stage, TraceTag};
 
 /// Spans returned by `{"cmd":"trace"}` when the client sends no `limit`.
 const DEFAULT_TRACE_LIMIT: usize = 512;
+
+/// Socket read timeout: the cadence at which an idle reader re-checks
+/// the stop flag.  Bounds how long `stop()` can block on handler joins.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// `retry_after_ms` hint on the refusal line a saturated acceptor
+/// writes before closing the connection.
+const REFUSAL_RETRY_MS: u64 = 100;
 
 /// The serving coordinator.
 pub struct Server {
@@ -35,6 +70,9 @@ pub struct Server {
     scheduler: Arc<Scheduler>,
     metrics: Metrics,
     lanes: Arc<LanePool>,
+    /// Live handler threads, published by the accept loop after each
+    /// reap — observability for the handler-leak regression test.
+    open_handlers: AtomicUsize,
 }
 
 impl Server {
@@ -49,7 +87,14 @@ impl Server {
         let scheduler = Arc::new(scheduler);
         let lanes = Arc::new(LanePool::new(scheduler.clone(), &cfg));
         eprintln!("[server] {} batch-runner lane(s)", lanes.workers());
-        Server { cfg, scheduler, metrics, lanes }
+        Server { cfg, scheduler, metrics, lanes, open_handlers: AtomicUsize::new(0) }
+    }
+
+    /// Handler threads currently alive (reader threads; each owns one
+    /// writer).  Updated by the accept loop's reap pass, so the value
+    /// trails reality by at most one poll interval.
+    pub fn open_handlers(&self) -> usize {
+        self.open_handlers.load(Ordering::Relaxed)
     }
 
     /// Bind, serve until a `shutdown` request arrives, then drain.
@@ -63,10 +108,27 @@ impl Server {
         eprintln!("[server] listening on {}", listener.local_addr()?);
 
         // Accept loop (non-blocking poll so we can observe `stop`).
-        let mut handlers = Vec::new();
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
         while !self.lanes.stopped() {
+            // Reap finished handlers every poll: a long-lived server
+            // used to retain one `JoinHandle` per connection it ever
+            // accepted, for its whole lifetime.
+            reap_finished(&mut handlers);
+            self.open_handlers.store(handlers.len(), Ordering::Relaxed);
             match listener.accept() {
                 Ok((stream, _)) => {
+                    if handlers.len() >= self.cfg.max_conns {
+                        // Saturated: answer with a typed refusal the
+                        // client can parse and back off on, then close.
+                        // Accept-queue silence would look like an outage.
+                        self.metrics.conn_refused.inc();
+                        let mut s = stream;
+                        s.set_nodelay(true).ok();
+                        let refusal =
+                            Response::Overloaded { retry_after_ms: REFUSAL_RETRY_MS };
+                        let _ = writeln!(s, "{}", refusal.to_json());
+                        continue;
+                    }
                     let lanes = self.lanes.clone();
                     let scheduler = self.scheduler.clone();
                     let metrics = self.metrics.clone();
@@ -76,8 +138,9 @@ impl Server {
                             eprintln!("[server] connection error: {e:#}");
                         }
                     }));
+                    self.open_handlers.store(handlers.len(), Ordering::Relaxed);
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(2));
                 }
                 Err(e) => return Err(e.into()),
@@ -88,9 +151,14 @@ impl Server {
         // every accepted request gets a response before the join ends.
         self.lanes.stop();
         self.lanes.join();
+        // Readers notice the stop flag at their next read-timeout tick
+        // and exit; each drops its slot sender, so its writer drains the
+        // window (every in-flight request still gets its line) and exits
+        // too.  These joins are bounded by READ_POLL, not by the client.
         for h in handlers {
             let _ = h.join();
         }
+        self.open_handlers.store(0, Ordering::Relaxed);
         // Flight-recorder dump: after the drain every span has been
         // written, so the Chrome trace on disk is complete.
         if let Some(path) = &self.cfg.trace_out {
@@ -109,6 +177,47 @@ impl Server {
     }
 }
 
+/// Join (and drop) every handler whose thread has already returned.
+fn reap_finished(handlers: &mut Vec<JoinHandle<()>>) {
+    let mut i = 0;
+    while i < handlers.len() {
+        if handlers[i].is_finished() {
+            let _ = handlers.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// One response slot in a connection's in-flight window.  Slots are
+/// queued in read order; the writer resolves them strictly FIFO, which
+/// is the whole ordering guarantee.
+struct ReplySlot {
+    reply: Reply,
+    /// `Some` exactly for generate-path requests (including typed
+    /// refusals and errors): the writer records `request_latency` for
+    /// every one of these, so sheds and deadline misses no longer
+    /// vanish from p99.  Admin requests stay excluded.
+    gen_t0: Option<Instant>,
+    tag: TraceTag,
+    root_span: u64,
+    req_start: u64,
+    /// This slot answers a `shutdown` request: the writer flushes it,
+    /// then closes the connection.
+    shutdown: bool,
+}
+
+enum Reply {
+    /// Answered at parse/admin time.
+    Ready(Response),
+    /// A generate request in flight in the lanes; resolving blocks until
+    /// its response arrives.
+    Pending(Receiver<Response>),
+}
+
+/// Per-connection entry point: spawn the in-order writer, run the
+/// reader loop on this thread, then drop the slot sender so the writer
+/// drains the window and exits.
 fn handle_conn(
     stream: TcpStream,
     lanes: Arc<LanePool>,
@@ -117,99 +226,173 @@ fn handle_conn(
     cfg: ServeConfig,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let t0 = Instant::now();
-        metrics.requests.inc();
-        // Flight recorder: head-sample at accept, open the root span,
-        // and hand downstream layers a tag parented under it.
-        let rec = trace::recorder();
-        let tag = rec.admit();
-        let (root_span, req_start) =
-            if tag.sampled() { (rec.span_id(), rec.now_us()) } else { (0, 0) };
-        let rooted = tag.under(root_span);
-        let parse_start = if tag.sampled() { rec.now_us() } else { 0 };
-        let parsed = Request::parse(&line, &cfg);
-        if tag.sampled() {
-            rec.record(rooted, Stage::Parse, parse_start, Attr::default());
-        }
-        let response = match parsed {
-            Err(e) => {
-                metrics.errors_bad_request.inc();
-                metrics.rejected.inc();
-                Response::Error(e.to_string())
-            }
-            Ok(Request::Ping) => Response::Pong,
-            Ok(Request::Metrics) => {
-                // The global snapshot plus the live per-class queue
-                // depths (which only the lane pool's batcher knows).
-                Response::Metrics(
-                    metrics.snapshot().with("batcher", lanes.batcher_snapshot()),
-                )
-            }
-            Ok(Request::Calibration { set_budget }) => {
-                Response::Calibration(scheduler.calibration(set_budget))
-            }
-            Ok(Request::Trace { limit }) => {
-                Response::Trace(rec.spans_json(limit.unwrap_or(DEFAULT_TRACE_LIMIT)))
-            }
-            Ok(Request::Shutdown) => {
-                lanes.stop();
-                let line = Response::ShuttingDown.to_json().to_string();
-                writeln!(writer, "{line}")?;
-                if tag.sampled() {
-                    // Close the root here: this arm breaks past the
-                    // shared respond path, and an unrecorded root would
-                    // orphan the parse span above.
-                    rec.record_span(
-                        root_span,
-                        tag,
-                        Stage::Request,
-                        req_start,
-                        rec.now_us(),
-                        Attr::default(),
-                    );
+    // The read timeout is the shutdown mechanism: without it a client
+    // holding an idle persistent connection parks this thread in a
+    // blocking read forever and `Server::run` never finishes joining.
+    stream.set_read_timeout(Some(READ_POLL))?;
+    let wstream = stream.try_clone()?;
+    let (slot_tx, slot_rx) = sync_channel::<ReplySlot>(cfg.conn_inflight.max(1));
+    let wmetrics = metrics.clone();
+    let writer = std::thread::Builder::new()
+        .name("conn-writer".into())
+        .spawn(move || write_loop(wstream, slot_rx, wmetrics))?;
+    let res = read_loop(stream, &lanes, &scheduler, &metrics, &cfg, &slot_tx);
+    drop(slot_tx);
+    let _ = writer.join();
+    res
+}
+
+/// Read newline-delimited requests until EOF, shutdown, or a dead
+/// writer; each request becomes one slot in the in-flight window.
+fn read_loop(
+    stream: TcpStream,
+    lanes: &Arc<LanePool>,
+    scheduler: &Arc<Scheduler>,
+    metrics: &Metrics,
+    cfg: &ServeConfig,
+    slot_tx: &SyncSender<ReplySlot>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        // `read_line` appends, so bytes of a partial line survive a
+        // timeout in `line` and the next pass continues it — clear only
+        // after a complete line has been handled.
+        let eof = match reader.read_line(&mut line) {
+            Ok(0) => true,
+            // Ok(_) without a trailing newline is EOF mid-line: handle
+            // the fragment as the final request (what `lines()` did).
+            Ok(_) => !line.ends_with('\n'),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if lanes.stopped() {
+                    return Ok(());
                 }
-                break;
+                continue;
             }
-            Ok(Request::Generate(req)) => {
-                let rx = lanes.submit_traced(req, rooted);
-                match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => {
-                        // Every accepted request is supposed to be
-                        // answered exactly once (lane pool contract);
-                        // a dropped channel is a server-side bug class,
-                        // so count it in the internal-error taxonomy.
-                        metrics.errors_internal.inc();
-                        Response::Error("worker dropped request".into())
-                    }
-                }
-            }
+            Err(e) => return Err(e.into()),
         };
-        if let Response::Gen(ref g) = response {
-            metrics.request_latency.record(t0.elapsed());
-            let _ = g;
+        if !line.trim().is_empty() {
+            let t0 = Instant::now();
+            metrics.requests.inc();
+            // Flight recorder: head-sample at accept, open the root
+            // span, and hand downstream layers a tag parented under it.
+            let rec = trace::recorder();
+            let tag = rec.admit();
+            let (root_span, req_start) =
+                if tag.sampled() { (rec.span_id(), rec.now_us()) } else { (0, 0) };
+            let rooted = tag.under(root_span);
+            let parse_start = if tag.sampled() { rec.now_us() } else { 0 };
+            let parsed = Request::parse(&line, cfg);
+            if tag.sampled() {
+                rec.record(rooted, Stage::Parse, parse_start, Attr::default());
+            }
+            let mut shutdown = false;
+            let (reply, gen_t0) = match parsed {
+                Err(e) => {
+                    metrics.errors_bad_request.inc();
+                    metrics.rejected.inc();
+                    (Reply::Ready(Response::Error(e.to_string())), None)
+                }
+                Ok(Request::Ping) => (Reply::Ready(Response::Pong), None),
+                Ok(Request::Metrics) => {
+                    // The global snapshot plus the live per-class queue
+                    // depths (which only the lane pool's batcher knows).
+                    (
+                        Reply::Ready(Response::Metrics(
+                            metrics.snapshot().with("batcher", lanes.batcher_snapshot()),
+                        )),
+                        None,
+                    )
+                }
+                Ok(Request::Calibration { set_budget }) => (
+                    Reply::Ready(Response::Calibration(scheduler.calibration(set_budget))),
+                    None,
+                ),
+                Ok(Request::Trace { limit }) => (
+                    Reply::Ready(Response::Trace(
+                        rec.spans_json(limit.unwrap_or(DEFAULT_TRACE_LIMIT)),
+                    )),
+                    None,
+                ),
+                Ok(Request::Shutdown) => {
+                    lanes.stop();
+                    shutdown = true;
+                    (Reply::Ready(Response::ShuttingDown), None)
+                }
+                Ok(Request::Generate(req)) => {
+                    // Enqueue without waiting: the next line can be read
+                    // (and batched with this one) immediately.  The
+                    // writer blocks on the receiver in slot order.
+                    (Reply::Pending(lanes.submit_traced(req, rooted)), Some(t0))
+                }
+            };
+            let slot = ReplySlot { reply, gen_t0, tag, root_span, req_start, shutdown };
+            if slot_tx.send(slot).is_err() {
+                // Writer exited (client hung up mid-stream): anything we
+                // would read next has nowhere to go.
+                return Ok(());
+            }
+            if shutdown {
+                return Ok(());
+            }
         }
-        let out = response.to_json().to_string();
-        let respond_start = if tag.sampled() { rec.now_us() } else { 0 };
-        writeln!(writer, "{out}")?;
-        if tag.sampled() {
-            rec.record(rooted, Stage::Respond, respond_start, Attr::default());
+        line.clear();
+        if eof {
+            return Ok(());
+        }
+    }
+}
+
+/// Resolve slots strictly in order and stream each response onto the
+/// socket.  Runs until the slot channel closes (reader exited) or the
+/// client stops reading.
+fn write_loop(stream: TcpStream, slots: Receiver<ReplySlot>, metrics: Metrics) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(slot) = slots.recv() {
+        let response = match slot.reply {
+            Reply::Ready(r) => r,
+            Reply::Pending(rx) => rx.recv().unwrap_or_else(|_| {
+                // Every accepted request is supposed to be answered
+                // exactly once (lane pool contract); a dropped channel
+                // is a server-side bug class, so count it in the
+                // internal-error taxonomy.
+                metrics.errors_internal.inc();
+                Response::Error("worker dropped request".into())
+            }),
+        };
+        // Latency covers every generate-path outcome — results, typed
+        // sheds, deadline misses, errors — not just `Response::Gen`
+        // (the historical survivorship bias that hid overload from p99).
+        if let Some(t0) = slot.gen_t0 {
+            metrics.request_latency.record(t0.elapsed());
+        }
+        let rec = trace::recorder();
+        let respond_start = if slot.tag.sampled() { rec.now_us() } else { 0 };
+        let wrote = response
+            .to_json_writer(&mut w)
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush());
+        if slot.tag.sampled() {
+            rec.record(
+                slot.tag.under(slot.root_span),
+                Stage::Respond,
+                respond_start,
+                Attr::default(),
+            );
             rec.record_span(
-                root_span,
-                tag,
+                slot.root_span,
+                slot.tag,
                 Stage::Request,
-                req_start,
+                slot.req_start,
                 rec.now_us(),
                 Attr::default(),
             );
         }
+        if wrote.is_err() || slot.shutdown {
+            // Remaining slots' lane responses are dropped on the floor
+            // (their send is best-effort); the reader notices the closed
+            // channel on its next send.
+            break;
+        }
     }
-    Ok(())
 }

@@ -7,6 +7,8 @@
 //!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
 //!                 [--trace-sample-n N]  # flight recorder: trace 1-in-N requests (0 off, 1 all)
 //!                 [--trace-out PATH]  # dump Chrome trace-event JSON on shutdown
+//!                 [--conn-inflight W]  # per-connection pipelining window (bounded in-flight)
+//!                 [--max-conns C]  # live connection cap; excess get a typed `overloaded` line
 //! mlem generate   [--n N] [--sampler em|mlem|ddpm|ddim] [--steps S] [--seed K]
 //!                 [--levels 1,3,5] [--delta D] [--policy default|theory]
 //!                 [--out images.pgm]

@@ -243,6 +243,9 @@ pub struct MetricsInner {
     /// Error taxonomy: failures the client caused (parse errors,
     /// out-of-range parameters).
     pub errors_bad_request: Counter,
+    /// Connections refused at the accept loop because `max_conns`
+    /// handlers were already live (typed `overloaded` refusal line).
+    pub conn_refused: Counter,
 }
 
 /// Manual because `Instant` has no `Default`: every metric starts at
@@ -278,6 +281,7 @@ impl Default for MetricsInner {
             deadline_misses: Counter::default(),
             errors_internal: Counter::default(),
             errors_bad_request: Counter::default(),
+            conn_refused: Counter::default(),
         }
     }
 }
@@ -402,6 +406,7 @@ impl Metrics {
             .with("deadline_misses", Json::num(self.deadline_misses.get() as f64))
             .with("errors_internal", Json::num(self.errors_internal.get() as f64))
             .with("errors_bad_request", Json::num(self.errors_bad_request.get() as f64))
+            .with("conn_refused", Json::num(self.conn_refused.get() as f64))
             .with("worker_pool", worker_pool)
             .with("request_latency", self.request_latency.snapshot())
             .with("execute_latency", self.execute_latency.snapshot())
@@ -532,6 +537,7 @@ mod tests {
         assert_eq!(parsed.f64_of("deadline_misses"), Some(0.0));
         assert_eq!(parsed.f64_of("errors_internal"), Some(0.0));
         assert_eq!(parsed.f64_of("errors_bad_request"), Some(0.0));
+        assert_eq!(parsed.f64_of("conn_refused"), Some(0.0));
     }
 
     #[test]

@@ -425,6 +425,289 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
+/// Stream one number with the exact formatting `Json::Num`'s `Display`
+/// uses (integral finite values as `i64`, other finite values via the
+/// default float formatter, non-finite as `null`) — the building block
+/// for serializing large numeric payloads without a per-element `Json`
+/// node.
+pub fn write_json_num<W: std::io::Write>(w: &mut W, x: f64) -> std::io::Result<()> {
+    if x.fract() == 0.0 && x.abs() < 1e15 && x.is_finite() {
+        write!(w, "{}", x as i64)
+    } else if x.is_finite() {
+        write!(w, "{x}")
+    } else {
+        w.write_all(b"null")
+    }
+}
+
+// -------------------------------------------------------------- lazy scanning
+
+/// A field value captured by [`scan_fields`] without building a tree.
+///
+/// Strings borrow the input (only escape-free strings are captured);
+/// arrays are captured only when they are flat all-number arrays —
+/// anything richer makes the whole scan bail to the tree parser.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scan<'a> {
+    Num(f64),
+    Str(&'a str),
+    Bool(bool),
+    Null,
+    /// A flat array of numbers (the only array shape the wire protocol's
+    /// hot path carries: `levels`).
+    Arr(Vec<f64>),
+}
+
+/// Single-pass field extraction over one JSON object line: returns the
+/// value of each requested key (`None` for absent keys — no allocation
+/// for those) while structurally validating the whole document, or
+/// `None` when the input needs the full tree parser.
+///
+/// The scanner is deliberately strict — it bails (so the caller falls
+/// back to [`Json::parse`]) on anything outside the hot-path shape:
+/// a non-object top level, malformed syntax, trailing characters, any
+/// escape sequence, control characters in strings, duplicate tracked
+/// keys, or tracked values that are objects or non-flat-number arrays.
+/// It therefore never *accepts* a document the tree parser rejects, and
+/// never captures a value differently from what the tree would hold:
+/// `Some(..)` results are exactly tree-equivalent, which is what lets
+/// `Request::parse` use this on the hot path with the tree parser as
+/// the fallback oracle.
+pub fn scan_fields<'a>(line: &'a str, keys: &[&str]) -> Option<Vec<Option<Scan<'a>>>> {
+    let mut s = Scanner { b: line.as_bytes(), src: line, i: 0 };
+    let mut out: Vec<Option<Scan<'a>>> = keys.iter().map(|_| None).collect();
+    s.ws();
+    if s.peek() != Some(b'{') {
+        return None;
+    }
+    s.i += 1;
+    s.ws();
+    if s.peek() == Some(b'}') {
+        s.i += 1;
+    } else {
+        loop {
+            s.ws();
+            let key = s.string_slice()?;
+            s.ws();
+            if s.peek() != Some(b':') {
+                return None;
+            }
+            s.i += 1;
+            s.ws();
+            match keys.iter().position(|k| *k == key) {
+                Some(idx) => {
+                    let v = s.tracked_value()?;
+                    if out[idx].is_some() {
+                        // Duplicate tracked key: the tree keeps the
+                        // first occurrence — let it.
+                        return None;
+                    }
+                    out[idx] = Some(v);
+                }
+                None => s.skip_value()?,
+            }
+            s.ws();
+            match s.peek()? {
+                b',' => s.i += 1,
+                b'}' => {
+                    s.i += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        return None;
+    }
+    Some(out)
+}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Option<()> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    /// Borrow an escape-free string body; bails on `\` or control chars.
+    /// Quote bytes never occur inside UTF-8 multibyte sequences, so the
+    /// borrowed slice always lands on char boundaries.
+    fn string_slice(&mut self) -> Option<&'a str> {
+        if self.peek() != Some(b'"') {
+            return None;
+        }
+        self.i += 1;
+        let start = self.i;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    let s = &self.src[start..self.i];
+                    self.i += 1;
+                    return Some(s);
+                }
+                b'\\' => return None,
+                c if c < 0x20 => return None,
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume one number per the tree parser's grammar and parse it;
+    /// bails exactly where the tree parser would error.
+    fn number(&mut self) -> Option<f64> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        self.src[start..self.i].parse::<f64>().ok()
+    }
+
+    /// Capture a tracked value; bails on objects, non-flat-number
+    /// arrays, and anything the string/number rules reject.
+    fn tracked_value(&mut self) -> Option<Scan<'a>> {
+        match self.peek()? {
+            b'"' => self.string_slice().map(Scan::Str),
+            b't' => self.lit("true").map(|()| Scan::Bool(true)),
+            b'f' => self.lit("false").map(|()| Scan::Bool(false)),
+            b'n' => self.lit("null").map(|()| Scan::Null),
+            b'[' => {
+                self.i += 1;
+                self.ws();
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Some(Scan::Arr(items));
+                }
+                loop {
+                    self.ws();
+                    match self.peek()? {
+                        c if c == b'-' || c.is_ascii_digit() => items.push(self.number()?),
+                        _ => return None,
+                    }
+                    self.ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Some(Scan::Arr(items));
+                        }
+                        _ => return None,
+                    }
+                }
+            }
+            c if c == b'-' || c.is_ascii_digit() => self.number().map(Scan::Num),
+            _ => None,
+        }
+    }
+
+    /// Structurally skip one untracked value.  Just as strict as the
+    /// tree parser's grammar (minus escapes, where it bails instead),
+    /// so skipped content can never smuggle in a document the tree
+    /// would reject.
+    fn skip_value(&mut self) -> Option<()> {
+        self.ws();
+        match self.peek()? {
+            b'"' => {
+                self.string_slice()?;
+            }
+            b't' => self.lit("true")?,
+            b'f' => self.lit("false")?,
+            b'n' => self.lit("null")?,
+            b'[' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                } else {
+                    loop {
+                        self.skip_value()?;
+                        self.ws();
+                        match self.peek()? {
+                            b',' => self.i += 1,
+                            b']' => {
+                                self.i += 1;
+                                break;
+                            }
+                            _ => return None,
+                        }
+                    }
+                }
+            }
+            b'{' => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                } else {
+                    loop {
+                        self.ws();
+                        self.string_slice()?;
+                        self.ws();
+                        if self.peek() != Some(b':') {
+                            return None;
+                        }
+                        self.i += 1;
+                        self.skip_value()?;
+                        self.ws();
+                        match self.peek()? {
+                            b',' => self.i += 1,
+                            b'}' => {
+                                self.i += 1;
+                                break;
+                            }
+                            _ => return None,
+                        }
+                    }
+                }
+            }
+            c if c == b'-' || c.is_ascii_digit() => {
+                self.number()?;
+            }
+            _ => return None,
+        }
+        Some(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -500,5 +783,102 @@ mod tests {
     #[test]
     fn non_finite_serializes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn scan_extracts_tracked_fields() {
+        let line = r#"{"cmd":"generate","n":4,"delta":-1.5,"levels":[1,3,5],"return_images":true,"extra":{"deep":[1,"x"]},"note":null}"#;
+        let got = scan_fields(line, &["cmd", "n", "delta", "levels", "return_images", "seed", "note"])
+            .expect("hot-path shape must scan");
+        assert_eq!(got[0], Some(Scan::Str("generate")));
+        assert_eq!(got[1], Some(Scan::Num(4.0)));
+        assert_eq!(got[2], Some(Scan::Num(-1.5)));
+        assert_eq!(got[3], Some(Scan::Arr(vec![1.0, 3.0, 5.0])));
+        assert_eq!(got[4], Some(Scan::Bool(true)));
+        assert_eq!(got[5], None, "absent key stays None");
+        assert_eq!(got[6], Some(Scan::Null));
+    }
+
+    #[test]
+    fn scan_handles_whitespace_and_empty_shapes() {
+        let got = scan_fields("  { \"a\" :\t1 , \"b\" : [ ] }  ", &["a", "b"]).unwrap();
+        assert_eq!(got[0], Some(Scan::Num(1.0)));
+        assert_eq!(got[1], Some(Scan::Arr(Vec::new())));
+        let empty = scan_fields("{}", &["a"]).unwrap();
+        assert_eq!(empty[0], None);
+    }
+
+    #[test]
+    fn scan_bails_to_tree_on_hard_cases() {
+        // Everything here must fall back (None), never mis-capture.
+        for line in [
+            r#"[1,2]"#,                              // non-object top level
+            r#"{"a":1"#,                             // truncated
+            r#"{"a":1} x"#,                          // trailing characters
+            r#"{"a":"e\nsc"}"#,                      // escape in tracked string
+            r#"{"x":"e\nsc","a":1}"#,                // escape in untracked string
+            r#"{"a":1,"a":2}"#,                      // duplicate tracked key
+            r#"{"a":{"nested":1}}"#,                 // tracked object value
+            r#"{"a":[1,"x"]}"#,                      // tracked non-flat array
+            r#"{"a":[[1]]}"#,                        // tracked nested array
+            r#"{"a":1e}"#,                           // bad number
+            r#"{"x":1e,"a":1}"#,                     // bad untracked number
+            r#"{"a" 1}"#,                            // missing colon
+        ] {
+            assert_eq!(scan_fields(line, &["a"]), None, "should bail: {line}");
+        }
+    }
+
+    #[test]
+    fn scan_agrees_with_tree_on_captured_values() {
+        // Whenever the scanner captures, the value must equal what the
+        // tree parser holds for the same key.
+        for line in [
+            r#"{"k":0}"#,
+            r#"{"k":-0.25}"#,
+            r#"{"k":1e3}"#,
+            r#"{"k":"héllo ∞"}"#,
+            r#"{"k":false}"#,
+            r#"{"k":[0,-2,3.5]}"#,
+            r#"{"other":"x","k":7}"#,
+        ] {
+            let tree = Json::parse(line).unwrap();
+            let got = scan_fields(line, &["k"]).unwrap()[0].clone();
+            match (got, tree.get("k")) {
+                (Some(Scan::Num(x)), Some(Json::Num(y))) => assert_eq!(x, *y),
+                (Some(Scan::Str(s)), Some(Json::Str(t))) => assert_eq!(s, t),
+                (Some(Scan::Bool(b)), Some(Json::Bool(c))) => assert_eq!(b, *c),
+                (Some(Scan::Null), Some(Json::Null)) => {}
+                (Some(Scan::Arr(xs)), Some(Json::Arr(ys))) => {
+                    let ys: Vec<f64> = ys.iter().filter_map(Json::as_f64).collect();
+                    assert_eq!(xs, ys);
+                }
+                (g, t) => panic!("scan/tree divergence on {line}: {g:?} vs {t:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn write_json_num_matches_display() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -3.0,
+            0.5,
+            -2.25,
+            1e-9,
+            1e15,
+            9.007199254740991e15,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            0.1f32 as f64,
+            (-1.7e-5f32) as f64,
+        ] {
+            let mut buf = Vec::new();
+            write_json_num(&mut buf, x).unwrap();
+            assert_eq!(String::from_utf8(buf).unwrap(), Json::Num(x).to_string(), "x = {x}");
+        }
     }
 }

@@ -22,6 +22,9 @@
 //! `benchkit::resilience_json` schema so the artifact exists after
 //! `cargo test` alone (the full sweep lives in `bench_resilience`).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -32,7 +35,7 @@ use mlem::benchkit::{
 use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::batcher::Batcher;
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
-use mlem::coordinator::{LanePool, Scheduler};
+use mlem::coordinator::{LanePool, Scheduler, Server};
 use mlem::metrics::Metrics;
 use mlem::runtime::{
     spawn_executor_with, spawn_supervised, ExecOptions, Manifest, NeuralDenoiser,
@@ -582,6 +585,124 @@ fn traced_kill_storm_spans_both_executor_generations_and_stays_a_tree() {
     let parsed = Json::parse(&text).expect("chrome trace dump must be valid JSON");
     let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
     assert!(!events.is_empty(), "the traced storm must have exported events");
+}
+
+/// Chaos through the pipelined front door: one TCP connection with an
+/// in-flight window > 1, driving a server whose level-2 executable
+/// drops calls with seeded `flaky` faults (the CI `MLEM_FAULT_SEED`
+/// matrix varies the coin).  Generates (some deadline-carrying, so the
+/// shed/expiry paths can fire under a pipelined window), pings and
+/// failures are interleaved in one stream — every line must be answered
+/// with typed JSON **in request order** (the pings are the order
+/// probes: a `pong` in a generate's slot is a reordering), and the
+/// shutdown handshake at the end must complete cleanly.
+#[test]
+fn pipelined_connection_chaos_storm_stays_in_order_with_typed_answers() {
+    let _storm = storm_guard();
+    let dir = synth_artifact_dir(
+        "pipelined-chaos",
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 64, fault: "flaky=0.35" },
+        ],
+    )
+    .expect("pipelined-chaos artifacts");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 2,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: 2,
+        conn_inflight: 6,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
+    let metrics = Metrics::new();
+    let (handle, _join) =
+        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).expect("spawn");
+    let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap();
+    let server = Arc::new(Server::new(cfg, scheduler));
+    let (addr_tx, addr_rx) = channel();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // 18 lines back-to-back: every third a ping (the order probe), the
+    // rest Δ ≫ 0 generates (forcing faulty level-2 evals); the back
+    // half carries deadlines — generous ones that should survive, 1 ms
+    // ones that shed or expire once the EWMA has measured a batch.
+    const LINES: usize = 18;
+    let is_ping = |i: usize| i % 3 == 2;
+    for i in 0..LINES {
+        if is_ping(i) {
+            writeln!(writer, r#"{{"cmd":"ping"}}"#).unwrap();
+        } else {
+            let dl = match i {
+                0..=8 => String::new(),
+                9..=13 => r#","deadline_ms":10000"#.to_string(),
+                _ => r#","deadline_ms":1"#.to_string(),
+            };
+            writeln!(
+                writer,
+                r#"{{"cmd":"generate","n":1,"sampler":"mlem","steps":30,"seed":{i},"levels":[1,2],"delta":5.0{dl}}}"#
+            )
+            .unwrap();
+        }
+    }
+    let mut typed_failures = 0usize;
+    let mut completed = 0usize;
+    for i in 0..LINES {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("a response line per request");
+        assert!(!line.trim().is_empty(), "line {i}: EOF instead of an answer");
+        let j = Json::parse(&line).expect("typed JSON response");
+        if is_ping(i) {
+            assert_eq!(
+                j.get("pong"),
+                Some(&Json::Bool(true)),
+                "line {i}: ping answered out of order: {j}"
+            );
+            continue;
+        }
+        match j.get("ok") {
+            Some(&Json::Bool(true)) => {
+                assert!(j.f64_of("dim").is_some(), "line {i}: generate result without dim");
+                completed += 1;
+            }
+            Some(&Json::Bool(false)) => {
+                assert!(
+                    j.get("pong").is_none(),
+                    "line {i}: ping answer in a generate slot: {j}"
+                );
+                assert!(!j.str_of("error").unwrap_or("").is_empty(), "line {i}: untyped failure");
+                typed_failures += 1;
+            }
+            other => panic!("line {i}: malformed response {other:?}"),
+        }
+    }
+    assert_eq!(completed + typed_failures, LINES - LINES / 3, "every generate answered once");
+
+    // Clean shutdown over the same (still pipelined) connection.
+    writeln!(writer, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    let mut bye = String::new();
+    reader.read_line(&mut bye).expect("shutdown ack");
+    assert!(bye.contains(r#""shutdown":true"#), "shutdown ack: {bye}");
+    server_thread.join().expect("server joins after pipelined chaos");
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Compressed run of the `bench_resilience` measurement: certifies the

@@ -1,0 +1,380 @@
+//! Front-door integration: pipelined connections, in-order bit-identical
+//! responses, shutdown with idle persistent connections, handler
+//! reaping, `max_conns` refusals, and shed visibility in the latency
+//! histogram — all over real TCP sockets on the synthetic-artifact
+//! interpreter.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use mlem::benchkit::{synth_artifact_dir, SynthLevel};
+use mlem::config::ServeConfig;
+use mlem::coordinator::{Scheduler, Server};
+use mlem::metrics::Metrics;
+use mlem::runtime::{spawn_executor, ExecutorHandle, Manifest};
+use mlem::util::json::Json;
+
+/// `Server::new` binds the process-wide flight recorder's sampling rate
+/// from its config — serialise the server tests so one test's knob
+/// can't race another's traffic.
+static SERVE_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Coordinator lane count: the `MLEM_BATCH_WORKERS` env knob when set
+/// (CI runs the suite under a {1, 4} matrix), else `default`.
+fn batch_workers_env(default: usize) -> usize {
+    std::env::var("MLEM_BATCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, req: &str) {
+        writeln!(self.writer, "{req}").unwrap();
+    }
+
+    fn read(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(!line.trim().is_empty(), "EOF instead of a response line");
+        Json::parse(&line).expect("valid json response")
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.send(req);
+        self.read()
+    }
+}
+
+/// A booted server over synthetic artifacts, plus the plumbing needed
+/// to assert that `run()` actually returns.
+struct TestServer {
+    server: Arc<Server>,
+    addr: std::net::SocketAddr,
+    /// Signalled the instant `Server::run` returns.
+    done_rx: Receiver<()>,
+    thread: JoinHandle<()>,
+    exec: ExecutorHandle,
+    _exec_join: JoinHandle<()>,
+}
+
+fn boot(cfg: ServeConfig) -> TestServer {
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let (exec, exec_join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let scheduler = Scheduler::new(exec.clone(), cfg.clone(), metrics).unwrap();
+    let server = Arc::new(Server::new(cfg, scheduler));
+    let (addr_tx, addr_rx) = channel();
+    let (done_tx, done_rx) = channel();
+    let srv = server.clone();
+    let thread = std::thread::spawn(move || {
+        srv.run(move |addr| addr_tx.send(addr).unwrap()).unwrap();
+        let _ = done_tx.send(());
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(30)).expect("server ready");
+    TestServer { server, addr, done_rx, thread, exec, _exec_join: exec_join }
+}
+
+impl TestServer {
+    /// Wait (bounded) for `run()` to return, then join + stop.
+    fn finish(self) {
+        self.done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("Server::run must return after shutdown");
+        self.thread.join().expect("server thread joins");
+        self.exec.stop();
+    }
+}
+
+fn small_artifacts(tag: &str, work: u64) -> std::path::PathBuf {
+    synth_artifact_dir(
+        tag,
+        4, // dim 16
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work, fault: "" },
+        ],
+    )
+    .expect("synthetic artifacts")
+}
+
+fn base_cfg(dir: &std::path::Path) -> ServeConfig {
+    ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 4,
+        max_wait_ms: 2,
+        cost_reps: 0,
+        mlem_levels: vec![1, 2],
+        calib_sample_every: 0,
+        batch_workers: batch_workers_env(2),
+        ..Default::default()
+    }
+}
+
+/// Tentpole (a): N mixed-class generate requests written back-to-back
+/// on one connection come back in request order, bitwise-identical to
+/// the same requests submitted sequentially — at `conn_inflight` 1 (the
+/// historical one-at-a-time window) and 8 (the default).
+///
+/// Every request carries a distinct `delta`, so each forms its own
+/// compatibility class and is a singleton batch in *both* passes —
+/// batch membership, the one thing the reproducibility contract keys
+/// on, is identical by construction and the outputs must be too.
+#[test]
+fn pipelined_responses_in_order_and_bit_identical_to_sequential() {
+    let _serve = serve_guard();
+    for window in [1usize, 8] {
+        let dir = small_artifacts(&format!("frontdoor-parity-{window}"), 64);
+        let mut cfg = base_cfg(&dir);
+        cfg.conn_inflight = window;
+        let ts = boot(cfg);
+
+        let reqs: Vec<String> = (0..6u64)
+            .map(|i| {
+                let sampler = if i % 2 == 0 { "mlem" } else { "em" };
+                let steps = 10 + 2 * (i % 3);
+                let delta = 0.25 * (i + 1) as f64;
+                format!(
+                    concat!(
+                        r#"{{"cmd":"generate","n":1,"sampler":"{}","steps":{},"#,
+                        r#""seed":{},"levels":[1,2],"delta":{},"return_images":true}}"#
+                    ),
+                    sampler,
+                    steps,
+                    100 + i,
+                    delta
+                )
+            })
+            .collect();
+
+        // Sequential reference: write, read, repeat.
+        let mut seq = Client::connect(ts.addr);
+        let sequential: Vec<Json> = reqs.iter().map(|r| seq.call(r)).collect();
+        for (i, resp) in sequential.iter().enumerate() {
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "seq {i}: {resp}");
+        }
+
+        // Pipelined: all six lines first, then all six responses.
+        let mut pipe = Client::connect(ts.addr);
+        for r in &reqs {
+            pipe.send(r);
+        }
+        let pipelined: Vec<Json> = (0..reqs.len()).map(|_| pipe.read()).collect();
+
+        for (i, (p, s)) in pipelined.iter().zip(&sequential).enumerate() {
+            assert_eq!(p.get("ok"), Some(&Json::Bool(true)), "pipe {i}: {p}");
+            assert_eq!(p.get("dim"), s.get("dim"), "window {window} req {i}: dim");
+            let pi = p.get("images").and_then(Json::as_arr).expect("pipelined images");
+            let si = s.get("images").and_then(Json::as_arr).expect("sequential images");
+            // Distinct seeds produce distinct images, so element-wise
+            // equality at index i is also the in-order proof.
+            assert_eq!(
+                pi, si,
+                "window {window} req {i}: pipelined response must be bit-identical \
+                 (and in order) vs sequential"
+            );
+        }
+
+        let bye = seq.call(r#"{"cmd":"shutdown"}"#);
+        assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+        ts.finish();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Satellite 1 regression: a client holding an idle persistent
+/// connection open used to park its handler in a blocking read forever,
+/// so `Server::run`'s handler join never returned after `stop()`.  The
+/// read timeout + stop-flag check bounds the join.
+#[test]
+fn shutdown_returns_while_idle_connection_stays_open() {
+    let _serve = serve_guard();
+    let dir = small_artifacts("frontdoor-idle-shutdown", 16);
+    let ts = boot(base_cfg(&dir));
+
+    // Idle persistent connection: connected, never writes a byte, and
+    // stays open across (and beyond) the shutdown.
+    let idle = TcpStream::connect(ts.addr).expect("idle connect");
+
+    let mut c = Client::connect(ts.addr);
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+
+    // The regression: this blocked forever while `idle` was open.
+    ts.finish();
+    drop(idle);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 2 regression: the accept loop used to retain one
+/// `JoinHandle` per connection it ever accepted.  After 1k short-lived
+/// connections the live-handler gauge must be back near zero.
+#[test]
+fn short_lived_connections_are_reaped_not_retained() {
+    let _serve = serve_guard();
+    let dir = small_artifacts("frontdoor-reap", 16);
+    let ts = boot(base_cfg(&dir));
+
+    for i in 0..1000 {
+        let mut c = Client::connect(ts.addr);
+        let pong = c.call(r#"{"cmd":"ping"}"#);
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "conn {i}");
+    }
+    // Let the last handlers exit and the acceptor's reap pass observe
+    // them (it runs every poll, ~2ms).
+    std::thread::sleep(Duration::from_millis(200));
+    let open = ts.server.open_handlers();
+    assert!(
+        open <= 64,
+        "1000 short-lived connections retained {open} handlers — the accept \
+         loop is not reaping"
+    );
+
+    let mut c = Client::connect(ts.addr);
+    let bye = c.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    ts.finish();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Tentpole (d): past `max_conns` live handlers the acceptor answers
+/// the new connection with a typed `overloaded` line and closes it —
+/// and capacity comes back once connections finish.
+#[test]
+fn saturated_acceptor_refuses_with_typed_line() {
+    let _serve = serve_guard();
+    let dir = small_artifacts("frontdoor-maxconns", 16);
+    let mut cfg = base_cfg(&dir);
+    cfg.max_conns = 2;
+    let ts = boot(cfg);
+
+    // Fill both slots; the ping round-trips prove the handlers are live
+    // (connect() alone only proves the kernel backlog took the socket).
+    let mut c1 = Client::connect(ts.addr);
+    assert_eq!(c1.call(r#"{"cmd":"ping"}"#).get("ok"), Some(&Json::Bool(true)));
+    let mut c2 = Client::connect(ts.addr);
+    assert_eq!(c2.call(r#"{"cmd":"ping"}"#).get("ok"), Some(&Json::Bool(true)));
+
+    // Third connection: refused with a line a client can back off on.
+    let mut c3 = Client::connect(ts.addr);
+    let refusal = c3.read();
+    assert_eq!(refusal.get("ok"), Some(&Json::Bool(false)), "{refusal}");
+    assert_eq!(refusal.str_of("error"), Some("overloaded"), "{refusal}");
+    assert!(refusal.f64_of("retry_after_ms").unwrap_or(0.0) >= 1.0, "{refusal}");
+    // ... and then closed: the next read is EOF.
+    let mut rest = String::new();
+    assert_eq!(c3.reader.read_line(&mut rest).unwrap(), 0, "refused conn must be closed");
+
+    // Free a slot; the reap pass restores capacity.
+    drop(c1);
+    std::thread::sleep(Duration::from_millis(200));
+    let mut c4 = Client::connect(ts.addr);
+    assert_eq!(c4.call(r#"{"cmd":"ping"}"#).get("ok"), Some(&Json::Bool(true)));
+    let m = c4.call(r#"{"cmd":"metrics"}"#);
+    let refused = m.get_path(&["metrics", "conn_refused"]).and_then(Json::as_f64).unwrap();
+    assert!(refused >= 1.0, "refusals must be counted: {refused}");
+
+    drop(c2);
+    let bye = c4.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    ts.finish();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite 3: `request_latency` covers every generate-path outcome.
+/// A pipelined overload storm whose requests carry a 1ms deadline gets
+/// typed sheds/misses — and every one of those responses must appear in
+/// the histogram count, which historically only saw `Response::Gen`.
+#[test]
+fn overload_storm_sheds_are_answered_and_counted_in_latency() {
+    let _serve = serve_guard();
+    let dir = small_artifacts("frontdoor-storm", 8192);
+    let mut cfg = base_cfg(&dir);
+    cfg.batch_workers = 1; // deep queue per lane: predictable waves
+    cfg.conn_inflight = 16;
+    let ts = boot(cfg);
+
+    // Warm the admission controller's EWMA with real (slow) batches so
+    // a 1ms deadline is predictably hopeless afterwards.
+    let mut warm = Client::connect(ts.addr);
+    const WARMUP: usize = 3;
+    for i in 0..WARMUP {
+        let r = warm.call(&format!(
+            r#"{{"cmd":"generate","n":2,"sampler":"mlem","steps":400,"seed":{i}}}"#
+        ));
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "warmup {i}: {r}");
+    }
+
+    // Pipelined deadline burst on one connection, written back-to-back.
+    const BURST: usize = 16;
+    let mut storm = Client::connect(ts.addr);
+    for i in 0..BURST {
+        storm.send(&format!(
+            concat!(
+                r#"{{"cmd":"generate","n":2,"sampler":"mlem","steps":400,"#,
+                r#""seed":{},"deadline_ms":1}}"#
+            ),
+            1000 + i
+        ));
+    }
+    let mut sheds_seen = 0usize;
+    for i in 0..BURST {
+        let r = storm.read();
+        match r.get("ok") {
+            Some(&Json::Bool(true)) => {}
+            Some(&Json::Bool(false)) => {
+                let kind = r.str_of("error").unwrap_or("");
+                assert!(
+                    kind == "overloaded" || kind == "deadline_exceeded",
+                    "storm {i}: unexpected error kind {r}"
+                );
+                if kind == "overloaded" {
+                    sheds_seen += 1;
+                }
+            }
+            other => panic!("storm {i}: malformed response {other:?}"),
+        }
+    }
+    assert!(sheds_seen >= 1, "a warmed EWMA must shed 1ms-deadline requests");
+
+    let m = warm.call(r#"{"cmd":"metrics"}"#);
+    let sheds = m.get_path(&["metrics", "sheds"]).and_then(Json::as_f64).unwrap();
+    assert!(sheds >= 1.0, "shed counter must agree: {sheds}");
+    let lat_count = m
+        .get_path(&["metrics", "request_latency", "count"])
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(
+        lat_count,
+        (WARMUP + BURST) as f64,
+        "every generate-path outcome (results AND sheds/misses) must land \
+         in request_latency; admin requests stay excluded"
+    );
+
+    let bye = warm.call(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("shutdown"), Some(&Json::Bool(true)));
+    ts.finish();
+    std::fs::remove_dir_all(&dir).ok();
+}

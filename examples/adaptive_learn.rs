@@ -7,6 +7,10 @@
 //! make artifacts && cargo run --release --example adaptive_learn [-- --iters 25]
 //! ```
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use anyhow::Result;
 
 use mlem::adaptive::{Learner, LearnerConfig, Schedule};

@@ -5,6 +5,10 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use anyhow::Result;
 
 use mlem::config::{SamplerKind, ServeConfig};

@@ -23,6 +23,10 @@
 //!
 //! `cargo bench --bench bench_exec_batching`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use mlem::benchkit::{
     exec_batching_json, exec_batching_point, synth_artifact_dir, write_bench_json,
     ExecBatchingWorkload, SynthLevel,

@@ -1,0 +1,97 @@
+//! Multi-executor fleet bench: end-to-end images/s and group occupancy
+//! as the `executors` fleet size grows, with routing parity asserted in
+//! the same run.
+//!
+//! The workload is the serving pattern the fleet exists for: the
+//! coordinator storm (several Δ-classes of small requests, every ladder
+//! level firing each step) at a fixed lane count, so a single executor
+//! serialises every level's executes on one device thread while a fleet
+//! runs the cheap levels *beside* the pinned top level — level-affinity
+//! placement turns the ladder's level-parallel work into member-parallel
+//! work.  Runs on the offline shim's synthetic interpreter (no
+//! `make artifacts` needed).
+//!
+//! Measurement and schema live in `benchkit::fleet_point` / `fleet_json`
+//! (shared with `tests/fleet.rs`, which emits a compressed version of
+//! the same artifact).  `BENCH_fleet.json` carries images/s and
+//! occupancy per executor count, the `fleet_speedup_at_4` headline the
+//! CI bench-gate tracks, and a `bit_identical` flag from comparing
+//! every executor count's outputs request-by-request against the
+//! single-executor run.
+//!
+//! `cargo bench --bench bench_fleet`
+
+use mlem::benchkit::{
+    bits_equal, coord_artifact_dir, fleet_json, fleet_point, write_bench_json, CoordWorkload,
+};
+use mlem::util::bench::Table;
+
+const EXECUTORS: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    let workload = CoordWorkload {
+        img: 4, // dim 16
+        channels: 1,
+        bucket: 8,
+        work: 384,
+        levels: 4,
+        classes: 4,
+        reqs_per_class: 10,
+        n_per_req: 2,
+        steps: 24,
+        linger_us: 400,
+    };
+    let dir = coord_artifact_dir("bench-fleet", &workload)?;
+
+    let mut table = Table::new(
+        "fleet executors",
+        &["executors", "images/s", "speedup", "group occupancy", "executes"],
+    );
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut bit_identical = true;
+    for &executors in &EXECUTORS {
+        let (outs, p) = fleet_point(&dir, &workload, executors, 3)?;
+        match &reference {
+            None => reference = Some(outs),
+            Some(base) => {
+                let same = bits_equal(base, &outs);
+                if !same {
+                    eprintln!(
+                        "PARITY FAILURE: outputs diverged from single-executor at \
+                         {executors} executors"
+                    );
+                }
+                bit_identical &= same;
+            }
+        }
+        points.push(p);
+    }
+    let base = points[0].images_per_s;
+    for p in &points {
+        table.row(&[
+            format!("{}", p.executors),
+            format!("{:.1}", p.images_per_s),
+            format!("{:.2}x", p.images_per_s / base),
+            format!("{:.2}", p.occupancy),
+            format!("{}", p.exec_calls),
+        ]);
+    }
+    table.emit();
+
+    let top = points.last().expect("points");
+    println!(
+        "headline: {:.2}x images/s at {} executors vs 1, outputs {}",
+        top.images_per_s / base,
+        top.executors,
+        if bit_identical { "bitwise identical" } else { "DIVERGED" }
+    );
+    let j = fleet_json(&workload, &points, bit_identical);
+    let path = write_bench_json("fleet", &j).expect("writing BENCH_fleet.json");
+    println!("[json] {}", path.display());
+    std::fs::remove_dir_all(&dir).ok();
+    // Fail loudly on a parity break — after the artifact is written, so
+    // the recorded bit_identical flag reflects what actually happened.
+    assert!(bit_identical, "cross-executor outputs diverged (see PARITY FAILURE lines above)");
+    Ok(())
+}

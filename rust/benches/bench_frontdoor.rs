@@ -18,6 +18,10 @@
 //!
 //! `cargo bench --bench bench_frontdoor`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::channel;

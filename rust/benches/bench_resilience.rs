@@ -25,6 +25,10 @@
 //!
 //! `cargo bench --bench bench_resilience`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::sync::Arc;
 
 use mlem::benchkit::{

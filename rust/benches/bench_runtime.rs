@@ -5,6 +5,10 @@
 //!
 //! `cargo bench --bench bench_runtime`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::time::{Duration, Instant};
 
 use mlem::benchkit::artifacts_dir;

@@ -4,6 +4,10 @@
 //!
 //! `cargo bench --bench bench_serving`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use mlem::benchkit::artifacts_dir;
 use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice};

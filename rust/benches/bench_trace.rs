@@ -22,6 +22,10 @@
 //!
 //! `cargo bench --bench bench_trace`
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::sync::Arc;
 use std::time::Instant;
 

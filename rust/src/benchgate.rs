@@ -90,6 +90,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.0,
         label: "front-door pipelined req/s speedup @ 8 connections",
     },
+    TrackedMetric {
+        file: "BENCH_fleet.json",
+        path: &["fleet_speedup_at_4"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "fleet images/s speedup @ 4 executors",
+    },
 ];
 
 /// Outcome per tracked metric.

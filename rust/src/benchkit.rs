@@ -9,7 +9,7 @@ use crate::coordinator::{LanePool, Scheduler};
 use crate::gmm::{assumption1_family, Gmm, LangevinDrift, PerturbedDrift};
 use crate::metrics::Metrics;
 use crate::parallel;
-use crate::runtime::{spawn_executor, ExecutorHandle, Manifest, NeuralDenoiser};
+use crate::runtime::{ExecutorBuilder, ExecutorHandle, Fleet, Manifest, NeuralDenoiser};
 use crate::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
 use crate::sde::em::{em_sample, TimeGrid};
 use crate::sde::mlem::{mlem_sample, BernoulliMode, LevelPolicy, MlemFamily, SampleReport};
@@ -41,7 +41,7 @@ impl NeuralBench {
         let manifest = Manifest::load(&dir)?;
         let dim = manifest.dim;
         let buckets = manifest.batch_buckets.clone();
-        let (handle, _join) = spawn_executor(manifest, None)?;
+        let handle = ExecutorBuilder::new(manifest).spawn()?.handle;
         for b in buckets {
             handle.warmup(b)?;
         }
@@ -1253,8 +1253,11 @@ pub fn coord_lanes_point(
     let cfg = coord_config(dir, w, lanes);
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (handle, join) =
-        crate::runtime::spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()?;
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     // The serving bucket exceeds max_batch, so the scheduler's own
     // warmup loop skips it: compile it here, outside the timed storms.
     handle.warmup(w.bucket)?;
@@ -1361,6 +1364,166 @@ pub fn coord_json(w: &CoordWorkload, points: &[CoordPoint], bit_identical: bool)
         .with("lanes_speedup_at_4", Json::num(top.images_per_s / base))
         .with("lanes_ge_1p3x", Json::Bool(top.images_per_s / base >= 1.3))
         .with("occupancy_increasing", Json::Bool(occupancy_increasing))
+        .with("bit_identical", Json::Bool(bit_identical))
+}
+
+// ---------------------------------------------------------------------------
+// Fleet workload (bench_fleet + tests/fleet.rs)
+
+/// Runner-lane count the fleet sweep holds fixed while the executor
+/// count varies — enough concurrent job streams to feed four members.
+pub const FLEET_LANES: usize = 4;
+
+/// The serve config for a fleet-workload scheduler at a given executor
+/// count: the coordinator workload's config with the fleet knobs bound
+/// (lanes held at [`FLEET_LANES`] so only the executor axis moves).
+pub fn fleet_config(
+    artifacts: &std::path::Path,
+    w: &CoordWorkload,
+    executors: usize,
+) -> ServeConfig {
+    ServeConfig { executors, ..coord_config(artifacts, w, FLEET_LANES) }
+}
+
+/// Bitwise equality of two per-request output sets (f32 payloads in
+/// submission order) — the routing-parity comparator shared by the
+/// fleet bench and tests.
+pub fn bits_equal(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// One executor-count measurement of the fleet workload.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetPoint {
+    pub executors: usize,
+    pub images_per_s: f64,
+    /// Mean jobs per multi-job group, aggregated across all members.
+    pub occupancy: f64,
+    /// Total executes across the fleet.
+    pub exec_calls: u64,
+}
+
+/// Run the full serving pipeline (batcher → lanes → scheduler → fleet)
+/// over the coordinator workload at one executor count: best-of-`reps`
+/// storms against a *paused* [`LanePool`] released at t0, intra-rep
+/// bit-identity asserted.  Returns the per-request image payloads
+/// (submission order — the caller compares them across executor counts
+/// for routing parity) and the measured point.
+pub fn fleet_point(
+    dir: &std::path::Path,
+    w: &CoordWorkload,
+    executors: usize,
+    reps: usize,
+) -> Result<(Vec<Vec<f32>>, FleetPoint)> {
+    let cfg = fleet_config(dir, w, executors);
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let fleet = Fleet::spawn(manifest, Some(metrics.clone()), &cfg.fleet_options())?;
+    // The serving bucket exceeds max_batch, so the scheduler's own
+    // warmup loop skips it: compile it on every member here, outside
+    // the timed storms.
+    for m in 0..fleet.executors() {
+        fleet.member(m).warmup(w.bucket)?;
+    }
+    let scheduler = std::sync::Arc::new(Scheduler::with_fleet(fleet, cfg.clone(), metrics)?);
+    let reqs = coord_requests(w);
+    let images_total = (reqs.len() * w.n_per_req) as f64;
+
+    let mut best_secs = f64::INFINITY;
+    let mut outputs: Option<Vec<Vec<f32>>> = None;
+    for _ in 0..reps.max(1) {
+        let pool = LanePool::new_paused(scheduler.clone(), &cfg);
+        let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+        let t0 = std::time::Instant::now();
+        pool.start();
+        let mut outs = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(crate::coordinator::Response::Gen(g)) => {
+                    outs.push(g.images.expect("return_images set"))
+                }
+                Ok(crate::coordinator::Response::Error(e)) => {
+                    return Err(anyhow::anyhow!("fleet storm request failed: {e}"))
+                }
+                other => return Err(anyhow::anyhow!("unexpected fleet storm response: {other:?}")),
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        best_secs = best_secs.min(secs);
+        if let Some(prev) = &outputs {
+            assert!(
+                bits_equal(prev, &outs),
+                "fleet storm outputs varied across reps at {executors} executors"
+            );
+        } else {
+            outputs = Some(outs);
+        }
+        pool.stop();
+        pool.join();
+    }
+    let (mut calls, mut groups, mut grouped) = (0u64, 0u64, 0u64);
+    for m in 0..scheduler.fleet().executors() {
+        let st = scheduler.fleet().member(m).exec_stats()?;
+        calls += st.exec_calls;
+        groups += st.exec_groups;
+        grouped += st.grouped_jobs;
+    }
+    let point = FleetPoint {
+        executors,
+        images_per_s: images_total / best_secs,
+        occupancy: if groups > 0 { grouped as f64 / groups as f64 } else { 0.0 },
+        exec_calls: calls,
+    };
+    scheduler.fleet().stop();
+    Ok((outputs.expect("at least one rep"), point))
+}
+
+/// Assemble `BENCH_fleet.json` from measured points (single source of
+/// the schema; the headline `fleet_speedup_at_4` is what the CI
+/// bench-gate tracks).  `bit_identical` is the caller's cross-executor-
+/// count output comparison — routing parity, asserted in the same run
+/// that produces the throughput numbers.
+pub fn fleet_json(w: &CoordWorkload, points: &[FleetPoint], bit_identical: bool) -> Json {
+    let base = points
+        .iter()
+        .find(|p| p.executors == 1)
+        .map(|p| p.images_per_s)
+        .unwrap_or(f64::NAN);
+    let top = points.iter().max_by_key(|p| p.executors).expect("at least one point");
+    let mut sorted: Vec<&FleetPoint> = points.iter().collect();
+    sorted.sort_by_key(|p| p.executors);
+    let rows: Vec<Json> = sorted
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .with("executors", Json::num(p.executors as f64))
+                .with("images_per_s", Json::num(p.images_per_s))
+                .with("speedup_vs_1", Json::num(p.images_per_s / base))
+                .with("group_occupancy", Json::num(p.occupancy))
+                .with("exec_calls", Json::num(p.exec_calls as f64))
+        })
+        .collect();
+    Json::obj()
+        .with(
+            "workload",
+            Json::obj()
+                .with("dim", Json::num((w.img * w.img * w.channels) as f64))
+                .with("bucket", Json::num(w.bucket as f64))
+                .with("synthetic_work", Json::num(w.work as f64))
+                .with("levels", Json::num(w.levels as f64))
+                .with("classes", Json::num(w.classes as f64))
+                .with("reqs_per_class", Json::num(w.reqs_per_class as f64))
+                .with("n_per_req", Json::num(w.n_per_req as f64))
+                .with("steps", Json::num(w.steps as f64))
+                .with("linger_us", Json::num(w.linger_us as f64))
+                .with("lanes", Json::num(FLEET_LANES as f64)),
+        )
+        .with("executor_counts", Json::Arr(rows))
+        .with("fleet_speedup_at_4", Json::num(top.images_per_s / base))
+        .with("fleet_ge_1p3x", Json::Bool(top.images_per_s / base >= 1.3))
         .with("bit_identical", Json::Bool(bit_identical))
 }
 

@@ -218,6 +218,19 @@ impl Calibrator {
         self.state.lock().unwrap().fit.map(|f| f.gamma)
     }
 
+    /// The live per-level cost EWMAs T̂_k (seconds/image, one entry per
+    /// ladder level), once every level has at least one probe.  This is
+    /// the snapshot the fleet's cost-aware rebalance consumes — measured
+    /// serving costs replacing the manifest's static FLOP estimates.
+    pub fn cost_estimates(&self) -> Option<Vec<f64>> {
+        self.state
+            .lock()
+            .unwrap()
+            .est
+            .estimates()
+            .map(|est| est.iter().map(|e| e.cost).collect())
+    }
+
     pub fn fit(&self) -> Option<GammaFit> {
         self.state.lock().unwrap().fit
     }

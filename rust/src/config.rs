@@ -1,8 +1,12 @@
 //! Typed configuration for the `mlem` binary and the serving coordinator.
 //!
 //! Sources, in increasing precedence: built-in defaults → JSON config
-//! file (`--config path`) → CLI flags.  Kept deliberately flat; every
-//! field is documented where a paper parameter corresponds to it.
+//! file (`--config path`) → CLI flags.  The struct is deliberately
+//! flat; the JSON surface additionally accepts nested `"executor"` and
+//! `"fleet"` sections that alias the flat `exec_*`/fleet keys (both
+//! spellings stay valid — the nested form groups the knobs the way the
+//! runtime consumes them).  Every field is documented where a paper
+//! parameter corresponds to it.
 
 use anyhow::{anyhow, Result};
 
@@ -132,6 +136,20 @@ pub struct ServeConfig {
     /// the new connection with one typed `overloaded` line and closes it
     /// instead of spawning a handler.
     pub max_conns: usize,
+    /// Fleet size: number of executors (each its own device thread +
+    /// grouping loop) with level-affinity placement across them.  1 =
+    /// the historical single-executor runtime.  See `runtime::fleet`.
+    pub executors: usize,
+    /// Cost-aware rebalance cadence: recompute level→executor placement
+    /// from the calibrator's T̂_k every this many batches (0 = cadence
+    /// off; the `{"cmd":"fleet","rebalance":true}` admin request still
+    /// works).
+    pub fleet_rebalance_every: u64,
+    /// Explicit placement pins `(ladder level, executor index)` that
+    /// override the cost-aware plan; CLI spelling `--fleet-placement
+    /// 5:0,1:1`.  Levels must exist in `mlem_levels`, executor indices
+    /// must be < `executors`.
+    pub fleet_placement: Vec<(usize, usize)>,
     /// Flight recorder head sampling: trace 1 request in N end to end
     /// (0 = tracing off, 1 = every request).  See `crate::trace`.
     pub trace_sample_n: usize,
@@ -169,6 +187,9 @@ impl Default for ServeConfig {
             exec_poll_us: 50_000,
             conn_inflight: 8,
             max_conns: 256,
+            executors: 1,
+            fleet_rebalance_every: 64,
+            fleet_placement: Vec::new(),
             trace_sample_n: 16,
             trace_out: None,
         }
@@ -255,6 +276,60 @@ impl ServeConfig {
                 "max_conns" => {
                     self.max_conns = v.as_usize().ok_or_else(|| anyhow!("max_conns: int"))?
                 }
+                "executors" => {
+                    self.executors = v.as_usize().ok_or_else(|| anyhow!("executors: int"))?
+                }
+                "fleet_rebalance_every" => {
+                    self.fleet_rebalance_every =
+                        v.as_usize().ok_or_else(|| anyhow!("fleet_rebalance_every: int"))? as u64
+                }
+                "fleet_placement" => self.fleet_placement = placement_from_json(v)?,
+                // Nested alias sections: the same knobs grouped the way
+                // the runtime consumes them.  Flat keys stay valid;
+                // later keys win within one object either way.
+                "executor" => {
+                    let Json::Obj(sub) = v else {
+                        return Err(anyhow!("executor: object"));
+                    };
+                    for (sk, sv) in sub {
+                        match sk.as_str() {
+                            "linger_us" => {
+                                self.exec_linger_us =
+                                    sv.as_usize().ok_or_else(|| anyhow!("executor.linger_us: int"))? as u64
+                            }
+                            "max_group" => {
+                                self.exec_max_group =
+                                    sv.as_usize().ok_or_else(|| anyhow!("executor.max_group: int"))?
+                            }
+                            "poll_us" => {
+                                self.exec_poll_us =
+                                    sv.as_usize().ok_or_else(|| anyhow!("executor.poll_us: int"))? as u64
+                            }
+                            other => return Err(anyhow!("unknown config key 'executor.{other}'")),
+                        }
+                    }
+                }
+                "fleet" => {
+                    let Json::Obj(sub) = v else {
+                        return Err(anyhow!("fleet: object"));
+                    };
+                    for (sk, sv) in sub {
+                        match sk.as_str() {
+                            "executors" => {
+                                self.executors =
+                                    sv.as_usize().ok_or_else(|| anyhow!("fleet.executors: int"))?
+                            }
+                            "rebalance_every" => {
+                                self.fleet_rebalance_every = sv
+                                    .as_usize()
+                                    .ok_or_else(|| anyhow!("fleet.rebalance_every: int"))?
+                                    as u64
+                            }
+                            "placement" => self.fleet_placement = placement_from_json(sv)?,
+                            other => return Err(anyhow!("unknown config key 'fleet.{other}'")),
+                        }
+                    }
+                }
                 "trace_sample_n" => {
                     self.trace_sample_n =
                         v.as_usize().ok_or_else(|| anyhow!("trace_sample_n: int"))?
@@ -317,6 +392,11 @@ impl ServeConfig {
         cfg.exec_poll_us = args.u64_or("exec-poll-us", cfg.exec_poll_us);
         cfg.conn_inflight = args.usize_or("conn-inflight", cfg.conn_inflight);
         cfg.max_conns = args.usize_or("max-conns", cfg.max_conns);
+        cfg.executors = args.usize_or("executors", cfg.executors);
+        cfg.fleet_rebalance_every = args.u64_or("fleet-rebalance-every", cfg.fleet_rebalance_every);
+        if let Some(s) = args.get("fleet-placement") {
+            cfg.fleet_placement = placement_from_cli(s)?;
+        }
         cfg.trace_sample_n = args.usize_or("trace-sample-n", cfg.trace_sample_n);
         if let Some(path) = args.get("trace-out") {
             cfg.trace_out = Some(path.to_string());
@@ -352,6 +432,19 @@ impl ServeConfig {
         crate::runtime::SupervisorOptions {
             retry_budget: self.retry_budget,
             retry_backoff_us: self.retry_backoff_us,
+        }
+    }
+
+    /// The fleet shape as the runtime consumes it — size, per-member
+    /// executor options, supervision (following the `supervisor` knob),
+    /// rebalance cadence, and placement pins.
+    pub fn fleet_options(&self) -> crate::runtime::FleetOptions {
+        crate::runtime::FleetOptions {
+            executors: self.executors.max(1),
+            exec: self.exec_options(),
+            supervise: self.supervisor.then(|| self.supervisor_options()),
+            rebalance_every: self.fleet_rebalance_every,
+            pins: self.fleet_placement.clone(),
         }
     }
 
@@ -463,8 +556,64 @@ impl ServeConfig {
                 self.max_conns
             ));
         }
+        // Each executor is a device thread owning its own executable
+        // cache; a typo'd huge fleet would exhaust memory at boot.
+        if self.executors == 0 || self.executors > 16 {
+            return Err(anyhow!(
+                "executors: {} outside the sane range [1, 16]",
+                self.executors
+            ));
+        }
+        for &(level, member) in &self.fleet_placement {
+            if !self.mlem_levels.contains(&level) {
+                return Err(anyhow!(
+                    "fleet_placement: level {level} is not in mlem_levels {:?}",
+                    self.mlem_levels
+                ));
+            }
+            if member >= self.executors {
+                return Err(anyhow!(
+                    "fleet_placement: executor {member} out of range (executors = {})",
+                    self.executors
+                ));
+            }
+        }
         Ok(())
     }
+}
+
+/// Placement pins from JSON: an array of `[level, executor]` pairs.
+fn placement_from_json(v: &Json) -> Result<Vec<(usize, usize)>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("fleet placement: array of [level, executor] pairs"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for p in arr {
+        let pair = p
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| anyhow!("fleet placement entry: [level, executor]"))?;
+        let level = pair[0].as_usize().ok_or_else(|| anyhow!("fleet placement level: int"))?;
+        let member = pair[1].as_usize().ok_or_else(|| anyhow!("fleet placement executor: int"))?;
+        out.push((level, member));
+    }
+    Ok(out)
+}
+
+/// Placement pins from the CLI: `level:executor` pairs, comma-separated
+/// (`--fleet-placement 5:0,1:1`).
+fn placement_from_cli(s: &str) -> Result<Vec<(usize, usize)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let (l, m) = p
+                .split_once(':')
+                .ok_or_else(|| anyhow!("--fleet-placement expects level:executor pairs, got '{p}'"))?;
+            let level: usize = l.trim().parse().map_err(|_| anyhow!("--fleet-placement level: int, got '{l}'"))?;
+            let member: usize = m.trim().parse().map_err(|_| anyhow!("--fleet-placement executor: int, got '{m}'"))?;
+            Ok((level, member))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -646,6 +795,77 @@ mod tests {
         assert!(ServeConfig::from_args(&args("serve --conn-inflight 99999")).is_err());
         assert!(ServeConfig::from_args(&args("serve --max-conns 0")).is_err());
         assert!(ServeConfig::from_args(&args("serve --max-conns 99999")).is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_apply() {
+        let d = ServeConfig::default();
+        assert_eq!(d.executors, 1, "single executor by default");
+        assert_eq!(d.fleet_rebalance_every, 64);
+        assert!(d.fleet_placement.is_empty());
+        assert_eq!(d.fleet_options().executors, 1);
+        assert!(d.fleet_options().supervise.is_some(), "follows the supervisor knob");
+
+        let cli = ServeConfig::from_args(&args(
+            "serve --executors 4 --fleet-rebalance-every 8 --fleet-placement 5:0,1:1",
+        ))
+        .unwrap();
+        assert_eq!(cli.executors, 4);
+        assert_eq!(cli.fleet_rebalance_every, 8);
+        assert_eq!(cli.fleet_placement, vec![(5, 0), (1, 1)]);
+        assert_eq!(cli.fleet_options().pins, vec![(5, 0), (1, 1)]);
+
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"executors":2,"fleet_rebalance_every":0,"fleet_placement":[[3,1]]}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.executors, 2);
+        assert_eq!(cfg.fleet_rebalance_every, 0, "0 = cadence off, still valid");
+        assert_eq!(cfg.fleet_placement, vec![(3, 1)]);
+        cfg.validate().unwrap();
+        let off = ServeConfig::from_args(&args("serve --executors 2 --supervisor off")).unwrap();
+        assert!(off.fleet_options().supervise.is_none());
+
+        // Validation: fleet size bounds, pins must reference existing
+        // ladder levels and in-range executors.
+        assert!(ServeConfig::from_args(&args("serve --executors 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --executors 99")).is_err());
+        assert!(
+            ServeConfig::from_args(&args("serve --executors 2 --fleet-placement 2:1")).is_err(),
+            "level 2 is not in the default ladder {{1,3,5}}"
+        );
+        assert!(
+            ServeConfig::from_args(&args("serve --executors 2 --fleet-placement 5:2")).is_err(),
+            "executor index out of range"
+        );
+        assert!(ServeConfig::from_args(&args("serve --fleet-placement nonsense")).is_err());
+    }
+
+    #[test]
+    fn nested_config_sections_alias_flat_keys() {
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"executor":{"linger_us":250,"max_group":4,"poll_us":1000},
+                    "fleet":{"executors":4,"rebalance_every":16,"placement":[[5,0],[1,2]]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec_linger_us, 250);
+        assert_eq!(cfg.exec_max_group, 4);
+        assert_eq!(cfg.exec_poll_us, 1000);
+        assert_eq!(cfg.executors, 4);
+        assert_eq!(cfg.fleet_rebalance_every, 16);
+        assert_eq!(cfg.fleet_placement, vec![(5, 0), (1, 2)]);
+        cfg.validate().unwrap();
+        // Typos inside the nested sections are caught like flat ones.
+        let mut c2 = ServeConfig::default();
+        assert!(c2.apply_json(&Json::parse(r#"{"executor":{"lingr_us":1}}"#).unwrap()).is_err());
+        assert!(c2.apply_json(&Json::parse(r#"{"fleet":{"executor":2}}"#).unwrap()).is_err());
+        assert!(c2.apply_json(&Json::parse(r#"{"fleet":7}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! {"cmd":"calibration","set_budget":2.5}
 //! {"cmd":"trace"}
 //! {"cmd":"trace","limit":200}
+//! {"cmd":"fleet"}
+//! {"cmd":"fleet","rebalance":true}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
@@ -35,6 +37,13 @@
 //! recent sampled spans (newest last), optionally capped by `limit`,
 //! with their trace/parent ids and `(level, bucket, t)` attribution —
 //! see `crate::trace`.
+//!
+//! `fleet` is the multi-executor admin request: it returns the level →
+//! executor placement map plus per-member generation, queue depth, and
+//! grouped-jobs share (see `runtime::fleet`), and with
+//! `"rebalance":true` first runs one cost-aware rebalance pass from the
+//! calibrator's freshest T̂_k.  The same section rides in the `metrics`
+//! snapshot under `"fleet"`.
 //!
 //! Responses are single JSON objects with `"ok"` plus either payload
 //! fields or `"error"`.
@@ -107,6 +116,9 @@ pub enum Request {
     /// Flight-recorder snapshot: recent sampled spans, newest last,
     /// optionally capped at `limit` spans.
     Trace { limit: Option<usize> },
+    /// Fleet snapshot (placement map + per-executor state); with
+    /// `rebalance` a cost-aware rebalance pass runs first.
+    Fleet { rebalance: bool },
     Ping,
     Shutdown,
 }
@@ -141,6 +153,8 @@ pub enum Response {
     Calibration(Json),
     /// Flight-recorder span snapshot (see `crate::trace::Recorder::spans_json`).
     Trace(Json),
+    /// Fleet snapshot (see `crate::runtime::fleet::Fleet::snapshot`).
+    Fleet(Json),
     Pong,
     Error(String),
     /// Typed deadline miss: the entry expired in queue and was answered
@@ -340,6 +354,15 @@ impl Request {
                 };
                 Ok(Request::Trace { limit })
             }
+            "fleet" => {
+                let rebalance = match j.get("rebalance") {
+                    None => false,
+                    Some(v) => {
+                        v.as_bool().ok_or_else(|| anyhow!("rebalance must be a boolean"))?
+                    }
+                };
+                Ok(Request::Fleet { rebalance })
+            }
             "generate" => {
                 let n = j.usize_of("n").unwrap_or(1);
                 if n == 0 || n > MAX_N {
@@ -435,6 +458,7 @@ impl Response {
                 Json::obj().with("ok", Json::Bool(true)).with("calibration", c.clone())
             }
             Response::Trace(t) => Json::obj().with("ok", Json::Bool(true)).with("trace", t.clone()),
+            Response::Fleet(f) => Json::obj().with("ok", Json::Bool(true)).with("fleet", f.clone()),
             Response::Gen(g) => {
                 let mut o = gen_head(g);
                 if let Some(imgs) = &g.images {
@@ -624,6 +648,32 @@ mod tests {
         assert_eq!(r, Request::Trace { limit: Some(200) });
         assert!(Request::parse(r#"{"cmd":"trace","limit":0}"#, &defaults()).is_err());
         assert!(Request::parse(r#"{"cmd":"trace","limit":"all"}"#, &defaults()).is_err());
+    }
+
+    #[test]
+    fn parse_fleet_request() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"fleet"}"#, &defaults()).unwrap(),
+            Request::Fleet { rebalance: false }
+        );
+        let r = Request::parse(r#"{"cmd":"fleet","rebalance":true}"#, &defaults()).unwrap();
+        assert_eq!(r, Request::Fleet { rebalance: true });
+        assert!(Request::parse(r#"{"cmd":"fleet","rebalance":"now"}"#, &defaults()).is_err());
+    }
+
+    #[test]
+    fn fleet_response_serializes() {
+        let snap = Json::obj()
+            .with("executors", Json::num(2.0))
+            .with("placement", Json::Arr(vec![Json::num(1.0), Json::num(0.0)]));
+        let line = Response::Fleet(snap).to_json().to_string();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(parsed.get_path(&["fleet", "executors"]), Some(&Json::Num(2.0)));
+        assert_eq!(
+            parsed.get_path(&["fleet", "placement"]).and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
     }
 
     #[test]
@@ -837,6 +887,7 @@ mod tests {
             Response::Overloaded { retry_after_ms: 9 },
             Response::DeadlineExceeded { waited_ms: 320, deadline_ms: 250 },
             Response::Metrics(Json::obj().with("requests", Json::num(3.0))),
+            Response::Fleet(Json::obj().with("executors", Json::num(2.0))),
         ] {
             let mut buf = Vec::new();
             resp.to_json_writer(&mut buf).unwrap();

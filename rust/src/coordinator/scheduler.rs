@@ -38,7 +38,7 @@ use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats, PolicyChoi
 use crate::levels::Policy;
 use crate::metrics::Metrics;
 use crate::parallel;
-use crate::runtime::{ExecutorHandle, NeuralDenoiser};
+use crate::runtime::{ExecutorHandle, Fleet, NeuralDenoiser};
 use crate::sde::ddpm::{ancestral_sample, AncestralConfig};
 use crate::sde::drift::{DiffusionDrift, LinearPartDrift, ScorePartDrift};
 use crate::sde::em::{em_sample, TimeGrid};
@@ -77,6 +77,12 @@ impl Drop for SamplerSpan {
 /// Owns the denoiser family + measured costs; stateless per call except
 /// for the streaming calibrator.
 pub struct Scheduler {
+    /// The executor fleet (1..N members) behind the denoiser family;
+    /// its placement map decides each level's home executor, and its
+    /// primary member doubles as the compatibility `handle()`.
+    fleet: Fleet,
+    /// Clone of the fleet's primary member — cost measurement, warmup,
+    /// combine, and manifest lookups anchor here.
     handle: ExecutorHandle,
     /// All levels, index = level − 1.
     denoisers: Vec<NeuralDenoiser>,
@@ -106,18 +112,35 @@ impl Scheduler {
     /// at 1 both the executor's grouping and the shard routing are off,
     /// so the two knobs always travel together.
     pub fn new(handle: ExecutorHandle, cfg: ServeConfig, metrics: Metrics) -> Result<Scheduler> {
-        let denoisers =
-            NeuralDenoiser::family_with(&handle, cfg.cost_reps, cfg.exec_max_group > 1)?;
+        let fleet = Fleet::adopt(vec![handle], cfg.fleet_rebalance_every, &cfg.fleet_placement);
+        Scheduler::with_fleet(fleet, cfg, metrics)
+    }
+
+    /// Build the scheduler over an N-member fleet: each level's denoiser
+    /// is routed to its home member per the fleet's placement map, and
+    /// the cadence-driven cost-aware rebalance runs from `execute`.
+    pub fn with_fleet(fleet: Fleet, cfg: ServeConfig, metrics: Metrics) -> Result<Scheduler> {
+        let handle = fleet.primary().clone();
+        let denoisers = NeuralDenoiser::family_routed(
+            &handle,
+            |i| fleet.handle_for(i),
+            cfg.cost_reps,
+            cfg.exec_max_group > 1,
+        )?;
         // Pre-compile every level at the serving buckets so the first
         // request doesn't pay lazy-compilation latency.  Soft-fail per
         // bucket: a backend that can't precompile (the offline shim, or
         // one transiently failing bucket) still serves admin requests
         // and still warms the remaining buckets; generation pays lazy
-        // compilation or reports the engine error per request.
-        for &b in &handle.manifest().batch_buckets.clone() {
-            if b <= cfg.max_batch {
-                if let Err(e) = handle.warmup(b) {
-                    eprintln!("[scheduler] warmup skipped (bucket {b}): {e:#}");
+        // compilation or reports the engine error per request.  Every
+        // fleet member warms, since each owns its own executable cache
+        // (and a rebalance may later route any level anywhere).
+        for m in 0..fleet.executors() {
+            for &b in &handle.manifest().batch_buckets.clone() {
+                if b <= cfg.max_batch {
+                    if let Err(e) = fleet.member(m).warmup(b) {
+                        eprintln!("[scheduler] warmup skipped (executor {m}, bucket {b}): {e:#}");
+                    }
                 }
             }
         }
@@ -141,6 +164,7 @@ impl Scheduler {
             )
         });
         Ok(Scheduler {
+            fleet,
             handle,
             denoisers,
             costs,
@@ -153,6 +177,59 @@ impl Scheduler {
 
     pub fn handle(&self) -> &ExecutorHandle {
         &self.handle
+    }
+
+    /// The executor fleet behind the denoiser family.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// The cost vector a rebalance plans with: measured/static per-level
+    /// costs, overlaid with the calibrator's live T̂_k where available.
+    /// Off-ladder levels are rescaled into the measured unit (anchored
+    /// on the ladder's top level) so LPT compares like with like.
+    fn rebalance_costs(&self) -> Vec<f64> {
+        let mut costs = self.costs.clone();
+        if let Some(est) = self.calibrator.as_ref().and_then(|c| c.cost_estimates()) {
+            if est.len() == self.cfg.mlem_levels.len() && !est.is_empty() {
+                let anchor = *self.cfg.mlem_levels.last().unwrap();
+                let static_anchor = self.costs.get(anchor - 1).copied().unwrap_or(1.0).max(1e-12);
+                let measured_anchor = est.last().copied().unwrap().max(1e-12);
+                let scale = measured_anchor / static_anchor;
+                for c in costs.iter_mut() {
+                    *c *= scale;
+                }
+                for (i, &l) in self.cfg.mlem_levels.iter().enumerate() {
+                    if (1..=costs.len()).contains(&l) {
+                        costs[l - 1] = est[i].max(0.0);
+                    }
+                }
+            }
+        }
+        costs
+    }
+
+    /// Run one cost-aware rebalance pass now: recompute the placement
+    /// from the freshest costs, migrate moved levels (the fleet drains
+    /// each old home first — see `runtime::fleet`), and rehome the
+    /// affected denoisers so their job streams follow the new map.
+    /// Returns how many levels moved.
+    pub fn rebalance_now(&self) -> usize {
+        let moved = self.fleet.rebalance(&self.rebalance_costs());
+        for &i in &moved {
+            self.denoisers[i].rehome(self.fleet.handle_for(i));
+        }
+        self.metrics.rebalances.inc();
+        moved.len()
+    }
+
+    /// Admin entry point for the `fleet` request: optionally trigger a
+    /// rebalance pass, then snapshot placement and per-member state.
+    pub fn fleet_admin(&self, rebalance: bool) -> Json {
+        if rebalance {
+            self.rebalance_now();
+        }
+        self.fleet.snapshot()
     }
 
     pub fn dim(&self) -> usize {
@@ -483,6 +560,13 @@ impl Scheduler {
             }
         }
         pool.put(x);
+        // Fleet cadence: every `fleet_rebalance_every`-th batch re-plans
+        // placement from the freshest costs (no-op for a 1-member fleet;
+        // a concurrent lane's admin-triggered pass simply runs first —
+        // the placement write is atomic under the fleet's lock).
+        if self.fleet.tick() {
+            self.rebalance_now();
+        }
         Ok(out)
     }
 

@@ -296,10 +296,14 @@ fn read_loop(
                 Ok(Request::Ping) => (Reply::Ready(Response::Pong), None),
                 Ok(Request::Metrics) => {
                     // The global snapshot plus the live per-class queue
-                    // depths (which only the lane pool's batcher knows).
+                    // depths (which only the lane pool's batcher knows)
+                    // and the fleet's placement/per-executor section.
                     (
                         Reply::Ready(Response::Metrics(
-                            metrics.snapshot().with("batcher", lanes.batcher_snapshot()),
+                            metrics
+                                .snapshot()
+                                .with("batcher", lanes.batcher_snapshot())
+                                .with("fleet", scheduler.fleet_admin(false)),
                         )),
                         None,
                     )
@@ -312,6 +316,10 @@ fn read_loop(
                     Reply::Ready(Response::Trace(
                         rec.spans_json(limit.unwrap_or(DEFAULT_TRACE_LIMIT)),
                     )),
+                    None,
+                ),
+                Ok(Request::Fleet { rebalance }) => (
+                    Reply::Ready(Response::Fleet(scheduler.fleet_admin(rebalance))),
                     None,
                 ),
                 Ok(Request::Shutdown) => {

@@ -58,6 +58,12 @@
 //!    (same-class batches stay serialized, so per-request bits are
 //!    lane-count-independent), measured by `bench_coordinator` into
 //!    `BENCH_coordinator.json`.
+//! 6. [`runtime::Fleet`] spreads that work across `executors` device
+//!    threads by **level affinity**: the costly top ladder level is
+//!    pinned to one member while cheap levels pack onto the rest
+//!    (cost-aware, calibrator-fed rebalance migrates homes at runtime
+//!    after draining in-flight groups), so placement never changes a
+//!    bit — measured by `bench_fleet` into `BENCH_fleet.json`.
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
@@ -76,7 +82,7 @@
 //! | [`levels`] | level-probability policies and cost accounting |
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
 //! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
-//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching |
+//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching; multi-executor fleet with level-affinity placement |
 //! | [`coordinator`] | serving layer: server, per-class batcher, multi-lane runner pool, scheduler |
 //! | [`trace`] | flight recorder: sampled end-to-end span tracing (per-thread rings, per-(level, t) attribution, Chrome-trace export) |
 //! | [`benchgate`] | CI bench-regression gate over the `BENCH_*.json` artifacts |

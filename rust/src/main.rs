@@ -5,6 +5,8 @@
 //!                 [--threads T]  # sampler worker pool size (0 = auto) ...
 //!                 [--batch-workers K]  # coordinator runner lanes (0 = auto: min(levels, 4))
 //!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
+//!                 [--executors N]  # executor fleet size with level-affinity placement (1 = single)
+//!                 [--fleet-rebalance-every B] [--fleet-placement 5:0,1:1]  # cost-aware placement
 //!                 [--trace-sample-n N]  # flight recorder: trace 1-in-N requests (0 off, 1 all)
 //!                 [--trace-out PATH]  # dump Chrome trace-event JSON on shutdown
 //!                 [--conn-inflight W]  # per-connection pipelining window (bounded in-flight)
@@ -22,7 +24,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, spawn_supervised, Manifest};
+use mlem::runtime::{Fleet, Manifest};
 use mlem::util::cli::Args;
 use mlem::util::stats;
 
@@ -32,19 +34,16 @@ fn build_scheduler(cfg: &ServeConfig) -> Result<Scheduler> {
     cfg.apply_threads();
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    // The --exec-linger-us / --exec-max-group knobs bind here: the
-    // executor thread is spawned with the config's aggregation options.
-    // With `--supervisor on` (the default) the executor runs under the
-    // self-healing supervisor: a dead executor thread is respawned from
-    // the manifest and in-flight calls are retried within the
-    // `--retry-budget`; `off` keeps the historical fail-fast behaviour.
-    let handle = if cfg.supervisor {
-        let retry = cfg.supervisor_options();
-        spawn_supervised(manifest, Some(metrics.clone()), cfg.exec_options(), retry)?
-    } else {
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?.0
-    };
-    Scheduler::new(handle, cfg.clone(), metrics)
+    // The --executors / --exec-* / --supervisor knobs bind here: the
+    // fleet spawns N executor threads with the config's aggregation
+    // options, each under the self-healing supervisor when
+    // `--supervisor on` (the default; a dead executor thread respawns
+    // from the manifest and in-flight calls are retried within the
+    // `--retry-budget`).  Level-affinity placement and the cost-aware
+    // rebalance cadence live in the fleet; `--executors 1` is the
+    // historical single-executor runtime.
+    let fleet = Fleet::spawn(manifest, Some(metrics.clone()), &cfg.fleet_options())?;
+    Scheduler::with_fleet(fleet, cfg.clone(), metrics)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -79,7 +78,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         write_pgm_strip(path, imgs, scheduler.handle().manifest().img, req.n)?;
         println!("wrote {path}");
     }
-    scheduler.handle().stop();
+    scheduler.fleet().stop();
     Ok(())
 }
 
@@ -111,7 +110,7 @@ fn cmd_gamma_fit(args: &Args) -> Result<()> {
         fit.slope, fit.r2, gamma, floor
     );
     println!("HTMC regime (gamma > 2): {}", if gamma > 2.0 { "YES" } else { "no" });
-    handle.stop();
+    scheduler.fleet().stop();
     Ok(())
 }
 
@@ -148,7 +147,7 @@ fn cmd_costs(args: &Args) -> Result<()> {
             scheduler.costs[i] / scheduler.costs[0]
         );
     }
-    scheduler.handle().stop();
+    scheduler.fleet().stop();
     Ok(())
 }
 

@@ -228,6 +228,9 @@ pub struct MetricsInner {
     pub recalibrations: Counter,
     /// Live batches probed by the calibrator.
     pub calib_probes: Counter,
+    /// Fleet rebalance passes run (cadence- or admin-triggered; see
+    /// `runtime::fleet`).
+    pub rebalances: Counter,
     /// Executor generations respawned by the supervisor.
     pub restarts: Counter,
     /// Request attempts replayed after executor transport death.
@@ -275,6 +278,7 @@ impl Default for MetricsInner {
             gamma_hat: Gauge::default(),
             recalibrations: Counter::default(),
             calib_probes: Counter::default(),
+            rebalances: Counter::default(),
             restarts: Counter::default(),
             retries: Counter::default(),
             sheds: Counter::default(),
@@ -400,6 +404,7 @@ impl Metrics {
             .with("gamma_hat", Json::num(self.gamma_hat.get()))
             .with("recalibrations", Json::num(self.recalibrations.get() as f64))
             .with("calib_probes", Json::num(self.calib_probes.get() as f64))
+            .with("rebalances", Json::num(self.rebalances.get() as f64))
             .with("restarts", Json::num(self.restarts.get() as f64))
             .with("retries", Json::num(self.retries.get() as f64))
             .with("sheds", Json::num(self.sheds.get() as f64))
@@ -531,6 +536,7 @@ mod tests {
         assert_eq!(parsed.f64_of("runner_busy"), Some(0.0));
         assert_eq!(parsed.f64_of("batch_runners"), Some(0.0));
         // resilience counters + error taxonomy
+        assert_eq!(parsed.f64_of("rebalances"), Some(0.0));
         assert_eq!(parsed.f64_of("restarts"), Some(0.0));
         assert_eq!(parsed.f64_of("retries"), Some(0.0));
         assert_eq!(parsed.f64_of("sheds"), Some(0.0));

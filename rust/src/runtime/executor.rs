@@ -30,7 +30,7 @@
 //! group counters land in [`ExecStats`] and the coordinator metrics.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -285,6 +285,10 @@ struct Wiring {
     /// would never observe executor death — this flag is what turns an
     /// in-flight request into an error instead of a hang.
     alive: Arc<AtomicBool>,
+    /// Jobs this generation's serve loop had drained but not yet handled
+    /// at its last turn — the queue-depth gauge the fleet snapshot
+    /// reports per member.
+    depth: Arc<AtomicUsize>,
     /// Bumped on every supervisor respawn; callers record the value they
     /// observed so exactly one racer heals per dead generation.
     generation: u64,
@@ -328,14 +332,123 @@ impl Drop for AliveGuard {
     }
 }
 
+/// Unified spawn surface for the executor: one builder replaces the
+/// historical `spawn_executor` / `spawn_executor_with` /
+/// `spawn_supervised` trio (kept as thin deprecated wrappers).  The
+/// fleet (`runtime::fleet`) spawns every member through this builder,
+/// which is why the three ad-hoc entry points had to collapse into one.
+///
+/// ```ignore
+/// let ex = ExecutorBuilder::new(manifest)
+///     .metrics(metrics)
+///     .options(ExecOptions::default())
+///     .supervised(SupervisorOptions::default())
+///     .spawn()?;
+/// ```
+pub struct ExecutorBuilder {
+    manifest: Manifest,
+    metrics: Option<Metrics>,
+    opts: ExecOptions,
+    supervise: Option<SupervisorOptions>,
+}
+
+/// What [`ExecutorBuilder::spawn`] returns: the handle, plus generation
+/// 0's join handle for *unsupervised* executors.  A supervised executor
+/// reaps its own generations (the last thread exits when every handle
+/// clone drops), so it exposes no join.
+pub struct SpawnedExecutor {
+    pub handle: ExecutorHandle,
+    pub join: Option<JoinHandle<()>>,
+}
+
+impl ExecutorBuilder {
+    /// Start from a manifest with default knobs: no metrics, default
+    /// [`ExecOptions`], unsupervised (fail-fast on transport death).
+    pub fn new(manifest: Manifest) -> ExecutorBuilder {
+        ExecutorBuilder {
+            manifest,
+            metrics: None,
+            opts: ExecOptions::default(),
+            supervise: None,
+        }
+    }
+
+    /// Record executor-side counters into this metrics registry.
+    pub fn metrics(mut self, metrics: Metrics) -> ExecutorBuilder {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Aggregation/liveness knobs (the serve config's `exec_*` section).
+    pub fn options(mut self, opts: ExecOptions) -> ExecutorBuilder {
+        self.opts = opts;
+        self
+    }
+
+    /// Run under the supervisor: transport death (thread panic, channel
+    /// loss) is healed by respawn + bit-identical replay within the
+    /// retry budget, instead of surfacing to the caller.
+    pub fn supervised(mut self, retry: SupervisorOptions) -> ExecutorBuilder {
+        self.supervise = Some(retry);
+        self
+    }
+
+    /// Spawn generation 0 and wire up the handle (plus the supervision
+    /// tree when [`ExecutorBuilder::supervised`] was called).
+    pub fn spawn(self) -> Result<SpawnedExecutor> {
+        let (tx, alive, depth, join) =
+            spawn_exec_thread(self.manifest.clone(), self.metrics.clone(), self.opts, 0)?;
+        let wiring = Arc::new(RwLock::new(Wiring { tx, alive, depth, generation: 0 }));
+        let poll = Duration::from_micros(self.opts.poll_interval_us.max(1));
+        match self.supervise {
+            None => Ok(SpawnedExecutor {
+                handle: ExecutorHandle {
+                    wiring,
+                    manifest: self.manifest,
+                    poll,
+                    supervisor: None,
+                    resp: Mutex::new(channel()),
+                },
+                join: Some(join),
+            }),
+            Some(retry) => {
+                let supervisor = Arc::new(Supervisor {
+                    manifest: self.manifest.clone(),
+                    metrics: self.metrics,
+                    exec_opts: self.opts,
+                    retry,
+                    stopping: AtomicBool::new(false),
+                    joins: Mutex::new(vec![join]),
+                });
+                Ok(SpawnedExecutor {
+                    handle: ExecutorHandle {
+                        wiring,
+                        manifest: self.manifest,
+                        poll,
+                        supervisor: Some(supervisor),
+                        resp: Mutex::new(channel()),
+                    },
+                    join: None,
+                })
+            }
+        }
+    }
+}
+
 /// Spawn the executor thread over `manifest`'s artifacts with default
 /// aggregation knobs.  Returns the handle and the join handle (join
 /// after dropping all handles/Stop).
+#[deprecated(note = "use ExecutorBuilder::new(manifest).spawn()")]
 pub fn spawn_executor(
     manifest: Manifest,
     metrics: Option<Metrics>,
 ) -> Result<(ExecutorHandle, JoinHandle<()>)> {
-    spawn_executor_with(manifest, metrics, ExecOptions::default())
+    let mut b = ExecutorBuilder::new(manifest);
+    if let Some(m) = metrics {
+        b = b.metrics(m);
+    }
+    let ex = b.spawn()?;
+    Ok((ex.handle, ex.join.expect("unsupervised spawn returns a join handle")))
 }
 
 /// Spawn one executor thread generation: the raw (channel, liveness,
@@ -346,10 +459,12 @@ fn spawn_exec_thread(
     metrics: Option<Metrics>,
     opts: ExecOptions,
     generation: u64,
-) -> Result<(Sender<Job>, Arc<AtomicBool>, JoinHandle<()>)> {
+) -> Result<(Sender<Job>, Arc<AtomicBool>, Arc<AtomicUsize>, JoinHandle<()>)> {
     let (tx, rx) = channel::<Job>();
     let alive = Arc::new(AtomicBool::new(true));
     let alive_flag = alive.clone();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let depth_gauge = depth.clone();
     let join = std::thread::Builder::new()
         .name("pjrt-executor".to_string())
         .spawn(move || {
@@ -371,31 +486,27 @@ fn spawn_exec_thread(
                     return;
                 }
             };
-            serve_loop(engine, rx, metrics, opts, generation);
+            serve_loop(engine, rx, metrics, opts, generation, depth_gauge);
         })?;
-    Ok((tx, alive, join))
+    Ok((tx, alive, depth, join))
 }
 
 /// [`spawn_executor`] with explicit aggregation knobs (the serve
 /// config's `exec_linger_us` / `exec_max_group`).  Fail-fast: executor
-/// death surfaces as a typed [`ExecutorGone`] error to callers — wrap
-/// with [`spawn_supervised`] for respawn + replay.
+/// death surfaces as a typed [`ExecutorGone`] error to callers — use
+/// [`ExecutorBuilder::supervised`] for respawn + replay.
+#[deprecated(note = "use ExecutorBuilder::new(manifest).options(opts).spawn()")]
 pub fn spawn_executor_with(
     manifest: Manifest,
     metrics: Option<Metrics>,
     opts: ExecOptions,
 ) -> Result<(ExecutorHandle, JoinHandle<()>)> {
-    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics, opts, 0)?;
-    Ok((
-        ExecutorHandle {
-            wiring: Arc::new(RwLock::new(Wiring { tx, alive, generation: 0 })),
-            manifest,
-            poll: Duration::from_micros(opts.poll_interval_us.max(1)),
-            supervisor: None,
-            resp: Mutex::new(channel()),
-        },
-        join,
-    ))
+    let mut b = ExecutorBuilder::new(manifest).options(opts);
+    if let Some(m) = metrics {
+        b = b.metrics(m);
+    }
+    let ex = b.spawn()?;
+    Ok((ex.handle, ex.join.expect("unsupervised spawn returns a join handle")))
 }
 
 /// The supervision tree's root: owns the manifest + knobs needed to
@@ -440,7 +551,7 @@ impl Supervisor {
         for j in joins.drain(..) {
             let _ = j.join();
         }
-        let (tx, alive, join) = spawn_exec_thread(
+        let (tx, alive, depth, join) = spawn_exec_thread(
             self.manifest.clone(),
             self.metrics.clone(),
             self.exec_opts,
@@ -450,6 +561,7 @@ impl Supervisor {
         let mut w = wiring.write().unwrap_or_else(|p| p.into_inner());
         w.tx = tx;
         w.alive = alive;
+        w.depth = depth;
         w.generation = next_gen;
         if let Some(m) = &self.metrics {
             m.restarts.inc();
@@ -483,28 +595,18 @@ impl Supervisor {
 /// caller's slice and the engine's math is a pure function of the
 /// inputs.  No join handle is returned; generations are reaped at
 /// respawn and the last thread exits when every handle clone drops.
+#[deprecated(note = "use ExecutorBuilder::new(manifest).options(opts).supervised(retry).spawn()")]
 pub fn spawn_supervised(
     manifest: Manifest,
     metrics: Option<Metrics>,
     opts: ExecOptions,
     retry: SupervisorOptions,
 ) -> Result<ExecutorHandle> {
-    let (tx, alive, join) = spawn_exec_thread(manifest.clone(), metrics.clone(), opts, 0)?;
-    let supervisor = Arc::new(Supervisor {
-        manifest: manifest.clone(),
-        metrics,
-        exec_opts: opts,
-        retry,
-        stopping: AtomicBool::new(false),
-        joins: Mutex::new(vec![join]),
-    });
-    Ok(ExecutorHandle {
-        wiring: Arc::new(RwLock::new(Wiring { tx, alive, generation: 0 })),
-        manifest,
-        poll: Duration::from_micros(opts.poll_interval_us.max(1)),
-        supervisor: Some(supervisor),
-        resp: Mutex::new(channel()),
-    })
+    let mut b = ExecutorBuilder::new(manifest).options(opts).supervised(retry);
+    if let Some(m) = metrics {
+        b = b.metrics(m);
+    }
+    Ok(b.spawn()?.handle)
 }
 
 /// The executor's event loop: aggregation over the job channel.
@@ -516,6 +618,7 @@ fn serve_loop(
     metrics: Option<Metrics>,
     opts: ExecOptions,
     generation: u64,
+    depth: Arc<AtomicUsize>,
 ) {
     let dim = engine.manifest().dim;
     let tables = bucket_tables(engine.manifest());
@@ -619,6 +722,11 @@ fn serve_loop(
             }
         }
 
+        // Queue-depth gauge for the fleet snapshot: what this turn left
+        // parked after grouping (a relaxed store; readers want a trend,
+        // not a fence).
+        depth.store(pending.len(), Ordering::Relaxed);
+
         if group.len() > 1 {
             let n = group.len() as u64;
             exec_groups += 1;
@@ -652,6 +760,7 @@ fn serve_loop(
     while let Ok(job) = rx.try_recv() {
         refuse(job);
     }
+    depth.store(0, Ordering::Relaxed);
 }
 
 /// The shared (kind, level, t, pallas) of a formed group, copied out of
@@ -909,6 +1018,25 @@ impl ExecutorHandle {
         &self.manifest
     }
 
+    /// The current executor generation (0 until the first supervisor
+    /// respawn).  Shared by every clone of this handle.
+    pub fn generation(&self) -> u64 {
+        self.wiring.read().unwrap_or_else(|p| p.into_inner()).generation
+    }
+
+    /// Whether this handle runs under the supervisor (respawn + replay
+    /// on transport death).
+    pub fn is_supervised(&self) -> bool {
+        self.supervisor.is_some()
+    }
+
+    /// Jobs the executor's serve loop had drained but not yet handled at
+    /// its last turn — a sampled gauge, not a fenced count.  The fleet
+    /// snapshot reports it per member as `queue_depth`.
+    pub fn queue_depth(&self) -> usize {
+        self.wiring.read().unwrap_or_else(|p| p.into_inner()).depth.load(Ordering::Relaxed)
+    }
+
     /// Send one job and wait for its answer on this handle's reusable
     /// response channel.  Waiting polls the liveness flag every
     /// `poll_interval_us`: if the executor thread exits (Stop race,
@@ -1139,6 +1267,82 @@ mod tests {
         assert!(is_executor_gone(&wrapped), "downcast must see through context layers");
         assert!(!is_executor_gone(&anyhow!("engine unavailable")));
         assert!(!is_executor_gone(&anyhow!("grouped eps failed: bad shapes")));
+    }
+
+    /// A minimal self-consistent manifest for spawn-shape tests: the
+    /// engine may refuse to come up over it, but spawn itself succeeds
+    /// and the thread drains jobs — all the builder tests need.
+    fn tiny_manifest() -> Manifest {
+        use super::super::manifest::{CombineMeta, LevelMeta};
+        Manifest {
+            dir: std::path::PathBuf::from("/nonexistent"),
+            img: 2,
+            channels: 1,
+            dim: 4,
+            batch_buckets: vec![1],
+            jvp_buckets: Vec::new(),
+            schedule_s: crate::sde::schedule::COSINE_S,
+            t_max: crate::sde::schedule::T_MAX,
+            combine: CombineMeta {
+                batch: 1,
+                levels: 1,
+                ref_file: String::new(),
+                pallas_file: String::new(),
+            },
+            holdout_file: String::new(),
+            holdout_count: 0,
+            levels: vec![LevelMeta {
+                level: 1,
+                params: 0,
+                flops_per_image: 1,
+                holdout_loss: 0.1,
+                eps: Default::default(),
+                eps_jvp: Default::default(),
+                eps_pallas: Default::default(),
+            }],
+        }
+    }
+
+    /// The builder is the single spawn surface: supervision is opt-in,
+    /// an unsupervised spawn exposes generation 0's join handle, and a
+    /// supervised one reaps its own generations (no join exposed).
+    /// Spawning needs no artifacts — a manifest whose engine cannot come
+    /// up still yields a live thread that refuses jobs, which is all
+    /// this shape test needs.
+    #[test]
+    fn builder_spawn_shapes_supervision() {
+        let manifest = tiny_manifest();
+        let plain = ExecutorBuilder::new(manifest.clone()).spawn().unwrap();
+        assert!(plain.join.is_some(), "unsupervised spawn returns the join handle");
+        assert!(!plain.handle.is_supervised());
+        assert_eq!(plain.handle.generation(), 0);
+        plain.handle.stop();
+        let _ = plain.join.unwrap().join();
+        let sup = ExecutorBuilder::new(manifest)
+            .options(ExecOptions::default())
+            .supervised(SupervisorOptions::default())
+            .spawn()
+            .unwrap();
+        assert!(sup.join.is_none(), "the supervisor reaps its own generations");
+        assert!(sup.handle.is_supervised());
+        sup.handle.stop();
+    }
+
+    /// The deprecated trio still compiles and still delegates to the
+    /// builder (same handle shapes as before the collapse).
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_spawn_wrappers_delegate_to_builder() {
+        let manifest = tiny_manifest();
+        let (h, join) = spawn_executor(manifest.clone(), None).unwrap();
+        assert!(!h.is_supervised());
+        h.stop();
+        let _ = join.join();
+        let sup =
+            spawn_supervised(manifest, None, ExecOptions::default(), SupervisorOptions::default())
+                .unwrap();
+        assert!(sup.is_supervised());
+        sup.stop();
     }
 
     #[test]

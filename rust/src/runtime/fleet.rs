@@ -1,0 +1,420 @@
+//! Multi-executor fleet with level-affinity placement.
+//!
+//! The paper's economics (Theorem 1) make ML-EM spend many cheap-level
+//! drift evaluations per expensive-level one.  A single executor makes
+//! the cheap levels queue *behind* the big UNet; the fleet runs them
+//! *beside* it.  A [`Fleet`] owns N executors — each the PR-6
+//! supervised kind, each with its own device thread, queue, and PR-4
+//! cross-request grouping loop — plus a **placement map** assigning
+//! every ladder level a *home* member:
+//!
+//! - the **top level** (largest UNet) is pinned to member 0, the "big"
+//!   executor, so its long dispatches never sit behind anything else;
+//! - the **lower levels** are spread across the remaining members by
+//!   cost-aware LPT (longest-processing-time) assignment, so the many
+//!   cheap evaluations balance instead of convoying.
+//!
+//! Every member loads the *same* artifact manifest (levels are
+//! replicated, not partitioned), which is what makes routing a pure
+//! performance decision: the engine's math is a deterministic function
+//! of its inputs, so **which member runs a job cannot change a bit of
+//! its result** — placement only decides where the level's
+//! cross-request grouping happens.  The router ([`Fleet::handle_for`])
+//! hands each `NeuralDenoiser` a clone of its home member's handle, so
+//! the whole `(level, bucket)` job stream for that level lands on one
+//! queue and keeps grouping with its peers.
+//!
+//! Placement is **cost-aware and live**: the calibrator's T̂_k snapshot
+//! (PR 2) feeds [`Fleet::rebalance`] — admin-triggerable via
+//! `{"cmd":"fleet","rebalance":true}` and cadence-driven via
+//! [`Fleet::tick`] — which recomputes the LPT split and migrates level
+//! homes when γ̂ drift has unbalanced it.  Before a level moves, its
+//! *old* home is drained by an admin round-trip through the member's
+//! FIFO job channel ([`ExecutorHandle::exec_stats`]): the reply can
+//! only arrive after every previously-enqueued job was handled, so all
+//! in-flight groups for the migrating level have scattered before the
+//! new home takes over — results stay bit-identical through a move.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use anyhow::{ensure, Result};
+
+use super::executor::{ExecOptions, ExecutorBuilder, ExecutorHandle, SupervisorOptions};
+use super::manifest::Manifest;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+/// How a [`Fleet`] is spawned — size, per-member executor options,
+/// supervision, rebalance cadence, and explicit placement pins.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Number of executors (≥ 1; 1 = the pre-fleet single-executor
+    /// behavior, bit-identical and near-zero overhead).
+    pub executors: usize,
+    /// Options for every member's grouping loop.
+    pub exec: ExecOptions,
+    /// Supervision (respawn + replay) for every member; `None` spawns
+    /// unsupervised members (tests, short-lived tools).
+    pub supervise: Option<SupervisorOptions>,
+    /// Run a cost-aware rebalance every this many scheduler batches;
+    /// 0 disables the cadence (admin rebalance still works).
+    pub rebalance_every: u64,
+    /// Explicit placement pins `(ladder level, member index)` that
+    /// override the cost-aware plan, e.g. `[(5, 0), (1, 1)]`.
+    pub pins: Vec<(usize, usize)>,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            executors: 1,
+            exec: ExecOptions::default(),
+            supervise: None,
+            rebalance_every: 64,
+            pins: Vec::new(),
+        }
+    }
+}
+
+/// Compute a placement map: `costs[i]` (per-image cost of family index
+/// `i`, any consistent unit) → home member index for each level.
+///
+/// Shape: with one member everything lives there; with N ≥ 2 the top
+/// level (last index, the ladder's most expensive net) is pinned to
+/// member 0 and the lower levels are LPT-assigned — descending cost,
+/// each to the currently least-loaded member among `1..N` — so the
+/// cheap-level work balances across the rest of the fleet.  `pins`
+/// (`(family index, member)`) override both rules.  The plan is a pure
+/// function of its arguments (ties broken by lowest member index,
+/// equal costs by ascending family index), so identical cost snapshots
+/// always yield identical placements.
+pub fn plan_placement(costs: &[f64], executors: usize, pins: &[(usize, usize)]) -> Vec<usize> {
+    let n = costs.len();
+    let members = executors.max(1);
+    let mut place = vec![0usize; n];
+    if n == 0 || members == 1 {
+        return place;
+    }
+    let mut fixed = vec![false; n];
+    let mut load = vec![0.0f64; members];
+    for &(i, m) in pins {
+        if i < n && m < members {
+            place[i] = m;
+            fixed[i] = true;
+            load[m] += costs[i].max(0.0);
+        }
+    }
+    // Top level → the big member, unless explicitly pinned elsewhere.
+    let top = n - 1;
+    if !fixed[top] {
+        place[top] = 0;
+        fixed[top] = true;
+        load[0] += costs[top].max(0.0);
+    }
+    // Lower levels: LPT across the non-big members.  Sort by descending
+    // cost with the family index as a deterministic tie-break.
+    let mut order: Vec<usize> = (0..n).filter(|&i| !fixed[i]).collect();
+    order.sort_by(|&a, &b| {
+        costs[b].partial_cmp(&costs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for i in order {
+        let mut best = 1usize;
+        for m in 2..members {
+            if load[m] < load[best] {
+                best = m;
+            }
+        }
+        place[i] = best;
+        load[best] += costs[i].max(0.0);
+    }
+    place
+}
+
+/// N supervised executors + a live level→home placement map.
+pub struct Fleet {
+    /// The member handles; index = member index in the placement map.
+    /// Member 0 is the "big" executor.
+    members: Vec<ExecutorHandle>,
+    /// Join handles for *unsupervised* members (supervised members park
+    /// their joins inside their supervisor); drained by [`Fleet::stop`].
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    /// `placement[i]` = home member of family index `i` (0-based index
+    /// into the manifest's level list).
+    placement: RwLock<Vec<usize>>,
+    /// Pins converted to family indices, applied on every (re)plan.
+    pins_idx: Vec<(usize, usize)>,
+    /// Cadence for [`Fleet::tick`]; 0 = cadence off.
+    rebalance_every: u64,
+    ticks: AtomicU64,
+    rebalances: AtomicU64,
+    moved_levels: AtomicU64,
+}
+
+impl Fleet {
+    /// Spawn `opts.executors` members, every one serving `manifest`,
+    /// and compute the initial placement from the manifest's static
+    /// FLOP estimates (the calibrator's measured T̂_k refines it later
+    /// through [`Fleet::rebalance`]).
+    pub fn spawn(manifest: Manifest, metrics: Option<Metrics>, opts: &FleetOptions) -> Result<Fleet> {
+        ensure!(opts.executors >= 1, "fleet needs at least one executor");
+        let mut members = Vec::with_capacity(opts.executors);
+        let mut joins = Vec::new();
+        for _ in 0..opts.executors {
+            let mut b = ExecutorBuilder::new(manifest.clone()).options(opts.exec);
+            if let Some(m) = &metrics {
+                b = b.metrics(m.clone());
+            }
+            if let Some(retry) = opts.supervise {
+                b = b.supervised(retry);
+            }
+            let ex = b.spawn()?;
+            members.push(ex.handle);
+            if let Some(j) = ex.join {
+                joins.push(j);
+            }
+        }
+        Ok(Fleet::assemble(members, joins, opts.rebalance_every, &opts.pins))
+    }
+
+    /// Wrap already-spawned members (tests, or the scheduler's
+    /// single-handle compatibility constructor).  Member 0 of the slice
+    /// becomes the big executor.
+    pub fn adopt(members: Vec<ExecutorHandle>, rebalance_every: u64, pins: &[(usize, usize)]) -> Fleet {
+        assert!(!members.is_empty(), "fleet needs at least one executor");
+        Fleet::assemble(members, Vec::new(), rebalance_every, pins)
+    }
+
+    fn assemble(
+        members: Vec<ExecutorHandle>,
+        joins: Vec<JoinHandle<()>>,
+        rebalance_every: u64,
+        pins: &[(usize, usize)],
+    ) -> Fleet {
+        let manifest = members[0].manifest();
+        // Pins arrive keyed by *ladder level* (the config's vocabulary);
+        // the placement map is keyed by family index.  Unknown levels or
+        // out-of-range members are dropped here — config validation
+        // rejects them up front on the serving path.
+        let pins_idx: Vec<(usize, usize)> = pins
+            .iter()
+            .filter_map(|&(level, m)| {
+                manifest
+                    .levels
+                    .iter()
+                    .position(|l| l.level == level)
+                    .filter(|_| m < members.len())
+                    .map(|i| (i, m))
+            })
+            .collect();
+        let costs: Vec<f64> = manifest.levels.iter().map(|l| l.flops_per_image as f64).collect();
+        let placement = plan_placement(&costs, members.len(), &pins_idx);
+        Fleet {
+            members,
+            joins: Mutex::new(joins),
+            placement: RwLock::new(placement),
+            pins_idx,
+            rebalance_every,
+            ticks: AtomicU64::new(0),
+            rebalances: AtomicU64::new(0),
+            moved_levels: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of members.
+    pub fn executors(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The big member — compatibility anchor for callers that need "an
+    /// executor" without caring about placement (cost measurement,
+    /// warmup, combine).
+    pub fn primary(&self) -> &ExecutorHandle {
+        &self.members[0]
+    }
+
+    /// Member `m`'s handle (panics out of range, like slice indexing).
+    pub fn member(&self, m: usize) -> &ExecutorHandle {
+        &self.members[m]
+    }
+
+    /// Home member index of family index `i` (out-of-range → the big
+    /// member, so a stale caller degrades to pre-fleet routing).
+    pub fn home_of(&self, i: usize) -> usize {
+        self.placement
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(i)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// A fresh clone of family index `i`'s home handle — what the
+    /// router hands each `NeuralDenoiser` so the level's job stream
+    /// lands on its home queue.
+    pub fn handle_for(&self, i: usize) -> ExecutorHandle {
+        self.members[self.home_of(i)].clone()
+    }
+
+    /// The current placement map (family index → member index).
+    pub fn placement(&self) -> Vec<usize> {
+        self.placement.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Cadence hook: called once per scheduler batch; returns true when
+    /// a cost-aware rebalance is due.  Never fires for a single-member
+    /// fleet or a zero cadence.
+    pub fn tick(&self) -> bool {
+        let t = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        self.rebalance_every > 0 && self.members.len() > 1 && t % self.rebalance_every == 0
+    }
+
+    /// Recompute placement from a fresh cost snapshot (the calibrator's
+    /// T̂_k, falling back to measured/static costs) and migrate any
+    /// level whose home changed.  Returns the moved family indices —
+    /// the caller rehomes those denoisers.
+    ///
+    /// Drain protocol: before the map flips, each *old* home of a
+    /// moving level gets an [`ExecutorHandle::exec_stats`] round-trip.
+    /// The executor serves its channel FIFO, so the reply proves every
+    /// job enqueued before the drain — including any in-flight groups
+    /// holding the migrating level's jobs — has executed and scattered.
+    /// Only then does the new placement become visible to the router,
+    /// which keeps results bit-identical across the move.
+    pub fn rebalance(&self, costs: &[f64]) -> Vec<usize> {
+        let next = plan_placement(costs, self.members.len(), &self.pins_idx);
+        let cur = self.placement();
+        if next.len() != cur.len() {
+            return Vec::new();
+        }
+        let moved: Vec<usize> = (0..cur.len()).filter(|&i| next[i] != cur[i]).collect();
+        if !moved.is_empty() {
+            let mut drained = BTreeSet::new();
+            for &i in &moved {
+                if drained.insert(cur[i]) {
+                    // Barrier round-trip; a dead member is already empty
+                    // (its supervisor replays), so errors don't block.
+                    let _ = self.members[cur[i]].exec_stats();
+                }
+            }
+            *self.placement.write().unwrap_or_else(|p| p.into_inner()) = next;
+            self.moved_levels.fetch_add(moved.len() as u64, Ordering::Relaxed);
+        }
+        self.rebalances.fetch_add(1, Ordering::Relaxed);
+        moved
+    }
+
+    /// The `{"cmd":"fleet"}` admin section, mirrored into the metrics
+    /// snapshot: placement map plus per-member generation, queue depth,
+    /// and grouped-jobs share.
+    pub fn snapshot(&self) -> Json {
+        let placement = self.placement();
+        let mut members = Vec::with_capacity(self.members.len());
+        for (m, h) in self.members.iter().enumerate() {
+            let st = h.exec_stats().unwrap_or_default();
+            let singles = st.exec_calls.saturating_sub(st.exec_groups);
+            let jobs = st.grouped_jobs + singles;
+            let share = if jobs > 0 { st.grouped_jobs as f64 / jobs as f64 } else { 0.0 };
+            members.push(
+                Json::obj()
+                    .with("executor", Json::num(m as f64))
+                    .with("generation", Json::num(h.generation() as f64))
+                    .with("supervised", Json::Bool(h.is_supervised()))
+                    .with("queue_depth", Json::num(h.queue_depth() as f64))
+                    .with("levels", Json::Arr(
+                        placement
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &home)| home == m)
+                            .map(|(i, _)| Json::num(h.manifest().levels[i].level as f64))
+                            .collect(),
+                    ))
+                    .with("exec_calls", Json::num(st.exec_calls as f64))
+                    .with("exec_groups", Json::num(st.exec_groups as f64))
+                    .with("grouped_jobs", Json::num(st.grouped_jobs as f64))
+                    .with("grouped_share", Json::num(share)),
+            );
+        }
+        Json::obj()
+            .with("executors", Json::num(self.members.len() as f64))
+            .with("rebalance_every", Json::num(self.rebalance_every as f64))
+            .with("ticks", Json::num(self.ticks.load(Ordering::Relaxed) as f64))
+            .with("rebalances", Json::num(self.rebalances.load(Ordering::Relaxed) as f64))
+            .with("moved_levels", Json::num(self.moved_levels.load(Ordering::Relaxed) as f64))
+            .with("placement", Json::Arr(placement.iter().map(|&m| Json::num(m as f64)).collect()))
+            .with("members", Json::Arr(members))
+    }
+
+    /// Total rebalance passes run (including no-op passes).
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances.load(Ordering::Relaxed)
+    }
+
+    /// Stop every member and join the unsupervised spawn threads.
+    pub fn stop(&self) {
+        for h in &self.members {
+            h.stop();
+        }
+        for j in self.joins.lock().unwrap_or_else(|p| p.into_inner()).drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::plan_placement;
+
+    #[test]
+    fn single_member_takes_everything() {
+        assert_eq!(plan_placement(&[1.0, 4.0, 16.0], 1, &[]), vec![0, 0, 0]);
+        assert_eq!(plan_placement(&[], 4, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn two_members_split_top_from_rest() {
+        // Top level → big member 0; both cheap levels → member 1.
+        assert_eq!(plan_placement(&[1.0, 4.0, 16.0], 2, &[]), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn lpt_balances_lower_levels() {
+        // Four members: top → 0, lower levels LPT over members 1..=3.
+        // Costs 8, 4, 2, 1 (descending after dropping the top): 8 → m1,
+        // 4 → m2, 2 → m3, 1 → m3 would unbalance — least-loaded is m3
+        // (2.0) vs m2 (4.0) vs m1 (8.0), so 1 lands on m3.
+        let place = plan_placement(&[1.0, 2.0, 4.0, 8.0, 32.0], 4, &[]);
+        assert_eq!(place[4], 0);
+        assert_eq!(place[3], 1);
+        assert_eq!(place[2], 2);
+        assert_eq!(place[1], 3);
+        assert_eq!(place[0], 3);
+        // Loads among the small members: m1 = 8, m2 = 4, m3 = 3.
+    }
+
+    #[test]
+    fn pins_override_the_plan() {
+        // Pin family index 0 onto the big member and the top level off it.
+        let place = plan_placement(&[1.0, 4.0, 16.0], 2, &[(0, 0), (2, 1)]);
+        assert_eq!(place[0], 0);
+        assert_eq!(place[2], 1);
+        // The unpinned middle level still LPT-lands on a small member.
+        assert_eq!(place[1], 1);
+        // Out-of-range pins are ignored, not fatal.
+        assert_eq!(plan_placement(&[1.0, 2.0], 2, &[(9, 1), (0, 9)]), vec![1, 0]);
+    }
+
+    #[test]
+    fn plan_is_deterministic_under_ties() {
+        let costs = vec![2.0, 2.0, 2.0, 2.0, 10.0];
+        let a = plan_placement(&costs, 3, &[]);
+        let b = plan_placement(&costs, 3, &[]);
+        assert_eq!(a, b);
+        // Equal costs alternate deterministically across members 1..3.
+        assert_eq!(a[4], 0);
+        assert!(a[..4].iter().all(|&m| m == 1 || m == 2));
+        assert_eq!(a[..4].iter().filter(|&&m| m == 1).count(), 2);
+    }
+}

@@ -6,16 +6,22 @@
 //! thread** owns the client and all compiled executables; everything else
 //! talks to it through a cloneable, `Sync` [`ExecutorHandle`].  This also
 //! models a real deployment, where a single process owns the device and
-//! serialises kernel launches.
+//! serialises kernel launches.  The [`fleet`] layer scales that shape
+//! out: N executor threads (N devices), each owning its own client, with
+//! a level-affinity placement map deciding which one serves each ladder
+//! level.
 //!
 //! * [`manifest`] — typed view of `artifacts/manifest.json`;
 //! * [`engine`] — thread-confined executable cache + batch-bucket logic;
-//! * [`executor`] — the executor thread and its handle;
+//! * [`executor`] — the executor thread, its [`executor::ExecutorBuilder`]
+//!   spawn API, and its handle;
+//! * [`fleet`] — N executors + cost-aware level→home placement/routing;
 //! * [`neural`] — [`crate::sde::Denoiser`] implementations over the
 //!   handle (the f^1..f^5 family as seen by the samplers).
 
 pub mod engine;
 pub mod executor;
+pub mod fleet;
 pub mod manifest;
 pub mod neural;
 #[cfg(feature = "xla")]
@@ -23,9 +29,12 @@ pub(crate) mod xla_pjrt;
 #[cfg(not(feature = "xla"))]
 pub(crate) mod xla_shim;
 
+#[allow(deprecated)]
+pub use executor::{spawn_executor, spawn_executor_with, spawn_supervised};
 pub use executor::{
-    is_executor_gone, spawn_executor, spawn_executor_with, spawn_supervised, ExecOptions,
-    ExecStats, ExecutorGone, ExecutorHandle, SupervisorOptions,
+    is_executor_gone, ExecOptions, ExecStats, ExecutorBuilder, ExecutorGone, ExecutorHandle,
+    SpawnedExecutor, SupervisorOptions,
 };
+pub use fleet::{plan_placement, Fleet, FleetOptions};
 pub use manifest::Manifest;
 pub use neural::NeuralDenoiser;

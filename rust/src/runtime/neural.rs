@@ -21,8 +21,21 @@
 //! *simultaneously* — the precondition for the grouping loop to fuse
 //! them into one device dispatch.  Which handle carries a request
 //! cannot change a bit of its result.
+//!
+//! Fleet pass: a denoiser's home executor is no longer fixed for life.
+//! The fleet's placement map assigns each level a home member, and a
+//! cost-aware rebalance may *move* that home ([`NeuralDenoiser::rehome`]).
+//! The home handle sits behind an `RwLock`, and every parked clone is
+//! tagged with the **home epoch** it was cloned under: a rehome bumps
+//! the epoch, so stale clones (pointing at the old member) are dropped
+//! at their next pop instead of re-entering circulation.  Because every
+//! fleet member serves identical artifacts and the engine's math is a
+//! pure function of its inputs, which member carries a request cannot
+//! change a bit of its result — rehoming only moves *where* the level's
+//! cross-request grouping happens.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -31,11 +44,17 @@ use crate::sde::drift::Denoiser;
 
 /// One family member f^k served through the executor.
 pub struct NeuralDenoiser {
-    handle: ExecutorHandle,
-    /// Parked handle clones for concurrent shard dispatch, grown on
-    /// demand and reused across calls (a clone per in-flight shard; each
-    /// owns its response channel, so shards never contend on one).
-    shard_handles: Mutex<Vec<ExecutorHandle>>,
+    /// The level's current home executor (the fleet's placement entry);
+    /// swapped by [`NeuralDenoiser::rehome`], read to mint fresh clones.
+    home: RwLock<ExecutorHandle>,
+    /// Bumped on every rehome; parked clones minted under an older
+    /// epoch are discarded at pop.
+    epoch: AtomicU64,
+    /// Parked handle clones for concurrent dispatch, grown on demand
+    /// and reused across calls (a clone per in-flight call; each owns
+    /// its response channel, so callers never contend on one).  Entries
+    /// are `(epoch, handle)` — see [`NeuralDenoiser::rehome`].
+    shard_handles: Mutex<Vec<(u64, ExecutorHandle)>>,
     /// 1-based level index.
     pub level: usize,
     dim: usize,
@@ -52,7 +71,8 @@ impl NeuralDenoiser {
         let dim = handle.manifest().dim;
         let shard_rows = handle.manifest().batch_buckets.iter().copied().max().unwrap_or(0);
         NeuralDenoiser {
-            handle,
+            home: RwLock::new(handle),
+            epoch: AtomicU64::new(0),
             shard_handles: Mutex::new(Vec::new()),
             level,
             dim,
@@ -77,6 +97,21 @@ impl NeuralDenoiser {
         cost_reps: usize,
         shard_routing: bool,
     ) -> Result<Vec<NeuralDenoiser>> {
+        Self::family_routed(handle, |_| handle.clone(), cost_reps, shard_routing)
+    }
+
+    /// [`NeuralDenoiser::family_with`] with per-level home routing: the
+    /// fleet passes `home_of` (0-based level index → that level's home
+    /// member handle), so each denoiser's job stream lands on its home
+    /// executor's queue.  Costs are still measured through `handle`
+    /// (member 0 — every member serves identical artifacts, so one
+    /// member's timings speak for all).
+    pub fn family_routed(
+        handle: &ExecutorHandle,
+        home_of: impl Fn(usize) -> ExecutorHandle,
+        cost_reps: usize,
+        shard_routing: bool,
+    ) -> Result<Vec<NeuralDenoiser>> {
         let costs: Vec<f64> = if cost_reps > 0 {
             handle.measure_costs(cost_reps)?
         } else {
@@ -92,14 +127,34 @@ impl NeuralDenoiser {
             .levels
             .iter()
             .zip(costs)
-            .map(|(l, c)| {
-                let mut d = NeuralDenoiser::new(handle.clone(), l.level, c);
+            .enumerate()
+            .map(|(i, (l, c))| {
+                let mut d = NeuralDenoiser::new(home_of(i), l.level, c);
                 if !shard_routing {
                     d.shard_rows = 0;
                 }
                 d
             })
             .collect())
+    }
+
+    /// Move this level to a new home executor (the fleet's rebalance
+    /// path).  The caller is responsible for draining the old home
+    /// first (see `runtime::fleet`); here we swap the home handle, bump
+    /// the epoch so parked old-home clones die at their next pop, and
+    /// clear the park list.  A call racing the swap may still ride the
+    /// old home once — bit-identical either way, since every member
+    /// serves the same artifacts.
+    pub fn rehome(&self, handle: ExecutorHandle) {
+        *self.home.write().unwrap_or_else(|p| p.into_inner()) = handle;
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// A fresh clone of the current home handle (fleet snapshot /
+    /// diagnostics; the call paths use the parked pool instead).
+    pub fn home_handle(&self) -> ExecutorHandle {
+        self.home.read().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Run `f` on a parked executor-handle clone (grown on first use,
@@ -109,19 +164,29 @@ impl NeuralDenoiser {
     /// Parked clones survive a supervisor respawn: every clone shares
     /// the executor's rewirable plumbing, so after the supervisor bumps
     /// the generation a parked handle transparently talks to the new
-    /// executor thread — the pool is never invalidated.  The park-list
-    /// locks recover from poisoning (a panicking lane died between
-    /// critical sections; the `Vec` itself is always consistent), so one
-    /// bad batch can't wedge every other lane's denoiser calls.
+    /// executor thread — the pool is never invalidated by a respawn.
+    /// A *rehome* is different (the clone points at another member
+    /// entirely): epoch-stale entries are dropped at pop.  The
+    /// park-list locks recover from poisoning (a panicking lane died
+    /// between critical sections; the `Vec` itself is always
+    /// consistent), so one bad batch can't wedge every other lane's
+    /// denoiser calls.
     fn with_handle<R>(&self, f: impl FnOnce(&ExecutorHandle) -> R) -> R {
-        let h = self
-            .shard_handles
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .pop()
-            .unwrap_or_else(|| self.handle.clone());
+        let cur = self.epoch.load(Ordering::SeqCst);
+        let parked = {
+            let mut pool = self.shard_handles.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                match pool.pop() {
+                    Some((e, h)) if e == cur => break Some(h),
+                    Some(_) => continue, // stale epoch: drop the old-home clone
+                    None => break None,
+                }
+            }
+        };
+        let h = parked
+            .unwrap_or_else(|| self.home.read().unwrap_or_else(|p| p.into_inner()).clone());
         let r = f(&h);
-        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).push(h);
+        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).push((cur, h));
         r
     }
 
@@ -131,13 +196,17 @@ impl NeuralDenoiser {
     fn eps_sharded(&self, x: &[f32], t: f64, out: &mut [f32]) {
         let chunk = self.shard_rows * self.dim;
         let n_chunks = x.chunks(chunk).len();
-        // Borrow one parked clone per shard (grow the pool on first use).
+        let cur = self.epoch.load(Ordering::SeqCst);
+        // Borrow one parked clone per shard (grow the pool on first use;
+        // epoch-stale entries are purged rather than borrowed).
         let mut handles: Vec<ExecutorHandle> = {
             let mut parked = self.shard_handles.lock().unwrap_or_else(|p| p.into_inner());
+            parked.retain(|(e, _)| *e == cur);
             while parked.len() < n_chunks {
-                parked.push(self.handle.clone());
+                let h = self.home.read().unwrap_or_else(|p| p.into_inner()).clone();
+                parked.push((cur, h));
             }
-            parked.drain(..n_chunks).collect()
+            parked.drain(..n_chunks).map(|(_, h)| h).collect()
         };
         let tasks: Vec<(&[f32], &mut [f32], &ExecutorHandle)> = x
             .chunks(chunk)
@@ -160,7 +229,10 @@ impl NeuralDenoiser {
         // hit this thread — restore the lane's tag for the rest of the
         // request.
         crate::trace::set_current(tag);
-        self.shard_handles.lock().unwrap_or_else(|p| p.into_inner()).append(&mut handles);
+        self.shard_handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .extend(handles.drain(..).map(|h| (cur, h)));
     }
 }
 

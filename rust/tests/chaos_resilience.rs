@@ -22,6 +22,10 @@
 //! `benchkit::resilience_json` schema so the artifact exists after
 //! `cargo test` alone (the full sweep lives in `bench_resilience`).
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;

@@ -21,6 +21,10 @@
 //! `benchkit::coord_*` plumbing so the artifact exists after
 //! `cargo test` alone (the full sweep lives in `bench_coordinator`).
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::sync::Arc;
 
 use mlem::benchkit::{

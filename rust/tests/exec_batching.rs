@@ -14,6 +14,10 @@
 //! `payload_pool_is_executor_local_and_reuses` relies on being the only
 //! pool traffic in its binary.
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::sync::Mutex;
 use std::time::Duration;
 

@@ -1,0 +1,402 @@
+//! Multi-executor fleet certificates — level-affinity placement behind
+//! the unified runtime API, on the offline shim's synthetic artifacts:
+//!
+//! * **Routing-parity storm** (the tentpole's acceptance test): the
+//!   coordinator workload produces bit-identical responses, request by
+//!   request, under `executors ∈ {1, 2, 4}` — which member runs a job
+//!   can never change a bit.  `MLEM_EXECUTORS=N` narrows the sweep to
+//!   `{1, N}` (the CI matrix).
+//! * **Typed-error taxonomy parity**: the same bad requests produce the
+//!   same typed error strings at every executor count.
+//! * **Chaos variant**: a fleet member hosting a faulty level dies
+//!   mid-storm (`panic_after`), its supervisor respawns it and replays
+//!   the stranded calls, the storm completes, and every answered output
+//!   matches a fault-free twin bitwise.
+//! * **Cost-aware rebalance**: inverted calibrator T̂_k estimates move
+//!   level homes (the old homes drain first), and post-move responses
+//!   stay bit-identical to the single-executor baseline.
+//! * **`{"cmd":"fleet"}` admin snapshot**: placement map, per-member
+//!   generation / queue depth / grouped-jobs share.
+//!
+//! Also emits a compressed `BENCH_fleet.json` through the shared
+//! `benchkit::fleet_*` plumbing so the artifact exists after
+//! `cargo test` alone (the full sweep lives in `bench_fleet`).
+
+use std::sync::{Arc, Mutex};
+
+use mlem::benchkit::{
+    bits_equal, coord_artifact_dir, coord_requests, fleet_config, fleet_json, fleet_point,
+    synth_artifact_dir, write_bench_json, CoordWorkload, SynthLevel,
+};
+use mlem::calibrate::ProbeSample;
+use mlem::config::{SamplerKind, ServeConfig};
+use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
+use mlem::coordinator::{LanePool, Scheduler};
+use mlem::metrics::Metrics;
+use mlem::runtime::{Fleet, Manifest};
+use mlem::util::json::Json;
+
+/// Fleet tests drive multi-thread storms (and deliberate member
+/// deaths) — serialise them inside this test process.
+static STORM_LOCK: Mutex<()> = Mutex::new(());
+
+fn storm_guard() -> std::sync::MutexGuard<'static, ()> {
+    STORM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The compressed fleet workload: 3 levels so the placement map has
+/// shape (top pinned + LPT over the rest) at every swept member count.
+fn small_workload() -> CoordWorkload {
+    CoordWorkload {
+        img: 4,
+        channels: 1,
+        bucket: 8,
+        work: 96,
+        levels: 3,
+        classes: 4,
+        reqs_per_class: 3,
+        n_per_req: 2,
+        steps: 10,
+        linger_us: 300,
+    }
+}
+
+/// The executor counts to sweep: `{1, 2, 4}` by default, narrowed to
+/// `{1, N}` by `MLEM_EXECUTORS=N` (the CI matrix knob).
+fn executor_counts() -> Vec<usize> {
+    match std::env::var("MLEM_EXECUTORS") {
+        Ok(s) => {
+            let n: usize = s.trim().parse().expect("MLEM_EXECUTORS must be an integer");
+            if n <= 1 {
+                vec![1]
+            } else {
+                vec![1, n]
+            }
+        }
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+/// Spawn a fleet + scheduler for `cfg` (the serving path's exact
+/// construction: `Fleet::spawn` → `Scheduler::with_fleet`).
+fn fleet_scheduler(cfg: &ServeConfig) -> (Arc<Scheduler>, Metrics) {
+    let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
+    let metrics = Metrics::new();
+    let fleet =
+        Fleet::spawn(manifest, Some(metrics.clone()), &cfg.fleet_options()).expect("fleet spawn");
+    let scheduler =
+        Arc::new(Scheduler::with_fleet(fleet, cfg.clone(), metrics.clone()).expect("scheduler"));
+    (scheduler, metrics)
+}
+
+/// Collect one `Gen` image payload per receiver, submission order;
+/// panics on any non-success response.
+fn collect_images(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Vec<f32>> {
+    rxs.into_iter()
+        .map(|rx| match rx.recv().expect("response delivered") {
+            Response::Gen(g) => g.images.expect("return_images"),
+            other => panic!("storm request failed: {other:?}"),
+        })
+        .collect()
+}
+
+#[test]
+fn routing_parity_storm_across_executor_counts() {
+    let _storm = storm_guard();
+    let w = small_workload();
+    let dir = coord_artifact_dir("fleet-parity", &w).unwrap();
+    let counts = executor_counts();
+    let (base, p1) = fleet_point(&dir, &w, 1, 1).unwrap();
+    assert!(p1.images_per_s > 0.0);
+    assert_eq!(base.len(), w.classes * w.reqs_per_class);
+    for &n in counts.iter().filter(|&&n| n > 1) {
+        let (outs, p) = fleet_point(&dir, &w, n, 1).unwrap();
+        assert!(
+            bits_equal(&base, &outs),
+            "fleet outputs diverged from the 1-executor baseline at {n} executors"
+        );
+        assert!(p.exec_calls > 0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn typed_error_taxonomy_is_identical_across_executor_counts() {
+    let _storm = storm_guard();
+    let w = small_workload();
+    let dir = coord_artifact_dir("fleet-taxonomy", &w).unwrap();
+    let mut baseline: Option<Vec<String>> = None;
+    for n in executor_counts() {
+        let mut cfg = fleet_config(&dir, &w, n);
+        // Calibration on (but effectively probe-free) so the theory
+        // policy's not-calibrated error is reachable.
+        cfg.calib_sample_every = 1_000_000;
+        let (scheduler, _metrics) = fleet_scheduler(&cfg);
+        let pool = LanePool::new(scheduler.clone(), &cfg);
+        let good = GenRequest {
+            n: 1,
+            sampler: SamplerKind::Mlem,
+            steps: 4,
+            seed: 7,
+            levels: (1..=w.levels).collect(),
+            delta: 0.0,
+            policy: PolicyChoice::Default,
+            return_images: false,
+            deadline_ms: None,
+            priority: 0,
+        };
+        // Control: a healthy request succeeds at every count.
+        match pool.generate(good.clone()) {
+            Response::Gen(_) => {}
+            other => panic!("healthy request failed at {n} executors: {other:?}"),
+        }
+        let mut errors = Vec::new();
+        // Theory policy before any γ̂ fit exists.
+        let mut uncal = good.clone();
+        uncal.policy = PolicyChoice::Theory;
+        match pool.generate(uncal) {
+            Response::Error(e) => errors.push(e),
+            other => panic!("expected not-calibrated error, got {other:?}"),
+        }
+        // Theory policy over an off-ladder level subset.
+        let mut off = good.clone();
+        off.policy = PolicyChoice::Theory;
+        off.levels = vec![1, w.levels];
+        match pool.generate(off) {
+            Response::Error(e) => errors.push(e),
+            other => panic!("expected off-ladder error, got {other:?}"),
+        }
+        match &baseline {
+            Some(b) => assert_eq!(
+                b, &errors,
+                "typed-error taxonomy must be executor-count-independent ({n} executors)"
+            ),
+            None => baseline = Some(errors),
+        }
+        pool.stop();
+        pool.join();
+        scheduler.fleet().stop();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn member_death_mid_storm_replays_on_respawn() {
+    let _storm = storm_guard();
+    // Level 1 (a *lower* level — homed on member 1, not the primary)
+    // kills its executor every 5 executes; level 2 is the healthy top.
+    let chaos_dir = synth_artifact_dir(
+        "fleet-chaos",
+        4, // dim 16
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "panic_after=5" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 64, fault: "" },
+        ],
+    )
+    .expect("chaos artifacts");
+    let cfg = ServeConfig {
+        artifacts: chaos_dir.to_string_lossy().into_owned(),
+        max_batch: 2,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: 2,
+        executors: 2,
+        ..Default::default()
+    };
+    assert!(cfg.supervisor, "the chaos variant needs the default supervised fleet");
+    let (scheduler, metrics) = fleet_scheduler(&cfg);
+    assert_eq!(scheduler.fleet().home_of(0), 1, "the faulty level must live off-primary");
+    let pool = LanePool::new_paused(scheduler.clone(), &cfg);
+
+    // Δ ≫ 0 forces a level-1 eval every step, so the fault fires on
+    // member 1 repeatedly mid-storm.
+    let reqs: Vec<GenRequest> = (0..6u64)
+        .map(|i| GenRequest {
+            n: 1,
+            sampler: SamplerKind::Mlem,
+            steps: 30,
+            seed: i,
+            levels: vec![1, 2],
+            delta: 5.0,
+            policy: PolicyChoice::Default,
+            return_images: true,
+            deadline_ms: None,
+            priority: 0,
+        })
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+    pool.start();
+    let mut outputs: Vec<Option<Vec<f32>>> = Vec::new();
+    for rx in rxs {
+        match rx.recv().expect("every storm request answered") {
+            Response::Gen(g) => outputs.push(Some(g.images.expect("return_images"))),
+            Response::Error(_) => outputs.push(None),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    pool.stop();
+    pool.join();
+    let ok = outputs.iter().filter(|o| o.is_some()).count();
+    assert_eq!(outputs.len(), reqs.len(), "every request answered exactly once");
+    assert!(ok >= 1, "the supervised fleet must recover at least one request");
+    assert!(metrics.restarts.get() >= 1, "panic_after=5 must kill the faulty member");
+    assert!(metrics.retries.get() >= 1, "a respawn strands at least one in-flight call");
+    // The respawned member is visible in the admin snapshot: a bumped
+    // generation on exactly the member hosting the faulty level.
+    let snap = scheduler.fleet_admin(false);
+    let members = snap.get("members").and_then(Json::as_arr).expect("members");
+    assert!(
+        members[1].f64_of("generation").unwrap() > members[0].f64_of("generation").unwrap(),
+        "the faulty member's generation must outrun the healthy one's: {snap}"
+    );
+    scheduler.fleet().stop();
+
+    // Fault-free twin (single executor — parity doubles as a routing
+    // check): every *answered* chaos output must match it bitwise.
+    let clean_dir = synth_artifact_dir(
+        "fleet-clean",
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 64, fault: "" },
+        ],
+    )
+    .expect("clean artifacts");
+    let clean_cfg = ServeConfig {
+        artifacts: clean_dir.to_string_lossy().into_owned(),
+        executors: 1,
+        ..cfg.clone()
+    };
+    let (clean_sched, _m) = fleet_scheduler(&clean_cfg);
+    let clean_pool = LanePool::new_paused(clean_sched.clone(), &clean_cfg);
+    let crxs: Vec<_> = reqs.iter().map(|r| clean_pool.submit(r.clone())).collect();
+    clean_pool.start();
+    let reference = collect_images(crxs);
+    clean_pool.stop();
+    clean_pool.join();
+    clean_sched.fleet().stop();
+    for (i, (got, want)) in outputs.iter().zip(&reference).enumerate() {
+        if let Some(v) = got {
+            assert!(
+                v.len() == want.len()
+                    && v.iter().zip(want.iter()).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "replayed request {i} diverged from the fault-free twin"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    std::fs::remove_dir_all(&clean_dir).ok();
+}
+
+#[test]
+fn calibrated_rebalance_moves_levels_and_keeps_bits() {
+    let _storm = storm_guard();
+    let w = small_workload();
+    let dir = coord_artifact_dir("fleet-rebalance", &w).unwrap();
+    let (base, _) = fleet_point(&dir, &w, 1, 1).unwrap();
+
+    // 3 members over 3 levels: top → member 0, and the LPT split of the
+    // two lower levels depends on their relative costs — so inverting
+    // the cost estimates must flip their homes.
+    let mut cfg = fleet_config(&dir, &w, 3);
+    cfg.calib_sample_every = 1_000_000; // calibrator on, probes off
+    let (scheduler, metrics) = fleet_scheduler(&cfg);
+    let pool = LanePool::new_paused(scheduler.clone(), &cfg);
+    let reqs = coord_requests(&w);
+    let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+    pool.start();
+    let before_move = collect_images(rxs);
+    assert!(bits_equal(&base, &before_move), "pre-rebalance outputs diverged from baseline");
+    let placement_before = scheduler.fleet().placement();
+
+    // Feed the calibrator a T̂_k snapshot that inverts the two lower
+    // levels' static cost order (level 1 expensive, level 2 cheap).
+    let cal = scheduler.calibrator().expect("calibration enabled");
+    let sample = ProbeSample {
+        costs: vec![800.0, 100.0, 6400.0],
+        err2: vec![0.25, 0.0625, 0.015625],
+    };
+    cal.record(&sample);
+    cal.record(&sample);
+    let moved = scheduler.rebalance_now();
+    assert!(moved >= 1, "inverted costs must move at least one level home");
+    let placement_after = scheduler.fleet().placement();
+    assert_ne!(placement_after, placement_before, "the placement map must change");
+    assert_eq!(placement_after[2], 0, "the top level never leaves the big member");
+    assert!(metrics.rebalances.get() >= 1);
+    assert!(scheduler.fleet().rebalances() >= 1);
+
+    // The same storm after the migration: still bit-identical — the
+    // drain barrier plus replicated artifacts make a move invisible.
+    let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+    let after_move = collect_images(rxs);
+    assert!(bits_equal(&base, &after_move), "post-rebalance outputs diverged from baseline");
+
+    pool.stop();
+    pool.join();
+    scheduler.fleet().stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_admin_snapshot_reports_placement_and_members() {
+    let _storm = storm_guard();
+    let w = small_workload();
+    let dir = coord_artifact_dir("fleet-admin", &w).unwrap();
+    let cfg = fleet_config(&dir, &w, 2);
+    let (scheduler, _metrics) = fleet_scheduler(&cfg);
+    let j = scheduler.fleet_admin(false);
+    assert_eq!(j.f64_of("executors"), Some(2.0));
+    let placement = j.get("placement").and_then(Json::as_arr).expect("placement array");
+    assert_eq!(placement.len(), w.levels);
+    let members = j.get("members").and_then(Json::as_arr).expect("members array");
+    assert_eq!(members.len(), 2);
+    for m in members {
+        assert!(m.f64_of("generation").is_some());
+        assert!(m.f64_of("queue_depth").is_some());
+        assert_eq!(m.get("supervised"), Some(&Json::Bool(true)));
+        let share = m.f64_of("grouped_share").expect("grouped_share");
+        assert!((0.0..=1.0).contains(&share), "grouped share out of range: {share}");
+    }
+    // The big member hosts the top ladder level; the lower levels live
+    // on member 1.
+    let top_levels = members[0].get("levels").and_then(Json::as_arr).expect("levels");
+    assert!(top_levels.iter().any(|l| l.as_f64() == Some(w.levels as f64)));
+    // An admin-triggered rebalance pass is counted even when nothing
+    // moves (costs unchanged ⇒ plan unchanged).
+    let j2 = scheduler.fleet_admin(true);
+    assert!(j2.f64_of("rebalances").unwrap() >= 1.0);
+    assert_eq!(j2.get("placement"), j.get("placement"));
+    scheduler.fleet().stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Compressed executor sweep through the exact bench code path:
+/// certifies the shared plumbing and guarantees `BENCH_fleet.json`
+/// exists after `cargo test` alone (the `bench_fleet` run overwrites it
+/// with the full sweep).
+#[test]
+fn fleet_bench_artifact_is_produced_and_consistent() {
+    let _storm = storm_guard();
+    let w = small_workload();
+    let dir = coord_artifact_dir("fleet-bench", &w).unwrap();
+    let cfg = fleet_config(&dir, &w, 4);
+    assert_eq!(cfg.executors, 4);
+    assert_eq!(cfg.max_batch, w.n_per_req, "one request per batch");
+    let (outs_1, p1) = fleet_point(&dir, &w, 1, 1).unwrap();
+    let (outs_4, p4) = fleet_point(&dir, &w, 4, 1).unwrap();
+    let bit_identical = bits_equal(&outs_1, &outs_4);
+    assert!(bit_identical, "executor sweep outputs diverged");
+    let j = fleet_json(&w, &[p1, p4], bit_identical);
+    assert_eq!(j.get("bit_identical"), Some(&Json::Bool(true)));
+    assert!(j.f64_of("fleet_speedup_at_4").is_some());
+    let path = write_bench_json("fleet", &j).expect("write BENCH_fleet.json");
+    assert!(path.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

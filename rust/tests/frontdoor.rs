@@ -4,6 +4,10 @@
 //! histogram — all over real TCP sockets on the synthetic-artifact
 //! interpreter.
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver};

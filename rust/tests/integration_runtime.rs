@@ -6,6 +6,10 @@
 //! must agree with the jnp flavour, batch bucketing must be transparent,
 //! and the measured denoising-error ladder must decrease with level.
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use mlem::runtime::{spawn_executor, Manifest};
 use mlem::sde::schedule;
 use mlem::util::json::Json;

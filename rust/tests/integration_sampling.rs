@@ -1,6 +1,10 @@
 //! Integration: samplers end-to-end over the trained family and the
 //! analytic GMM substrate (the Fig-1 protocol in miniature).
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use mlem::gmm::{Gmm, GmmDenoiser};
 use mlem::levels::Policy;
 use mlem::runtime::{spawn_executor, Manifest, NeuralDenoiser};

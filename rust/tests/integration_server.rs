@@ -3,6 +3,10 @@
 //! Plus the calibration admin path end to end, which (deliberately)
 //! works without artifacts: admin requests never touch the engine.
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;

@@ -17,6 +17,10 @@
 //! knob, so they serialise on `ENV_LOCK` (the rest of the suite lives in
 //! other test binaries / processes).
 
+// The spawn_executor* wrappers used below are #[deprecated] veneers
+// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
+// on purpose, doubling as their compatibility coverage.
+#![allow(deprecated)]
 use std::sync::Mutex;
 
 use mlem::benchkit::{

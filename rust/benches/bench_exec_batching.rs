@@ -23,15 +23,11 @@
 //!
 //! `cargo bench --bench bench_exec_batching`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use mlem::benchkit::{
     exec_batching_json, exec_batching_point, synth_artifact_dir, write_bench_json,
     ExecBatchingWorkload, SynthLevel,
 };
-use mlem::runtime::{spawn_executor_with, ExecOptions, Manifest};
+use mlem::runtime::{ExecOptions, ExecutorBuilder, Manifest};
 use mlem::util::bench::Table;
 
 const HANDLES: [usize; 4] = [1, 2, 4, 8];
@@ -55,20 +51,18 @@ fn main() -> anyhow::Result<()> {
         &[SynthLevel { kind: "eps", scale: 0.5, work: workload.synthetic_work, fault: "" }],
     )?;
     let manifest = Manifest::load(&dir)?;
-    let (serial, serial_join) = spawn_executor_with(
-        manifest.clone(),
-        None,
-        ExecOptions { linger_us: 0, max_group: 1, ..ExecOptions::default() },
-    )?;
-    let (grouped, grouped_join) = spawn_executor_with(
-        manifest,
-        None,
-        ExecOptions {
+    let ex = ExecutorBuilder::new(manifest.clone())
+        .options(ExecOptions { linger_us: 0, max_group: 1, ..ExecOptions::default() })
+        .spawn()?;
+    let (serial, serial_join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
+    let ex = ExecutorBuilder::new(manifest)
+        .options(ExecOptions {
             linger_us: workload.linger_us,
             max_group: workload.max_group,
             ..ExecOptions::default()
-        },
-    )?;
+        })
+        .spawn()?;
+    let (grouped, grouped_join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     serial.warmup(workload.bucket)?;
     grouped.warmup(workload.bucket)?;
 

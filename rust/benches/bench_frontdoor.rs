@@ -18,10 +18,6 @@
 //!
 //! `cargo bench --bench bench_frontdoor`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::channel;
@@ -32,7 +28,7 @@ use mlem::benchkit::{percentile, synth_artifact_dir, write_bench_json, SynthLeve
 use mlem::config::ServeConfig;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::util::bench::Table;
 use mlem::util::json::Json;
 
@@ -167,8 +163,11 @@ fn main() -> anyhow::Result<()> {
     };
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (exec, exec_join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()?;
+    let (exec, exec_join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     exec.warmup(4)?;
     let scheduler = Scheduler::new(exec.clone(), cfg.clone(), metrics)?;
     let server = Arc::new(Server::new(cfg, scheduler));

@@ -25,10 +25,6 @@
 //!
 //! `cargo bench --bench bench_resilience`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::sync::Arc;
 
 use mlem::benchkit::{
@@ -39,7 +35,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
 use mlem::coordinator::{LanePool, Scheduler};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, spawn_supervised, ExecOptions, Manifest};
+use mlem::runtime::{ExecOptions, ExecutorBuilder, Manifest};
 use mlem::util::bench::Table;
 
 /// Kill-storm shape: 6 clients × 8 requests against a bucket-8
@@ -71,8 +67,12 @@ fn kill_storm() -> anyhow::Result<(ResilienceTally, bool, f64, f64)> {
     )?;
     let metrics = Metrics::new();
     let retry = mlem::runtime::SupervisorOptions { retry_budget: 8, retry_backoff_us: 50 };
-    let handle =
-        spawn_supervised(Manifest::load(&chaos_dir)?, Some(metrics.clone()), exec_opts(), retry)?;
+    let handle = ExecutorBuilder::new(Manifest::load(&chaos_dir)?)
+        .metrics(metrics.clone())
+        .options(exec_opts())
+        .supervised(retry)
+        .spawn()?
+        .handle;
     let tally = resilience_storm(&handle, CLIENTS, REQS, 1, 1, 0.5);
     handle.stop();
     let restarts = metrics.restarts.get() as f64;
@@ -87,7 +87,8 @@ fn kill_storm() -> anyhow::Result<(ResilienceTally, bool, f64, f64)> {
         &[8],
         &[SynthLevel { kind: "eps", scale: 0.5, work: 256, fault: "" }],
     )?;
-    let (clean, join) = spawn_executor_with(Manifest::load(&clean_dir)?, None, exec_opts())?;
+    let ex = ExecutorBuilder::new(Manifest::load(&clean_dir)?).options(exec_opts()).spawn()?;
+    let (clean, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     clean.warmup(8)?;
     let (reference, _) = exec_batching_storm(&clean, CLIENTS, REQS, 1, 1, 0.5);
     clean.stop();
@@ -144,7 +145,11 @@ fn overload_storm() -> anyhow::Result<ShedSummary> {
     };
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (handle, join) = spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()?;
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     handle.warmup(4)?;
     let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics)?);
     let pool = LanePool::new(scheduler, &cfg);

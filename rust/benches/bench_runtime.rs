@@ -5,17 +5,13 @@
 //!
 //! `cargo bench --bench bench_runtime`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::time::{Duration, Instant};
 
 use mlem::benchkit::artifacts_dir;
 use mlem::coordinator::batcher::Batcher;
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::config::SamplerKind;
-use mlem::runtime::{spawn_executor, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::util::bench::{bench, fmt_ns, Table};
 use mlem::util::rng::Rng;
 
@@ -28,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let dim = manifest.dim;
     let buckets = manifest.batch_buckets.clone();
     let n_levels = manifest.levels.len();
-    let (handle, _join) = spawn_executor(manifest, None)?;
+    let handle = ExecutorBuilder::new(manifest).spawn()?.handle;
     for &b in &buckets {
         handle.warmup(b)?;
     }

@@ -1,0 +1,115 @@
+//! Device-saturation bench: end-to-end images/s and group occupancy
+//! with cross-class phase alignment + lane-aware batch holding on vs
+//! off, at 1/2/4 runner lanes, with bit parity asserted in the same
+//! run.
+//!
+//! The workload is the coordinator storm (several Δ-classes of small
+//! requests, every ladder level firing each step) — the traffic the
+//! saturation pass exists for: unaligned lanes drift apart and the
+//! executor's linger window only catches stragglers by luck, while
+//! aligned lanes step behind the epoch barrier so their per-t jobs
+//! co-arrive by construction, and the hold policy parks partial tail
+//! cuts (odd `reqs_per_class` guarantees they exist) until they fill.
+//! Runs on the offline shim's synthetic interpreter (no
+//! `make artifacts` needed).
+//!
+//! Measurement and schema live in `benchkit::saturate_point` /
+//! `saturate_json` (shared with `tests/saturate_parity.rs`, which emits
+//! a compressed version of the same artifact).  `BENCH_saturate.json`
+//! carries images/s, occupancy and held-batch counts per (lanes,
+//! aligned) point, the `saturate_occupancy_gain` headline the CI
+//! bench-gate tracks, and a `bit_identical` flag from comparing every
+//! point's outputs request-by-request against the first run — the
+//! knobs are timing-only and must never move a bit.
+//!
+//! `cargo bench --bench bench_saturate`
+
+use mlem::benchkit::{
+    bits_equal, coord_artifact_dir, saturate_json, saturate_point, write_bench_json, CoordWorkload,
+};
+use mlem::util::bench::Table;
+
+const LANES: [usize; 3] = [1, 2, 4];
+
+fn main() -> anyhow::Result<()> {
+    let workload = CoordWorkload {
+        img: 4, // dim 16
+        channels: 1,
+        bucket: 8,
+        work: 384,
+        levels: 4,
+        classes: 4,
+        // Odd on purpose: with max_batch = 2·n_per_req the per-class
+        // FIFO partition leaves a one-request tail cut — the partial
+        // batch the hold policy exists to park.
+        reqs_per_class: 9,
+        n_per_req: 2,
+        steps: 24,
+        linger_us: 400,
+    };
+    let dir = coord_artifact_dir("bench-saturate", &workload)?;
+
+    let mut table = Table::new(
+        "device saturation",
+        &["lanes", "aligned", "images/s", "group occupancy", "executes", "held batches"],
+    );
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut bit_identical = true;
+    for &lanes in &LANES {
+        for aligned in [false, true] {
+            let (outs, p) = saturate_point(&dir, &workload, lanes, aligned, 3)?;
+            match &reference {
+                None => reference = Some(outs),
+                Some(base) => {
+                    let same = bits_equal(base, &outs);
+                    if !same {
+                        eprintln!(
+                            "PARITY FAILURE: outputs diverged at {lanes} lanes \
+                             (aligned {aligned})"
+                        );
+                    }
+                    bit_identical &= same;
+                }
+            }
+            table.row(&[
+                format!("{lanes}"),
+                format!("{aligned}"),
+                format!("{:.1}", p.images_per_s),
+                format!("{:.2}", p.occupancy),
+                format!("{}", p.exec_calls),
+                format!("{}", p.held_batches),
+            ]);
+            points.push(p);
+        }
+    }
+    table.emit();
+
+    let occ = |aligned: bool| {
+        points
+            .iter()
+            .find(|p| p.lanes == 4 && p.aligned == aligned)
+            .map(|p| p.occupancy)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "headline: group occupancy {:.2} aligned+held vs {:.2} off at 4 lanes, outputs {}",
+        occ(true),
+        occ(false),
+        if bit_identical { "bitwise identical" } else { "DIVERGED" }
+    );
+    let j = saturate_json(&workload, &points, bit_identical);
+    let path = write_bench_json("saturate", &j).expect("writing BENCH_saturate.json");
+    println!("[json] {}", path.display());
+    std::fs::remove_dir_all(&dir).ok();
+    // Fail loudly after the artifact is written, so the recorded flags
+    // reflect what actually happened.
+    assert!(bit_identical, "cross-setting outputs diverged (see PARITY FAILURE lines above)");
+    assert!(
+        occ(true) > occ(false),
+        "alignment+holding must raise group occupancy at 4 lanes: {:.2} vs {:.2}",
+        occ(true),
+        occ(false)
+    );
+    Ok(())
+}

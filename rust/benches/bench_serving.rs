@@ -4,16 +4,12 @@
 //!
 //! `cargo bench --bench bench_serving`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use mlem::benchkit::artifacts_dir;
 use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice};
 use mlem::coordinator::Scheduler;
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::util::bench::Table;
 use mlem::util::stats;
 use std::time::Instant;
@@ -30,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     };
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone()))?;
+    let handle = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn()?.handle;
     let scheduler = Scheduler::new(handle.clone(), cfg, metrics)?;
 
     let steps = 100;

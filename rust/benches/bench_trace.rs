@@ -22,10 +22,6 @@
 //!
 //! `cargo bench --bench bench_trace`
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,7 +30,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
 use mlem::coordinator::{LanePool, Scheduler};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::trace;
 use mlem::util::bench::Table;
 use mlem::util::json::Json;
@@ -105,7 +101,11 @@ fn main() -> anyhow::Result<()> {
     };
     let manifest = Manifest::load(&cfg.artifacts)?;
     let metrics = Metrics::new();
-    let (handle, join) = spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())?;
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()?;
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     handle.warmup(4)?;
     let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics)?);
     let pool = LanePool::new(scheduler, &cfg);

@@ -97,6 +97,13 @@ pub const TRACKED: &[TrackedMetric] = &[
         min_slack: 0.0,
         label: "fleet images/s speedup @ 4 executors",
     },
+    TrackedMetric {
+        file: "BENCH_saturate.json",
+        path: &["saturate_occupancy_gain"],
+        higher_is_better: true,
+        min_slack: 0.0,
+        label: "device-saturation occupancy gain (aligned+held vs off @ 4 lanes)",
+    },
 ];
 
 /// Outcome per tracked metric.

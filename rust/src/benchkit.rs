@@ -1527,6 +1527,177 @@ pub fn fleet_json(w: &CoordWorkload, points: &[FleetPoint], bit_identical: bool)
         .with("bit_identical", Json::Bool(bit_identical))
 }
 
+// ---------------------------------------------------------------------------
+// Saturation workload (bench_saturate + tests/saturate_parity.rs)
+
+/// The serve config for a device-saturation measurement: the
+/// coordinator workload's config with the saturation knobs bound.
+/// `aligned` switches both cross-class phase alignment and lane-aware
+/// batch holding (2 ms budget) together — the "on" side of the A/B the
+/// bench gate tracks; off is the pre-saturation behaviour.  The cut
+/// size is doubled past `n_per_req` so the per-class FIFO partition
+/// can leave partial tail cuts — the batches holding exists to fill.
+pub fn saturate_config(
+    artifacts: &std::path::Path,
+    w: &CoordWorkload,
+    lanes: usize,
+    aligned: bool,
+) -> ServeConfig {
+    ServeConfig {
+        phase_align: aligned,
+        hold_budget_us: if aligned { 2_000 } else { 0 },
+        max_batch: 2 * w.n_per_req,
+        ..coord_config(artifacts, w, lanes)
+    }
+}
+
+/// One (lanes, aligned) measurement of the saturation workload.
+#[derive(Clone, Copy, Debug)]
+pub struct SaturatePoint {
+    pub lanes: usize,
+    pub aligned: bool,
+    pub images_per_s: f64,
+    /// Mean jobs per multi-job group over the storm (0 when no group
+    /// ever formed) — the headline axis: alignment and holding exist to
+    /// raise it.
+    pub occupancy: f64,
+    /// Total PJRT executes the storm cost.
+    pub exec_calls: u64,
+    /// Batches the hold policy parked (0 whenever the knobs are off).
+    pub held_batches: u64,
+}
+
+/// Run the full pipeline (batcher → lanes → scheduler → executor) over
+/// the coordinator storm at one (lanes, aligned) setting: best-of-
+/// `reps` storms against a *paused* [`LanePool`] released at t0,
+/// intra-rep bit-identity asserted.  Returns the per-request image
+/// payloads (submission order — the caller compares them across
+/// settings: alignment and holding are timing-only and must never move
+/// a bit) and the measured point.
+pub fn saturate_point(
+    dir: &std::path::Path,
+    w: &CoordWorkload,
+    lanes: usize,
+    aligned: bool,
+    reps: usize,
+) -> Result<(Vec<Vec<f32>>, SaturatePoint)> {
+    let cfg = saturate_config(dir, w, lanes, aligned);
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let metrics = Metrics::new();
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()?;
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
+    // The serving bucket exceeds max_batch, so the scheduler's own
+    // warmup loop skips it: compile it here, outside the timed storms.
+    handle.warmup(w.bucket)?;
+    let scheduler =
+        std::sync::Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone())?);
+    let reqs = coord_requests(w);
+    let images_total = (reqs.len() * w.n_per_req) as f64;
+
+    let mut best_secs = f64::INFINITY;
+    let mut outputs: Option<Vec<Vec<f32>>> = None;
+    for _ in 0..reps.max(1) {
+        let pool = LanePool::new_paused(scheduler.clone(), &cfg);
+        let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+        let t0 = std::time::Instant::now();
+        pool.start();
+        let mut outs = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(crate::coordinator::Response::Gen(g)) => {
+                    outs.push(g.images.expect("return_images set"))
+                }
+                Ok(crate::coordinator::Response::Error(e)) => {
+                    return Err(anyhow::anyhow!("saturation storm request failed: {e}"))
+                }
+                other => {
+                    return Err(anyhow::anyhow!("unexpected saturation storm response: {other:?}"))
+                }
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        best_secs = best_secs.min(secs);
+        if let Some(prev) = &outputs {
+            assert!(
+                bits_equal(prev, &outs),
+                "saturation storm outputs varied across reps at {lanes} lanes (aligned {aligned})"
+            );
+        } else {
+            outputs = Some(outs);
+        }
+        pool.stop();
+        pool.join();
+    }
+    let stats = handle.exec_stats()?;
+    let point = SaturatePoint {
+        lanes,
+        aligned,
+        images_per_s: images_total / best_secs,
+        occupancy: if stats.exec_groups > 0 {
+            stats.grouped_jobs as f64 / stats.exec_groups as f64
+        } else {
+            0.0
+        },
+        exec_calls: stats.exec_calls,
+        held_batches: metrics.held_batches.get(),
+    };
+    handle.stop();
+    let _ = join.join();
+    Ok((outputs.expect("at least one rep"), point))
+}
+
+/// Assemble `BENCH_saturate.json` from measured points (single source
+/// of the schema).  The headline `saturate_occupancy_gain` — aligned
+/// (+holding) group occupancy over the off side at the top lane count —
+/// is what the CI bench-gate tracks; an off-side occupancy of 0 (no
+/// group ever formed) is clamped to 1 so the ratio stays finite.
+/// `bit_identical` is the caller's cross-setting output comparison.
+pub fn saturate_json(w: &CoordWorkload, points: &[SaturatePoint], bit_identical: bool) -> Json {
+    let top_lanes = points.iter().map(|p| p.lanes).max().unwrap_or(0);
+    let at = |aligned: bool| points.iter().find(|p| p.lanes == top_lanes && p.aligned == aligned);
+    let occ_on = at(true).map(|p| p.occupancy).unwrap_or(f64::NAN);
+    let occ_off = at(false).map(|p| p.occupancy).unwrap_or(f64::NAN);
+    let rate_on = at(true).map(|p| p.images_per_s).unwrap_or(f64::NAN);
+    let rate_off = at(false).map(|p| p.images_per_s).unwrap_or(f64::NAN);
+    let mut sorted: Vec<&SaturatePoint> = points.iter().collect();
+    sorted.sort_by_key(|p| (p.lanes, p.aligned));
+    let rows: Vec<Json> = sorted
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .with("lanes", Json::num(p.lanes as f64))
+                .with("aligned", Json::Bool(p.aligned))
+                .with("images_per_s", Json::num(p.images_per_s))
+                .with("group_occupancy", Json::num(p.occupancy))
+                .with("exec_calls", Json::num(p.exec_calls as f64))
+                .with("held_batches", Json::num(p.held_batches as f64))
+        })
+        .collect();
+    Json::obj()
+        .with(
+            "workload",
+            Json::obj()
+                .with("dim", Json::num((w.img * w.img * w.channels) as f64))
+                .with("bucket", Json::num(w.bucket as f64))
+                .with("synthetic_work", Json::num(w.work as f64))
+                .with("levels", Json::num(w.levels as f64))
+                .with("classes", Json::num(w.classes as f64))
+                .with("reqs_per_class", Json::num(w.reqs_per_class as f64))
+                .with("n_per_req", Json::num(w.n_per_req as f64))
+                .with("max_batch", Json::num(2.0 * w.n_per_req as f64))
+                .with("steps", Json::num(w.steps as f64))
+                .with("linger_us", Json::num(w.linger_us as f64))
+                .with("hold_budget_us", Json::num(2_000.0)),
+        )
+        .with("points", Json::Arr(rows))
+        .with("saturate_occupancy_gain", Json::num(occ_on / occ_off.max(1.0)))
+        .with("saturate_rate_gain", Json::num(rate_on / rate_off))
+        .with("bit_identical", Json::Bool(bit_identical))
+}
+
 /// Write a benchmark JSON artifact as `BENCH_<name>.json` at the repo
 /// root; returns the path.
 pub fn write_bench_json(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {

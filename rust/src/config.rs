@@ -150,6 +150,18 @@ pub struct ServeConfig {
     /// 5:0,1:1`.  Levels must exist in `mlem_levels`, executor indices
     /// must be < `executors`.
     pub fleet_placement: Vec<(usize, usize)>,
+    /// Cross-class phase alignment: classes with equal step counts step
+    /// behind a lightweight epoch barrier so their per-t executor jobs
+    /// arrive in the same linger window by construction instead of by
+    /// luck.  Timing-only — outputs are bit-identical either way.  See
+    /// `coordinator::phase`.
+    pub phase_align: bool,
+    /// Lane-aware batch holding: when all other lanes are busy, hold a
+    /// near-full class for up to this many µs (further bounded by the
+    /// measured EWMA batch wall time and by the oldest member's
+    /// `deadline_ms` headroom) so the next cut is fuller.  0 = holding
+    /// off (the historical cut-immediately behaviour).
+    pub hold_budget_us: u64,
     /// Flight recorder head sampling: trace 1 request in N end to end
     /// (0 = tracing off, 1 = every request).  See `crate::trace`.
     pub trace_sample_n: usize,
@@ -190,6 +202,8 @@ impl Default for ServeConfig {
             executors: 1,
             fleet_rebalance_every: 64,
             fleet_placement: Vec::new(),
+            phase_align: true,
+            hold_budget_us: 0,
             trace_sample_n: 16,
             trace_out: None,
         }
@@ -330,6 +344,13 @@ impl ServeConfig {
                         }
                     }
                 }
+                "phase_align" => {
+                    self.phase_align = v.as_bool().ok_or_else(|| anyhow!("phase_align: bool"))?
+                }
+                "hold_budget_us" => {
+                    self.hold_budget_us =
+                        v.as_usize().ok_or_else(|| anyhow!("hold_budget_us: int"))? as u64
+                }
                 "trace_sample_n" => {
                     self.trace_sample_n =
                         v.as_usize().ok_or_else(|| anyhow!("trace_sample_n: int"))?
@@ -397,6 +418,14 @@ impl ServeConfig {
         if let Some(s) = args.get("fleet-placement") {
             cfg.fleet_placement = placement_from_cli(s)?;
         }
+        if let Some(v) = args.get("phase-align") {
+            cfg.phase_align = match v {
+                "1" | "true" | "on" => true,
+                "0" | "false" | "off" => false,
+                other => return Err(anyhow!("--phase-align expects on|off, got '{other}'")),
+            };
+        }
+        cfg.hold_budget_us = args.u64_or("hold-budget-us", cfg.hold_budget_us);
         cfg.trace_sample_n = args.usize_or("trace-sample-n", cfg.trace_sample_n);
         if let Some(path) = args.get("trace-out") {
             cfg.trace_out = Some(path.to_string());
@@ -503,6 +532,14 @@ impl ServeConfig {
             return Err(anyhow!(
                 "exec_linger_us: {} exceeds the sanity cap (1s)",
                 self.exec_linger_us
+            ));
+        }
+        // A hold is a fraction of one batch wall time; a typo'd huge
+        // value would park every near-full batch behind it.
+        if self.hold_budget_us > 1_000_000 {
+            return Err(anyhow!(
+                "hold_budget_us: {} exceeds the sanity cap (1s)",
+                self.hold_budget_us
             ));
         }
         let mut sorted = self.mlem_levels.clone();
@@ -866,6 +903,25 @@ mod tests {
         assert!(c2.apply_json(&Json::parse(r#"{"executor":{"lingr_us":1}}"#).unwrap()).is_err());
         assert!(c2.apply_json(&Json::parse(r#"{"fleet":{"executor":2}}"#).unwrap()).is_err());
         assert!(c2.apply_json(&Json::parse(r#"{"fleet":7}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn saturation_knobs_apply() {
+        let d = ServeConfig::default();
+        assert!(d.phase_align, "alignment on by default");
+        assert_eq!(d.hold_budget_us, 0, "holding off by default");
+        let cli = ServeConfig::from_args(&args("serve --phase-align off --hold-budget-us 2000"))
+            .unwrap();
+        assert!(!cli.phase_align);
+        assert_eq!(cli.hold_budget_us, 2000);
+        let mut cfg = ServeConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"phase_align": false, "hold_budget_us": 500}"#).unwrap())
+            .unwrap();
+        assert!(!cfg.phase_align);
+        assert_eq!(cfg.hold_budget_us, 500);
+        cfg.validate().unwrap();
+        assert!(ServeConfig::from_args(&args("serve --phase-align maybe")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --hold-budget-us 2000000")).is_err());
     }
 
     #[test]

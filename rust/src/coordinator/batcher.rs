@@ -115,6 +115,25 @@ pub struct ClassDepth {
     pub leased: bool,
 }
 
+/// What the lane-hold decision needs to know about the class the next
+/// steady-state [`Batcher::pop_class`] would cut from (see
+/// [`crate::coordinator::lanes`]): a caller may delay that pop only
+/// while the preview shows a non-full, non-expired class whose members
+/// still have deadline headroom.
+pub struct HoldPreview {
+    /// Queued images in the class (a full batch is never held).
+    pub images: usize,
+    /// When the head item was enqueued (the `max_wait` anchor the hold
+    /// extends from).
+    pub oldest_enqueued: Instant,
+    /// Earliest absolute deadline across the class's members; `None`
+    /// when no member carries one.
+    pub min_deadline_at: Option<Instant>,
+    /// Some member has already expired — holding is off the table (the
+    /// pop must partition and answer it now).
+    pub has_expired: bool,
+}
+
 /// Bounded multi-queue of work items: one FIFO per compatibility class,
 /// popped batch-wise under a fairness cursor.
 pub struct Batcher<T> {
@@ -210,13 +229,15 @@ impl<T> Batcher<T> {
             })
     }
 
-    /// Next slot to pop from: scan round-robin from the cursor, skipping
-    /// leased/empty classes, preferring cut-ready ones; with `force`,
-    /// fall back to any non-empty unleased class (drain paths).  Among
-    /// the cut-ready (resp. fallback) candidates the highest head-item
-    /// priority wins; ties go to the class closest past the cursor, so
-    /// equal-priority traffic keeps the historical round-robin rotation.
-    fn pick(&mut self, now: Instant, force: bool) -> Option<usize> {
+    /// Next slot a pop would take, **read-only**: scan round-robin from
+    /// the cursor, skipping leased/empty classes, preferring cut-ready
+    /// ones; with `force`, fall back to any non-empty unleased class
+    /// (drain paths).  Among the cut-ready (resp. fallback) candidates
+    /// the highest head-item priority wins; ties go to the class closest
+    /// past the cursor, so equal-priority traffic keeps the historical
+    /// round-robin rotation.  The cursor is untouched, so the hold path
+    /// can preview the decision without perturbing fairness.
+    fn select(&self, now: Instant, force: bool) -> Option<usize> {
         let n = self.classes.len();
         if n == 0 {
             return None;
@@ -249,12 +270,42 @@ impl<T> Batcher<T> {
                 }
             }
         }
-        if let Some((_, off)) = best.or(fallback) {
-            let i = (self.cursor + off) % n;
-            self.cursor = (i + 1) % n;
-            return Some(i);
+        best.or(fallback).map(|(_, off)| (self.cursor + off) % n)
+    }
+
+    /// [`Batcher::select`] plus the cursor advance a real pop commits.
+    fn pick(&mut self, now: Instant, force: bool) -> Option<usize> {
+        let i = self.select(now, force)?;
+        self.cursor = (i + 1) % self.classes.len();
+        Some(i)
+    }
+
+    /// Read-only preview of the class the next steady-state pop
+    /// (`select` with `force` false) would cut from, for the lane-hold
+    /// decision.  `None` when no class is cut-ready.
+    pub fn hold_preview(&self, now: Instant) -> Option<HoldPreview> {
+        let slot = self.select(now, false)?;
+        let c = self.classes[slot].as_ref().expect("occupied class slot");
+        let oldest = c.items.front().expect("non-empty class").enqueued;
+        let mut min_deadline_at: Option<Instant> = None;
+        let mut has_expired = false;
+        for item in &c.items {
+            if let Some(d) = item.req.deadline_ms {
+                let at = item.enqueued + Duration::from_millis(d);
+                if min_deadline_at.map_or(true, |m| at < m) {
+                    min_deadline_at = Some(at);
+                }
+                if is_expired(item, now) {
+                    has_expired = true;
+                }
+            }
         }
-        None
+        Some(HoldPreview {
+            images: c.images,
+            oldest_enqueued: oldest,
+            min_deadline_at,
+            has_expired,
+        })
     }
 
     /// Cut one batch off class `slot`: the head request plus queued
@@ -676,6 +727,37 @@ mod tests {
         b.release(&key);
         assert!(b.is_empty());
         assert!(b.pop_class(later, true).is_none());
+    }
+
+    #[test]
+    fn hold_preview_is_read_only_and_reports_the_next_pop() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::ZERO, 100);
+        assert!(b.hold_preview(Instant::now()).is_none(), "nothing queued, nothing previews");
+        b.push(req(3, 10, SamplerKind::Mlem), 0).unwrap();
+        let mut dl = req(2, 10, SamplerKind::Mlem);
+        dl.deadline_ms = Some(40);
+        b.push(dl, 1).unwrap();
+        let now = Instant::now();
+        let p = b.hold_preview(now).expect("ready class previews");
+        assert_eq!(p.images, 5, "near-full, not full: a hold candidate");
+        assert!(!p.has_expired);
+        assert!(p.oldest_enqueued <= now);
+        let at = p.min_deadline_at.expect("deadline-bearing member surfaces");
+        assert!(at > now && at <= now + Duration::from_millis(40));
+        // preview again: read-only, the cursor has not moved
+        assert_eq!(b.hold_preview(now).unwrap().images, 5);
+        // the pop cuts exactly the previewed class
+        let (key, live, expired) = b.pop_class(now, false).expect("class pops");
+        assert_eq!(live.len(), 2);
+        assert!(expired.is_empty());
+        b.release(&key);
+        // an expired member is flagged: holding is off the table
+        let mut dead = req(1, 20, SamplerKind::Mlem);
+        dead.deadline_ms = Some(1);
+        b.push(dead, 2).unwrap();
+        let later = Instant::now() + Duration::from_millis(50);
+        let p3 = b.hold_preview(later).expect("expired head is cut-ready");
+        assert!(p3.has_expired);
     }
 
     #[test]

@@ -39,6 +39,20 @@
 //! unaffected: batch membership still depends only on arrival order,
 //! never on which connection carried the request.
 //!
+//! Saturation contract: with `hold_budget_us > 0`, a runner that finds
+//! every *other* lane busy may park a cut-ready but not-yet-full class
+//! for up to the budget (further clamped to one EWMA batch wall time,
+//! and cut early enough that the earliest member deadline keeps one
+//! EWMA of headroom — a held batch can never expire while held) so the
+//! eventual cut is fuller and the executor's grouping window sees more
+//! same-`(level, bucket, t)` traffic per dispatch.  Holding reorders
+//! nothing — the pop still takes the class `select` chose — it only
+//! delays the cut, so a paused-pool storm (all arrivals enqueued before
+//! `start`) forms identical batches at every `hold_budget_us`, which is
+//! how the parity storm pins bit-identical responses.  The
+//! `held_batches` / `hold_wait_ns` counters and a `hold` trace span on
+//! sampled batches make the policy observable.
+//!
 //! Resilience contract (PR 6): requests may carry a `deadline_ms` —
 //! expired entries are partitioned out of every cut at pop time and
 //! answered with a typed `deadline_exceeded` error, never executed —
@@ -91,6 +105,11 @@ struct Shared {
     /// admission control.  0.0 until the first batch completes — no
     /// request is shed before the pool has ever measured itself.
     ewma_batch_ms: Mutex<f64>,
+    /// Runner lane count (the hold policy's "are all other lanes busy"
+    /// check needs it inside `batch_runner`).
+    workers: usize,
+    /// Lane-aware batch holding budget (µs); 0 = holding off.
+    hold_budget_us: u64,
 }
 
 /// Lock the batcher, recovering the guard if a panicking runner
@@ -141,6 +160,8 @@ impl LanePool {
             stop: AtomicBool::new(false),
             started: AtomicBool::new(started),
             ewma_batch_ms: Mutex::new(0.0),
+            workers,
+            hold_budget_us: cfg.hold_budget_us,
         });
         metrics.batch_runners.set(workers as f64);
         let mut runners = Vec::with_capacity(workers);
@@ -318,14 +339,57 @@ impl Drop for LanePool {
     }
 }
 
+/// Whether a runner should keep the next cut-ready class parked a
+/// little longer instead of popping now: `Some(until)` to wait,
+/// `None` to pop.  Holding only engages when the knob is on, the pool
+/// has measured itself (EWMA > 0), every *other* lane is already busy
+/// (an idle lane means sitting on work helps nobody), and the
+/// previewed class is neither full nor carrying an expired member.
+/// The window is the class's `max_wait` cut point extended by
+/// `min(hold_budget_us, EWMA batch time)`, and is further cut back so
+/// the earliest member deadline keeps one EWMA of headroom — a held
+/// batch never expires while held.
+fn hold_deadline(
+    q: &Batcher<Submission>,
+    shared: &Shared,
+    metrics: &Metrics,
+    now: Instant,
+) -> Option<Instant> {
+    if shared.hold_budget_us == 0 {
+        return None;
+    }
+    let ewma_ms = *shared.ewma_batch_ms.lock().unwrap_or_else(|p| p.into_inner());
+    if ewma_ms <= 0.0 {
+        return None; // unmeasured pool never delays anything
+    }
+    // The popping runner is not counted in `runner_busy` (it increments
+    // after the pop), so "all other lanes busy" is `workers - 1`.
+    if (metrics.runner_busy.get().max(0) as usize) < shared.workers.saturating_sub(1) {
+        return None;
+    }
+    let p = q.hold_preview(now)?;
+    if p.images >= q.max_batch || p.has_expired {
+        return None; // full (nothing to gain) or already-late (answer now)
+    }
+    let ewma = Duration::from_secs_f64(ewma_ms / 1e3);
+    let budget = Duration::from_micros(shared.hold_budget_us).min(ewma);
+    let mut until = p.oldest_enqueued + q.max_wait + budget;
+    if let Some(deadline_at) = p.min_deadline_at {
+        // `checked_sub` = no headroom left at all: cut immediately.
+        until = until.min(deadline_at.checked_sub(ewma)?);
+    }
+    (until > now).then_some(until)
+}
+
 /// One runner lane: pop a leased batch of one class, run it, fan the
 /// responses out, release the lease, repeat.
 fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics) {
     loop {
         // Wait until a batch is ready (or we are stopping and draining).
-        let (key, batch, expired) = {
+        let (key, batch, expired, held_for) = {
             let mut q = lock_batcher(&shared);
-            loop {
+            let mut hold_started: Option<Instant> = None;
+            let cut = loop {
                 let stop = shared.stop.load(Ordering::SeqCst);
                 if stop && !q.has_unleased_items() {
                     // Nothing this runner could ever pop again: items
@@ -336,11 +400,31 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                     return;
                 }
                 if shared.started.load(Ordering::SeqCst) {
+                    let now = Instant::now();
+                    // Lane-aware batch holding: park a near-full class
+                    // while all other lanes are busy so the eventual
+                    // cut is fuller.  Never during stop-drain.
+                    if !stop {
+                        if let Some(until) = hold_deadline(&q, &shared, &metrics, now) {
+                            hold_started.get_or_insert(now);
+                            let wait = until
+                                .saturating_duration_since(now)
+                                .min(Duration::from_millis(2));
+                            q = match shared.wake.wait_timeout(q, wait) {
+                                Ok((guard, _)) => guard,
+                                Err(poisoned) => poisoned.into_inner().0,
+                            };
+                            continue;
+                        }
+                    }
                     // Steady state pops only batch-cut-ready classes;
                     // stop-drain force-pops whatever is left.
-                    if let Some(cut) = q.pop_class(Instant::now(), stop) {
+                    if let Some(cut) = q.pop_class(now, stop) {
                         break cut;
                     }
+                    // Nothing poppable: any hold window belonged to a
+                    // class another lane took.
+                    hold_started = None;
                 }
                 // A runner that panicked inside `wait_timeout`'s relock
                 // poisons the mutex for everyone parked here; the queue
@@ -350,7 +434,9 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
                     Ok((guard, _)) => guard,
                     Err(poisoned) => poisoned.into_inner().0,
                 };
-            }
+            };
+            let held_for = hold_started.map(|h| h.elapsed());
+            (cut.0, cut.1, cut.2, held_for)
         };
 
         // Deadline-expired entries were partitioned out at pop time:
@@ -409,6 +495,22 @@ fn batch_runner(shared: Arc<Shared>, scheduler: Arc<Scheduler>, metrics: Metrics
         }
         let batch_tag =
             batch.iter().map(|w| w.payload.trace).find(|t| t.sampled()).unwrap_or_default();
+        if let Some(held) = held_for {
+            metrics.held_batches.inc();
+            metrics.hold_wait_ns.add(held.as_nanos() as u64);
+            if batch_tag.sampled() {
+                let now_us = rec.now_us();
+                let start = now_us.saturating_sub(held.as_micros() as u64);
+                rec.record_span(
+                    rec.span_id(),
+                    batch_tag,
+                    Stage::Hold,
+                    start,
+                    now_us,
+                    Attr::default(),
+                );
+            }
+        }
         let lane_span = if batch_tag.sampled() { rec.span_id() } else { 0 };
         let lane_start = if batch_tag.sampled() { rec.now_us() } else { 0 };
         if batch_tag.sampled() {
@@ -518,6 +620,8 @@ mod tests {
             stop: AtomicBool::new(false),
             started: AtomicBool::new(true),
             ewma_batch_ms: Mutex::new(0.0),
+            workers: 1,
+            hold_budget_us: 0,
         });
         let poisoner = shared.clone();
         let _ = std::thread::spawn(move || {
@@ -543,6 +647,70 @@ mod tests {
         assert_eq!(q.len(), 1, "queue state intact across the poisoned wait");
     }
 
+    /// The hold policy's gates: off-knob, unmeasured EWMA, idle peer
+    /// lanes, and full classes all mean "cut now"; a measured pool with
+    /// a near-full class holds, and a tight member deadline cancels the
+    /// hold (a held batch must never expire while held).
+    #[test]
+    fn hold_deadline_gates_and_deadline_headroom() {
+        let mk = |hold_budget_us: u64, workers: usize| {
+            Arc::new(Shared {
+                batcher: Mutex::new(Batcher::new(8, Duration::ZERO, 16)),
+                wake: Condvar::new(),
+                stop: AtomicBool::new(false),
+                started: AtomicBool::new(true),
+                ewma_batch_ms: Mutex::new(0.0),
+                workers,
+                hold_budget_us,
+            })
+        };
+        let push = |s: &Shared, req: GenRequest| {
+            let (tx, rx) = channel();
+            lock_batcher(s).push(req, Submission { tx, trace: TraceTag::default() }).unwrap();
+            rx
+        };
+        let metrics = Metrics::new();
+
+        // Knob off: never holds, even measured with a ready class.
+        let s = mk(0, 1);
+        let _rx0 = push(&s, test_req());
+        *s.ewma_batch_ms.lock().unwrap() = 50.0;
+        assert!(hold_deadline(&lock_batcher(&s), &s, &metrics, Instant::now()).is_none());
+
+        // Unmeasured pool: never delays anything.
+        let s = mk(500_000, 1);
+        let _rx1 = push(&s, test_req());
+        assert!(hold_deadline(&lock_batcher(&s), &s, &metrics, Instant::now()).is_none());
+
+        // Measured, near-full class, no idle peers: holds until a
+        // future instant.
+        *s.ewma_batch_ms.lock().unwrap() = 1_000.0;
+        let until = hold_deadline(&lock_batcher(&s), &s, &metrics, Instant::now())
+            .expect("near-full class is held");
+        assert!(until > Instant::now());
+
+        // A full class cuts now: nothing to gain by holding.
+        let mut full = test_req();
+        full.n = 8;
+        let _rx2 = push(&s, full);
+        assert!(hold_deadline(&lock_batcher(&s), &s, &metrics, Instant::now()).is_none());
+
+        // An idle peer lane cancels the hold (runner_busy 0 < workers-1).
+        let s2 = mk(500_000, 2);
+        let _rx3 = push(&s2, test_req());
+        *s2.ewma_batch_ms.lock().unwrap() = 1_000.0;
+        assert!(hold_deadline(&lock_batcher(&s2), &s2, &metrics, Instant::now()).is_none());
+
+        // A tight member deadline cancels the hold: one EWMA (1s) of
+        // headroom does not fit before a 100 ms deadline.
+        let s3 = mk(500_000, 1);
+        let mut dl = test_req();
+        dl.deadline_ms = Some(100);
+        let _rx4 = push(&s3, dl);
+        *s3.ewma_batch_ms.lock().unwrap() = 1_000.0;
+        assert!(hold_deadline(&lock_batcher(&s3), &s3, &metrics, Instant::now()).is_none());
+    }
+
     /// The EWMA admission estimate stays 0 (nothing sheds) until a
     /// batch has been measured, then scales with queue depth per lane.
     #[test]
@@ -553,6 +721,8 @@ mod tests {
             stop: AtomicBool::new(false),
             started: AtomicBool::new(true),
             ewma_batch_ms: Mutex::new(0.0),
+            workers: 2,
+            hold_budget_us: 0,
         });
         let pool = LanePool {
             shared: shared.clone(),

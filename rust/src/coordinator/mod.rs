@@ -16,6 +16,7 @@
 //! | [`protocol`] | wire types: request/response JSON (incl. `"policy":"theory"`) |
 //! | [`batcher`]  | per-compatibility-class queues, fairness cursor, class leases |
 //! | [`lanes`]    | the `batch_workers` runner lanes over the shared batcher |
+//! | [`phase`]    | cross-class phase alignment: equal-step lanes step behind an epoch barrier |
 //! | [`scheduler`] | sampler dispatch, noise assembly, calibration probes |
 //! | [`server`] | TCP front end |
 //!
@@ -38,6 +39,7 @@
 
 pub mod batcher;
 pub mod lanes;
+pub mod phase;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;

@@ -1,0 +1,348 @@
+//! Cross-class phase alignment: lanes integrating classes with the
+//! **same step count** step behind a lightweight epoch barrier, so
+//! their per-t executor jobs arrive inside the same linger window **by
+//! construction** instead of by luck.
+//!
+//! Why it helps: the executor fuses jobs that share `(level, bucket,
+//! t_bits, pallas)` into one padded device dispatch, but two lanes that
+//! started a few hundred microseconds apart drift through their time
+//! grids independently — whether their step-`i` jobs overlap inside the
+//! `exec_linger_us` window is a coin flip that gets worse as step wall
+//! times diverge.  Aligned lanes release each step together, so every
+//! step's jobs co-arrive and grouping stops being timing-dependent.
+//!
+//! Correctness: alignment is **timing-only**.  The barrier carries no
+//! data, never reorders or regroups work, and a [`PhaseBarrier::sync`]
+//! that times out simply proceeds — so outputs are bit-identical with
+//! the knob on or off (pinned by `tests/saturate_parity.rs`), and a
+//! stalled, shed, or panicked peer can delay a step by at most the
+//! barrier timeout, never deadlock it.  Membership is dynamic: a
+//! [`PhaseTicket`] enrolls its lane for one batch and leaves on drop
+//! (including panic unwind — `Scheduler::execute` runs under the lane's
+//! `catch_unwind`), and a departure releases any peers already waiting
+//! on the vanished member.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::sde::drift::Drift;
+
+/// Barrier bookkeeping under the mutex.
+struct State {
+    /// Lanes currently enrolled at this step count.
+    members: usize,
+    /// Members that have arrived at the current epoch's barrier.
+    arrived: usize,
+    /// Completed barrier rounds (waiters watch it change).
+    epoch: u64,
+}
+
+/// A timeout-bounded epoch barrier for one step count.
+pub struct PhaseBarrier {
+    state: Mutex<State>,
+    cv: Condvar,
+    /// Wait bound per sync: alignment is an optimisation, never a
+    /// stall — a straggling peer costs at most this per step.
+    timeout: Duration,
+}
+
+impl PhaseBarrier {
+    fn new(timeout: Duration) -> PhaseBarrier {
+        PhaseBarrier {
+            state: Mutex::new(State { members: 0, arrived: 0, epoch: 0 }),
+            cv: Condvar::new(),
+            timeout,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        // A panic can only happen outside the tiny critical sections,
+        // so the counters stay consistent; recover rather than cascade.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn join(&self) {
+        self.lock().members += 1;
+    }
+
+    fn leave(&self) {
+        let mut st = self.lock();
+        st.members = st.members.saturating_sub(1);
+        if st.members == 0 {
+            st.arrived = 0;
+        } else if st.arrived >= st.members {
+            // Everyone still here had already arrived: the departure
+            // completes the round instead of stranding them.
+            st.arrived = 0;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wait until every enrolled member arrives (or the timeout
+    /// passes).  Called once per step transition by each member.
+    pub fn sync(&self) {
+        let mut st = self.lock();
+        if st.members <= 1 {
+            return; // nothing to align with
+        }
+        st.arrived += 1;
+        if st.arrived >= st.members {
+            st.arrived = 0;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        let target = st.epoch;
+        let (mut st, res) = self
+            .cv
+            .wait_timeout_while(st, self.timeout, |s| s.epoch == target)
+            .unwrap_or_else(|p| p.into_inner());
+        if res.timed_out() && st.epoch == target {
+            // Give up on this round and withdraw the arrival, so the
+            // barrier cannot release a *later* round early on our
+            // stale count.
+            st.arrived = st.arrived.saturating_sub(1);
+        }
+    }
+}
+
+/// One barrier per step count, created on first enrollment.  The map is
+/// bounded by the number of distinct step counts ever served (a
+/// handful), so retired entries are not reaped.
+pub struct PhaseRegistry {
+    barriers: Mutex<HashMap<usize, Arc<PhaseBarrier>>>,
+    timeout: Duration,
+}
+
+impl PhaseRegistry {
+    pub fn new(timeout: Duration) -> PhaseRegistry {
+        PhaseRegistry { barriers: Mutex::new(HashMap::new()), timeout }
+    }
+
+    /// Enroll the calling lane's batch at its step count; the returned
+    /// ticket leaves the barrier on drop.
+    pub fn enroll(&self, steps: usize) -> PhaseTicket {
+        let barrier = self
+            .barriers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .entry(steps)
+            .or_insert_with(|| Arc::new(PhaseBarrier::new(self.timeout)))
+            .clone();
+        barrier.join();
+        PhaseTicket { barrier }
+    }
+}
+
+/// Membership in one step count's barrier for the duration of a batch.
+pub struct PhaseTicket {
+    barrier: Arc<PhaseBarrier>,
+}
+
+impl PhaseTicket {
+    pub fn sync(&self) {
+        self.barrier.sync();
+    }
+}
+
+impl Drop for PhaseTicket {
+    fn drop(&mut self) {
+        self.barrier.leave();
+    }
+}
+
+/// Wraps a batch's per-step drift so the first evaluation at each *new*
+/// schedule time syncs the lane at its phase barrier, then delegates.
+/// The sampler's step loop evaluates the wrapped drift exactly once per
+/// step on the lane thread, so the swap on the last-seen `t` bits fires
+/// one sync per step transition.  Everything else forwards verbatim —
+/// in particular `jvp` (the default central-difference fallback would
+/// change bits for drifts that override it).
+pub struct PhasedDrift<'a> {
+    inner: &'a dyn Drift,
+    ticket: &'a PhaseTicket,
+    last_t: AtomicU64,
+}
+
+impl<'a> PhasedDrift<'a> {
+    pub fn new(inner: &'a dyn Drift, ticket: &'a PhaseTicket) -> PhasedDrift<'a> {
+        // u64::MAX is a NaN bit pattern no schedule time ever takes, so
+        // the very first evaluation always syncs.
+        PhasedDrift { inner, ticket, last_t: AtomicU64::new(u64::MAX) }
+    }
+
+    fn align(&self, t: f64) {
+        let bits = t.to_bits();
+        if self.last_t.swap(bits, Ordering::Relaxed) != bits {
+            self.ticket.sync();
+        }
+    }
+}
+
+impl Drift for PhasedDrift<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &[f32], t: f64, out: &mut [f32]) {
+        self.align(t);
+        self.inner.eval(x, t, out);
+    }
+
+    fn jvp(&self, x: &[f32], t: f64, v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+        self.align(t);
+        self.inner.jvp(x, t, v, out_f, out_jv);
+    }
+
+    fn cost(&self) -> f64 {
+        self.inner.cost()
+    }
+
+    fn name(&self) -> String {
+        format!("phased/{}", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn solo_member_never_waits() {
+        let reg = PhaseRegistry::new(Duration::from_secs(5));
+        let t = reg.enroll(100);
+        let start = std::time::Instant::now();
+        for _ in 0..1000 {
+            t.sync();
+        }
+        assert!(start.elapsed() < Duration::from_secs(1), "solo sync must be free");
+    }
+
+    #[test]
+    fn same_steps_share_a_barrier_and_different_steps_do_not() {
+        let reg = PhaseRegistry::new(Duration::from_millis(10));
+        let a = reg.enroll(100);
+        let b = reg.enroll(100);
+        let c = reg.enroll(200);
+        assert!(Arc::ptr_eq(&a.barrier, &b.barrier), "equal step counts align together");
+        assert!(!Arc::ptr_eq(&a.barrier, &c.barrier), "different step counts never couple");
+    }
+
+    #[test]
+    fn two_members_step_in_lockstep() {
+        let reg = Arc::new(PhaseRegistry::new(Duration::from_secs(5)));
+        let steps = 200;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let spawn = |ticket: PhaseTicket, counter: Arc<AtomicUsize>| {
+            std::thread::spawn(move || {
+                let mut max_skew = 0isize;
+                for i in 0..steps {
+                    ticket.sync();
+                    let seen = counter.fetch_add(1, Ordering::SeqCst) as isize;
+                    let skew = (seen - (2 * i) as isize).abs();
+                    max_skew = max_skew.max(skew);
+                }
+                max_skew
+            })
+        };
+        // Enroll both on this thread before spawning, so membership is
+        // exactly 2 from the first round and the assertion is exact.
+        let h1 = spawn(reg.enroll(64), counter.clone());
+        let h2 = spawn(reg.enroll(64), counter.clone());
+        let s1 = h1.join().unwrap();
+        let s2 = h2.join().unwrap();
+        // After both pass barrier round i, exactly 2i..2i+2 increments
+        // have happened: each thread's observed skew is at most 1.
+        assert!(s1 <= 1 && s2 <= 1, "lockstep violated: skews {s1}, {s2}");
+        assert_eq!(counter.load(Ordering::SeqCst), 2 * steps);
+    }
+
+    #[test]
+    fn departure_releases_waiting_peers() {
+        let reg = Arc::new(PhaseRegistry::new(Duration::from_secs(30)));
+        let stay = reg.enroll(10);
+        let go = reg.enroll(10);
+        let waiter = std::thread::spawn(move || {
+            let start = std::time::Instant::now();
+            stay.sync(); // peer never arrives; its departure must free us
+            start.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(go);
+        let waited = waiter.join().unwrap();
+        assert!(
+            waited < Duration::from_secs(5),
+            "drop must release the barrier well before the 30s timeout (waited {waited:?})"
+        );
+    }
+
+    #[test]
+    fn timeout_bounds_the_stall_and_withdraws_the_arrival() {
+        let reg = PhaseRegistry::new(Duration::from_millis(20));
+        let a = reg.enroll(7);
+        let _b = reg.enroll(7); // enrolled but never syncs (a stalled peer)
+        let start = std::time::Instant::now();
+        a.sync();
+        let waited = start.elapsed();
+        assert!(waited >= Duration::from_millis(15), "must have waited out the timeout");
+        assert!(waited < Duration::from_secs(2), "and no longer");
+        // The withdrawn arrival means a later round still needs both:
+        // another lone sync times out again instead of self-releasing.
+        let start = std::time::Instant::now();
+        a.sync();
+        assert!(start.elapsed() >= Duration::from_millis(15), "stale count must not release");
+    }
+
+    /// A drift that counts evals and whose `jvp` writes a sentinel the
+    /// central-difference fallback could never produce — proving
+    /// `PhasedDrift` forwards both without changing semantics.
+    struct Probe {
+        evals: AtomicUsize,
+    }
+
+    impl Drift for Probe {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn eval(&self, x: &[f32], _t: f64, out: &mut [f32]) {
+            self.evals.fetch_add(1, Ordering::SeqCst);
+            for i in 0..x.len() {
+                out[i] = 2.0 * x[i];
+            }
+        }
+        fn jvp(&self, _x: &[f32], _t: f64, _v: &[f32], out_f: &mut [f32], out_jv: &mut [f32]) {
+            out_f.fill(41.0);
+            out_jv.fill(42.0);
+        }
+        fn cost(&self) -> f64 {
+            3.5
+        }
+    }
+
+    #[test]
+    fn phased_drift_delegates_and_syncs_once_per_new_t() {
+        let reg = PhaseRegistry::new(Duration::from_millis(5));
+        let ticket = reg.enroll(10);
+        let probe = Probe { evals: AtomicUsize::new(0) };
+        let phased = PhasedDrift::new(&probe, &ticket);
+        assert_eq!(phased.dim(), 1);
+        assert_eq!(phased.cost(), 3.5);
+        assert!(phased.name().starts_with("phased/"));
+        let x = [1.0f32];
+        let mut out = [0.0f32];
+        phased.eval(&x, 0.5, &mut out);
+        assert_eq!(out[0], 2.0, "eval delegates");
+        assert_eq!(probe.evals.load(Ordering::SeqCst), 1);
+        // jvp forwards to the inner override, not the central-diff
+        // default (which would call eval twice more and not write 42).
+        let v = [1.0f32];
+        let (mut f, mut jv) = ([0.0f32], [0.0f32]);
+        phased.jvp(&x, 0.25, &v, &mut f, &mut jv);
+        assert_eq!((f[0], jv[0]), (41.0, 42.0), "jvp must forward, not central-diff");
+        assert_eq!(probe.evals.load(Ordering::SeqCst), 1, "no extra evals from a fallback");
+    }
+}

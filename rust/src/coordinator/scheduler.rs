@@ -28,12 +28,13 @@
 //! holds per server configuration).
 
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::calibrate::{probe_family, CalibConfig, Calibrator, CostSource};
 use crate::config::{SamplerKind, ServeConfig};
+use crate::coordinator::phase::{PhaseRegistry, PhasedDrift};
 use crate::coordinator::protocol::{GenRequest, GenResponse, GenStats, PolicyChoice};
 use crate::levels::Policy;
 use crate::metrics::Metrics;
@@ -99,6 +100,12 @@ pub struct Scheduler {
     /// sampled measurement, so dropping one is free, while queueing
     /// would serialize the lanes behind ladder evaluations.
     probe_gate: Mutex<()>,
+    /// Cross-class phase alignment (`phase_align`, default on): lanes
+    /// integrating equal-step batches enroll here and step behind a
+    /// timeout-bounded epoch barrier, so their per-t jobs co-arrive in
+    /// the executor's linger window by construction.  Timing-only —
+    /// see [`crate::coordinator::phase`].  `None` when the knob is off.
+    phase: Option<PhaseRegistry>,
 }
 
 impl Scheduler {
@@ -163,6 +170,12 @@ impl Scheduler {
                 },
             )
         });
+        // The barrier's wait bound tracks the linger window it feeds
+        // (a peer later than the linger can't be fused with anyway),
+        // with a 2ms floor so zero-linger configs still align.
+        let phase = cfg
+            .phase_align
+            .then(|| PhaseRegistry::new(Duration::from_micros(cfg.exec_linger_us.max(2_000))));
         Ok(Scheduler {
             fleet,
             handle,
@@ -172,6 +185,7 @@ impl Scheduler {
             metrics,
             calibrator,
             probe_gate: Mutex::new(()),
+            phase,
         })
     }
 
@@ -461,9 +475,26 @@ impl Scheduler {
         } else {
             None
         };
+        // Phase alignment: enroll this lane at the batch's step count so
+        // equal-step lanes release each integration step together (their
+        // per-t jobs then co-arrive in the executor's linger window).
+        // Only the SDE step loops evaluate a drift once per step on this
+        // thread — the ancestral samplers call the denoiser directly and
+        // stay unaligned.  The ticket leaves its barrier on drop (panic
+        // unwinds included), and is dropped right after the sampler run
+        // so a finished lane never stalls its peers.
+        let ticket = match first.sampler {
+            SamplerKind::Mlem | SamplerKind::Em => self.phase.as_ref().map(|p| p.enroll(steps)),
+            SamplerKind::Ddpm | SamplerKind::Ddim => None,
+        };
         match first.sampler {
             SamplerKind::Mlem => {
                 let base = LinearPartDrift { dim };
+                let phased = ticket.as_ref().map(|t| PhasedDrift::new(&base, t));
+                let base_ref: &dyn crate::sde::Drift = match &phased {
+                    Some(p) => p,
+                    None => &base,
+                };
                 let (policy, eff_levels) =
                     plan.ok_or_else(|| anyhow!("internal: mlem plan missing"))?;
                 let score_parts: Vec<ScorePartDrift<&NeuralDenoiser>> = eff_levels
@@ -471,7 +502,7 @@ impl Scheduler {
                     .map(|&l| ScorePartDrift { den: &self.denoisers[l - 1], ode: false })
                     .collect();
                 let fam = MlemFamily {
-                    base: Some(&base),
+                    base: Some(base_ref),
                     levels: score_parts.iter().map(|s| s as &dyn crate::sde::Drift).collect(),
                 };
                 let mut bern = Rng::new(batch_seed);
@@ -493,7 +524,12 @@ impl Scheduler {
             }
             SamplerKind::Em => {
                 let drift = DiffusionDrift::sde(&self.denoisers[top - 1]);
-                em_sample(&drift, |t| schedule::beta(t).sqrt(), &mut x, &grid, &path);
+                let phased = ticket.as_ref().map(|t| PhasedDrift::new(&drift, t));
+                let drift_ref: &dyn crate::sde::Drift = match &phased {
+                    Some(p) => p,
+                    None => &drift,
+                };
+                em_sample(drift_ref, |t| schedule::beta(t).sqrt(), &mut x, &grid, &path);
                 nfe[top - 1] += (steps * n_total) as u64;
                 cost_units = steps as f64 * n_total as f64 * self.costs[top - 1];
             }
@@ -508,6 +544,7 @@ impl Scheduler {
             }
         }
 
+        drop(ticket); // leave the phase barrier before post-run work
         drop(sampler_span);
 
         // Metrics + split results per request.

@@ -64,6 +64,17 @@
 //!    (cost-aware, calibrator-fed rebalance migrates homes at runtime
 //!    after draining in-flight groups), so placement never changes a
 //!    bit — measured by `bench_fleet` into `BENCH_fleet.json`.
+//! 7. The saturation pass closes the loop: classes with equal step
+//!    counts step behind [`coordinator::phase`]'s epoch barrier
+//!    (`phase_align`), so their per-t jobs co-arrive in the executor's
+//!    linger window *by construction*; a near-full class is briefly
+//!    held when every lane is busy (`hold_budget_us`, bounded by the
+//!    measured batch EWMA and any member's deadline headroom); and
+//!    engine results come back in donated pool buffers, so a
+//!    steady-state generate allocates no fresh output buffers
+//!    (`ExecStats.out_pool_hits/misses`).  All three are timing/storage
+//!    only — bit parity pinned by `tests/saturate_parity.rs`, gains
+//!    measured by `bench_saturate` into `BENCH_saturate.json`.
 //!
 //! `cargo bench --bench bench_hotpath` tracks the resulting throughput
 //! (serial vs parallel images/sec, pool allocations per step) in
@@ -82,8 +93,8 @@
 //! | [`levels`] | level-probability policies and cost accounting |
 //! | [`adaptive`] | SGD learner for the time-dependent schedule (§3.1) |
 //! | [`calibrate`] | online γ-calibration: streaming cost/error estimators, log–log γ̂ fit with drift detection, Theorem-1 autopilot |
-//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching; multi-executor fleet with level-affinity placement |
-//! | [`coordinator`] | serving layer: server, per-class batcher, multi-lane runner pool, scheduler |
+//! | [`runtime`] | PJRT executable cache + neural drifts over the artifacts; executor-side cross-request micro-batching with donated payload/output pools; multi-executor fleet with level-affinity placement |
+//! | [`coordinator`] | serving layer: server, per-class batcher, multi-lane runner pool with lane-aware batch holding, cross-class phase barrier (`phase`), scheduler |
 //! | [`trace`] | flight recorder: sampled end-to-end span tracing (per-thread rings, per-(level, t) attribution, Chrome-trace export) |
 //! | [`benchgate`] | CI bench-regression gate over the `BENCH_*.json` artifacts |
 

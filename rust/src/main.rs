@@ -5,6 +5,8 @@
 //!                 [--threads T]  # sampler worker pool size (0 = auto) ...
 //!                 [--batch-workers K]  # coordinator runner lanes (0 = auto: min(levels, 4))
 //!                 [--exec-linger-us U] [--exec-max-group G]  # executor micro-batching
+//!                 [--phase-align on|off]  # equal-step classes step behind an epoch barrier
+//!                 [--hold-budget-us U]  # hold a near-full class while lanes are busy (0 = off)
 //!                 [--executors N]  # executor fleet size with level-affinity placement (1 = single)
 //!                 [--fleet-rebalance-every B] [--fleet-placement 5:0,1:1]  # cost-aware placement
 //!                 [--trace-sample-n N]  # flight recorder: trace 1-in-N requests (0 off, 1 all)

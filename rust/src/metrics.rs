@@ -240,6 +240,12 @@ pub struct MetricsInner {
     /// Requests answered `deadline_exceeded` at pop time (never
     /// executed).
     pub deadline_misses: Counter,
+    /// Near-full batches a lane deliberately held (all other lanes
+    /// busy) so the eventual cut was fuller; see `coordinator::lanes`.
+    pub held_batches: Counter,
+    /// Total time held batches waited (the hold cost side of the
+    /// `held_batches` ledger).
+    pub hold_wait_ns: Counter,
     /// Error taxonomy: failures the server itself caused (executor
     /// death past the retry budget, lane panic, dropped worker).
     pub errors_internal: Counter,
@@ -283,6 +289,8 @@ impl Default for MetricsInner {
             retries: Counter::default(),
             sheds: Counter::default(),
             deadline_misses: Counter::default(),
+            held_batches: Counter::default(),
+            hold_wait_ns: Counter::default(),
             errors_internal: Counter::default(),
             errors_bad_request: Counter::default(),
             conn_refused: Counter::default(),
@@ -375,6 +383,25 @@ impl Metrics {
                     _ => Json::Null,
                 },
             );
+        // Executor scratch-pool counters, split per pool: the payload
+        // pool recycles request payload copies, the output pool recycles
+        // device result buffers (the buffer-donation path).  Reporting
+        // them separately keeps the donation claim observable instead of
+        // inferred from a merged number.
+        let (ph, pm, oh, om) = crate::runtime::scratch_pool_stats();
+        let executor_pools = Json::obj()
+            .with(
+                "payload",
+                Json::obj()
+                    .with("hits", Json::num(ph as f64))
+                    .with("misses", Json::num(pm as f64)),
+            )
+            .with(
+                "output",
+                Json::obj()
+                    .with("hits", Json::num(oh as f64))
+                    .with("misses", Json::num(om as f64)),
+            );
         let wp = crate::parallel::pool_stats();
         let worker_pool = Json::obj()
             .with("workers", Json::num(wp.workers as f64))
@@ -409,9 +436,12 @@ impl Metrics {
             .with("retries", Json::num(self.retries.get() as f64))
             .with("sheds", Json::num(self.sheds.get() as f64))
             .with("deadline_misses", Json::num(self.deadline_misses.get() as f64))
+            .with("held_batches", Json::num(self.held_batches.get() as f64))
+            .with("hold_wait_ns", Json::num(self.hold_wait_ns.get() as f64))
             .with("errors_internal", Json::num(self.errors_internal.get() as f64))
             .with("errors_bad_request", Json::num(self.errors_bad_request.get() as f64))
             .with("conn_refused", Json::num(self.conn_refused.get() as f64))
+            .with("executor_pools", executor_pools)
             .with("worker_pool", worker_pool)
             .with("request_latency", self.request_latency.snapshot())
             .with("execute_latency", self.execute_latency.snapshot())
@@ -544,6 +574,16 @@ mod tests {
         assert_eq!(parsed.f64_of("errors_internal"), Some(0.0));
         assert_eq!(parsed.f64_of("errors_bad_request"), Some(0.0));
         assert_eq!(parsed.f64_of("conn_refused"), Some(0.0));
+        // hold ledger counters
+        assert_eq!(parsed.f64_of("held_batches"), Some(0.0));
+        assert_eq!(parsed.f64_of("hold_wait_ns"), Some(0.0));
+        // executor scratch pools, split per pool (payload vs output)
+        let pools = parsed.get("executor_pools").expect("executor_pools section");
+        for pool in ["payload", "output"] {
+            let p = pools.get(pool).unwrap_or_else(|| panic!("{pool} pool section"));
+            assert!(p.f64_of("hits").is_some(), "{pool} hits");
+            assert!(p.f64_of("misses").is_some(), "{pool} misses");
+        }
     }
 
     #[test]

@@ -4,6 +4,15 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`.  All artifacts carry their weights as
 //! constants, so executables take only `(x, t)`-style runtime inputs.
+//!
+//! Output-buffer donation: every result vector these entry points build
+//! — accumulators, padded staging chunks, grouped split slices — comes
+//! from the executor's output pool ([`super::executor`]), and every
+//! intermediate that used to be dropped is donated back after its
+//! contents are copied out.  Downstream, the denoiser donates the
+//! returned buffers once the caller's slice is filled, so steady-state
+//! generates allocate no fresh output buffers (the pool's hit/miss
+//! counters in `ExecStats` / the metrics snapshot are the proof).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -160,7 +169,8 @@ impl Engine {
         let file_of = |b: usize| -> &str {
             &table.iter().find(|(bb, _)| *bb == b).unwrap().1
         };
-        let mut out = Vec::with_capacity(x.len());
+        let pool = super::executor::output_pool();
+        let mut out = pool.take_vec(x.len());
         let mut off = 0usize;
         while off < n {
             let remaining = n - off;
@@ -170,18 +180,19 @@ impl Engine {
             let res = if take == b {
                 self.run_eps_exact(file_of(b), chunk, t, b)?
             } else {
-                // pad by replicating the last row
-                let mut padded = Vec::with_capacity(b * dim);
-                padded.extend_from_slice(chunk);
-                let last = &chunk[(take - 1) * dim..take * dim];
-                for _ in take..b {
-                    padded.extend_from_slice(last);
+                // pad by replicating the last row (pooled staging — the
+                // buffer comes back pre-sized, so write at offsets)
+                let mut padded = pool.take_vec(b * dim);
+                padded[..take * dim].copy_from_slice(chunk);
+                for i in take..b {
+                    padded.copy_within((take - 1) * dim..take * dim, i * dim);
                 }
-                let mut r = self.run_eps_exact(file_of(b), &padded, t, b)?;
-                r.truncate(take * dim);
+                let r = self.run_eps_exact(file_of(b), &padded, t, b)?;
+                pool.put(padded);
                 r
             };
-            out.extend_from_slice(&res[..take * dim]);
+            out[off * dim..(off + take) * dim].copy_from_slice(&res[..take * dim]);
+            pool.put(res);
             off += take;
         }
         Ok(out)
@@ -209,36 +220,41 @@ impl Engine {
             return Err(anyhow!("no jvp artifacts for level {level}"));
         }
         let buckets: Vec<usize> = table.keys().copied().collect();
-        let mut out_e = Vec::with_capacity(x.len());
-        let mut out_j = Vec::with_capacity(x.len());
+        let pool = super::executor::output_pool();
+        let mut out_e = pool.take_vec(x.len());
+        let mut out_j = pool.take_vec(x.len());
         let mut off = 0usize;
         while off < n {
             let remaining = n - off;
             let b = Self::pick_bucket(&buckets, remaining);
             let take = remaining.min(b);
-            let mut xc = x[off * dim..(off + take) * dim].to_vec();
-            let mut vc = v[off * dim..(off + take) * dim].to_vec();
-            for _ in take..b {
-                let last_x = xc[(take - 1) * dim..take * dim].to_vec();
-                let last_v = vc[(take - 1) * dim..take * dim].to_vec();
-                xc.extend_from_slice(&last_x);
-                vc.extend_from_slice(&last_v);
+            // Pooled (x, v) staging, padded by replicating the last row
+            // in place — no per-row clones, no fresh chunk buffers.
+            let mut xc = pool.take_vec(b * dim);
+            let mut vc = pool.take_vec(b * dim);
+            xc[..take * dim].copy_from_slice(&x[off * dim..(off + take) * dim]);
+            vc[..take * dim].copy_from_slice(&v[off * dim..(off + take) * dim]);
+            for i in take..b {
+                xc.copy_within((take - 1) * dim..take * dim, i * dim);
+                vc.copy_within((take - 1) * dim..take * dim, i * dim);
             }
             let xl = x_literal(&xc, b, img, ch)?;
             let tl = t_literal(t, b);
             let vl = x_literal(&vc, b, img, ch)?;
+            pool.put(xc); // the literals own copies now
+            pool.put(vc);
             let t0 = Instant::now();
             let exe = self.executable(&table[&b])?;
             let result = exe.execute::<xla::Literal>(&[xl, tl, vl])?[0][0].to_literal_sync()?;
             self.exec_ns += t0.elapsed().as_nanos() as u64;
             self.exec_calls += 1;
             let (e, j) = result.to_tuple2()?;
-            let mut ev = e.to_vec::<f32>()?;
-            let mut jv = j.to_vec::<f32>()?;
-            ev.truncate(take * dim);
-            jv.truncate(take * dim);
-            out_e.extend_from_slice(&ev);
-            out_j.extend_from_slice(&jv);
+            let ev = e.to_vec::<f32>()?;
+            let jv = j.to_vec::<f32>()?;
+            out_e[off * dim..(off + take) * dim].copy_from_slice(&ev[..take * dim]);
+            out_j[off * dim..(off + take) * dim].copy_from_slice(&jv[..take * dim]);
+            pool.put(ev);
+            pool.put(jv);
             off += take;
         }
         Ok((out_e, out_j))
@@ -277,12 +293,18 @@ impl Engine {
         let result = self.eps(level, &packed, t, pallas);
         self.pack_buf = packed;
         let out = result?;
+        // Scatter each request's slice into a pooled buffer, then donate
+        // the packed result — the group's output storage all recycles.
+        let pool = super::executor::output_pool();
         let mut split = Vec::with_capacity(parts.len());
         let mut off = 0usize;
         for p in parts {
-            split.push(out[off..off + p.len()].to_vec());
+            let mut part = pool.take_vec(p.len());
+            part.copy_from_slice(&out[off..off + p.len()]);
+            split.push(part);
             off += p.len();
         }
+        pool.put(out);
         Ok(split)
     }
 
@@ -315,12 +337,19 @@ impl Engine {
         self.pack_buf = packed_x;
         self.pack_buf2 = packed_v;
         let (e, j) = result?;
+        let pool = super::executor::output_pool();
         let mut split = Vec::with_capacity(parts.len());
         let mut off = 0usize;
         for (x, _) in parts {
-            split.push((e[off..off + x.len()].to_vec(), j[off..off + x.len()].to_vec()));
+            let mut pe = pool.take_vec(x.len());
+            pe.copy_from_slice(&e[off..off + x.len()]);
+            let mut pj = pool.take_vec(x.len());
+            pj.copy_from_slice(&j[off..off + x.len()]);
+            split.push((pe, pj));
             off += x.len();
         }
+        pool.put(e);
+        pool.put(j);
         Ok(split)
     }
 

@@ -52,6 +52,27 @@ fn payload_pool() -> &'static ScratchPool<f32> {
     &PAYLOAD_POOL
 }
 
+/// Donated output buffers (the return leg of the zero-copy discipline):
+/// every result the engine hands back — eps fields, jvp pairs, grouped
+/// scatter slices — is built in a buffer from this pool, and the
+/// denoiser donates it back once the caller's slice is filled.  Kept
+/// separate from [`PAYLOAD_POOL`] so each pool's hit/miss counters
+/// attribute exactly one direction of the request path (the metrics
+/// snapshot reports them side by side under `executor_pools`).
+static OUTPUT_POOL: ScratchPool<f32> = ScratchPool::new();
+
+pub(crate) fn output_pool() -> &'static ScratchPool<f32> {
+    &OUTPUT_POOL
+}
+
+/// Process-wide (hits, misses) for the payload and output pools, in
+/// that order — the metrics snapshot's `executor_pools` section.
+pub fn scratch_pool_stats() -> (u64, u64, u64, u64) {
+    let (ph, pm) = PAYLOAD_POOL.stats();
+    let (oh, om) = OUTPUT_POOL.stats();
+    (ph, pm, oh, om)
+}
+
 /// Aggregation knobs for the executor's event loop (the serve config's
 /// `exec_linger_us` / `exec_max_group`; see `config.rs`).
 #[derive(Clone, Copy, Debug)]
@@ -143,6 +164,11 @@ pub struct ExecStats {
     /// Jobs that rode in multi-job groups (mean occupancy =
     /// `grouped_jobs / exec_groups`).
     pub grouped_jobs: u64,
+    /// Output-pool takes served from the free-list (donated result
+    /// buffers reused on the return leg).
+    pub out_pool_hits: u64,
+    /// Output-pool takes that had to allocate (or grow).
+    pub out_pool_misses: u64,
 }
 
 /// Unified response message (one channel per handle carries them all).
@@ -988,6 +1014,7 @@ fn run_single(
         }
         Job::ExecStats { resp } => {
             let (pool_hits, pool_misses) = pool.stats();
+            let (out_pool_hits, out_pool_misses) = output_pool().stats();
             let _ = resp.send(Resp::Stats(Ok(ExecStats {
                 exec_calls: engine.exec_calls,
                 exec_ns: engine.exec_ns,
@@ -995,6 +1022,8 @@ fn run_single(
                 pool_misses,
                 exec_groups: group_counters.0,
                 grouped_jobs: group_counters.1,
+                out_pool_hits,
+                out_pool_misses,
             })));
         }
         Job::Stop => unreachable!("Stop is handled by the serve loop"),
@@ -1249,6 +1278,27 @@ mod tests {
         let (h1, m1) = payload_pool().stats();
         assert_eq!(m1 - m0, 1, "first copy allocates");
         assert_eq!(h1 - h0, 1, "second copy reuses the parked buffer");
+    }
+
+    /// The output pool recycles donated buffers, and
+    /// [`scratch_pool_stats`] reports (payload, output) in that slot
+    /// order.  Deltas are `>=`-checked: unlike the payload pool, other
+    /// tests in this binary may legally drive the output pool.
+    #[test]
+    fn output_pool_recycles_and_stats_slots_are_payload_then_output() {
+        let before = scratch_pool_stats();
+        let v = output_pool().take_vec(47);
+        output_pool().put(v);
+        let w = output_pool().take_vec(47); // a 47-wide buffer is parked: hit
+        assert_eq!(w.len(), 47);
+        output_pool().put(w);
+        let after = scratch_pool_stats();
+        assert!(
+            after.2 + after.3 >= before.2 + before.3 + 2,
+            "output-pool takes must land in the 3rd/4th stat slots"
+        );
+        assert!(after.2 > before.2, "the re-take of a parked width is a hit");
+        assert!(after.0 >= before.0 && after.1 >= before.1, "payload slots never regress");
     }
 
     #[test]

@@ -32,8 +32,8 @@ pub(crate) mod xla_shim;
 #[allow(deprecated)]
 pub use executor::{spawn_executor, spawn_executor_with, spawn_supervised};
 pub use executor::{
-    is_executor_gone, ExecOptions, ExecStats, ExecutorBuilder, ExecutorGone, ExecutorHandle,
-    SpawnedExecutor, SupervisorOptions,
+    is_executor_gone, scratch_pool_stats, ExecOptions, ExecStats, ExecutorBuilder, ExecutorGone,
+    ExecutorHandle, SpawnedExecutor, SupervisorOptions,
 };
 pub use fleet::{plan_placement, Fleet, FleetOptions};
 pub use manifest::Manifest;

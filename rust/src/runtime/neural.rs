@@ -33,6 +33,13 @@
 //! pure function of its inputs, which member carries a request cannot
 //! change a bit of its result — rehoming only moves *where* the level's
 //! cross-request grouping happens.
+//!
+//! Saturation pass: the return leg recycles too.  Every result buffer a
+//! denoiser pops off its handle's response channel is copied into the
+//! caller's slice and then **donated** to the executor's output pool,
+//! where the engine's next result build reuses it — steady-state
+//! generates allocate no fresh output buffers (the output-pool hit/miss
+//! counters in `ExecStats` and the metrics snapshot are the evidence).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
@@ -224,6 +231,7 @@ impl NeuralDenoiser {
             let r = h.eps(level, xc, t).expect("executor eps failed");
             crate::trace::clear_current();
             oc.copy_from_slice(&r);
+            super::executor::output_pool().put(r);
         });
         // The calling thread ran shard 0 itself, so the clear above also
         // hit this thread — restore the lane's tag for the rest of the
@@ -251,6 +259,7 @@ impl Denoiser for NeuralDenoiser {
             .with_handle(|h| h.eps(self.level, x, t))
             .expect("executor eps failed");
         out.copy_from_slice(&r);
+        super::executor::output_pool().put(r);
     }
 
     fn eps_jvp(&self, x: &[f32], t: f64, v: &[f32], out_eps: &mut [f32], out_jv: &mut [f32]) {
@@ -259,6 +268,9 @@ impl Denoiser for NeuralDenoiser {
             .expect("executor jvp failed");
         out_eps.copy_from_slice(&e);
         out_jv.copy_from_slice(&j);
+        let pool = super::executor::output_pool();
+        pool.put(e);
+        pool.put(j);
     }
 
     fn cost(&self) -> f64 {

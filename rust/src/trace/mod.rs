@@ -82,6 +82,9 @@ pub enum Stage {
     Shed = 13,
     /// Deadline expiry at pop (chaos tag).
     DeadlineMiss = 14,
+    /// Lane-aware batch hold: a near-full class deliberately parked
+    /// (all other lanes busy) so the eventual cut was fuller.
+    Hold = 15,
 }
 
 impl Stage {
@@ -101,6 +104,7 @@ impl Stage {
             Stage::Restart => "restart",
             Stage::Shed => "shed",
             Stage::DeadlineMiss => "deadline_miss",
+            Stage::Hold => "hold",
         }
     }
 
@@ -120,6 +124,7 @@ impl Stage {
             12 => Stage::Restart,
             13 => Stage::Shed,
             14 => Stage::DeadlineMiss,
+            15 => Stage::Hold,
             _ => return None,
         })
     }

@@ -22,10 +22,6 @@
 //! `benchkit::resilience_json` schema so the artifact exists after
 //! `cargo test` alone (the full sweep lives in `bench_resilience`).
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
@@ -41,10 +37,7 @@ use mlem::coordinator::batcher::Batcher;
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
 use mlem::coordinator::{LanePool, Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{
-    spawn_executor_with, spawn_supervised, ExecOptions, Manifest, NeuralDenoiser,
-    SupervisorOptions,
-};
+use mlem::runtime::{ExecOptions, ExecutorBuilder, Manifest, NeuralDenoiser, SupervisorOptions};
 use mlem::sde::drift::Denoiser;
 use mlem::trace::{self, Stage};
 use mlem::util::json::Json;
@@ -99,13 +92,13 @@ fn run_kill_storm(tag: &str, fault: &'static str, clients: usize, reqs: usize) -
     .expect("chaos artifacts");
     let metrics = Metrics::new();
     let retry = SupervisorOptions { retry_budget: 8, retry_backoff_us: 50 };
-    let handle = spawn_supervised(
-        Manifest::load(&chaos_dir).expect("chaos manifest"),
-        Some(metrics.clone()),
-        exec_opts(),
-        retry,
-    )
-    .expect("supervised spawn");
+    let handle = ExecutorBuilder::new(Manifest::load(&chaos_dir).expect("chaos manifest"))
+        .metrics(metrics.clone())
+        .options(exec_opts())
+        .supervised(retry)
+        .spawn()
+        .expect("supervised spawn")
+        .handle;
     // Created before any fault fires: this family's parked handle
     // clones must keep serving across every respawn below.
     let family = NeuralDenoiser::family_with(&handle, 0, false).expect("denoiser family");
@@ -128,12 +121,11 @@ fn run_kill_storm(tag: &str, fault: &'static str, clients: usize, reqs: usize) -
         &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" }],
     )
     .expect("clean artifacts");
-    let (clean, join) = spawn_executor_with(
-        Manifest::load(&clean_dir).expect("clean manifest"),
-        None,
-        exec_opts(),
-    )
-    .expect("clean spawn");
+    let ex = ExecutorBuilder::new(Manifest::load(&clean_dir).expect("clean manifest"))
+        .options(exec_opts())
+        .spawn()
+        .expect("clean spawn");
+    let (clean, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     clean.warmup(8).expect("warmup");
     let (reference, _) = exec_batching_storm(&clean, clients, reqs, 1, 1, 0.5);
     clean.stop();
@@ -197,9 +189,11 @@ fn flaky_storm_surfaces_typed_errors_and_keeps_surviving_outputs_bitwise() {
         &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "flaky=0.3" }],
     )
     .expect("flaky artifacts");
-    let (handle, join) =
-        spawn_executor_with(Manifest::load(&dir).expect("manifest"), None, exec_opts())
-            .expect("spawn");
+    let ex = ExecutorBuilder::new(Manifest::load(&dir).expect("manifest"))
+        .options(exec_opts())
+        .spawn()
+        .expect("spawn");
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     let tally = resilience_storm(&handle, 4, 8, 1, 1, 0.5);
     handle.stop();
     let _ = join.join();
@@ -219,9 +213,11 @@ fn flaky_storm_surfaces_typed_errors_and_keeps_surviving_outputs_bitwise() {
         &[SynthLevel { kind: "eps", scale: 0.5, work: 64, fault: "" }],
     )
     .expect("clean artifacts");
-    let (clean, cjoin) =
-        spawn_executor_with(Manifest::load(&clean_dir).expect("manifest"), None, exec_opts())
-            .expect("spawn");
+    let ex = ExecutorBuilder::new(Manifest::load(&clean_dir).expect("manifest"))
+        .options(exec_opts())
+        .spawn()
+        .expect("spawn");
+    let (clean, cjoin) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     clean.warmup(8).expect("warmup");
     let (reference, _) = exec_batching_storm(&clean, 4, 8, 1, 1, 0.5);
     clean.stop();
@@ -265,8 +261,12 @@ fn lane_stack(
     };
     let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
     let metrics = Metrics::new();
-    let (handle, _join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).expect("spawn");
+    let handle = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .expect("spawn")
+        .handle;
     handle.warmup(4).expect("warmup");
     (dir, cfg, handle, metrics)
 }
@@ -364,9 +364,12 @@ fn unsupervised_executor_death_drains_the_pool_with_errors_not_hangs() {
         };
         let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
         let metrics = Metrics::new();
-        let (handle, _join) =
-            spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options())
-                .expect("spawn");
+        let handle = ExecutorBuilder::new(manifest)
+            .metrics(metrics.clone())
+            .options(cfg.exec_options())
+            .spawn()
+            .expect("spawn")
+            .handle;
         let scheduler =
             Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
         let pool = LanePool::new_paused(scheduler, &cfg);
@@ -418,12 +421,11 @@ fn executor_death_is_noticed_within_the_configured_poll_bound() {
         &[SynthLevel { kind: "panic", scale: 1.0, work: 1, fault: "" }],
     )
     .expect("panic artifacts");
-    let (handle, _join) = spawn_executor_with(
-        Manifest::load(&dir).expect("manifest"),
-        None,
-        ExecOptions { linger_us: 0, max_group: 1, poll_interval_us: 500 },
-    )
-    .expect("spawn");
+    let handle = ExecutorBuilder::new(Manifest::load(&dir).expect("manifest"))
+        .options(ExecOptions { linger_us: 0, max_group: 1, poll_interval_us: 500 })
+        .spawn()
+        .expect("spawn")
+        .handle;
     let t0 = Instant::now();
     let r = handle.eps(1, &exec_batching_payload(1, 0, 1, 16), 0.5);
     let waited = t0.elapsed();
@@ -512,13 +514,13 @@ fn traced_kill_storm_spans_both_executor_generations_and_stays_a_tree() {
     };
     let metrics = Metrics::new();
     let retry = SupervisorOptions { retry_budget: 16, retry_backoff_us: 50 };
-    let handle = spawn_supervised(
-        Manifest::load(&cfg.artifacts).expect("manifest"),
-        Some(metrics.clone()),
-        cfg.exec_options(),
-        retry,
-    )
-    .expect("supervised spawn");
+    let handle = ExecutorBuilder::new(Manifest::load(&cfg.artifacts).expect("manifest"))
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .supervised(retry)
+        .spawn()
+        .expect("supervised spawn")
+        .handle;
     let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
     let pool = LanePool::new(scheduler, &cfg);
 
@@ -628,8 +630,12 @@ fn pipelined_connection_chaos_storm_stays_in_order_with_typed_answers() {
     };
     let manifest = Manifest::load(&cfg.artifacts).expect("manifest");
     let metrics = Metrics::new();
-    let (handle, _join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).expect("spawn");
+    let handle = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .expect("spawn")
+        .handle;
     let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap();
     let server = Arc::new(Server::new(cfg, scheduler));
     let (addr_tx, addr_rx) = channel();

@@ -16,15 +16,14 @@
 //!   installed, and rejects off-ladder level subsets.
 //! * **Metrics**: `batch_runners`/`inflight_batches`/`runner_busy`
 //!   gauges and the per-class batcher snapshot.
+//! * **Lane-aware holding** (PR 10): a measured pool parks a partial
+//!   class up to the hold budget, and a held class is always cut with
+//!   one EWMA of deadline headroom — held batches never expire.
 //!
 //! Also emits a compressed `BENCH_coordinator.json` via the shared
 //! `benchkit::coord_*` plumbing so the artifact exists after
 //! `cargo test` alone (the full sweep lives in `bench_coordinator`).
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::sync::Arc;
 
 use mlem::benchkit::{
@@ -36,7 +35,7 @@ use mlem::config::{SamplerKind, ServeConfig};
 use mlem::coordinator::protocol::{GenRequest, PolicyChoice, Response};
 use mlem::coordinator::{LanePool, Scheduler};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 
 fn req(
     n: usize,
@@ -108,8 +107,12 @@ fn run_storm(
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).unwrap();
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .unwrap();
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     handle.warmup(4).unwrap();
     let scheduler =
         Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
@@ -216,8 +219,12 @@ fn theory_policy_served_after_fit_rejected_before() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).unwrap();
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .unwrap();
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     handle.warmup(4).unwrap();
     let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap());
     let pool = LanePool::new(scheduler.clone(), &cfg);
@@ -288,6 +295,90 @@ fn theory_policy_served_after_fit_rejected_before() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Satellite (PR 10): lane-aware batch holding end to end.  A measured
+/// single-lane pool parks a partial deadline-free class for up to
+/// `min(hold_budget, EWMA)` past its cut point (the `held_batches` /
+/// `hold_wait_ns` evidence), and a class whose member carries a
+/// `deadline_ms` is always cut with one EWMA of headroom — a request
+/// can be held or it can expire, never both.
+#[test]
+fn held_partial_batch_is_cut_before_its_deadline_can_expire() {
+    let dir = synth_artifact_dir(
+        "lanes-hold",
+        4,
+        1,
+        &[4],
+        &[
+            SynthLevel { kind: "eps", scale: 0.5, work: 2000, fault: "" },
+            SynthLevel { kind: "eps", scale: 0.4, work: 2000, fault: "" },
+        ],
+    )
+    .expect("synthetic artifacts");
+    let cfg = ServeConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        max_batch: 4,
+        max_wait_ms: 1,
+        mlem_levels: vec![1, 2],
+        cost_reps: 0,
+        calib_sample_every: 0,
+        batch_workers: 1,
+        hold_budget_us: 300_000,
+        // Admission never sheds in this test: it certifies the hold/cut
+        // policy, not the shed path.
+        shed_headroom: 100.0,
+        ..Default::default()
+    };
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let handle = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .unwrap()
+        .handle;
+    handle.warmup(4).unwrap();
+    let scheduler =
+        Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
+    let pool = LanePool::new(scheduler, &cfg);
+
+    // Warm the EWMA: a full batch pops immediately (holding never
+    // engages on a full class) and gives the pool its first wall-time
+    // measurement — the EWMA write happens before the response is sent,
+    // so the measurement is visible once this returns.
+    match pool.generate(req(4, SamplerKind::Mlem, 20, 900, vec![1, 2], 0.0)) {
+        Response::Gen(_) => {}
+        other => panic!("warm-up batch failed: {other:?}"),
+    }
+    assert_eq!(metrics.held_batches.get(), 0, "a full batch is never held");
+
+    // A partial deadline-free class on the measured pool is parked past
+    // its cut point, then answered normally.
+    match pool.generate(req(1, SamplerKind::Mlem, 20, 901, vec![1, 2], 0.0)) {
+        Response::Gen(_) => {}
+        other => panic!("held generate failed: {other:?}"),
+    }
+    assert_eq!(metrics.held_batches.get(), 1, "the partial batch must have been held");
+    assert!(metrics.hold_wait_ns.get() > 0, "a held batch records its hold wait");
+
+    // A member deadline tighter than one EWMA of headroom cancels the
+    // hold (immediate cut); with a shorter EWMA the class may hold, but
+    // the policy always cuts one EWMA before the deadline — either way
+    // the request is answered, never expired.
+    let mut tight = req(1, SamplerKind::Mlem, 20, 902, vec![1, 2], 0.0);
+    tight.deadline_ms = Some(60);
+    match pool.generate(tight) {
+        Response::Gen(_) => {}
+        other => panic!("deadline-carrying request must be answered, got {other:?}"),
+    }
+    assert_eq!(metrics.deadline_misses.get(), 0, "a held class must never expire while held");
+    assert_eq!(metrics.sheds.get(), 0, "admission shed must stay out of this storm");
+
+    pool.stop();
+    pool.join();
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn submit_after_stop_answers_immediately() {
     let dir = storm_artifacts("lanes-stopped");
@@ -301,8 +392,12 @@ fn submit_after_stop_answers_immediately() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, join) =
-        spawn_executor_with(manifest, Some(metrics.clone()), cfg.exec_options()).unwrap();
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .unwrap();
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     let scheduler = Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap());
     let pool = LanePool::new(scheduler, &cfg);
     pool.stop();

@@ -14,16 +14,12 @@
 //! `payload_pool_is_executor_local_and_reuses` relies on being the only
 //! pool traffic in its binary.
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::sync::Mutex;
 use std::time::Duration;
 
 use mlem::benchkit::{exec_batching_payload, exec_batching_storm, synth_artifact_dir, SynthLevel};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor_with, ExecOptions, ExecutorHandle, Manifest, NeuralDenoiser};
+use mlem::runtime::{ExecOptions, ExecutorBuilder, ExecutorHandle, Manifest, NeuralDenoiser};
 use mlem::sde::drift::Denoiser;
 
 /// Every test here drives heavy executor traffic (multi-thread storms,
@@ -93,9 +89,13 @@ fn concurrent_storm_groups_and_matches_serial_bitwise() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("storm");
     let metrics = Metrics::new();
-    let (serial, _js) = spawn_executor_with(manifest.clone(), None, opts(0, 1)).unwrap();
-    let (grouped, _jg) =
-        spawn_executor_with(manifest, Some(metrics.clone()), opts(500, 8)).unwrap();
+    let serial = ExecutorBuilder::new(manifest.clone()).options(opts(0, 1)).spawn().unwrap().handle;
+    let grouped = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(opts(500, 8))
+        .spawn()
+        .unwrap()
+        .handle;
     serial.warmup(8).unwrap();
     grouped.warmup(8).unwrap();
 
@@ -137,7 +137,7 @@ fn concurrent_storm_groups_and_matches_serial_bitwise() {
 fn jobs_queued_behind_a_busy_execute_group_deterministically() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("hold");
-    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let handle = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap().handle;
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -174,7 +174,7 @@ fn jobs_queued_behind_a_busy_execute_group_deterministically() {
 fn grouped_jvp_matches_singleton_dispatch() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("jvp");
-    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let handle = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap().handle;
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -220,7 +220,7 @@ fn grouped_jvp_matches_singleton_dispatch() {
 fn engine_error_mid_group_errors_every_member_without_hanging() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("fail-group");
-    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let handle = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap().handle;
     handle.warmup(8).unwrap();
     let before = handle.exec_stats().unwrap();
 
@@ -257,7 +257,7 @@ fn engine_error_mid_group_errors_every_member_without_hanging() {
 fn executor_death_mid_group_errors_not_hangs() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("panic-group");
-    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let handle = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap().handle;
     handle.warmup(8).unwrap();
 
     // Two grouped jobs are in flight when the engine panics mid-execute:
@@ -286,7 +286,8 @@ fn executor_death_mid_group_errors_not_hangs() {
 fn jobs_sent_after_stop_are_refused_not_hung() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("stop");
-    let (handle, join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let ex = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap();
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     handle.warmup(8).unwrap();
 
     let (ra, rb) = with_busy_executor(&handle, || {
@@ -336,9 +337,12 @@ fn exec_batching_bench_artifact_is_produced_and_shows_the_win() {
     )
     .unwrap();
     let manifest = Manifest::load(&dir).unwrap();
-    let (serial, _js) = spawn_executor_with(manifest.clone(), None, opts(0, 1)).unwrap();
-    let (grouped, _jg) =
-        spawn_executor_with(manifest, None, opts(workload.linger_us, workload.max_group)).unwrap();
+    let serial = ExecutorBuilder::new(manifest.clone()).options(opts(0, 1)).spawn().unwrap().handle;
+    let grouped = ExecutorBuilder::new(manifest)
+        .options(opts(workload.linger_us, workload.max_group))
+        .spawn()
+        .unwrap()
+        .handle;
     serial.warmup(workload.bucket).unwrap();
     grouped.warmup(workload.bucket).unwrap();
 
@@ -372,7 +376,7 @@ fn exec_batching_bench_artifact_is_produced_and_shows_the_win() {
 fn neural_shard_routing_is_bit_identical_to_single_job_dispatch() {
     let _storm = storm_guard();
     let (dir, manifest) = test_manifest("shard-routing");
-    let (handle, _join) = spawn_executor_with(manifest, None, opts(0, 8)).unwrap();
+    let handle = ExecutorBuilder::new(manifest).options(opts(0, 8)).spawn().unwrap().handle;
     handle.warmup(8).unwrap();
 
     // cost_reps 0: FLOP costs, no measurement traffic.

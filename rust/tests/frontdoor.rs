@@ -4,10 +4,6 @@
 //! histogram — all over real TCP sockets on the synthetic-artifact
 //! interpreter.
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver};
@@ -19,7 +15,7 @@ use mlem::benchkit::{synth_artifact_dir, SynthLevel};
 use mlem::config::ServeConfig;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor, ExecutorHandle, Manifest};
+use mlem::runtime::{ExecutorBuilder, ExecutorHandle, Manifest};
 use mlem::util::json::Json;
 
 /// `Server::new` binds the process-wide flight recorder's sampling rate
@@ -84,7 +80,8 @@ struct TestServer {
 fn boot(cfg: ServeConfig) -> TestServer {
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (exec, exec_join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let ex = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn().unwrap();
+    let (exec, exec_join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
     let scheduler = Scheduler::new(exec.clone(), cfg.clone(), metrics).unwrap();
     let server = Arc::new(Server::new(cfg, scheduler));
     let (addr_tx, addr_rx) = channel();

@@ -6,11 +6,7 @@
 //! must agree with the jnp flavour, batch bucketing must be transparent,
 //! and the measured denoising-error ladder must decrease with level.
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
-use mlem::runtime::{spawn_executor, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::sde::schedule;
 use mlem::util::json::Json;
 use mlem::util::rng::Rng;
@@ -52,7 +48,7 @@ fn golden_eps_outputs_match_jax() {
         .collect();
 
     let manifest = Manifest::load(&dir).unwrap();
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let eps_map = g.get("eps").unwrap();
     let Json::Obj(fields) = eps_map else { panic!() };
     for (level, expect) in fields {
@@ -91,7 +87,7 @@ fn pallas_flavour_matches_jnp_flavour() {
         panic!("manifest must carry a pallas parity artifact");
     };
     let dim = manifest.dim;
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let mut rng = Rng::new(42);
     let x = rng.normal_vec_f32(bucket * dim);
     let a = handle.eps(level, &x, 0.37).unwrap();
@@ -108,7 +104,7 @@ fn batch_bucketing_is_transparent() {
     let dir = require_artifacts!();
     let manifest = Manifest::load(&dir).unwrap();
     let dim = manifest.dim;
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let mut rng = Rng::new(7);
     let n = 11;
     let x = rng.normal_vec_f32(n * dim);
@@ -131,7 +127,7 @@ fn jvp_artifact_matches_finite_difference() {
     let dir = require_artifacts!();
     let manifest = Manifest::load(&dir).unwrap();
     let dim = manifest.dim;
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let mut rng = Rng::new(9);
     let x = rng.normal_vec_f32(dim);
     let v = rng.normal_vec_f32(dim);
@@ -162,7 +158,7 @@ fn combine_artifact_matches_native_math() {
     let dir = require_artifacts!();
     let manifest = Manifest::load(&dir).unwrap();
     let (b, k, d) = (manifest.combine.batch, manifest.combine.levels, manifest.dim);
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let mut rng = Rng::new(11);
     let y = rng.normal_vec_f32(b * d);
     let deltas = rng.normal_vec_f32(k * b * d);
@@ -195,7 +191,7 @@ fn denoising_error_ladder_measured_in_rust() {
     let holdout = manifest.load_holdout().unwrap();
     let n = manifest.holdout_count.min(32);
     let levels: Vec<usize> = manifest.levels.iter().map(|l| l.level).collect();
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let mut rng = Rng::new(123);
     let mut errs = vec![0.0f64; levels.len()];
     let reps = 4;

@@ -1,13 +1,9 @@
 //! Integration: samplers end-to-end over the trained family and the
 //! analytic GMM substrate (the Fig-1 protocol in miniature).
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use mlem::gmm::{Gmm, GmmDenoiser};
 use mlem::levels::Policy;
-use mlem::runtime::{spawn_executor, Manifest, NeuralDenoiser};
+use mlem::runtime::{ExecutorBuilder, Manifest, NeuralDenoiser};
 use mlem::sde::ddpm::{ancestral_sample, AncestralConfig};
 use mlem::sde::drift::{DiffusionDrift, Drift, LinearPartDrift, ScorePartDrift};
 use mlem::sde::em::{em_sample, TimeGrid};
@@ -33,7 +29,7 @@ fn mlem_tracks_true_sample_with_fewer_top_level_evals() {
     };
     let manifest = Manifest::load(&dir).unwrap();
     let dim = manifest.dim;
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let family = NeuralDenoiser::family(&handle, 0).unwrap();
 
     let batch = 4;
@@ -101,7 +97,7 @@ fn neural_em_converges_with_steps() {
     };
     let manifest = Manifest::load(&dir).unwrap();
     let dim = manifest.dim;
-    let (handle, _join) = spawn_executor(manifest, None).unwrap();
+    let handle = ExecutorBuilder::new(manifest).spawn().unwrap().handle;
     let family = NeuralDenoiser::family(&handle, 0).unwrap();
     let den = &family[1]; // f^2: cheap but realistic
 

@@ -3,10 +3,6 @@
 //! Plus the calibration admin path end to end, which (deliberately)
 //! works without artifacts: admin requests never touch the engine.
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
@@ -18,7 +14,7 @@ use mlem::calibrate::ProbeSample;
 use mlem::config::ServeConfig;
 use mlem::coordinator::{Scheduler, Server};
 use mlem::metrics::Metrics;
-use mlem::runtime::{spawn_executor, Manifest};
+use mlem::runtime::{ExecutorBuilder, Manifest};
 use mlem::util::json::Json;
 
 /// `Server::new` binds the process-wide flight recorder's sampling rate
@@ -83,7 +79,7 @@ fn serve_end_to_end() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let handle = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn().unwrap().handle;
     let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
     let server = std::sync::Arc::new(Server::new(cfg, scheduler));
 
@@ -249,7 +245,7 @@ fn shutdown_under_load_answers_every_request() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let handle = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn().unwrap().handle;
     let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
     let server = std::sync::Arc::new(Server::new(cfg, scheduler));
 
@@ -342,7 +338,7 @@ fn trace_admin_and_chrome_dump_end_to_end() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let handle = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn().unwrap().handle;
     let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics).unwrap();
     let server = std::sync::Arc::new(Server::new(cfg, scheduler));
 
@@ -446,7 +442,7 @@ fn calibration_admin_end_to_end() {
     };
     let manifest = Manifest::load(&cfg.artifacts).unwrap();
     let metrics = Metrics::new();
-    let (handle, _join) = spawn_executor(manifest, Some(metrics.clone())).unwrap();
+    let handle = ExecutorBuilder::new(manifest).metrics(metrics.clone()).spawn().unwrap().handle;
     let scheduler = Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap();
 
     // Inject observations exactly as live probes would deliver them.

@@ -17,10 +17,6 @@
 //! knob, so they serialise on `ENV_LOCK` (the rest of the suite lives in
 //! other test binaries / processes).
 
-// The spawn_executor* wrappers used below are #[deprecated] veneers
-// over runtime::ExecutorBuilder (PR 9); this file keeps calling them
-// on purpose, doubling as their compatibility coverage.
-#![allow(deprecated)]
 use std::sync::Mutex;
 
 use mlem::benchkit::{
@@ -29,7 +25,7 @@ use mlem::benchkit::{
 };
 use mlem::gmm::{assumption1_family, Gmm, LangevinDrift};
 use mlem::parallel;
-use mlem::runtime::{spawn_executor_with, ExecOptions, Manifest};
+use mlem::runtime::{ExecOptions, ExecutorBuilder, Manifest};
 use mlem::sde::drift::Drift;
 use mlem::sde::em::TimeGrid;
 use mlem::sde::mlem::{mlem_sample, BernoulliMode, MlemFamily, SampleReport};
@@ -274,12 +270,11 @@ fn grouped_eps_bit_identical_to_singleton_dispatch() {
     let manifest = Manifest::load(&dir).unwrap();
     let mut outputs: Vec<Vec<Vec<f32>>> = Vec::new();
     for max_group in [1usize, 8] {
-        let (handle, join) = spawn_executor_with(
-            manifest.clone(),
-            None,
-            ExecOptions { linger_us: 300, max_group, ..ExecOptions::default() },
-        )
-        .unwrap();
+        let ex = ExecutorBuilder::new(manifest.clone())
+            .options(ExecOptions { linger_us: 300, max_group, ..ExecOptions::default() })
+            .spawn()
+            .unwrap();
+        let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
         handle.warmup(8).unwrap();
         // Same seeds both rounds: the storm payload grid is a pure
         // function of (client, request) indices.

@@ -1,0 +1,138 @@
+//! Parity storm for the device-saturation pass (phase-aligned lanes +
+//! lane-aware batch holding + donated engine buffers): the knobs are
+//! timing/storage-only, so the same request storm must produce
+//! **bit-identical** responses at every point of
+//! `phase_align × hold_budget_us × lanes × exec_max_group`.
+//!
+//! Determinism lever: every storm is enqueued in full against a
+//! *paused* `LanePool` before `start`, so batch membership is a pure
+//! function of the request list — what the parity claim quantifies is
+//! exactly that alignment, holding, donation and grouping cannot move
+//! a bit given the same memberships.
+//!
+//! Also emits a compressed `BENCH_saturate.json` through the shared
+//! `benchkit::saturate_*` schema so the artifact exists after
+//! `cargo test` alone (the full sweep lives in `bench_saturate`).
+
+use std::sync::Arc;
+
+use mlem::benchkit::{
+    bits_equal, coord_artifact_dir, coord_requests, saturate_config, saturate_json,
+    saturate_point, write_bench_json, CoordWorkload,
+};
+use mlem::config::ServeConfig;
+use mlem::coordinator::protocol::Response;
+use mlem::coordinator::{LanePool, Scheduler};
+use mlem::metrics::Metrics;
+use mlem::runtime::{ExecutorBuilder, Manifest};
+
+fn small_workload() -> CoordWorkload {
+    CoordWorkload {
+        img: 4, // dim 16
+        channels: 1,
+        bucket: 8,
+        work: 48,
+        levels: 2,
+        classes: 3,
+        // Odd: with max_batch = 2·n_per_req each class leaves a partial
+        // tail cut, so the hold path actually runs inside the storm.
+        reqs_per_class: 3,
+        n_per_req: 2,
+        steps: 8,
+        linger_us: 300,
+    }
+}
+
+/// One paused-pool storm under `cfg`: submit everything, release at t0,
+/// return the per-request images in submission order.
+fn run_storm(cfg: &ServeConfig) -> Vec<Vec<f32>> {
+    let manifest = Manifest::load(&cfg.artifacts).unwrap();
+    let metrics = Metrics::new();
+    let ex = ExecutorBuilder::new(manifest)
+        .metrics(metrics.clone())
+        .options(cfg.exec_options())
+        .spawn()
+        .unwrap();
+    let (handle, join) = (ex.handle, ex.join.expect("unsupervised spawn has a join"));
+    let scheduler =
+        Arc::new(Scheduler::new(handle.clone(), cfg.clone(), metrics.clone()).unwrap());
+    let pool = LanePool::new_paused(scheduler, cfg);
+    let reqs = coord_requests(&small_workload());
+    let rxs: Vec<_> = reqs.iter().map(|r| pool.submit(r.clone())).collect();
+    pool.start();
+    let mut outs = Vec::with_capacity(rxs.len());
+    for (i, rx) in rxs.iter().enumerate() {
+        match rx.recv().expect("response delivered") {
+            Response::Gen(g) => outs.push(g.images.expect("return_images set")),
+            other => panic!("storm request {i} failed: {other:?}"),
+        }
+    }
+    pool.stop();
+    pool.join();
+    handle.stop();
+    let _ = join.join();
+    outs
+}
+
+/// The acceptance storm: every knob cross produces the baseline's bits.
+#[test]
+fn saturation_knobs_never_change_bits() {
+    let w = small_workload();
+    let dir = coord_artifact_dir("saturate-parity", &w).unwrap();
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for lanes in [1usize, 4] {
+        for phase_align in [false, true] {
+            for hold_budget_us in [0u64, 2_000] {
+                for exec_max_group in [1usize, 16] {
+                    let cfg = ServeConfig {
+                        phase_align,
+                        hold_budget_us,
+                        exec_max_group,
+                        max_batch: 2 * w.n_per_req,
+                        ..saturate_config(&dir, &w, lanes, false)
+                    };
+                    let outs = run_storm(&cfg);
+                    match &baseline {
+                        None => baseline = Some(outs),
+                        Some(base) => assert!(
+                            bits_equal(base, &outs),
+                            "outputs diverged at lanes={lanes} phase_align={phase_align} \
+                             hold_budget_us={hold_budget_us} exec_max_group={exec_max_group}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A compressed run of the `bench_saturate` comparison: certifies the
+/// shared plumbing (including the A/B parity the bench asserts) and
+/// guarantees `BENCH_saturate.json` exists after `cargo test` alone.
+#[test]
+fn saturate_bench_artifact_is_produced_and_consistent() {
+    let w = small_workload();
+    let dir = coord_artifact_dir("saturate-bench", &w).unwrap();
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut bit_identical = true;
+    for lanes in [1usize, 4] {
+        for aligned in [false, true] {
+            let (outs, p) = saturate_point(&dir, &w, lanes, aligned, 1).unwrap();
+            match &reference {
+                None => reference = Some(outs),
+                Some(base) => bit_identical &= bits_equal(base, &outs),
+            }
+            points.push(p);
+        }
+    }
+    assert!(bit_identical, "saturation sweep outputs diverged");
+    let j = saturate_json(&w, &points, bit_identical);
+    assert_eq!(j.get("bit_identical"), Some(&mlem::util::json::Json::Bool(true)));
+    let gain = j.f64_of("saturate_occupancy_gain").expect("headline present");
+    assert!(gain.is_finite() && gain > 0.0, "occupancy gain must be a positive ratio: {gain}");
+    let path = write_bench_json("saturate", &j).expect("write BENCH_saturate.json");
+    assert!(path.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
